@@ -1,0 +1,124 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **eta** (Eq-5 aggressiveness): query rate / error trade-off — why the
+//!    paper uses 0.01 sequentially but 0.1 in parallel.
+//! 2. **alpha-step clamp** (the paper's LASVM stability fix): on vs off
+//!    under aggressive importance weights.
+//! 3. **reprocess steps** (LASVM 2-reprocess default): 0 / 1 / 2 / 4.
+//! 4. **global batch size B** (the delay of Theorem 1): error vs B at a
+//!    fixed budget.
+//! 5. **fixed-rate vs margin sifting**: same communication volume, without
+//!    the informativeness signal.
+//!
+//!     cargo run --release --example ablations [budget]
+
+use para_active::active::{margin::MarginSifter, FixedRateSifter, Sifter};
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::coordinator::SvmExperimentConfig;
+use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::learner::Learner;
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+fn run(
+    learner: &mut LaSvm<RbfKernel>,
+    sifter: &mut dyn Sifter,
+    stream: &StreamConfig,
+    test: &TestSet,
+    nodes: usize,
+    batch: usize,
+    warm: usize,
+    budget: usize,
+    label: &str,
+) -> SyncReport {
+    let mut sc = SyncConfig::new(nodes, batch, warm, budget).with_label(label);
+    sc.eval_every_rounds = 0;
+    let mut scorer =
+        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(learner, sifter, stream, test, &sc, &mut scorer)
+}
+
+fn main() {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8_000);
+    let cfg = SvmExperimentConfig::paper_defaults();
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 1000);
+    let (b, warm) = (1000usize, 1000usize);
+
+    println!("## ablation 1: eta (Eq-5 aggressiveness), k=8, budget={budget}\n");
+    println!("| eta | query rate | final err | n_sv | simulated time |");
+    println!("|---|---|---|---|---|");
+    for eta in [0.01, 0.03, 0.1, 0.3, 1.0] {
+        let mut svm = cfg.make_learner();
+        let mut sifter = MarginSifter::new(eta, 3);
+        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "eta");
+        println!(
+            "| {eta} | {:.1}% | {:.4} | {} | {:.2}s |",
+            100.0 * r.query_rate(),
+            r.final_test_errors(),
+            svm.n_support(),
+            r.elapsed
+        );
+    }
+
+    println!("\n## ablation 2: alpha-step clamp (stability fix) under heavy weights\n");
+    println!("| clamp | final err | max |alpha| |");
+    println!("|---|---|---|");
+    for clamp in [true, false] {
+        let lcfg = LaSvmConfig { clamp_step: clamp, ..Default::default() };
+        let mut svm = LaSvm::new(RbfKernel::new(cfg.gamma), DIM, lcfg);
+        // Aggressive sifting => large importance weights 1/p.
+        let mut sifter = MarginSifter::new(0.5, 7);
+        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "clamp");
+        let (_, alphas) = svm.export_support();
+        let max_a = alphas.iter().fold(0.0f32, |m, a| m.max(a.abs()));
+        println!("| {clamp} | {:.4} | {max_a:.2} |", r.final_test_errors());
+    }
+
+    println!("\n## ablation 3: LASVM reprocess steps\n");
+    println!("| reprocess | final err | n_sv | update ops |");
+    println!("|---|---|---|---|");
+    for steps in [0usize, 1, 2, 4] {
+        let lcfg = LaSvmConfig { reprocess_steps: steps, ..Default::default() };
+        let mut svm = LaSvm::new(RbfKernel::new(cfg.gamma), DIM, lcfg);
+        let mut sifter = MarginSifter::new(0.1, 11);
+        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "rp");
+        println!(
+            "| {steps} | {:.4} | {} | {:.2e} |",
+            r.final_test_errors(),
+            svm.n_support(),
+            r.costs.update_ops as f64
+        );
+    }
+
+    println!("\n## ablation 4: global batch B (the Thm-1 delay), k=8\n");
+    println!("| B | final err | simulated time |");
+    println!("|---|---|---|");
+    for batch in [250usize, 1000, 4000] {
+        let mut svm = cfg.make_learner();
+        let mut sifter = MarginSifter::new(0.1, 13);
+        let r = run(&mut svm, &mut sifter, &stream, &test, 8, batch, warm, budget, "B");
+        println!("| {batch} | {:.4} | {:.2}s |", r.final_test_errors(), r.elapsed);
+    }
+
+    println!("\n## ablation 5: margin sifting vs uniform subsampling (same volume)\n");
+    let mut svm = cfg.make_learner();
+    let mut margin = MarginSifter::new(0.1, 17);
+    let rm = run(&mut svm, &mut margin, &stream, &test, 8, b, warm, budget, "margin");
+    let rate = rm.query_rate().clamp(0.01, 1.0);
+    let mut svm2 = cfg.make_learner();
+    let mut fixed = FixedRateSifter::new(rate, 19);
+    let rf = run(&mut svm2, &mut fixed, &stream, &test, 8, b, warm, budget, "fixed");
+    println!("| sifter | rate | final err |");
+    println!("|---|---|---|");
+    println!("| margin (Eq 5) | {:.1}% | {:.4} |", 100.0 * rm.query_rate(), rm.final_test_errors());
+    println!("| uniform | {:.1}% | {:.4} |", 100.0 * rf.query_rate(), rf.final_test_errors());
+    println!();
+    println!(
+        "margin sifting must beat uniform at equal communication: {} < {}",
+        rm.final_test_errors(),
+        rf.final_test_errors()
+    );
+}

@@ -1,0 +1,171 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Proves all layers compose, Python-free at runtime:
+//!
+//! 1. **L1/L2 artifacts** — the Pallas-kernel sift graphs and the AdaGrad
+//!    train step, AOT-lowered to HLO text by `make artifacts`;
+//! 2. **runtime** — rust loads them over PJRT (`XlaSvmSifter`,
+//!    `XlaMlpSifter`, `XlaMlpStep`);
+//! 3. **L3 coordinator** — Algorithm 1 runs the SVM experiment with the
+//!    *XLA executable on the sift path* (the hot path), LASVM updating
+//!    natively; then the NN experiment with BOTH sift and update running
+//!    as XLA executables.
+//!
+//! Cross-checks XLA scores against the native scorer on every round and
+//! reports throughput + the learning curve. Recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_train [budget]
+
+use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::coordinator::sync::{run_sync, SyncConfig};
+use para_active::coordinator::SvmExperimentConfig;
+use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use para_active::learner::Learner;
+use para_active::metrics::curves_to_markdown;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::runtime::{
+    artifacts_available, eq5_probability, XlaMlpStep, XlaRuntime, XlaSvmSifter,
+};
+use para_active::svm::{lasvm::LaSvm, RbfKernel};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("AOT artifacts missing — run `make artifacts` first");
+    }
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6_000);
+
+    println!("== e2e: three-layer stack (Pallas -> HLO -> PJRT -> rust) ==\n");
+
+    // ---------------- Part 1: SVM with the XLA sift path ----------------
+    let mut cfg = SvmExperimentConfig::paper_defaults();
+    cfg.global_batch = (budget / 6).clamp(256, 4000);
+    cfg.warmstart = cfg.global_batch / 2;
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 500);
+
+    let rt = XlaRuntime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut xla_sifter = XlaSvmSifter::new(rt, 2048.min(2048))?;
+    println!(
+        "svm_sift artifact: capacity {} SVs, batch {}",
+        xla_sifter.capacity(),
+        cfg.global_batch
+    );
+
+    let mut learner = cfg.make_learner();
+    let mut sifter = MarginSifter::new(cfg.eta_parallel, 81);
+    let sc = SyncConfig::new(4, cfg.global_batch, cfg.warmstart, budget)
+        .with_label("e2e svm (XLA sift path)");
+    let mut xcheck_max: f32 = 0.0;
+    let mut xla_calls: u64 = 0;
+    let t0 = Instant::now();
+    let report = {
+        let mut scorer = |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
+            // Hot path: the AOT-compiled Pallas RBF-scoring kernel via PJRT.
+            let (scores, _probs) = xla_sifter
+                .sift(l, xs, 0.1, 0)
+                .expect("xla sift failed");
+            out.copy_from_slice(&scores);
+            xla_calls += 1;
+            // Cross-check one row per call against the native scorer.
+            let native = l.score(&xs[..DIM]);
+            xcheck_max = xcheck_max.max((scores[0] - native).abs());
+        };
+        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+    };
+    println!(
+        "svm e2e: {} examples, {} queried ({:.1}%), {} XLA sift calls, \
+         max |xla - native| = {:.2e}, wall {:.1}s",
+        report.n_seen,
+        report.n_queried,
+        100.0 * report.query_rate(),
+        xla_calls,
+        xcheck_max,
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(xcheck_max < 1e-2, "XLA/native scorer mismatch");
+    println!("{}", curves_to_markdown(&[&report.curve]));
+
+    // ------- Part 2: NN with XLA sift AND XLA AdaGrad train step --------
+    println!("== e2e NN: L2 train-step executable on the update path ==");
+    let nn_stream = StreamConfig::nn_task();
+    let nn_test = TestSet::generate(&nn_stream, 500);
+    let proto = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let rt2 = XlaRuntime::load_default()?;
+    let mut step = XlaMlpStep::new(rt2, &proto)?;
+    let mut margin = MarginSifter::new(0.0005, 83);
+    let mut src = ExampleStream::for_node(&nn_stream, 0);
+
+    let batch = 256usize;
+    let rounds = (budget / batch).max(4);
+    let mut xs = vec![0.0f32; batch * DIM];
+    let mut ys = vec![0.0f32; batch];
+    let mut n_seen = 0u64;
+    let mut n_q = 0u64;
+    let t1 = Instant::now();
+    let mut last_loss = f32::NAN;
+    for round in 0..rounds {
+        src.next_batch_into(&mut xs, &mut ys);
+        // Sift with the XLA scorer.
+        let scores = step.scores(&xs)?;
+        let mut sel_x = Vec::new();
+        let mut sel_y = Vec::new();
+        let mut sel_w = Vec::new();
+        for i in 0..batch {
+            n_seen += 1;
+            let d = margin.decide(scores[i], n_seen);
+            debug_assert!(
+                (eq5_probability(scores[i], 0.0005, n_seen) - d.p).abs() < 1e-9
+            );
+            if d.queried {
+                sel_x.extend_from_slice(&xs[i * DIM..(i + 1) * DIM]);
+                sel_y.push(ys[i]);
+                sel_w.push(d.weight());
+            }
+        }
+        n_q += sel_y.len() as u64;
+        // Update with the XLA AdaGrad step (chunked to the artifact batch).
+        for (cx, (cy, cw)) in sel_x
+            .chunks(batch * DIM)
+            .zip(sel_y.chunks(batch).zip(sel_w.chunks(batch)))
+        {
+            last_loss = step.step(cx, cy, cw, 0.07)?;
+        }
+        if round % 4 == 3 {
+            println!(
+                "  round {:3}: seen {:5}, queried {:5}, loss {:.4}",
+                round + 1,
+                n_seen,
+                n_q,
+                last_loss
+            );
+        }
+    }
+    // Final evaluation with the XLA forward pass.
+    let mut wrong = 0usize;
+    let scores = step.scores(&nn_test.xs)?;
+    for (s, (_x, y)) in scores.iter().zip(nn_test.iter()) {
+        if s * y <= 0.0 {
+            wrong += 1;
+        }
+    }
+    println!(
+        "nn e2e: {} examples, {} queried ({:.1}%), test err {:.4} ({wrong}/{}), wall {:.1}s",
+        n_seen,
+        n_q,
+        100.0 * n_q as f64 / n_seen as f64,
+        wrong as f64 / nn_test.len() as f64,
+        nn_test.len(),
+        t1.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(
+        (wrong as f64) < 0.25 * nn_test.len() as f64,
+        "e2e NN failed to learn"
+    );
+    println!("\ne2e OK: all three layers compose; python never ran.");
+    Ok(())
+}

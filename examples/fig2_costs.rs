@@ -1,0 +1,167 @@
+//! Figure 2 — the cost model table: operations, execution time, and
+//! communication volume for sequential passive vs sequential active vs
+//! parallel active, measured (not assumed) from instrumented runs.
+//!
+//! The paper's table:
+//!
+//! |            | Seq Passive | Seq Active              | Parallel Active             |
+//! | Operations | T(n)        | n S(phi(n)) + T(phi(n)) | n S(phi(n)) + k T(phi(n))   |
+//! | Time       | T(n)        | n S(phi(n)) + T(phi(n)) | n S(phi(n))/k + T(phi(n))   |
+//! | Broadcasts | 0           | 0                       | phi(n)                      |
+//!
+//! We report the measured counters for both learners, checking the two
+//! regimes: SVM has n*S(phi(n)) << T(n) (active pays off even sequentially),
+//! NN has S constant = update cost (only parallelism helps).
+//!
+//!     cargo run --release --example fig2_costs [budget]
+
+use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::coordinator::{NnExperimentConfig, SvmExperimentConfig};
+use para_active::data::{StreamConfig, TestSet};
+use para_active::learner::Learner;
+
+fn row(label: &str, r: &SyncReport) -> String {
+    format!(
+        "| {label} | {:.3e} | {:.3e} | {} | {:.2}s | {:.2}s | {:.2}s |",
+        r.costs.sift_ops as f64,
+        r.costs.update_ops as f64,
+        r.costs.broadcasts,
+        r.sift_time,
+        r.update_time,
+        r.elapsed
+    )
+}
+
+fn run_one<L: Learner>(
+    mut learner: L,
+    sifter: &mut dyn Sifter,
+    stream: &StreamConfig,
+    test: &TestSet,
+    nodes: usize,
+    batch: usize,
+    warmstart: usize,
+    budget: usize,
+    label: &str,
+) -> SyncReport {
+    let mut sc = SyncConfig::new(nodes, batch, warmstart, budget).with_label(label);
+    sc.eval_every_rounds = 0;
+    let mut scorer = |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    eprintln!("running {label} ...");
+    run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer)
+}
+
+fn main() {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12_000);
+
+    println!("## Fig 2 cost table (measured)\n");
+    println!("| run | sift ops (n·S) | update ops (T) | broadcasts (phi) | sift time | update time | total time |");
+    println!("|---|---|---|---|---|---|---|");
+
+    // --- SVM: S(n) grows with the model; active should slash update ops. ---
+    {
+        let mut cfg = SvmExperimentConfig::paper_defaults();
+        cfg.global_batch = (budget / 6).clamp(256, 4000);
+        cfg.warmstart = cfg.global_batch / 2;
+        let stream = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream, 200);
+        let b = cfg.global_batch;
+        let k = 16;
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut PassiveSifter,
+            &stream,
+            &test,
+            1,
+            1,
+            cfg.warmstart,
+            budget,
+            "svm seq passive",
+        );
+        println!("{}", row("svm seq passive", &r));
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut MarginSifter::new(cfg.eta_sequential, 41),
+            &stream,
+            &test,
+            1,
+            1,
+            cfg.warmstart,
+            budget,
+            "svm seq active",
+        );
+        println!("{}", row("svm seq active", &r));
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut MarginSifter::new(cfg.eta_parallel, 43),
+            &stream,
+            &test,
+            k,
+            b,
+            cfg.warmstart,
+            budget,
+            "svm parallel active k=16",
+        );
+        println!("{}", row("svm parallel k=16", &r));
+    }
+
+    // --- NN: S(n) constant = update cost; only the k division helps. ---
+    {
+        let mut cfg = NnExperimentConfig::paper_defaults();
+        cfg.global_batch = (budget / 6).clamp(256, 2000);
+        cfg.warmstart = cfg.global_batch / 2;
+        let stream = StreamConfig::nn_task();
+        let test = TestSet::generate(&stream, 200);
+        let b = cfg.global_batch;
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut PassiveSifter,
+            &stream,
+            &test,
+            1,
+            1,
+            cfg.warmstart,
+            budget,
+            "nn seq passive",
+        );
+        println!("{}", row("nn seq passive", &r));
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut MarginSifter::new(cfg.eta, 47),
+            &stream,
+            &test,
+            1,
+            1,
+            cfg.warmstart,
+            budget,
+            "nn seq active",
+        );
+        println!("{}", row("nn seq active", &r));
+
+        let r = run_one(
+            cfg.make_learner(),
+            &mut MarginSifter::new(cfg.eta, 53),
+            &stream,
+            &test,
+            4,
+            b,
+            cfg.warmstart,
+            budget,
+            "nn parallel active k=4",
+        );
+        println!("{}", row("nn parallel k=4", &r));
+    }
+
+    println!();
+    println!("reading guide: passive has zero broadcasts and zero sift ops;");
+    println!("active trades update ops (T) for sift ops (n·S); parallel");
+    println!("active divides the sift *time* by k while broadcasts = phi(n).");
+}

@@ -1,0 +1,121 @@
+//! Figure 3 (right) — neural network: test error vs training time for
+//! passive, sequential active, and parallel active with k ∈ {1, 2, 4, 8}.
+//!
+//! Paper settings: task 3 vs 5, one hidden layer of 100 sigmoid units,
+//! AdaGrad-SGD step 0.07, querying eta = 0.0005. The paper's observation to
+//! reproduce: the NN sampling rate stays high (~40%), and since NN updates
+//! cost the same as NN scoring, gains are real from 1 -> 2 nodes but modest
+//! beyond — the opposite regime from the SVM.
+//!
+//!     cargo run --release --example fig3_nn [budget]
+
+use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::coordinator::NnExperimentConfig;
+use para_active::data::{StreamConfig, TestSet};
+use para_active::learner::Learner;
+use para_active::metrics::curves_to_markdown;
+use para_active::nn::AdaGradMlp;
+
+fn run_variant(
+    cfg: &NnExperimentConfig,
+    stream: &StreamConfig,
+    test: &TestSet,
+    sifter: &mut dyn Sifter,
+    nodes: usize,
+    batch: usize,
+    budget: usize,
+    eval_every: usize,
+    label: &str,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
+    sc.eval_every_rounds = eval_every;
+    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    eprintln!("running {label} ...");
+    let r = run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer);
+    eprintln!(
+        "  -> err {:.4} ({} mistakes/{}), rate {:.2}%, simulated {:.2}s",
+        r.final_test_errors(),
+        r.curve.points.last().unwrap().mistakes,
+        test.len(),
+        100.0 * r.query_rate(),
+        r.elapsed
+    );
+    r
+}
+
+fn main() {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40_000);
+
+    let mut cfg = NnExperimentConfig::paper_defaults();
+    cfg.global_batch = (budget / 10).clamp(256, 2000);
+    cfg.warmstart = cfg.global_batch / 2;
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, cfg.test_size.min(2000));
+    eprintln!(
+        "fig3_nn: budget={budget} B={} warmstart={} test={}",
+        cfg.global_batch,
+        cfg.warmstart,
+        test.len()
+    );
+
+    let b = cfg.global_batch;
+    let mut curves = Vec::new();
+
+    let mut passive = PassiveSifter;
+    let r = run_variant(
+        &cfg, &stream, &test, &mut passive, 1, 1, budget, b / 2, "nn seq passive",
+    );
+    curves.push(r);
+
+    let mut seq_active = MarginSifter::new(cfg.eta, 21);
+    let r = run_variant(
+        &cfg, &stream, &test, &mut seq_active, 1, 1, budget, b / 2, "nn seq active",
+    );
+    curves.push(r);
+
+    for k in [1usize, 2, 4, 8] {
+        let mut sifter = MarginSifter::new(cfg.eta, 23 + k as u64);
+        let r = run_variant(
+            &cfg,
+            &stream,
+            &test,
+            &mut sifter,
+            k,
+            b,
+            budget,
+            1,
+            &format!("nn parallel active k={k}"),
+        );
+        curves.push(r);
+    }
+
+    std::fs::create_dir_all("results").ok();
+    for r in &curves {
+        let name = r.curve.label.replace([' ', '='], "_");
+        let path = format!("results/fig3_nn_{name}.csv");
+        std::fs::write(&path, r.curve.to_csv()).expect("write csv");
+        eprintln!("wrote {path}");
+    }
+
+    let refs: Vec<&para_active::metrics::ErrorCurve> =
+        curves.iter().map(|r| &r.curve).collect();
+    println!("{}", curves_to_markdown(&refs));
+
+    // E8: the NN sampling rate stays high (paper: ~40%), bounding the
+    // useful parallelism at ~1/rate nodes.
+    for r in &curves {
+        if r.curve.label.contains("parallel") {
+            println!(
+                "# {}: final query rate {:.1}% (parallelism bound ~{:.1} nodes)",
+                r.curve.label,
+                100.0 * r.query_rate(),
+                1.0 / r.query_rate().max(1e-6)
+            );
+        }
+    }
+}

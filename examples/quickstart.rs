@@ -1,0 +1,44 @@
+//! Quickstart: train the paper's kernel-SVM task with parallel active
+//! learning on 4 simulated nodes, and compare against sequential passive
+//! learning — a two-minute tour of the library.
+//!
+//!     cargo run --release --example quickstart
+
+use para_active::coordinator::{run_passive_svm, run_sync_svm, SvmExperimentConfig};
+use para_active::data::StreamConfig;
+use para_active::metrics::{curves_to_markdown, SpeedupTable};
+
+fn main() {
+    // The paper's SVM task: digits {3,1} (positive) vs {5,7} (negative),
+    // pixels scaled to [-1,1], RBF kernel with gamma = 0.012, C = 1.
+    let mut cfg = SvmExperimentConfig::paper_defaults();
+    cfg.global_batch = 1024; // small batches so the demo is quick
+    cfg.warmstart = 768;
+    cfg.test_size = 1000;
+    let stream = StreamConfig::svm_task();
+    let budget = 9_000;
+
+    println!("== para-active quickstart ==");
+    println!("task: {{3,1}} vs {{5,7}}, budget {budget} examples\n");
+
+    println!("running parallel active (k = 4) ...");
+    let active = run_sync_svm(&cfg, &stream, 4, budget);
+
+    println!("running sequential passive baseline ...");
+    let passive = run_passive_svm(&cfg, &stream, budget);
+
+    println!("\n{}", curves_to_markdown(&[&passive.curve, &active.curve]));
+
+    let targets = [60usize, 40, 25];
+    let table = SpeedupTable::build(&passive.curve, &[&active.curve], &targets);
+    println!("speedup of parallel active over passive (time-to-target):");
+    println!("{}", table.to_markdown());
+    println!(
+        "query rate: {:.1}% of the stream was informative enough to broadcast",
+        100.0 * active.query_rate()
+    );
+    println!(
+        "simulated parallel time: {:.2}s active vs {:.2}s passive",
+        active.elapsed, passive.elapsed
+    );
+}

@@ -1,0 +1,88 @@
+//! Theorems 1 & 2 — IWAL with delayed updates (Algorithm 3), empirically.
+//!
+//! Sweeps the fixed batch delay B ∈ {1, 64, 512, 4096} on the exact
+//! threshold-class testbed and reports, at geometric checkpoints:
+//!
+//! * excess risk err(h_t) - err(h*) (Thm 1: the delayed curves track the
+//!   B = 1 curve once t >> B, since the bound only replaces t by t - B);
+//! * cumulative label queries (Thm 2: ~2 theta err(h*) t + O(sqrt(t)); in
+//!   the separable case a decaying query *rate*).
+//!
+//!     cargo run --release --example theory_delays [t_max] [noise]
+
+use para_active::theory::{run_delayed_iwal, TheoryConfig};
+
+fn main() {
+    let t_max: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60_000);
+    let noise: f64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.0);
+
+    let delays = [1u64, 64, 512, 4096];
+    println!("## IWAL with delays: t_max={t_max}, noise={noise}\n");
+
+    let mut runs = Vec::new();
+    for &b in &delays {
+        eprintln!("running delay B={b} ...");
+        let cfg = TheoryConfig { noise, ..TheoryConfig::new(b, t_max) };
+        runs.push(run_delayed_iwal(&cfg, 16));
+    }
+
+    // Thm 1 table: excess risk vs t per delay.
+    println!("### excess risk err(h_t) - err(h*)  (Thm 1)\n");
+    print!("| t |");
+    for &b in &delays {
+        print!(" B={b} |");
+    }
+    println!("\n|---|---|---|---|---|");
+    let checkpoints: Vec<u64> = runs[0].points.iter().map(|p| p.t).collect();
+    for (i, t) in checkpoints.iter().enumerate() {
+        print!("| {t} |");
+        for run in &runs {
+            match run.points.get(i) {
+                Some(p) => print!(" {:.4} |", p.excess_risk),
+                None => print!(" – |"),
+            }
+        }
+        println!();
+    }
+
+    // Thm 2 table: cumulative queries vs t per delay.
+    println!("\n### cumulative label queries  (Thm 2)\n");
+    print!("| t |");
+    for &b in &delays {
+        print!(" B={b} |");
+    }
+    println!("\n|---|---|---|---|---|");
+    for (i, t) in checkpoints.iter().enumerate() {
+        print!("| {t} |");
+        for run in &runs {
+            match run.points.get(i) {
+                Some(p) => print!(" {} |", p.queries),
+                None => print!(" – |"),
+            }
+        }
+        println!();
+    }
+
+    std::fs::create_dir_all("results").ok();
+    for (b, run) in delays.iter().zip(&runs) {
+        let path = format!("results/theory_delay_B{b}.csv");
+        std::fs::write(&path, run.to_csv()).expect("write csv");
+        eprintln!("wrote {path}");
+    }
+
+    println!();
+    for (b, run) in delays.iter().zip(&runs) {
+        println!(
+            "# B={b}: final excess risk {:.4}, {} queries ({:.1}% of stream)",
+            run.final_excess_risk(),
+            run.total_queries(),
+            100.0 * run.total_queries() as f64 / t_max as f64
+        );
+    }
+}

@@ -1,0 +1,154 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for rust/PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits (shapes baked per artifact; scalars remain runtime (1,) inputs):
+
+  artifacts/svm_sift_b{B}_sv{S}.hlo.txt   for S in SV_CAPACITIES
+  artifacts/mlp_sift_b{B}_h{H}.hlo.txt
+  artifacts/mlp_step_b{B}_h{H}.hlo.txt
+  artifacts/manifest.json                 (shape/dtype metadata, human use)
+  artifacts/manifest.tsv                  (same metadata, parsed by rust)
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 256
+DIM = 784
+HIDDEN = 128  # lane-aligned; rust zero-pads its H=100 params (see kernels/mlp.py)
+SV_CAPACITIES = (512, 2048)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _entry(name, fn, arg_names, arg_shapes, out_shapes):
+    return {
+        "name": name,
+        "fn": fn,
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": "f32"}
+            for n, s in zip(arg_names, arg_shapes)
+        ],
+        "outputs": [{"shape": list(s), "dtype": "f32"} for s in out_shapes],
+    }
+
+
+def build_entries(batch=BATCH, dim=DIM, hidden=HIDDEN, sv_capacities=SV_CAPACITIES):
+    entries = []
+    for s in sv_capacities:
+        entries.append(
+            _entry(
+                f"svm_sift_b{batch}_sv{s}",
+                model.svm_sift,
+                ["x", "sv", "alpha", "bias", "gamma", "eta", "n_seen"],
+                [(batch, dim), (s, dim), (s,), (1,), (1,), (1,), (1,)],
+                [(batch,), (batch,)],
+            )
+        )
+    entries.append(
+        _entry(
+            f"mlp_sift_b{batch}_h{hidden}",
+            model.mlp_sift,
+            ["x", "w1", "b1", "w2", "b2", "eta", "n_seen"],
+            [(batch, dim), (dim, hidden), (hidden,), (hidden,), (1,), (1,), (1,)],
+            [(batch,), (batch,)],
+        )
+    )
+    p_shapes = [(dim, hidden), (hidden,), (hidden,), (1,)]
+    entries.append(
+        _entry(
+            f"mlp_step_b{batch}_h{hidden}",
+            model.mlp_step,
+            ["w1", "b1", "w2", "b2", "g1", "gb1", "g2", "gb2", "x", "y", "wts", "lr"],
+            p_shapes + p_shapes + [(batch, dim), (batch,), (batch,), (1,)],
+            p_shapes + p_shapes + [(1,)],
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="compat: ignored single-file path")
+    args = parser.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"batch": BATCH, "dim": DIM, "hidden": HIDDEN, "entries": []}
+    for entry in build_entries(BATCH, DIM, HIDDEN, SV_CAPACITIES):
+        specs = [_spec(tuple(i["shape"])) for i in entry["inputs"]]
+        lowered = jax.jit(entry["fn"]).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{entry['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": entry["name"],
+                "file": fname,
+                "inputs": entry["inputs"],
+                "outputs": entry["outputs"],
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(render_tsv(manifest))
+    print(f"wrote manifest.{{json,tsv}} with {len(manifest['entries'])} entries")
+
+
+def render_tsv(manifest) -> str:
+    """Line-oriented manifest for the dependency-free rust parser.
+
+    Format (tab-separated):
+        meta\t<batch>\t<dim>\t<hidden>
+        entry\t<name>\t<file>
+        in\t<name>\t<dtype>\t<d0,d1,...>
+        out\t<name>\t<dtype>\t<d0,d1,...>
+    """
+    lines = [
+        f"meta\t{manifest['batch']}\t{manifest['dim']}\t{manifest['hidden']}"
+    ]
+    for e in manifest["entries"]:
+        lines.append(f"entry\t{e['name']}\t{e['file']}")
+        for i in e["inputs"]:
+            dims = ",".join(str(d) for d in i["shape"])
+            lines.append(f"in\t{i['name']}\t{i['dtype']}\t{dims}")
+        for idx, o in enumerate(e["outputs"]):
+            dims = ",".join(str(d) for d in o["shape"])
+            lines.append(f"out\tout{idx}\t{o['dtype']}\t{dims}")
+    return "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    main()

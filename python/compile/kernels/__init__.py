@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the para-active sifting hot path.
+
+- rbf_score.rbf_scores : tiled RBF support-vector scoring (kernel SVM sifter)
+- mlp.mlp_forward      : fused one-hidden-layer MLP forward (NN sifter)
+- ref                  : pure-jnp oracles both kernels are tested against
+"""
+
+from . import ref
+from .mlp import mlp_forward
+from .rbf_score import rbf_scores
+
+__all__ = ["ref", "mlp_forward", "rbf_scores"]

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: batched RBF support-vector scoring.
+
+This is the sifting hot-spot of the paper's kernel-SVM experiment: every
+incoming example must be scored f(x) = sum_j alpha_j K(sv_j, x) against the
+current support set before the querying rule (Eq 5) decides whether to label
+it. The paper's Figure-2 cost model calls this the n*S(phi(n)) term — it is
+the dominant, embarrassingly parallel part of the computation.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the query batch X stays
+resident in VMEM; the support set is streamed through VMEM in (BLOCK_S, D)
+tiles along the grid. The squared distance uses the
+``||x||^2 + ||s||^2 - 2 x.s`` expansion so the inner product is a
+(B, D) x (D, BLOCK_S) MXU matmul rather than an elementwise broadcast.
+Partial scores exp(-d2) @ alpha are accumulated into the output block, which
+maps to the same VMEM tile on every grid step.
+
+The gamma bandwidth is folded into the inputs (x, sv scaled by sqrt(gamma))
+so the kernel body is bandwidth-free:
+    exp(-gamma * ||x - s||^2) == exp(-||sqrt(gamma) x - sqrt(gamma) s||^2).
+
+Executed with interpret=True: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so correctness (and the AOT artifacts) go through the
+interpreter lowering; the BlockSpec schedule is still the real TPU plan.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 256
+
+
+def _rbf_score_kernel(x_ref, sv_ref, alpha_ref, o_ref):
+    """One grid step: score the resident X block against one SV tile."""
+    i = pl.program_id(0)
+    x = x_ref[...]          # (B, D)  resident across all steps
+    s = sv_ref[...]         # (BLOCK_S, D) this step's SV tile
+    x_sq = jnp.sum(x * x, axis=1)                      # (B,)
+    s_sq = jnp.sum(s * s, axis=1)                      # (BLOCK_S,)
+    # MXU-shaped inner product; d2 >= 0 up to rounding.
+    d2 = x_sq[:, None] + s_sq[None, :] - 2.0 * (x @ s.T)
+    part = jnp.exp(-jnp.maximum(d2, 0.0)) @ alpha_ref[...]   # (B,)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i != 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def rbf_scores(x, sv, alpha, gamma, block_s=DEFAULT_BLOCK_S):
+    """Pallas-tiled RBF margin scores; matches ref.rbf_scores_ref.
+
+    Args:
+      x:      (B, D) float32 query batch.
+      sv:     (S, D) float32 support vectors; zero rows with alpha == 0 are
+              inert padding (their kernel value is multiplied by zero).
+      alpha:  (S,)   float32 signed dual coefficients.
+      gamma:  scalar RBF bandwidth.
+      block_s: SV tile height (static). S is padded up to a multiple.
+
+    Returns:
+      (B,) float32 scores.
+    """
+    x = x.astype(jnp.float32)
+    sv = sv.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    b, d = x.shape
+    s, _ = sv.shape
+
+    scale = jnp.sqrt(gamma).astype(jnp.float32)
+    xs = x * scale
+    svs = sv * scale
+
+    block_s = min(block_s, max(s, 1))
+    pad = (-s) % block_s
+    if pad:
+        svs = jnp.pad(svs, ((0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, (0, pad))
+    s_pad = s + pad
+    grid = (s_pad // block_s,)
+
+    return pl.pallas_call(
+        _rbf_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),         # X resident
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),   # SV streamed
+            pl.BlockSpec((block_s,), lambda i: (i,)),       # alpha streamed
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),       # accumulator
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(xs, svs, alpha)

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth: every Pallas kernel in this package is
+required (by pytest + hypothesis) to match the corresponding function here to
+float32 tolerance across a sweep of shapes. They are also used by the L2
+model as the non-Pallas reference graph for HLO-size / fusion comparisons.
+"""
+
+import jax.numpy as jnp
+
+
+def _sigmoid(z):
+    # Numerically-stable sigmoid, written out so ref.py carries no jax.nn
+    # dependency (keeps the lowered ref graph minimal for HLO comparisons).
+    return 0.5 * (jnp.tanh(0.5 * z) + 1.0)
+
+
+def rbf_scores_ref(x, sv, alpha, gamma):
+    """SVM margin scores f(x_b) = sum_j alpha_j * exp(-gamma * ||x_b - sv_j||^2).
+
+    Args:
+      x:      (B, D) batch of query points.
+      sv:     (S, D) support vectors (rows with alpha == 0 are padding).
+      alpha:  (S,)   signed dual coefficients (y_j * alpha_j, already signed).
+      gamma:  scalar RBF bandwidth, K(x, s) = exp(-gamma * ||x - s||^2).
+
+    Returns:
+      (B,) float32 scores.
+    """
+    x_sq = jnp.sum(x * x, axis=1)  # (B,)
+    s_sq = jnp.sum(sv * sv, axis=1)  # (S,)
+    d2 = x_sq[:, None] + s_sq[None, :] - 2.0 * x @ sv.T  # (B, S)
+    k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+    return k @ alpha
+
+
+def mlp_forward_ref(x, w1, b1, w2, b2):
+    """One-hidden-layer MLP score: sigmoid hidden, linear output (paper §4).
+
+    Args:
+      x:  (B, D) inputs in [0, 1].
+      w1: (D, H) input->hidden weights.
+      b1: (H,)   hidden biases.
+      w2: (H,)   hidden->output weights.
+      b2: ()     output bias.
+
+    Returns:
+      (B,) real-valued scores (pre-logistic).
+    """
+    h = _sigmoid(x @ w1 + b1[None, :])
+    return h @ w2 + b2
+
+
+def logistic_loss_ref(scores, y, weights):
+    """Mean importance-weighted logistic loss; y in {-1, +1}."""
+    z = -y * scores
+    # log(1 + exp(z)), stable form.
+    loss = jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.sum(weights * loss) / jnp.maximum(jnp.sum(weights), 1e-12)
+
+
+def margin_query_prob_ref(scores, eta, n_seen):
+    """The paper's querying rule (Eq 5): p = 2 / (1 + exp(eta * |f(x)| * sqrt(n)))."""
+    return 2.0 / (1.0 + jnp.exp(eta * jnp.abs(scores) * jnp.sqrt(n_seen)))

@@ -1,0 +1,105 @@
+"""L2: the paper's compute graphs, built on the L1 Pallas kernels.
+
+Three entry points get AOT-lowered to HLO text by aot.py and executed from
+the rust coordinator's sift / update paths:
+
+  svm_sift   : RBF margin scores + querying probabilities (Eq 5) for a batch.
+  mlp_sift   : MLP margin scores + querying probabilities for a batch.
+  mlp_step   : one importance-weighted AdaGrad-SGD update on a mini-batch
+               (fwd + bwd via jax.grad over the pure-jnp graph).
+
+All scalars (gamma, eta, n_seen, lr) are passed as (1,) f32 inputs so the
+rust side can vary them at runtime without recompiling; only array shapes
+are baked into an artifact.
+
+Python runs once, at `make artifacts` time; nothing here is on the request
+path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp_forward, rbf_scores
+from .kernels.ref import logistic_loss_ref, mlp_forward_ref
+
+
+def query_probability(scores, eta, n_seen):
+    """The paper's margin-based querying rule (Eq 5).
+
+    p = 2 / (1 + exp(eta * |f(x)| * sqrt(n))) — selects low-margin examples;
+    aggressiveness grows with the number of examples n seen so far.
+    """
+    return 2.0 / (1.0 + jnp.exp(eta * jnp.abs(scores) * jnp.sqrt(n_seen)))
+
+
+def svm_sift(x, sv, alpha, bias, gamma, eta, n_seen):
+    """Sift a batch for the kernel-SVM learner.
+
+    Args:
+      x:      (B, D) query batch.
+      sv:     (S, D) support vectors (alpha == 0 rows are padding).
+      alpha:  (S,)   signed dual coefficients.
+      bias:   (1,)   LASVM bias term b.
+      gamma, eta, n_seen: (1,) f32 scalars.
+
+    Returns:
+      (scores (B,), probs (B,)).
+    """
+    scores = rbf_scores(x, sv, alpha, gamma[0]) + bias[0]
+    probs = query_probability(scores, eta[0], n_seen[0])
+    return scores, probs
+
+
+def mlp_sift(x, w1, b1, w2, b2, eta, n_seen):
+    """Sift a batch for the neural-network learner. Returns (scores, probs)."""
+    scores = mlp_forward(x, w1, b1, w2, b2)
+    probs = query_probability(scores, eta[0], n_seen[0])
+    return scores, probs
+
+
+def mlp_step(w1, b1, w2, b2, g1, gb1, g2, gb2, x, y, wts, lr):
+    """One importance-weighted AdaGrad step of logistic-loss SGD (§4, NN).
+
+    Args:
+      w1 (D,H), b1 (H,), w2 (H,), b2 (1,): parameters.
+      g1, gb1, g2, gb2: AdaGrad squared-gradient accumulators, same shapes.
+      x (B,D), y (B,) in {-1,+1}, wts (B,) importance weights (0 = unused row).
+      lr: (1,) f32 step size.
+
+    Returns:
+      (w1', b1', w2', b2', g1', gb1', g2', gb2', loss (1,)).
+    """
+
+    def loss_fn(params):
+        w1_, b1_, w2_, b2_ = params
+        scores = mlp_forward_ref(x, w1_, b1_, w2_, b2_[0])
+        return logistic_loss_ref(scores, y, wts)
+
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    eps = 1e-8
+    accums = (g1, gb1, g2, gb2)
+    new_params = []
+    new_accums = []
+    for p, g, a in zip(params, grads, accums):
+        a2 = a + g * g
+        new_params.append(p - lr[0] * g / (jnp.sqrt(a2) + eps))
+        new_accums.append(a2)
+    return tuple(new_params) + tuple(new_accums) + (jnp.reshape(loss, (1,)),)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference variants (no Pallas) — used to compare lowered HLO size
+# and as a second oracle in tests.
+# ---------------------------------------------------------------------------
+
+def svm_sift_ref(x, sv, alpha, bias, gamma, eta, n_seen):
+    from .kernels.ref import rbf_scores_ref
+
+    scores = rbf_scores_ref(x, sv, alpha, gamma[0]) + bias[0]
+    return scores, query_probability(scores, eta[0], n_seen[0])
+
+
+def mlp_sift_ref(x, w1, b1, w2, b2, eta, n_seen):
+    scores = mlp_forward_ref(x, w1, b1, w2, b2[0])
+    return scores, query_probability(scores, eta[0], n_seen[0])

@@ -1,0 +1,210 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled sift path — hypothesis
+sweeps shapes (batch, dim, support count, tile sizes) and value ranges, and
+every case must match the oracle to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp_forward, rbf_scores
+from compile.kernels.ref import (
+    margin_query_prob_ref,
+    mlp_forward_ref,
+    rbf_scores_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# RBF scoring kernel
+# ---------------------------------------------------------------------------
+
+
+class TestRbfScores:
+    def test_matches_ref_basic(self):
+        r = _rng(0)
+        x = r.normal(size=(8, 16)).astype(np.float32)
+        sv = r.normal(size=(12, 16)).astype(np.float32)
+        alpha = r.normal(size=(12,)).astype(np.float32)
+        got = rbf_scores(x, sv, alpha, 0.5, block_s=4)
+        want = rbf_scores_ref(x, sv, alpha, 0.5)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_paper_shapes(self):
+        """The AOT shapes: B=256, D=784, gamma=0.012 (paper §4)."""
+        r = _rng(1)
+        x = r.uniform(-1, 1, size=(256, 784)).astype(np.float32)
+        sv = r.uniform(-1, 1, size=(512, 784)).astype(np.float32)
+        alpha = r.normal(size=(512,)).astype(np.float32)
+        got = rbf_scores(x, sv, alpha, 0.012)
+        want = rbf_scores_ref(x, sv, alpha, 0.012)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_alpha_padding_is_inert(self):
+        """Rows with alpha == 0 (capacity padding) must not change scores."""
+        r = _rng(2)
+        x = r.normal(size=(4, 8)).astype(np.float32)
+        sv = r.normal(size=(6, 8)).astype(np.float32)
+        alpha = r.normal(size=(6,)).astype(np.float32)
+        sv_pad = np.concatenate([sv, r.normal(size=(10, 8)).astype(np.float32)])
+        alpha_pad = np.concatenate([alpha, np.zeros(10, np.float32)])
+        a = rbf_scores(x, sv, alpha, 0.3, block_s=3)
+        b = rbf_scores(x, sv_pad, alpha_pad, 0.3, block_s=3)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_single_support_vector(self):
+        x = np.zeros((2, 4), np.float32)
+        sv = np.ones((1, 4), np.float32)
+        alpha = np.array([2.0], np.float32)
+        got = rbf_scores(x, sv, alpha, 1.0)
+        want = 2.0 * np.exp(-4.0) * np.ones(2)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_self_score(self):
+        """K(x, x) = 1, so scoring the SVs themselves has the alpha diagonal."""
+        r = _rng(3)
+        sv = r.normal(size=(5, 7)).astype(np.float32)
+        alpha = np.eye(5, dtype=np.float32)[0] * 3.0  # only sv_0 active
+        got = rbf_scores(sv[:1], sv, alpha, 2.0, block_s=2)
+        np.testing.assert_allclose(got, [3.0], rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 17),
+        d=st.integers(1, 33),
+        s=st.integers(1, 40),
+        block_s=st.integers(1, 16),
+        gamma=st.floats(1e-3, 2.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_sweep(self, b, d, s, block_s, gamma, seed):
+        r = _rng(seed)
+        x = r.uniform(-1, 1, size=(b, d)).astype(np.float32)
+        sv = r.uniform(-1, 1, size=(s, d)).astype(np.float32)
+        alpha = r.normal(size=(s,)).astype(np.float32)
+        got = rbf_scores(x, sv, alpha, gamma, block_s=block_s)
+        want = rbf_scores_ref(x, sv, alpha, gamma)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+    def test_dtype_coercion(self, dtype):
+        """Kernel coerces inputs to f32 — integer / f64 inputs still work."""
+        x = np.arange(8, dtype=dtype).reshape(2, 4)
+        sv = np.ones((3, 4), dtype)
+        alpha = np.ones(3, dtype)
+        got = rbf_scores(x, sv, alpha, 0.01, block_s=2)
+        want = rbf_scores_ref(
+            x.astype(np.float32), sv.astype(np.float32), alpha.astype(np.float32), 0.01
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLP forward kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMlpForward:
+    def _params(self, r, d, h):
+        return (
+            r.normal(scale=0.1, size=(d, h)).astype(np.float32),
+            r.normal(scale=0.1, size=(h,)).astype(np.float32),
+            r.normal(scale=0.1, size=(h,)).astype(np.float32),
+            np.float32(r.normal(scale=0.1)),
+        )
+
+    def test_matches_ref_basic(self):
+        r = _rng(0)
+        w1, b1, w2, b2 = self._params(r, 16, 8)
+        x = r.uniform(0, 1, size=(10, 16)).astype(np.float32)
+        got = mlp_forward(x, w1, b1, w2, b2, block_b=4)
+        want = mlp_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_paper_shapes(self):
+        """B=256, D=784, H=100 (paper) and H=128 (AOT padded)."""
+        r = _rng(1)
+        for h in (100, 128):
+            w1, b1, w2, b2 = self._params(r, 784, h)
+            x = r.uniform(0, 1, size=(256, 784)).astype(np.float32)
+            got = mlp_forward(x, w1, b1, w2, b2)
+            want = mlp_forward_ref(x, w1, b1, w2, b2)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_hidden_padding_is_inert(self):
+        """Zero-padded hidden units (100 -> 128) must not change scores."""
+        r = _rng(2)
+        w1, b1, w2, b2 = self._params(r, 12, 5)
+        x = r.uniform(0, 1, size=(6, 12)).astype(np.float32)
+        w1p = np.pad(w1, ((0, 0), (0, 3)))
+        b1p = np.pad(b1, (0, 3))
+        w2p = np.pad(w2, (0, 3))
+        a = mlp_forward(x, w1, b1, w2, b2, block_b=3)
+        b = mlp_forward(x, w1p, b1p, w2p, b2, block_b=3)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_batch_padding_boundary(self):
+        """Batch not divisible by block: padded rows must be dropped."""
+        r = _rng(3)
+        w1, b1, w2, b2 = self._params(r, 8, 4)
+        x = r.uniform(0, 1, size=(7, 8)).astype(np.float32)
+        got = mlp_forward(x, w1, b1, w2, b2, block_b=4)
+        assert got.shape == (7,)
+        want = mlp_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 20),
+        d=st.integers(1, 24),
+        h=st.integers(1, 16),
+        block_b=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_sweep(self, b, d, h, block_b, seed):
+        r = _rng(seed)
+        w1, b1, w2, b2 = self._params(r, d, h)
+        x = r.uniform(0, 1, size=(b, d)).astype(np.float32)
+        got = mlp_forward(x, w1, b1, w2, b2, block_b=block_b)
+        want = mlp_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Querying rule (Eq 5)
+# ---------------------------------------------------------------------------
+
+
+class TestQueryRule:
+    def test_zero_margin_queries_surely(self):
+        p = margin_query_prob_ref(jnp.zeros(4), 0.1, 1000.0)
+        np.testing.assert_allclose(p, np.ones(4), rtol=1e-6)
+
+    def test_probability_range_and_monotonicity(self):
+        scores = jnp.array([0.0, 0.5, 1.0, 5.0, 50.0])
+        p = np.asarray(margin_query_prob_ref(scores, 0.1, 10000.0))
+        assert np.all(p <= 1.0 + 1e-6) and np.all(p >= 0.0)
+        assert np.all(np.diff(p) <= 1e-9)  # larger margin -> lower query prob
+
+    def test_sign_symmetric(self):
+        p_pos = margin_query_prob_ref(jnp.array([2.0]), 0.05, 100.0)
+        p_neg = margin_query_prob_ref(jnp.array([-2.0]), 0.05, 100.0)
+        np.testing.assert_allclose(p_pos, p_neg)
+
+    def test_rate_decays_with_n(self):
+        """More data seen -> more aggressive filtering at fixed margin."""
+        ps = [
+            float(margin_query_prob_ref(jnp.array([1.0]), 0.1, n)[0])
+            for n in (10.0, 100.0, 1000.0, 100000.0)
+        ]
+        assert all(a > b for a, b in zip(ps, ps[1:]))

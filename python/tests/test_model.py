@@ -1,0 +1,117 @@
+"""L2 correctness: sift graphs vs pure-jnp refs, and the AdaGrad train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import logistic_loss_ref, mlp_forward_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _s(v):
+    return jnp.array([v], jnp.float32)
+
+
+class TestSvmSift:
+    def test_matches_ref(self):
+        r = _rng(0)
+        x = r.uniform(-1, 1, size=(16, 32)).astype(np.float32)
+        sv = r.uniform(-1, 1, size=(24, 32)).astype(np.float32)
+        alpha = r.normal(size=(24,)).astype(np.float32)
+        s1, p1 = model.svm_sift(x, sv, alpha, _s(0.2), _s(0.05), _s(0.1), _s(4000.0))
+        s2, p2 = model.svm_sift_ref(x, sv, alpha, _s(0.2), _s(0.05), _s(0.1), _s(4000.0))
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-4)
+
+    def test_probs_valid(self):
+        r = _rng(1)
+        x = r.uniform(-1, 1, size=(8, 16)).astype(np.float32)
+        sv = r.uniform(-1, 1, size=(8, 16)).astype(np.float32)
+        alpha = r.normal(size=(8,)).astype(np.float32)
+        _, p = model.svm_sift(x, sv, alpha, _s(0.0), _s(0.05), _s(0.1), _s(100.0))
+        p = np.asarray(p)
+        assert np.all(p > 0.0) and np.all(p <= 1.0 + 1e-6)
+
+
+class TestMlpSift:
+    def test_matches_ref(self):
+        r = _rng(2)
+        x = r.uniform(0, 1, size=(16, 20)).astype(np.float32)
+        w1 = r.normal(scale=0.1, size=(20, 10)).astype(np.float32)
+        b1 = np.zeros(10, np.float32)
+        w2 = r.normal(scale=0.1, size=(10,)).astype(np.float32)
+        b2 = np.zeros(1, np.float32)
+        s1, p1 = model.mlp_sift(x, w1, b1, w2, b2, _s(0.0005), _s(500.0))
+        s2, p2 = model.mlp_sift_ref(x, w1, b1, w2, b2, _s(0.0005), _s(500.0))
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-4)
+
+
+class TestMlpStep:
+    def _init(self, r, d=16, h=8, b=32):
+        w1 = r.normal(scale=0.1, size=(d, h)).astype(np.float32)
+        b1 = np.zeros(h, np.float32)
+        w2 = r.normal(scale=0.1, size=(h,)).astype(np.float32)
+        b2 = np.zeros(1, np.float32)
+        zeros = [np.zeros_like(a) for a in (w1, b1, w2, b2)]
+        x = r.uniform(0, 1, size=(b, d)).astype(np.float32)
+        # Linearly separable labels so training must make progress.
+        y = np.where(x[:, 0] > 0.5, 1.0, -1.0).astype(np.float32)
+        wts = np.ones(b, np.float32)
+        return [w1, b1, w2, b2], zeros, x, y, wts
+
+    def test_loss_decreases(self):
+        r = _rng(3)
+        params, accums, x, y, wts = self._init(r)
+        lr = _s(0.5)
+        losses = []
+        for _ in range(30):
+            out = model.mlp_step(*params, *accums, x, y, wts, lr)
+            params, accums = list(out[:4]), list(out[4:8])
+            losses.append(float(out[8][0]))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_zero_weight_rows_ignored(self):
+        """Importance weight 0 must behave exactly like removing the row."""
+        r = _rng(4)
+        params, accums, x, y, wts = self._init(r, b=16)
+        wts2 = wts.copy()
+        wts2[8:] = 0.0
+        out_masked = model.mlp_step(*params, *accums, x, y, wts2, _s(0.1))
+        out_trunc = model.mlp_step(
+            *params, *accums, x[:8], y[:8], wts[:8], _s(0.1)
+        )
+        for a, b in zip(out_masked[:4], out_trunc[:4]):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_importance_weight_scales_gradient(self):
+        """Duplicating a row == doubling its importance weight (for the mean)."""
+        r = _rng(5)
+        params, accums, x, y, _ = self._init(r, b=4)
+        w_dup = np.ones(4, np.float32)
+        x_dup = np.concatenate([x, x[:1]])
+        y_dup = np.concatenate([y, y[:1]])
+        out_a = model.mlp_step(
+            *params, *accums, x_dup, y_dup, np.ones(5, np.float32), _s(0.1)
+        )
+        w_b = w_dup.copy()
+        w_b[0] = 2.0
+        out_b = model.mlp_step(*params, *accums, x, y, w_b, _s(0.1))
+        np.testing.assert_allclose(out_a[8], out_b[8], rtol=1e-5)
+
+    def test_loss_matches_ref(self):
+        r = _rng(6)
+        params, accums, x, y, wts = self._init(r, b=8)
+        out = model.mlp_step(*params, *accums, x, y, wts, _s(0.0))
+        scores = mlp_forward_ref(x, params[0], params[1], params[2], params[3][0])
+        want = logistic_loss_ref(scores, y, wts)
+        np.testing.assert_allclose(out[8][0], want, rtol=1e-5)
+        # lr = 0 must leave parameters unchanged.
+        for p0, p1 in zip(params, out[:4]):
+            np.testing.assert_allclose(p0, p1, rtol=1e-6)

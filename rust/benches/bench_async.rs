@@ -1,0 +1,75 @@
+//! E9 bench — asynchronous (Alg 2) vs synchronous (Alg 1) coordination
+//! under node heterogeneity, plus live-thread throughput.
+
+use para_active::learner::Learner;
+use para_active::active::margin::MarginSifter;
+use para_active::coordinator::async_sim::{run_async, AsyncConfig};
+use para_active::coordinator::live::{run_live, LiveConfig};
+use para_active::coordinator::sync::{run_sync, SyncConfig};
+use para_active::coordinator::SvmExperimentConfig;
+use para_active::data::{StreamConfig, TestSet};
+use para_active::sim::NodeProfile;
+use para_active::svm::{lasvm::LaSvm, RbfKernel};
+
+fn main() {
+    let mut cfg = SvmExperimentConfig::paper_defaults();
+    cfg.global_batch = 800;
+    cfg.warmstart = 400;
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 200);
+    let budget = 5_000usize;
+    let k = 4;
+
+    println!("# async vs sync under a straggler, k={k}, budget={budget}");
+    for straggle in [1.0f64, 4.0, 8.0] {
+        let profile = if straggle > 1.0 {
+            NodeProfile::with_straggler(k, straggle)
+        } else {
+            NodeProfile::uniform(k)
+        };
+        let mut learner = cfg.make_learner();
+        let mut sifter = MarginSifter::new(0.1, 5);
+        let mut sc = SyncConfig::new(k, cfg.global_batch, cfg.warmstart, budget)
+            .with_label("sync");
+        sc.profile = Some(profile.clone());
+        sc.eval_every_rounds = 0;
+        let mut scorer =
+            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+        let sync_r = run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer);
+
+        let proto = cfg.make_learner();
+        let mut ac = AsyncConfig::new(k, cfg.warmstart, budget - cfg.warmstart);
+        ac.profile = Some(profile);
+        let async_r = run_async(
+            &proto,
+            |i| MarginSifter::new(0.1, 7 + i as u64),
+            &stream,
+            &test,
+            &ac,
+        );
+        println!(
+            "straggler {straggle}x: sync sift {:.2}s | async makespan {:.3}s \
+             (max lag {}) agree={}",
+            sync_r.sift_time, async_r.elapsed, async_r.max_lag, async_r.replicas_agree
+        );
+    }
+
+    println!("# live threads (real Alg 2)");
+    let proto = cfg.make_learner();
+    let lc = LiveConfig::new(k, 600, 300);
+    let live = run_live(
+        &proto,
+        |i| MarginSifter::new(0.1, 11 + i as u64),
+        &stream,
+        &test,
+        &lc,
+    );
+    println!(
+        "live: {} examples in {:.2}s wall ({:.0} ex/s), queried {}, agree={}",
+        live.n_seen,
+        live.wall_seconds,
+        (live.n_seen as f64) / live.wall_seconds.max(1e-9),
+        live.n_queried,
+        live.replicas_agree
+    );
+}

@@ -1,0 +1,83 @@
+//! E2 bench — compressed Figure 3 (right): the NN regime, where the ~40%
+//! sampling rate and constant-cost updates bound the parallel gain.
+
+use para_active::learner::Learner;
+use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::coordinator::NnExperimentConfig;
+use para_active::data::{StreamConfig, TestSet};
+use para_active::metrics::SpeedupTable;
+use para_active::nn::AdaGradMlp;
+
+fn run_one(
+    cfg: &NnExperimentConfig,
+    stream: &StreamConfig,
+    test: &TestSet,
+    sifter: &mut dyn Sifter,
+    nodes: usize,
+    batch: usize,
+    budget: usize,
+    label: &str,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
+    sc.eval_every_rounds = if batch == 1 { cfg.global_batch / 2 } else { 1 };
+    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer)
+}
+
+fn main() {
+    let budget = 16_000usize;
+    let mut cfg = NnExperimentConfig::paper_defaults();
+    cfg.global_batch = 1000;
+    cfg.warmstart = 500;
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 1000);
+
+    println!("# fig3 nn bench: budget={budget} B={}", cfg.global_batch);
+    let passive = run_one(
+        &cfg, &stream, &test, &mut PassiveSifter, 1, 1, budget, "nn passive",
+    );
+    println!(
+        "passive:       err {:.4}  simulated {:.2}s",
+        passive.final_test_errors(),
+        passive.elapsed
+    );
+
+    let mut runs = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let mut sifter = MarginSifter::new(cfg.eta, 29 + k as u64);
+        let r = run_one(
+            &cfg,
+            &stream,
+            &test,
+            &mut sifter,
+            k,
+            cfg.global_batch,
+            budget,
+            &format!("nn parallel k={k}"),
+        );
+        println!(
+            "parallel k={k}: err {:.4}  simulated {:.2}s  rate {:.1}%",
+            r.final_test_errors(),
+            r.elapsed,
+            100.0 * r.query_rate()
+        );
+        runs.push(r);
+    }
+
+    let floor = runs
+        .iter()
+        .map(|r| r.curve.points.last().unwrap().mistakes)
+        .min()
+        .unwrap()
+        .max(3);
+    let targets = [floor * 4, floor * 2, (floor as f64 * 1.2) as usize];
+    let curves: Vec<&para_active::metrics::ErrorCurve> =
+        runs.iter().map(|r| &r.curve).collect();
+    println!("\nspeedup over passive:");
+    println!(
+        "{}",
+        SpeedupTable::build(&passive.curve, &curves, &targets).to_markdown()
+    );
+}

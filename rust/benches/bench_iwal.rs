@@ -1,0 +1,40 @@
+//! E6/E7 bench — IWAL-with-delays: per-step cost of Algorithm 3 on the
+//! threshold class, and the delay sweep (excess risk + queries) that
+//! regenerates the Theorem 1–2 shape tables.
+
+use para_active::benchlib::bench_throughput;
+use para_active::theory::{run_delayed_iwal, TheoryConfig};
+
+fn main() {
+    // Step throughput at two grid resolutions.
+    for grid in [101usize, 401] {
+        let name = format!("iwal steps (|H|={grid}, B=64)");
+        bench_throughput(&name, 4000.0, "steps", 1, 3, || {
+            let cfg = TheoryConfig { grid, ..TheoryConfig::new(64, 4000) };
+            run_delayed_iwal(&cfg, 2);
+        });
+    }
+
+    // The delay sweep (the actual E6/E7 numbers).
+    println!("# delay sweep, t=20000, separable");
+    for delay in [1u64, 64, 512, 4096] {
+        let run = run_delayed_iwal(&TheoryConfig::new(delay, 20_000), 8);
+        println!(
+            "B={delay:5}: excess risk {:.4}, queries {:6} ({:.1}%)",
+            run.final_excess_risk(),
+            run.total_queries(),
+            100.0 * run.total_queries() as f64 / 20_000.0
+        );
+    }
+    println!("# delay sweep, t=20000, noise=0.1");
+    for delay in [1u64, 512] {
+        let cfg = TheoryConfig { noise: 0.1, ..TheoryConfig::new(delay, 20_000) };
+        let run = run_delayed_iwal(&cfg, 8);
+        println!(
+            "B={delay:5}: excess risk {:.4}, queries {:6} ({:.1}%)",
+            run.final_excess_risk(),
+            run.total_queries(),
+            100.0 * run.total_queries() as f64 / 20_000.0
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! LASVM update latency: the T(phi(n)) term of Figure 2.
+//!
+//! PROCESS computes one kernel row (O(|S|·D)); each REPROCESS direction
+//! step is O(|S|). Measures the per-update latency as the expansion set
+//! grows, plus raw RBF kernel throughput and the dual-objective invariant
+//! cost (test-only path).
+
+use para_active::benchlib::{bench, bench_throughput, black_box};
+use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::learner::Learner;
+use para_active::svm::{kernel::Kernel, lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+fn main() {
+    let cfg = StreamConfig::svm_task();
+    let kernel = RbfKernel::paper();
+
+    // Raw kernel evaluation throughput.
+    let mut stream = ExampleStream::for_node(&cfg, 0);
+    let a = stream.next_example();
+    let b = stream.next_example();
+    bench_throughput("rbf kernel eval (D=784)", 1000.0, "evals", 2, 20, || {
+        for _ in 0..1000 {
+            black_box(kernel.eval(&a.x, &b.x));
+        }
+    });
+
+    // Update latency at growing set sizes.
+    println!("# lasvm update latency vs expansion-set size");
+    for warm in [200usize, 800, 2400] {
+        let mut svm = LaSvm::new(kernel, DIM, LaSvmConfig::default());
+        let mut s = ExampleStream::for_node(&cfg, 1);
+        for _ in 0..warm {
+            let ex = s.next_example();
+            svm.update(&ex.x, ex.y, 1.0);
+        }
+        let name = format!("lasvm update (|set|={}, |SV|={})", svm.set_size(), svm.n_support());
+        let mut feed = ExampleStream::for_node(&cfg, 2);
+        bench(&name, 2, 30, || {
+            let ex = feed.next_example();
+            svm.update(&ex.x, ex.y, 1.0);
+        });
+    }
+
+    // Importance-weighted updates (the parallel-active path, w = 1/p).
+    let mut svm = LaSvm::new(kernel, DIM, LaSvmConfig::default());
+    let mut s = ExampleStream::for_node(&cfg, 3);
+    for _ in 0..400 {
+        let ex = s.next_example();
+        svm.update(&ex.x, ex.y, 1.0);
+    }
+    let mut feed = ExampleStream::for_node(&cfg, 4);
+    bench("lasvm update (importance weight 10)", 2, 30, || {
+        let ex = feed.next_example();
+        svm.update(&ex.x, ex.y, 10.0);
+    });
+}

@@ -1,0 +1,59 @@
+//! Sift-phase throughput: the n·S(phi(n)) term of Figure 2.
+//!
+//! Measures native batch scoring for the SVM (at several support-set sizes)
+//! and the MLP, plus the Eq-5 decision overhead. The per-node sift rate
+//! here bounds the simulated cluster's round time.
+
+use para_active::benchlib::{bench_throughput, black_box};
+use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::learner::Learner;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
+    let cfg = StreamConfig::svm_task();
+    let mut stream = ExampleStream::for_node(&cfg, 0);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    for _ in 0..n {
+        let ex = stream.next_example();
+        svm.update(&ex.x, ex.y, 1.0);
+    }
+    svm
+}
+
+fn main() {
+    let cfg = StreamConfig::svm_task();
+    let mut stream = ExampleStream::for_node(&cfg, 7);
+    let batch = 256;
+    let mut xs = vec![0.0f32; batch * DIM];
+    let mut ys = vec![0.0f32; batch];
+    stream.next_batch_into(&mut xs, &mut ys);
+    let mut out = vec![0.0f32; batch];
+
+    println!("# sift throughput (examples/s), batch = {batch}");
+    for n_train in [100usize, 400, 1600] {
+        let svm = trained_svm(n_train);
+        let name = format!("svm score_batch (|SV|={})", svm.n_support());
+        bench_throughput(&name, batch as f64, "ex", 2, 10, || {
+            svm.score_batch(black_box(&xs), &mut out);
+        });
+    }
+
+    let mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    bench_throughput("mlp score_batch (h=100)", batch as f64, "ex", 2, 20, || {
+        mlp.score_batch(black_box(&xs), &mut out);
+    });
+
+    let mut sifter = MarginSifter::new(0.1, 3);
+    bench_throughput("margin rule decide (Eq 5)", batch as f64, "ex", 2, 50, || {
+        for i in 0..batch {
+            black_box(sifter.decide(out[i], 100_000 + i as u64));
+        }
+    });
+
+    // Data generation cost (off the simulated clock, but good to know).
+    bench_throughput("stream generation (elastic)", batch as f64, "ex", 1, 5, || {
+        stream.next_batch_into(&mut xs, &mut ys);
+    });
+}

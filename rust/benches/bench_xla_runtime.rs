@@ -1,0 +1,71 @@
+//! Runtime bench — the AOT path: PJRT compile time per artifact, XLA sift
+//! call latency vs the native scorer, and the XLA AdaGrad step latency.
+//! This is the L1/L2 hot-path measurement recorded in EXPERIMENTS.md §Perf.
+
+use para_active::benchlib::{bench, bench_throughput};
+use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::learner::Learner;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::runtime::{
+    artifacts_available, XlaMlpSifter, XlaMlpStep, XlaRuntime, XlaSvmSifter,
+};
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let cfg = StreamConfig::svm_task();
+    let mut stream = ExampleStream::for_node(&cfg, 0);
+    let batch = 256usize;
+    let mut xs = vec![0.0f32; batch * DIM];
+    let mut ys = vec![0.0f32; batch];
+    stream.next_batch_into(&mut xs, &mut ys);
+
+    // Compile cost (cold) per entry.
+    bench("pjrt compile svm_sift_b256_sv512 (cold)", 0, 3, || {
+        let mut rt = XlaRuntime::load_default().unwrap();
+        rt.executable("svm_sift_b256_sv512").unwrap();
+    });
+
+    // SVM: XLA vs native sift.
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let mut s2 = ExampleStream::for_node(&cfg, 1);
+    for _ in 0..400 {
+        let ex = s2.next_example();
+        svm.update(&ex.x, ex.y, 1.0);
+    }
+    println!("# |SV| = {}", svm.n_support());
+    let mut out = vec![0.0f32; batch];
+    bench_throughput("svm native score_batch", batch as f64, "ex", 2, 10, || {
+        svm.score_batch(&xs, &mut out);
+    });
+    let rt = XlaRuntime::load_default().unwrap();
+    let mut sifter = XlaSvmSifter::new(rt, svm.n_support()).unwrap();
+    bench_throughput("svm XLA sift (b256, sv512 artifact)", batch as f64, "ex", 2, 10, || {
+        sifter.sift(&svm, &xs, 0.1, 10_000).unwrap();
+    });
+
+    // MLP: XLA vs native sift.
+    let nn_cfg = StreamConfig::nn_task();
+    let mut s3 = ExampleStream::for_node(&nn_cfg, 0);
+    s3.next_batch_into(&mut xs, &mut ys);
+    let mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    bench_throughput("mlp native score_batch", batch as f64, "ex", 2, 20, || {
+        mlp.score_batch(&xs, &mut out);
+    });
+    let rt = XlaRuntime::load_default().unwrap();
+    let mut msifter = XlaMlpSifter::new(rt).unwrap();
+    bench_throughput("mlp XLA sift (b256, h128 artifact)", batch as f64, "ex", 2, 20, || {
+        msifter.sift(&mlp, &xs, 0.0005, 10_000).unwrap();
+    });
+
+    // XLA AdaGrad step.
+    let rt = XlaRuntime::load_default().unwrap();
+    let mut step = XlaMlpStep::new(rt, &mlp).unwrap();
+    let wts = vec![1.0f32; batch];
+    bench_throughput("mlp XLA AdaGrad step (b256)", batch as f64, "ex", 2, 10, || {
+        step.step(&xs, &ys, &wts, 0.07).unwrap();
+    });
+}

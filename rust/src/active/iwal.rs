@@ -1,0 +1,344 @@
+//! Algorithm 3: importance-weighted active learning (IWAL) with delayed
+//! updates — the object of the paper's theory (Theorems 1–2).
+//!
+//! The learner sees a stream x_1, x_2, ...; at time t it computes the
+//! empirical importance-weighted error of every hypothesis **over the
+//! examples whose labels have already arrived** (those with index
+//! ≤ t − τ(t), where τ is the delay process — e.g. τ ≡ B for batched
+//! updating with batch size B). The query probability P_t is 1 when the
+//! error gap G_t between the empirical best h_t and the best disagreeing
+//! h'_t is below the sampling threshold, and otherwise the positive root
+//! s ∈ (0, 1) of Eq (1):
+//!
+//! ```text
+//! G_t = (c1/sqrt(s) - c1 + 1) sqrt(eps_t) + (c2/s - c2 + 1) eps_t,
+//! eps_t = C0 log(n_t + 1) / n_t,   n_t = t - tau(t).
+//! ```
+//!
+//! This implementation is exact for finite hypothesis classes (the theory
+//! experiments use a grid of threshold classifiers, where ERM over the
+//! applied prefix is computable in O(|H|) per step).
+
+use crate::rng::Rng;
+use std::collections::VecDeque;
+
+/// A finite hypothesis class over inputs `X`.
+pub trait Hypotheses<X> {
+    fn count(&self) -> usize;
+    /// Prediction of hypothesis `h` on `x`, in {-1, +1}.
+    fn predict(&self, h: usize, x: &X) -> i8;
+}
+
+/// The constants of Beygelzimer et al. (2010): c1 = 5 + 2*sqrt(2), c2 = 5.
+pub const C1: f64 = 7.828427124746190;
+pub const C2: f64 = 5.0;
+
+/// One example waiting for its (delayed) application to the error estimates.
+#[derive(Debug, Clone)]
+struct Pending<X> {
+    x: X,
+    y: i8,
+    /// Query probability used at decision time.
+    p: f64,
+    /// Whether the label was actually queried.
+    queried: bool,
+}
+
+/// Outcome of one IWAL step.
+#[derive(Debug, Clone, Copy)]
+pub struct IwalDecision {
+    pub p: f64,
+    pub queried: bool,
+    /// n_t = number of examples applied when the decision was made.
+    pub n_applied: u64,
+    /// The error gap G_t (0 when fewer than 2 applied examples).
+    pub gap: f64,
+}
+
+/// IWAL with delayed updates over a finite hypothesis class.
+pub struct DelayedIwal<X, C: Hypotheses<X>> {
+    class: C,
+    /// C0 >= 2, the paper's O(log |H|/delta) tuning constant.
+    pub c0: f64,
+    /// Importance-weighted error *sums* per hypothesis over applied examples.
+    err_sums: Vec<f64>,
+    n_applied: u64,
+    pending: VecDeque<Pending<X>>,
+    t: u64,
+    queries: u64,
+    rng: Rng,
+}
+
+impl<X: Clone, C: Hypotheses<X>> DelayedIwal<X, C> {
+    pub fn new(class: C, c0: f64, seed: u64) -> Self {
+        assert!(c0 >= 2.0, "C0 must be >= 2 (got {c0})");
+        let m = class.count();
+        assert!(m >= 2, "need at least two hypotheses");
+        DelayedIwal {
+            class,
+            c0,
+            err_sums: vec![0.0; m],
+            n_applied: 0,
+            pending: VecDeque::new(),
+            t: 0,
+            queries: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    pub fn n_applied(&self) -> u64 {
+        self.n_applied
+    }
+
+    /// Empirical-best hypothesis over the applied prefix.
+    pub fn best_hypothesis(&self) -> usize {
+        self.err_sums
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Empirical IW error of hypothesis `h` over the applied prefix.
+    pub fn empirical_err(&self, h: usize) -> f64 {
+        if self.n_applied == 0 {
+            0.0
+        } else {
+            self.err_sums[h] / self.n_applied as f64
+        }
+    }
+
+    /// Apply all pending examples with stream index ≤ `cutoff` (1-based).
+    /// The caller's delay process decides when to call this: for a fixed
+    /// batch delay B, call with cutoff = floor(t / B) * B; for the standard
+    /// online setting call with cutoff = t after every step.
+    pub fn apply_until(&mut self, cutoff: u64) {
+        while self.n_applied < cutoff {
+            let Some(ex) = self.pending.pop_front() else { break };
+            self.n_applied += 1;
+            if ex.queried {
+                let w = 1.0 / ex.p;
+                for h in 0..self.err_sums.len() {
+                    if self.class.predict(h, &ex.x) != ex.y {
+                        self.err_sums[h] += w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The sampling threshold sqrt(eps) + eps and eps itself for n applied.
+    fn eps(&self) -> f64 {
+        let n = self.n_applied as f64;
+        self.c0 * (n + 1.0).ln() / n
+    }
+
+    /// Solve Eq (1) for s in (0, 1) by bisection (RHS is decreasing in s).
+    /// Public for the property-test suite.
+    pub fn solve_eq1(gap: f64, eps: f64) -> f64 {
+        let rhs = |s: f64| -> f64 {
+            (C1 / s.sqrt() - C1 + 1.0) * eps.sqrt() + (C2 / s - C2 + 1.0) * eps
+        };
+        let (mut lo, mut hi) = (1e-12, 1.0);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if rhs(mid) > gap {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// One IWAL step: decide the query probability for x_t, flip the coin,
+    /// and enqueue the example for delayed application. `y` is the label
+    /// that *would* be revealed if queried (the oracle's answer).
+    pub fn step(&mut self, x: X, y: i8) -> IwalDecision {
+        self.t += 1;
+        let n = self.n_applied;
+        let (p, gap) = if n == 0 {
+            (1.0, 0.0)
+        } else {
+            // ERM and best disagreeing ERM on x.
+            let mut best = f64::INFINITY;
+            let mut best_h = 0;
+            for (h, &s) in self.err_sums.iter().enumerate() {
+                if s < best {
+                    best = s;
+                    best_h = h;
+                }
+            }
+            let yhat = self.class.predict(best_h, &x);
+            let mut best_dis = f64::INFINITY;
+            for (h, &s) in self.err_sums.iter().enumerate() {
+                if self.class.predict(h, &x) != yhat && s < best_dis {
+                    best_dis = s;
+                }
+            }
+            if !best_dis.is_finite() {
+                // No hypothesis disagrees: the label is uninformative.
+                (1.0, 0.0)
+            } else {
+                let gap = (best_dis - best) / n as f64;
+                let eps = self.eps();
+                if gap <= eps.sqrt() + eps {
+                    (1.0, gap)
+                } else {
+                    (Self::solve_eq1(gap, eps).clamp(1e-12, 1.0), gap)
+                }
+            }
+        };
+        let queried = self.rng.coin(p);
+        if queried {
+            self.queries += 1;
+        }
+        self.pending.push_back(Pending { x, y, p, queried });
+        IwalDecision { p, queried, n_applied: n, gap }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Threshold classifiers h_i(x) = sign(x - theta_i) on a grid.
+    pub struct Thresholds {
+        pub thetas: Vec<f64>,
+    }
+
+    impl Hypotheses<f64> for Thresholds {
+        fn count(&self) -> usize {
+            self.thetas.len()
+        }
+        fn predict(&self, h: usize, x: &f64) -> i8 {
+            if *x >= self.thetas[h] {
+                1
+            } else {
+                -1
+            }
+        }
+    }
+
+    fn grid(m: usize) -> Thresholds {
+        Thresholds {
+            thetas: (0..m).map(|i| i as f64 / (m - 1) as f64).collect(),
+        }
+    }
+
+    fn run(noise: f64, delay: u64, t_max: u64, seed: u64) -> (DelayedIwal<f64, Thresholds>, u64) {
+        let mut iwal = DelayedIwal::new(grid(41), 2.0, seed);
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        let theta_star = 0.3;
+        for t in 1..=t_max {
+            // Delay process: apply everything up to the last full batch.
+            let cutoff = if delay <= 1 { t - 1 } else { ((t - 1) / delay) * delay };
+            iwal.apply_until(cutoff);
+            let x = rng.next_f64();
+            let mut y: i8 = if x >= theta_star { 1 } else { -1 };
+            if noise > 0.0 && rng.coin(noise) {
+                y = -y;
+            }
+            iwal.step(x, y);
+        }
+        iwal.apply_until(t_max);
+        let q = iwal.queries();
+        (iwal, q)
+    }
+
+    #[test]
+    fn finds_the_true_threshold_no_delay() {
+        let (iwal, _) = run(0.0, 1, 3000, 1);
+        let best = iwal.best_hypothesis();
+        let theta = best as f64 / 40.0;
+        assert!((theta - 0.3).abs() <= 0.05, "learned theta {theta}");
+    }
+
+    #[test]
+    fn finds_the_true_threshold_with_large_delay() {
+        // Theorem 1's point: a batch delay B does not derail learning.
+        let (iwal, _) = run(0.0, 256, 3000, 2);
+        let best = iwal.best_hypothesis();
+        let theta = best as f64 / 40.0;
+        assert!((theta - 0.3).abs() <= 0.05, "learned theta {theta} under delay");
+    }
+
+    #[test]
+    fn queries_sublinear_in_separable_case() {
+        let (_, q1) = run(0.0, 1, 2000, 3);
+        let (_, q8) = run(0.0, 1, 16000, 3);
+        // err(h*) = 0, so Thm 2 predicts ~sqrt(t log t) queries (~2.8x for
+        // an 8x longer stream, constants aside): the query *rate* must drop
+        // well below linear growth.
+        let rate1 = q1 as f64 / 2000.0;
+        let rate8 = q8 as f64 / 16000.0;
+        assert!(
+            rate8 < 0.75 * rate1,
+            "query rate not decaying: {rate1:.3} @2k vs {rate8:.3} @16k ({q1}, {q8})"
+        );
+    }
+
+    #[test]
+    fn delay_increases_queries_only_mildly() {
+        let (_, q_fast) = run(0.0, 1, 2000, 4);
+        let (_, q_slow) = run(0.0, 128, 2000, 4);
+        assert!(
+            (q_slow as f64) < 4.0 * (q_fast as f64) + 200.0,
+            "delayed queries blew up: {q_fast} vs {q_slow}"
+        );
+    }
+
+    #[test]
+    fn noisy_case_queries_scale_with_noise_floor() {
+        let (_, q_clean) = run(0.0, 1, 3000, 5);
+        let (_, q_noisy) = run(0.15, 1, 3000, 5);
+        assert!(
+            q_noisy > q_clean,
+            "noise must increase label demand: {q_clean} vs {q_noisy}"
+        );
+    }
+
+    #[test]
+    fn eq1_root_properties() {
+        // At the threshold gap the root is ~1; for larger gaps it shrinks.
+        let eps: f64 = 0.01;
+        let g_thresh = eps.sqrt() + eps;
+        let s_at = DelayedIwal::<f64, Thresholds>::solve_eq1(g_thresh, eps);
+        assert!(s_at > 0.9, "s at threshold ~1, got {s_at}");
+        let s_big = DelayedIwal::<f64, Thresholds>::solve_eq1(10.0 * g_thresh, eps);
+        assert!(s_big < s_at);
+        let s_bigger = DelayedIwal::<f64, Thresholds>::solve_eq1(50.0 * g_thresh, eps);
+        assert!(s_bigger < s_big);
+        // Root actually solves the equation.
+        let rhs = (C1 / s_big.sqrt() - C1 + 1.0) * eps.sqrt() + (C2 / s_big - C2 + 1.0) * eps;
+        assert!((rhs - 10.0 * g_thresh).abs() < 1e-6);
+    }
+
+    #[test]
+    fn importance_weights_keep_estimates_unbiased() {
+        // The IW error of a fixed hypothesis must track its true error even
+        // under aggressive sampling. True err of h at theta=0.5 with
+        // theta*=0.3, uniform x: |0.5-0.3| = 0.2.
+        let (iwal, _) = run(0.0, 1, 6000, 7);
+        let h_half = 20; // theta = 0.5 on the 41-grid
+        let est = iwal.empirical_err(h_half);
+        assert!((est - 0.2).abs() < 0.08, "IW estimate {est} vs true 0.2");
+    }
+
+    #[test]
+    fn first_step_queries_with_p1() {
+        let mut iwal = DelayedIwal::new(grid(5), 2.0, 0);
+        let d = iwal.step(0.4, 1);
+        assert_eq!(d.p, 1.0);
+        assert!(d.queried);
+    }
+}

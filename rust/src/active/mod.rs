@@ -1,0 +1,118 @@
+//! Active-learning machinery: the sifting strategies `A` of Algorithms 1–2.
+//!
+//! A [`Sifter`] looks at a margin score and decides — with a not-too-small
+//! probability — whether the example should be labeled/used, returning the
+//! probability so the updater can importance-weight it (the IWAL principle,
+//! Beygelzimer et al. 2009). Implementations:
+//!
+//! * [`margin::MarginSifter`] — the paper's Eq (5) rule used in all §4
+//!   experiments;
+//! * [`PassiveSifter`] — p ≡ 1 (passive learning expressed as a degenerate
+//!   active learner, the paper's baseline);
+//! * [`FixedRateSifter`] — uniform subsampling at a constant rate (ablation
+//!   baseline: same communication volume, no informativeness signal);
+//! * [`iwal::DelayedIwal`] — Algorithm 3, the delayed IWAL scheme whose
+//!   guarantees (Theorems 1–2) the theory experiments validate.
+
+pub mod iwal;
+pub mod margin;
+
+use crate::rng::Rng;
+
+/// Outcome of sifting one example.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueryDecision {
+    /// Margin score the decision was based on.
+    pub score: f32,
+    /// Probability with which the example was (would be) queried.
+    pub p: f64,
+    /// The coin flip's outcome.
+    pub queried: bool,
+}
+
+impl QueryDecision {
+    /// Importance weight 1/p for the updater (only meaningful if queried).
+    pub fn weight(&self) -> f32 {
+        (1.0 / self.p) as f32
+    }
+}
+
+/// An example-selection strategy driven by margin scores.
+pub trait Sifter {
+    /// Decide on one example given its score and the cumulative number of
+    /// examples seen by the cluster before this sift phase (the paper's n).
+    fn decide(&mut self, score: f32, n_seen: u64) -> QueryDecision;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Passive learning as a degenerate sifter: query everything with p = 1.
+#[derive(Debug, Default, Clone)]
+pub struct PassiveSifter;
+
+impl Sifter for PassiveSifter {
+    fn decide(&mut self, score: f32, _n_seen: u64) -> QueryDecision {
+        QueryDecision { score, p: 1.0, queried: true }
+    }
+    fn name(&self) -> &'static str {
+        "passive"
+    }
+}
+
+/// Uniform subsampling at a fixed rate — an ablation baseline that matches
+/// the active learner's communication volume without its informativeness.
+#[derive(Debug, Clone)]
+pub struct FixedRateSifter {
+    pub rate: f64,
+    rng: Rng,
+}
+
+impl FixedRateSifter {
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0 && rate <= 1.0);
+        FixedRateSifter { rate, rng: Rng::new(seed) }
+    }
+}
+
+impl Sifter for FixedRateSifter {
+    fn decide(&mut self, score: f32, _n_seen: u64) -> QueryDecision {
+        QueryDecision {
+            score,
+            p: self.rate,
+            queried: self.rng.coin(self.rate),
+        }
+    }
+    fn name(&self) -> &'static str {
+        "fixed-rate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passive_always_queries_at_p1() {
+        let mut s = PassiveSifter;
+        for i in 0..10 {
+            let d = s.decide(i as f32, i * 100);
+            assert!(d.queried);
+            assert_eq!(d.p, 1.0);
+            assert_eq!(d.weight(), 1.0);
+        }
+    }
+
+    #[test]
+    fn fixed_rate_statistics() {
+        let mut s = FixedRateSifter::new(0.25, 7);
+        let hits = (0..4000).filter(|_| s.decide(0.0, 0).queried).count();
+        assert!((hits as f64 / 4000.0 - 0.25).abs() < 0.03);
+    }
+
+    #[test]
+    fn weight_is_inverse_probability() {
+        let d = QueryDecision { score: 0.0, p: 0.1, queried: true };
+        assert!((d.weight() - 10.0).abs() < 1e-6);
+    }
+}

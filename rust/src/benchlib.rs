@@ -1,0 +1,98 @@
+//! Minimal benchmarking harness.
+//!
+//! The offline build environment pins the vendor set (no criterion), so the
+//! `cargo bench` targets use this self-contained timer: warmup, repeated
+//! timed runs, and a one-line mean/min/max report per benchmark, plus an
+//! optional throughput figure. Output is stable, grep-friendly, and used by
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` unmeasured runs) and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean_s = times.iter().sum::<f64>() / iters as f64;
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = times.iter().cloned().fold(0.0f64, f64::max);
+    let stats = BenchStats { iters, mean_s, min_s, max_s };
+    println!(
+        "bench {name:48} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={iters})",
+        stats.mean_ms(),
+        min_s * 1e3,
+        max_s * 1e3
+    );
+    stats
+}
+
+/// Like [`bench`] but also prints a throughput line (`units` per call).
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    units_per_iter: f64,
+    unit: &str,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> BenchStats {
+    let stats = bench(name, warmup, iters, f);
+    println!(
+        "      {name:48} {:>10.0} {unit}/s",
+        units_per_iter / stats.mean_s
+    );
+    stats
+}
+
+/// Guard against the optimizer deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut count = 0u64;
+        let s = bench("noop-spin", 1, 5, || {
+            for i in 0..1000u64 {
+                count = black_box(count.wrapping_add(i));
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn throughput_is_positive() {
+        let s = bench_throughput("tiny", 100.0, "ops", 0, 3, || {
+            black_box(42u64);
+        });
+        assert!(s.mean_s >= 0.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Algorithm 2 on real OS threads — the deployable asynchronous coordinator.
+//!
+//! Each node is a thread owning its model replica, its local stream (Q_F),
+//! and an mpsc receiver (Q_S). A dedicated **sequencer** thread implements
+//! the ordered broadcast of Figure 1: it receives selected examples from
+//! all nodes over a single mpsc channel (which serializes them into one
+//! global order) and forwards each to every node's Q_S in that order. The
+//! node loop follows the paper's priority rule: drain Q_S completely, then
+//! sift one fresh example and publish it (with its query probability) if
+//! selected.
+//!
+//! The deterministic event-driven variant lives in [`super::async_sim`];
+//! this module is the "it actually runs" counterpart used by the
+//! end-to-end example and smoke tests.
+
+use crate::active::Sifter;
+use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use crate::learner::Learner;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A broadcast payload: one selected importance-weighted example.
+#[derive(Debug, Clone)]
+pub struct LiveMsg {
+    pub x: Arc<Vec<f32>>,
+    pub y: f32,
+    pub p: f64,
+    /// Publishing node (diagnostics).
+    pub from: usize,
+}
+
+/// Parameters for a live run.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub nodes: usize,
+    /// Fresh examples each node sifts.
+    pub per_node: usize,
+    /// Warmstart examples (trained once, replica cloned to every node).
+    pub warmstart: usize,
+}
+
+impl LiveConfig {
+    pub fn new(nodes: usize, per_node: usize, warmstart: usize) -> Self {
+        LiveConfig { nodes, per_node, warmstart }
+    }
+}
+
+/// Result of a live run.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub n_seen: u64,
+    pub n_queried: u64,
+    pub wall_seconds: f64,
+    pub replicas_agree: bool,
+    pub test_error: f64,
+}
+
+/// Run Algorithm 2 on `nodes` OS threads plus a sequencer thread.
+pub fn run_live<L, S, F>(
+    proto: &L,
+    mut make_sifter: F,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &LiveConfig,
+) -> LiveReport
+where
+    L: Learner + Clone + Send + 'static,
+    S: Sifter + Send + 'static,
+    F: FnMut(usize) -> S,
+{
+    let k = cfg.nodes;
+    assert!(k >= 1);
+
+    // Warmstart once; every node starts from the same replica.
+    let mut warm = proto.clone();
+    {
+        let mut ws = ExampleStream::for_node(stream_cfg, u32::MAX - 1);
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..cfg.warmstart {
+            let y = ws.next_into(&mut x);
+            warm.update(&x, y, 1.0);
+        }
+    }
+
+    let started = Instant::now();
+
+    // Node -> sequencer uplink (mpsc serializes the global order).
+    let (up_tx, up_rx) = mpsc::channel::<LiveMsg>();
+    // Sequencer -> node downlinks (per-node Q_S).
+    let mut down_txs = Vec::with_capacity(k);
+    let mut down_rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = mpsc::channel::<LiveMsg>();
+        down_txs.push(tx);
+        down_rxs.push(rx);
+    }
+
+    // Sequencer: forward every uplink message to every node, in one order.
+    let sequencer = std::thread::spawn(move || {
+        let mut total: u64 = 0;
+        while let Ok(msg) = up_rx.recv() {
+            total += 1;
+            for tx in &down_txs {
+                // A node that already finished may have dropped its rx.
+                let _ = tx.send(msg.clone());
+            }
+        }
+        total // uplink closed: all nodes done sifting
+    });
+
+    let mut handles = Vec::with_capacity(k);
+    for (node, down_rx) in down_rxs.into_iter().enumerate() {
+        let up = up_tx.clone();
+        let mut learner = warm.clone();
+        let mut sifter = make_sifter(node);
+        let mut stream = ExampleStream::for_node(stream_cfg, node as u32);
+        let per_node = cfg.per_node;
+        let warm_n = cfg.warmstart as u64;
+        handles.push(std::thread::spawn(move || {
+            let mut x = vec![0.0f32; DIM];
+            let mut applied: u64 = 0;
+            for i in 0..per_node {
+                // Priority 1: drain Q_S.
+                while let Ok(msg) = down_rx.try_recv() {
+                    learner.update(&msg.x, msg.y, (1.0 / msg.p) as f32);
+                    applied += 1;
+                }
+                // Priority 2: sift one fresh example from Q_F.
+                let y = stream.next_into(&mut x);
+                let score = learner.score(&x);
+                // n for Eq (5): warmstart + this node's local stream position.
+                let d = sifter.decide(score, warm_n + i as u64 + 1);
+                if d.queried {
+                    let _ = up.send(LiveMsg {
+                        x: Arc::new(x.clone()),
+                        y,
+                        p: d.p,
+                        from: node,
+                    });
+                }
+            }
+            // Done sifting: close our uplink, then drain Q_S to completion
+            // (the sequencer exits once every uplink sender is dropped).
+            drop(up);
+            while let Ok(msg) = down_rx.recv() {
+                learner.update(&msg.x, msg.y, (1.0 / msg.p) as f32);
+                applied += 1;
+            }
+            (learner, applied)
+        }));
+    }
+    drop(up_tx);
+
+    let results: Vec<(L, u64)> =
+        handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect();
+    let n_broadcast = sequencer.join().expect("sequencer panicked");
+    let wall_seconds = started.elapsed().as_secs_f64();
+
+    // Every node applied the same (identically ordered) update sequence.
+    let counts_agree = results.iter().all(|(_, a)| *a == n_broadcast);
+
+    // Replica agreement on probe points.
+    let mut probe = ExampleStream::for_node(stream_cfg, u32::MAX - 2);
+    let mut scores_agree = true;
+    for _ in 0..8 {
+        let ex = probe.next_example();
+        let s0 = results[0].0.score(&ex.x);
+        for (l, _) in &results[1..] {
+            if (l.score(&ex.x) - s0).abs() > 1e-4 {
+                scores_agree = false;
+            }
+        }
+    }
+
+    LiveReport {
+        n_seen: (cfg.warmstart + k * cfg.per_node) as u64,
+        n_queried: n_broadcast,
+        wall_seconds,
+        replicas_agree: counts_agree && scores_agree,
+        test_error: results[0].0.test_error(test),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::active::margin::MarginSifter;
+    use crate::nn::{AdaGradMlp, MlpConfig};
+    use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+    #[test]
+    fn live_svm_replicas_agree() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 60);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let cfg = LiveConfig::new(3, 150, 200);
+        let r = run_live(
+            &proto,
+            |i| MarginSifter::new(0.1, 40 + i as u64),
+            &stream_cfg,
+            &test,
+            &cfg,
+        );
+        assert!(r.replicas_agree, "live replicas diverged");
+        assert!(r.n_queried > 0);
+        assert!(r.test_error < 0.45, "err {}", r.test_error);
+    }
+
+    #[test]
+    fn live_mlp_single_node() {
+        let stream_cfg = StreamConfig::nn_task();
+        let test = TestSet::generate(&stream_cfg, 40);
+        let proto = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let cfg = LiveConfig::new(1, 200, 100);
+        let r = run_live(
+            &proto,
+            |i| MarginSifter::new(0.0005, i as u64),
+            &stream_cfg,
+            &test,
+            &cfg,
+        );
+        assert!(r.replicas_agree);
+        assert_eq!(r.n_seen, 300);
+    }
+
+    #[test]
+    fn live_many_nodes_smoke() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 20);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let cfg = LiveConfig::new(6, 40, 60);
+        let r = run_live(
+            &proto,
+            |i| MarginSifter::new(0.1, i as u64),
+            &stream_cfg,
+            &test,
+            &cfg,
+        );
+        assert!(r.replicas_agree);
+        assert_eq!(r.n_seen, 60 + 6 * 40);
+    }
+}

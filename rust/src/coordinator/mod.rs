@@ -1,0 +1,221 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`sync`] — Algorithm 1 (synchronous rounds; the configuration the
+//!   paper measures in §4);
+//! * [`async_sim`] — Algorithm 2 (asynchronous dual-queue protocol over an
+//!   ordered broadcast; deterministic event-driven simulation);
+//! * [`live`] — Algorithm 2 on a real tokio runtime (tasks + channels),
+//!   used by the end-to-end example;
+//! * [`broadcast`] — the sequenced-log ordered-broadcast primitive.
+//!
+//! The experiment-level wrappers [`run_sync_svm`] / [`run_sync_nn`] bundle
+//! the paper's §4 hyper-parameters.
+
+pub mod async_sim;
+pub mod broadcast;
+pub mod live;
+pub mod sync;
+
+use crate::active::{margin::MarginSifter, PassiveSifter};
+use crate::data::{StreamConfig, TestSet, DIM};
+use crate::learner::Learner;
+use crate::nn::{AdaGradMlp, MlpConfig};
+use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+use sync::{run_sync, SyncConfig, SyncReport};
+
+/// Hyper-parameters of the paper's SVM experiment (§4, "Support vector
+/// machine"): C = 1, gamma = 0.012, B ≈ 4000, warmstart ≈ 4000,
+/// eta = 0.1 parallel / 0.01 sequential.
+#[derive(Debug, Clone)]
+pub struct SvmExperimentConfig {
+    pub c: f32,
+    pub gamma: f32,
+    pub eta_parallel: f64,
+    pub eta_sequential: f64,
+    pub global_batch: usize,
+    pub warmstart: usize,
+    pub test_size: usize,
+    pub seed: u64,
+}
+
+impl SvmExperimentConfig {
+    pub fn paper_defaults() -> Self {
+        SvmExperimentConfig {
+            c: 1.0,
+            gamma: 0.012,
+            eta_parallel: 0.1,
+            eta_sequential: 0.01,
+            global_batch: 4000,
+            warmstart: 4000,
+            test_size: 4065,
+            seed: 0x51,
+        }
+    }
+
+    /// Scaled-down defaults for tests / CI-speed runs.
+    pub fn small() -> Self {
+        SvmExperimentConfig {
+            global_batch: 512,
+            warmstart: 384,
+            test_size: 500,
+            ..Self::paper_defaults()
+        }
+    }
+
+    pub fn make_learner(&self) -> LaSvm<RbfKernel> {
+        let cfg = LaSvmConfig { c: self.c, ..Default::default() };
+        LaSvm::new(RbfKernel::new(self.gamma), DIM, cfg)
+    }
+}
+
+/// Hyper-parameters of the paper's NN experiment (§4, "Neural network"):
+/// 100 hidden units, step 0.07, eta = 0.0005.
+#[derive(Debug, Clone)]
+pub struct NnExperimentConfig {
+    pub mlp: MlpConfig,
+    pub eta: f64,
+    pub global_batch: usize,
+    pub warmstart: usize,
+    pub test_size: usize,
+    pub seed: u64,
+}
+
+impl NnExperimentConfig {
+    pub fn paper_defaults() -> Self {
+        NnExperimentConfig {
+            mlp: MlpConfig::paper(DIM),
+            eta: 0.0005,
+            global_batch: 2000,
+            warmstart: 1000,
+            test_size: 4065,
+            seed: 0x52,
+        }
+    }
+
+    pub fn small() -> Self {
+        NnExperimentConfig {
+            global_batch: 256,
+            warmstart: 128,
+            test_size: 300,
+            ..Self::paper_defaults()
+        }
+    }
+
+    pub fn make_learner(&self) -> AdaGradMlp {
+        AdaGradMlp::new(self.mlp.clone())
+    }
+}
+
+/// Run the parallel-active SVM experiment on `nodes` nodes with a total
+/// example budget. Uses the native batch scorer (see [`crate::runtime`] for
+/// the XLA-backed alternative).
+pub fn run_sync_svm(
+    cfg: &SvmExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let eta = if nodes == 1 { cfg.eta_sequential } else { cfg.eta_parallel };
+    let mut sifter = MarginSifter::new(eta, cfg.seed ^ nodes as u64);
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_label(format!("svm parallel-active k={nodes}"));
+    let mut scorer =
+        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+}
+
+/// Run the passive SVM baseline (sequential, every example updates).
+pub fn run_passive_svm(
+    cfg: &SvmExperimentConfig,
+    stream_cfg: &StreamConfig,
+    budget: usize,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let mut sifter = PassiveSifter;
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget)
+        .with_label("svm sequential-passive".to_string());
+    sc.eval_every_rounds = (cfg.global_batch / 2).max(1);
+    let mut scorer =
+        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+}
+
+/// Run the parallel-active NN experiment.
+pub fn run_sync_nn(
+    cfg: &NnExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let mut sifter = MarginSifter::new(cfg.eta, cfg.seed ^ nodes as u64);
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_label(format!("nn parallel-active k={nodes}"));
+    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+}
+
+/// Run the passive NN baseline.
+pub fn run_passive_nn(
+    cfg: &NnExperimentConfig,
+    stream_cfg: &StreamConfig,
+    budget: usize,
+) -> SyncReport {
+    let mut learner = cfg.make_learner();
+    let mut sifter = PassiveSifter;
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget)
+        .with_label("nn sequential-passive".to_string());
+    sc.eval_every_rounds = (cfg.global_batch / 2).max(1);
+    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+}
+
+/// Helper shared by examples: a native batch scorer closure for any Learner.
+pub fn native_scorer<L: Learner>() -> impl FnMut(&L, &[f32], &mut [f32]) {
+    |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svm_experiment_wrapper_runs() {
+        let mut cfg = SvmExperimentConfig::small();
+        cfg.test_size = 150;
+        let stream = StreamConfig::svm_task();
+        let r = run_sync_svm(&cfg, &stream, 4, 1600);
+        assert!(r.n_seen >= 1600);
+        assert!(r.final_test_errors() < 0.5);
+    }
+
+    #[test]
+    fn nn_experiment_wrapper_runs() {
+        let mut cfg = NnExperimentConfig::small();
+        cfg.test_size = 150;
+        let stream = StreamConfig::nn_task();
+        let r = run_sync_nn(&cfg, &stream, 2, 700);
+        assert!(r.n_seen >= 700);
+        assert!(r.final_test_errors() < 0.5);
+    }
+
+    #[test]
+    fn paper_defaults_match_section4() {
+        let svm = SvmExperimentConfig::paper_defaults();
+        assert_eq!(svm.c, 1.0);
+        assert_eq!(svm.gamma, 0.012);
+        assert_eq!(svm.eta_parallel, 0.1);
+        assert_eq!(svm.eta_sequential, 0.01);
+        assert_eq!(svm.global_batch, 4000);
+        assert_eq!(svm.test_size, 4065);
+        let nn = NnExperimentConfig::paper_defaults();
+        assert_eq!(nn.mlp.hidden, 100);
+        assert_eq!(nn.mlp.lr, 0.07);
+        assert_eq!(nn.eta, 0.0005);
+    }
+}

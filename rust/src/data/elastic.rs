@@ -1,0 +1,240 @@
+//! Elastic deformation, the MNIST8M ingredient (Loosli, Canu, Bottou 2007;
+//! Simard et al. 2003).
+//!
+//! A random displacement field (one i.i.d. uniform [-1,1] value per pixel
+//! per axis) is smoothed with a Gaussian of width `sigma`, rescaled to a
+//! peak amplitude `alpha` (in pixels), and used to warp the source image by
+//! bilinear resampling. `sigma` controls the smoothness of the distortion,
+//! `alpha` its strength; MNIST-like settings are sigma ≈ 4, alpha ≈ 6–8.
+
+use super::{DIM, SIDE};
+use crate::rng::Rng;
+
+/// Parameters of the elastic deformation.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Gaussian smoothing width (pixels) of the displacement field.
+    pub sigma: f32,
+    /// Peak displacement amplitude (pixels).
+    pub alpha: f32,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        // sigma ~4 px, peak displacement ~8 px: strong (MNIST8M-grade)
+        // deformations; see digits::JitterConfig for why the tasks are
+        // deliberately hard.
+        ElasticConfig { sigma: 4.0, alpha: 8.0 }
+    }
+}
+
+/// Scratch buffers so the per-example hot path allocates nothing.
+#[derive(Debug, Default, Clone)]
+pub struct ElasticScratch {
+    dx: Vec<f32>,
+    dy: Vec<f32>,
+    tmp: Vec<f32>,
+    kernel: Vec<f32>,
+    kernel_sigma: f32,
+}
+
+impl ElasticScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, sigma: f32) {
+        if self.dx.len() != DIM {
+            self.dx.resize(DIM, 0.0);
+            self.dy.resize(DIM, 0.0);
+            self.tmp.resize(DIM, 0.0);
+        }
+        if self.kernel.is_empty() || self.kernel_sigma != sigma {
+            let radius = (3.0 * sigma).ceil() as i32;
+            let mut k = Vec::with_capacity((2 * radius + 1) as usize);
+            let denom = 2.0 * sigma * sigma;
+            let mut sum = 0.0;
+            for i in -radius..=radius {
+                let v = (-(i * i) as f32 / denom).exp();
+                k.push(v);
+                sum += v;
+            }
+            for v in &mut k {
+                *v /= sum;
+            }
+            self.kernel = k;
+            self.kernel_sigma = sigma;
+        }
+    }
+}
+
+/// Apply one random elastic deformation: `src` -> `dst` (both length [`DIM`]).
+pub fn deform(
+    src: &[f32],
+    dst: &mut [f32],
+    cfg: &ElasticConfig,
+    scratch: &mut ElasticScratch,
+    rng: &mut Rng,
+) {
+    assert_eq!(src.len(), DIM);
+    assert_eq!(dst.len(), DIM);
+    if cfg.alpha == 0.0 {
+        dst.copy_from_slice(src);
+        return;
+    }
+    scratch.ensure(cfg.sigma);
+
+    // Raw per-pixel displacements.
+    for i in 0..DIM {
+        scratch.dx[i] = (rng.next_f64() * 2.0 - 1.0) as f32;
+        scratch.dy[i] = (rng.next_f64() * 2.0 - 1.0) as f32;
+    }
+    let kernel = std::mem::take(&mut scratch.kernel);
+    blur_separable(&mut scratch.dx, &mut scratch.tmp, &kernel);
+    blur_separable(&mut scratch.dy, &mut scratch.tmp, &kernel);
+    scratch.kernel = kernel;
+
+    // Rescale so the largest displacement equals alpha.
+    let peak = scratch
+        .dx
+        .iter()
+        .chain(scratch.dy.iter())
+        .fold(0.0f32, |m, &v| m.max(v.abs()))
+        .max(1e-6);
+    let scale = cfg.alpha / peak;
+
+    // Bilinear warp: dst(y, x) = src(y + a*dy, x + a*dx).
+    for py in 0..SIDE {
+        for px in 0..SIDE {
+            let idx = py * SIDE + px;
+            let sx = px as f32 + scale * scratch.dx[idx];
+            let sy = py as f32 + scale * scratch.dy[idx];
+            dst[idx] = bilinear(src, sx, sy);
+        }
+    }
+}
+
+/// Separable Gaussian blur in place (using `tmp` as the intermediate).
+fn blur_separable(field: &mut [f32], tmp: &mut [f32], kernel: &[f32]) {
+    let radius = (kernel.len() / 2) as i32;
+    // Horizontal pass: field -> tmp.
+    for y in 0..SIDE as i32 {
+        for x in 0..SIDE as i32 {
+            let mut acc = 0.0;
+            for (ki, &kv) in kernel.iter().enumerate() {
+                let sx = (x + ki as i32 - radius).clamp(0, SIDE as i32 - 1);
+                acc += kv * field[(y * SIDE as i32 + sx) as usize];
+            }
+            tmp[(y * SIDE as i32 + x) as usize] = acc;
+        }
+    }
+    // Vertical pass: tmp -> field.
+    for y in 0..SIDE as i32 {
+        for x in 0..SIDE as i32 {
+            let mut acc = 0.0;
+            for (ki, &kv) in kernel.iter().enumerate() {
+                let sy = (y + ki as i32 - radius).clamp(0, SIDE as i32 - 1);
+                acc += kv * tmp[(sy * SIDE as i32 + x) as usize];
+            }
+            field[(y * SIDE as i32 + x) as usize] = acc;
+        }
+    }
+}
+
+/// Bilinear sample with zero padding outside the canvas.
+fn bilinear(img: &[f32], x: f32, y: f32) -> f32 {
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = x - x0;
+    let fy = y - y0;
+    let get = |ix: i32, iy: i32| -> f32 {
+        if ix < 0 || iy < 0 || ix >= SIDE as i32 || iy >= SIDE as i32 {
+            0.0
+        } else {
+            img[iy as usize * SIDE + ix as usize]
+        }
+    };
+    let (x0, y0) = (x0 as i32, y0 as i32);
+    get(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + get(x0 + 1, y0) * fx * (1.0 - fy)
+        + get(x0, y0 + 1) * (1.0 - fx) * fy
+        + get(x0 + 1, y0 + 1) * fx * fy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{render_digit, JitterConfig};
+
+    fn sample_digit(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut img = vec![0.0f32; DIM];
+        render_digit(3, &JitterConfig::default(), &mut rng, &mut img);
+        img
+    }
+
+    #[test]
+    fn zero_alpha_is_identity() {
+        let src = sample_digit(0);
+        let mut dst = vec![0.0f32; DIM];
+        let cfg = ElasticConfig { sigma: 4.0, alpha: 0.0 };
+        deform(&src, &mut dst, &cfg, &mut ElasticScratch::new(), &mut Rng::new(1));
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn preserves_mass_approximately() {
+        let src = sample_digit(1);
+        let mut dst = vec![0.0f32; DIM];
+        let cfg = ElasticConfig::default();
+        deform(&src, &mut dst, &cfg, &mut ElasticScratch::new(), &mut Rng::new(2));
+        let m0: f32 = src.iter().sum();
+        let m1: f32 = dst.iter().sum();
+        assert!((m1 - m0).abs() / m0 < 0.25, "ink mass changed too much: {m0} -> {m1}");
+        assert!(dst.iter().all(|&v| (-1e-6..=1.0 + 1e-6).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_and_varying() {
+        let src = sample_digit(2);
+        let cfg = ElasticConfig::default();
+        let mut a = vec![0.0f32; DIM];
+        let mut b = vec![0.0f32; DIM];
+        let mut c = vec![0.0f32; DIM];
+        deform(&src, &mut a, &cfg, &mut ElasticScratch::new(), &mut Rng::new(3));
+        deform(&src, &mut b, &cfg, &mut ElasticScratch::new(), &mut Rng::new(3));
+        deform(&src, &mut c, &cfg, &mut ElasticScratch::new(), &mut Rng::new(4));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn displacement_respects_alpha() {
+        // With tiny alpha the image barely moves; with large alpha it moves a lot.
+        let src = sample_digit(3);
+        let cfg_small = ElasticConfig { sigma: 4.0, alpha: 0.3 };
+        let cfg_large = ElasticConfig { sigma: 4.0, alpha: 10.0 };
+        let mut small = vec![0.0f32; DIM];
+        let mut large = vec![0.0f32; DIM];
+        deform(&src, &mut small, &cfg_small, &mut ElasticScratch::new(), &mut Rng::new(5));
+        deform(&src, &mut large, &cfg_large, &mut ElasticScratch::new(), &mut Rng::new(5));
+        let l2 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+        };
+        assert!(l2(&src, &small) < l2(&src, &large));
+        assert!(l2(&src, &small) < 1.5);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let src = sample_digit(4);
+        let cfg = ElasticConfig::default();
+        let mut scratch = ElasticScratch::new();
+        let mut a = vec![0.0f32; DIM];
+        let mut b = vec![0.0f32; DIM];
+        deform(&src, &mut a, &cfg, &mut scratch, &mut Rng::new(7));
+        // Re-run with the same rng seed but a reused scratch.
+        deform(&src, &mut b, &cfg, &mut scratch, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

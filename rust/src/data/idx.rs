@@ -1,0 +1,204 @@
+//! IDX (MNIST container format) reader — lets the library run on the *real*
+//! MNIST / MNIST8M files when they are available instead of the synthetic
+//! substitute. Format: big-endian magic `[0, 0, dtype, ndim]` followed by
+//! ndim u32 dims, then the payload (u8 for the standard MNIST files).
+
+use super::{Example, DIM};
+use std::io::Read;
+use std::path::Path;
+
+/// Errors from IDX parsing.
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    BadMagic(u32),
+    UnsupportedDtype(u8),
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "io: {e}"),
+            IdxError::BadMagic(m) => write!(f, "bad idx magic 0x{m:08x}"),
+            IdxError::UnsupportedDtype(d) => write!(f, "unsupported idx dtype 0x{d:02x}"),
+            IdxError::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+/// A parsed IDX tensor of u8 data.
+#[derive(Debug, Clone)]
+pub struct IdxTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+/// Parse an IDX byte stream (u8 payloads only — MNIST images and labels).
+pub fn parse_idx(mut r: impl Read) -> Result<IdxTensor, IdxError> {
+    let mut head = [0u8; 4];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_be_bytes(head);
+    if head[0] != 0 || head[1] != 0 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    if head[2] != 0x08 {
+        return Err(IdxError::UnsupportedDtype(head[2]));
+    }
+    let ndim = head[3] as usize;
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let mut d = [0u8; 4];
+        r.read_exact(&mut d)?;
+        dims.push(u32::from_be_bytes(d) as usize);
+    }
+    let n: usize = dims.iter().product();
+    let mut data = vec![0u8; n];
+    r.read_exact(&mut data)?;
+    Ok(IdxTensor { dims, data })
+}
+
+/// Load an MNIST-style (images.idx3, labels.idx1) pair into Examples for a
+/// binary task: digits in `positive` get +1, in `negative` get -1, all
+/// other digits are skipped. `symmetric` selects the [-1,1] pixel scaling.
+pub fn load_mnist_pair(
+    images: impl AsRef<Path>,
+    labels: impl AsRef<Path>,
+    positive: &[u8],
+    negative: &[u8],
+    symmetric: bool,
+) -> Result<Vec<Example>, IdxError> {
+    let img = parse_idx(std::fs::File::open(images)?)?;
+    let lab = parse_idx(std::fs::File::open(labels)?)?;
+    examples_from_tensors(&img, &lab, positive, negative, symmetric)
+}
+
+/// Core conversion (separated for testability without files).
+pub fn examples_from_tensors(
+    img: &IdxTensor,
+    lab: &IdxTensor,
+    positive: &[u8],
+    negative: &[u8],
+    symmetric: bool,
+) -> Result<Vec<Example>, IdxError> {
+    if img.dims.len() != 3 {
+        return Err(IdxError::ShapeMismatch(format!(
+            "images must be 3-d, got {:?}",
+            img.dims
+        )));
+    }
+    let (n, h, w) = (img.dims[0], img.dims[1], img.dims[2]);
+    if h * w != DIM {
+        return Err(IdxError::ShapeMismatch(format!(
+            "expected {}-pixel images, got {h}x{w}",
+            DIM
+        )));
+    }
+    if lab.dims != vec![n] {
+        return Err(IdxError::ShapeMismatch(format!(
+            "labels {:?} do not match {n} images",
+            lab.dims
+        )));
+    }
+    let mut out = Vec::new();
+    for i in 0..n {
+        let digit = lab.data[i];
+        let y = if positive.contains(&digit) {
+            1.0
+        } else if negative.contains(&digit) {
+            -1.0
+        } else {
+            continue;
+        };
+        let raw = &img.data[i * DIM..(i + 1) * DIM];
+        let x: Vec<f32> = raw
+            .iter()
+            .map(|&b| {
+                let v = b as f32 / 255.0;
+                if symmetric {
+                    2.0 * v - 1.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        out.push(Example { x, y });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx_bytes(dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut v = vec![0, 0, 0x08, dims.len() as u8];
+        for d in dims {
+            v.extend_from_slice(&d.to_be_bytes());
+        }
+        v.extend_from_slice(payload);
+        v
+    }
+
+    #[test]
+    fn parses_well_formed_idx() {
+        let bytes = idx_bytes(&[2, 3], &[1, 2, 3, 4, 5, 6]);
+        let t = parse_idx(&bytes[..]).unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_dtype() {
+        assert!(matches!(
+            parse_idx(&[1u8, 0, 8, 1, 0, 0, 0, 0][..]),
+            Err(IdxError::BadMagic(_))
+        ));
+        assert!(matches!(
+            parse_idx(&[0u8, 0, 0x0D, 1, 0, 0, 0, 0][..]),
+            Err(IdxError::UnsupportedDtype(0x0D))
+        ));
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let bytes = idx_bytes(&[4], &[1, 2]); // claims 4, has 2
+        assert!(matches!(parse_idx(&bytes[..]), Err(IdxError::Io(_))));
+    }
+
+    #[test]
+    fn converts_binary_task_and_skips_other_digits() {
+        let n = 3;
+        let mut pixels = vec![0u8; n * DIM];
+        pixels[0] = 255; // first image has one bright pixel
+        let img = IdxTensor { dims: vec![n, 28, 28], data: pixels };
+        let lab = IdxTensor { dims: vec![n], data: vec![3, 7, 5] };
+        let ex = examples_from_tensors(&img, &lab, &[3], &[5], false).unwrap();
+        assert_eq!(ex.len(), 2); // the 7 is skipped
+        assert_eq!(ex[0].y, 1.0);
+        assert_eq!(ex[1].y, -1.0);
+        assert!((ex[0].x[0] - 1.0).abs() < 1e-6);
+        assert_eq!(ex[0].x[1], 0.0);
+
+        let ex_sym = examples_from_tensors(&img, &lab, &[3], &[5], true).unwrap();
+        assert_eq!(ex_sym[0].x[1], -1.0); // background maps to -1
+    }
+
+    #[test]
+    fn shape_mismatches_are_errors() {
+        let img = IdxTensor { dims: vec![1, 28, 28], data: vec![0; DIM] };
+        let lab = IdxTensor { dims: vec![2], data: vec![3, 5] };
+        assert!(examples_from_tensors(&img, &lab, &[3], &[5], false).is_err());
+        let img_bad = IdxTensor { dims: vec![1, 10, 10], data: vec![0; 100] };
+        let lab1 = IdxTensor { dims: vec![1], data: vec![3] };
+        assert!(examples_from_tensors(&img_bad, &lab1, &[3], &[5], false).is_err());
+    }
+}

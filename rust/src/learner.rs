@@ -1,0 +1,158 @@
+//! The passive-updater abstraction `P` of Algorithms 1–2.
+//!
+//! A [`Learner`] is any model that can (a) produce a real-valued margin
+//! score for an example — consumed by the sifter — and (b) absorb one
+//! importance-weighted labeled example. The two concrete learners from the
+//! paper's §4 are [`crate::svm::lasvm::LaSvm`] and [`crate::nn::AdaGradMlp`].
+//!
+//! Cost accounting: [`Learner::eval_ops`] and [`Learner::update_ops`] report
+//! the abstract per-call operation counts `S(·)` and the marginal training
+//! cost that Figure 2 of the paper reasons about; the coordinator aggregates
+//! them alongside measured wall-clock.
+
+use crate::data::TestSet;
+
+/// A passive online learner consuming importance-weighted examples.
+pub trait Learner {
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Real-valued margin score f(x); sign is the predicted class.
+    fn score(&self, x: &[f32]) -> f32;
+
+    /// Score a flat row-major batch (`xs.len() == out.len() * dim()`).
+    /// Implementations may override with a blocked/vectorized path.
+    fn score_batch(&self, xs: &[f32], out: &mut [f32]) {
+        let d = self.dim();
+        for (row, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            *o = self.score(row);
+        }
+    }
+
+    /// One online update with importance weight `w` (w = 1/p for queried
+    /// examples per IWAL; w = 1 for passive learning).
+    fn update(&mut self, x: &[f32], y: f32, w: f32);
+
+    /// Abstract cost (flops-ish) of scoring one example: the paper's S(n).
+    fn eval_ops(&self) -> u64;
+
+    /// Abstract cost of one update at the current model size.
+    fn update_ops(&self) -> u64;
+
+    /// 0/1 test error over a held-out set.
+    fn test_error(&self, ts: &TestSet) -> f64 {
+        if ts.is_empty() {
+            return 0.0;
+        }
+        let mut wrong = 0usize;
+        for (x, y) in ts.iter() {
+            if self.score(x) * y <= 0.0 {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / ts.len() as f64
+    }
+
+    /// Number of test-set mistakes (the paper reports raw mistakes out of
+    /// 4065 for the SVM task and "10 mistakes" for the NN task).
+    fn test_mistakes(&self, ts: &TestSet) -> usize {
+        (self.test_error(ts) * ts.len() as f64).round() as usize
+    }
+}
+
+/// Batch scoring backends the sift phase can run on: the native rust path
+/// or the AOT-compiled XLA executable (see [`crate::runtime`]).
+pub trait ScoreBatch {
+    /// Scores for a flat row-major batch.
+    fn scores(&mut self, xs: &[f32], out: &mut [f32]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{StreamConfig, TestSet};
+
+    /// Trivial learner: nearest class mean (importance-weighted).
+    struct Centroid {
+        mu_pos: Vec<f32>,
+        mu_neg: Vec<f32>,
+        n_pos: f32,
+        n_neg: f32,
+    }
+
+    impl Centroid {
+        fn new(d: usize) -> Self {
+            Centroid {
+                mu_pos: vec![0.0; d],
+                mu_neg: vec![0.0; d],
+                n_pos: 0.0,
+                n_neg: 0.0,
+            }
+        }
+    }
+
+    impl Learner for Centroid {
+        fn dim(&self) -> usize {
+            self.mu_pos.len()
+        }
+        fn score(&self, x: &[f32]) -> f32 {
+            // ||x - mu_neg||^2 - ||x - mu_pos||^2 (positive near mu_pos)
+            let mut d_pos = 0.0f32;
+            let mut d_neg = 0.0f32;
+            for i in 0..x.len() {
+                let dp = x[i] - self.mu_pos[i];
+                let dn = x[i] - self.mu_neg[i];
+                d_pos += dp * dp;
+                d_neg += dn * dn;
+            }
+            d_neg - d_pos
+        }
+        fn update(&mut self, x: &[f32], y: f32, w: f32) {
+            let (mu, n) = if y > 0.0 {
+                (&mut self.mu_pos, &mut self.n_pos)
+            } else {
+                (&mut self.mu_neg, &mut self.n_neg)
+            };
+            *n += w;
+            for (m, xi) in mu.iter_mut().zip(x) {
+                *m += w * (xi - *m) / *n;
+            }
+        }
+        fn eval_ops(&self) -> u64 {
+            2 * self.mu_pos.len() as u64
+        }
+        fn update_ops(&self) -> u64 {
+            self.mu_pos.len() as u64
+        }
+    }
+
+    #[test]
+    fn default_batch_matches_single() {
+        let mut c = Centroid::new(3);
+        c.update(&[1.0, 0.0, 0.0], 1.0, 1.0);
+        c.update(&[0.0, 1.0, 0.0], -1.0, 1.0);
+        let xs = [1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = [0.0f32; 3];
+        c.score_batch(&xs, &mut out);
+        for r in 0..3 {
+            assert_eq!(out[r], c.score(&xs[r * 3..(r + 1) * 3]));
+        }
+        assert!(out[0] > 0.0 && out[1] < 0.0);
+    }
+
+    #[test]
+    fn centroid_learns_the_testset_sign() {
+        // Sanity-check the default test_error path with a learnable learner.
+        let cfg = StreamConfig::svm_task();
+        let ts = TestSet::generate(&cfg, 100);
+        let mut c = Centroid::new(784);
+        let mut stream = crate::data::ExampleStream::for_node(&cfg, 0);
+        for _ in 0..1500 {
+            let ex = stream.next_example();
+            c.update(&ex.x, ex.y, 1.0);
+        }
+        let err = c.test_error(&ts);
+        assert!(err < 0.45, "centroid should beat chance, err={err}");
+        assert_eq!(c.test_mistakes(&ts), (err * 100.0).round() as usize);
+    }
+}

@@ -1,0 +1,65 @@
+//! # para-active — parallel learning via active-learning sifting
+//!
+//! A production reproduction of *"Para-active learning"* (Agarwal, Bottou,
+//! Dudík, Langford; cs.LG 2013): active-learning machinery is used not to
+//! save labels but to **parallelize** learners that are otherwise hard to
+//! parallelize (kernel SVMs, SGD-trained neural networks). Each node runs a
+//! *sifter* (scores incoming examples with a slightly stale model and
+//! selects informative ones via the margin rule, Eq 5) and an *updater*
+//! (replays the globally-ordered broadcast of selected examples into its
+//! model replica).
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: synchronous rounds ([`coordinator::sync`],
+//!   Algorithm 1), asynchronous dual-queue protocol ([`coordinator::async_sim`],
+//!   Algorithm 2), IWAL with delays ([`active::iwal`], Algorithm 3), the
+//!   LASVM solver ([`svm`]), the MLP trainer ([`nn`]), the data substrate
+//!   ([`data`]), cluster timing simulation ([`sim`]), metrics ([`metrics`]).
+//! * **L2/L1 (python/, build-time only)** — JAX sift graphs built on Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed from
+//!   rust via PJRT in [`runtime`]. Python is never on the request path.
+//!
+//! Quickstart:
+//! ```no_run
+//! use para_active::prelude::*;
+//!
+//! let cfg = SvmExperimentConfig::paper_defaults();
+//! let stream_cfg = StreamConfig::svm_task(); // {3,1} vs {5,7}
+//! let report = run_sync_svm(&cfg, &stream_cfg, /*nodes=*/4, /*budget=*/50_000);
+//! println!("final test error: {}", report.final_test_errors());
+//! ```
+
+pub mod active;
+pub mod benchlib;
+pub mod coordinator;
+pub mod data;
+pub mod learner;
+pub mod metrics;
+pub mod nn;
+pub mod rng;
+pub mod simd;
+pub mod runtime;
+pub mod sim;
+pub mod svm;
+pub mod theory;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::active::{
+        margin::MarginSifter, PassiveSifter, QueryDecision, Sifter,
+    };
+    pub use crate::coordinator::sync::{
+        run_sync, SyncConfig, SyncReport,
+    };
+    pub use crate::coordinator::{
+        run_sync_nn, run_sync_svm, NnExperimentConfig, SvmExperimentConfig,
+    };
+    pub use crate::data::{
+        stream::{ExampleStream, StreamConfig},
+        TestSet,
+    };
+    pub use crate::learner::{Learner, ScoreBatch};
+    pub use crate::metrics::{ErrorCurve, SpeedupTable};
+    pub use crate::nn::{AdaGradMlp, MlpConfig};
+    pub use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+}

@@ -1,0 +1,162 @@
+//! para-active — CLI launcher for the para-active learning framework.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md experiment
+//! index); `examples/` contains the full figure-regeneration drivers, this
+//! binary is the quick entry point.
+//!
+//! Dependency note: the build environment is offline with a fixed vendor
+//! set, so argument parsing is hand-rolled (no clap).
+
+use para_active::coordinator::{
+    run_passive_nn, run_passive_svm, run_sync_nn, run_sync_svm, NnExperimentConfig,
+    SvmExperimentConfig,
+};
+use para_active::data::StreamConfig;
+use para_active::metrics::curves_to_markdown;
+use para_active::runtime::{artifacts_available, XlaRuntime};
+use para_active::theory::{run_delayed_iwal, TheoryConfig};
+
+const USAGE: &str = "\
+para-active — parallel learning via active-learning sifting
+(Agarwal, Bottou, Dudík, Langford, 2013)
+
+USAGE: para-active <COMMAND> [OPTIONS]
+
+COMMANDS:
+  quickstart                quick SVM parallel-active demo (small budgets)
+  svm       [--nodes K] [--budget N]   parallel-active kernel SVM (Fig 3 left)
+  nn        [--nodes K] [--budget N]   parallel-active neural net (Fig 3 right)
+  passive   [--learner svm|nn] [--budget N]   sequential passive baseline
+  theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
+  artifacts                 inspect the AOT manifest; verify PJRT loads it
+
+Figure-regeneration drivers live in examples/:
+  cargo run --release --example fig3_svm    (etc.)
+";
+
+/// Tiny flag parser: --name value pairs after the subcommand.
+struct Args(Vec<String>);
+
+impl Args {
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
+        match self.0.iter().position(|a| a == name) {
+            None => Ok(default),
+            Some(i) => {
+                let v = self
+                    .0
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("{name} needs a value"))?;
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("bad value for {name}: {v}"))
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args(argv[1..].to_vec());
+
+    match cmd {
+        "quickstart" => {
+            let mut cfg = SvmExperimentConfig::small();
+            cfg.test_size = 500;
+            let stream = StreamConfig::svm_task();
+            println!("para-active quickstart: SVM {{3,1}} vs {{5,7}}, k=4 ...");
+            let r = run_sync_svm(&cfg, &stream, 4, 4000);
+            println!("{}", curves_to_markdown(&[&r.curve]));
+            println!(
+                "seen={} queried={} (rate {:.1}%) simulated parallel time {:.2}s",
+                r.n_seen,
+                r.n_queried,
+                100.0 * r.query_rate(),
+                r.elapsed
+            );
+        }
+        "svm" => {
+            let nodes: usize = args.get("--nodes", 8)?;
+            let budget: usize = args.get("--budget", 30_000)?;
+            let cfg = SvmExperimentConfig::paper_defaults();
+            let stream = StreamConfig::svm_task();
+            let r = run_sync_svm(&cfg, &stream, nodes, budget);
+            println!("{}", curves_to_markdown(&[&r.curve]));
+            println!(
+                "rounds={} rate={:.2}% sift={:.2}s update={:.2}s warm={:.2}s",
+                r.rounds,
+                100.0 * r.query_rate(),
+                r.sift_time,
+                r.update_time,
+                r.warmstart_time
+            );
+        }
+        "nn" => {
+            let nodes: usize = args.get("--nodes", 2)?;
+            let budget: usize = args.get("--budget", 20_000)?;
+            let cfg = NnExperimentConfig::paper_defaults();
+            let stream = StreamConfig::nn_task();
+            let r = run_sync_nn(&cfg, &stream, nodes, budget);
+            println!("{}", curves_to_markdown(&[&r.curve]));
+            println!("rounds={} rate={:.2}%", r.rounds, 100.0 * r.query_rate());
+        }
+        "passive" => {
+            let learner: String = args.get("--learner", "svm".to_string())?;
+            let budget: usize = args.get("--budget", 10_000)?;
+            let r = match learner.as_str() {
+                "svm" => {
+                    let cfg = SvmExperimentConfig::paper_defaults();
+                    run_passive_svm(&cfg, &StreamConfig::svm_task(), budget)
+                }
+                "nn" => {
+                    let cfg = NnExperimentConfig::paper_defaults();
+                    run_passive_nn(&cfg, &StreamConfig::nn_task(), budget)
+                }
+                other => anyhow::bail!("unknown learner {other} (svm|nn)"),
+            };
+            println!("{}", curves_to_markdown(&[&r.curve]));
+        }
+        "theory" => {
+            let delay: u64 = args.get("--delay", 64)?;
+            let t_max: u64 = args.get("--t-max", 20_000)?;
+            let noise: f64 = args.get("--noise", 0.0)?;
+            let cfg = TheoryConfig { noise, ..TheoryConfig::new(delay, t_max) };
+            let run = run_delayed_iwal(&cfg, 16);
+            println!("{}", run.to_csv());
+            println!(
+                "# delay B={delay}: final excess risk {:.4}, {} queries / {} examples",
+                run.final_excess_risk(),
+                run.total_queries(),
+                t_max
+            );
+        }
+        "artifacts" => {
+            if !artifacts_available() {
+                anyhow::bail!("artifacts missing — run `make artifacts`");
+            }
+            let rt = XlaRuntime::load_default()?;
+            println!("PJRT platform: {}", rt.platform());
+            println!(
+                "batch={} dim={} hidden={}",
+                rt.manifest.batch, rt.manifest.dim, rt.manifest.hidden
+            );
+            for e in &rt.manifest.entries {
+                println!(
+                    "  {:28} {:30} inputs={} outputs={}",
+                    e.name,
+                    e.file,
+                    e.inputs.len(),
+                    e.outputs.len()
+                );
+            }
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command: {other}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

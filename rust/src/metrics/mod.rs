@@ -1,0 +1,216 @@
+//! Metrics: time-to-error curves, speedup tables, and report emitters for
+//! regenerating the paper's Figures 3 and 4.
+
+pub mod plot;
+
+use std::fmt::Write as _;
+
+/// One measurement point on a training trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Simulated parallel wall-clock (seconds).
+    pub time: f64,
+    /// Examples seen by the cluster so far.
+    pub n_seen: u64,
+    /// Labels queried (= examples broadcast) so far.
+    pub n_queried: u64,
+    /// Test error in [0, 1].
+    pub test_error: f64,
+    /// Test mistakes (raw count, as the paper reports).
+    pub mistakes: usize,
+}
+
+/// A labeled training trajectory (one line in Figure 3).
+#[derive(Debug, Clone)]
+pub struct ErrorCurve {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl ErrorCurve {
+    pub fn new(label: impl Into<String>) -> Self {
+        ErrorCurve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// Earliest time at which the curve reaches `target` test error and
+    /// stays measurable (first crossing, like reading Figure 4 off Figure 3).
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.test_error <= target)
+            .map(|p| p.time)
+    }
+
+    /// Earliest time reaching at most `mistakes` test mistakes.
+    pub fn time_to_mistakes(&self, mistakes: usize) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.mistakes <= mistakes)
+            .map(|p| p.time)
+    }
+
+    pub fn final_error(&self) -> Option<f64> {
+        self.points.last().map(|p| p.test_error)
+    }
+
+    /// Overall query rate at the end of the run.
+    pub fn final_query_rate(&self) -> Option<f64> {
+        self.points
+            .last()
+            .map(|p| p.n_queried as f64 / p.n_seen.max(1) as f64)
+    }
+
+    /// CSV rows: time,n_seen,n_queried,test_error,mistakes.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time,n_seen,n_queried,test_error,mistakes\n");
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{:.6},{},{},{:.6},{}",
+                p.time, p.n_seen, p.n_queried, p.test_error, p.mistakes
+            );
+        }
+        s
+    }
+}
+
+/// Speedups of a set of parallel curves over a reference curve, evaluated at
+/// several target error levels — Figure 4's content.
+#[derive(Debug, Clone)]
+pub struct SpeedupTable {
+    /// Mistake levels at which speedups are read off.
+    pub targets: Vec<usize>,
+    /// (curve label, per-target speedup; None where a curve never got there).
+    pub rows: Vec<(String, Vec<Option<f64>>)>,
+}
+
+impl SpeedupTable {
+    /// Build from a reference curve and several comparison curves.
+    pub fn build(reference: &ErrorCurve, curves: &[&ErrorCurve], targets: &[usize]) -> Self {
+        let mut rows = Vec::new();
+        for c in curves {
+            let mut speedups = Vec::new();
+            for &m in targets {
+                let s = match (reference.time_to_mistakes(m), c.time_to_mistakes(m)) {
+                    (Some(tr), Some(tc)) if tc > 0.0 => Some(tr / tc),
+                    _ => None,
+                };
+                speedups.push(s);
+            }
+            rows.push((c.label.clone(), speedups));
+        }
+        SpeedupTable { targets: targets.to_vec(), rows }
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from("| run |");
+        for t in &self.targets {
+            let _ = write!(s, " ≤{t} mistakes |");
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in &self.targets {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (label, speeds) in &self.rows {
+            let _ = write!(s, "| {label} |");
+            for sp in speeds {
+                match sp {
+                    Some(v) => {
+                        let _ = write!(s, " {v:.2}x |");
+                    }
+                    None => {
+                        let _ = write!(s, " – |");
+                    }
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Render several curves side by side as markdown (Figure-3-style series).
+pub fn curves_to_markdown(curves: &[&ErrorCurve]) -> String {
+    let mut s = String::new();
+    for c in curves {
+        let _ = writeln!(s, "### {}", c.label);
+        let _ = writeln!(s, "| time (s) | n seen | queried | rate | test err | mistakes |");
+        let _ = writeln!(s, "|---|---|---|---|---|---|");
+        for p in &c.points {
+            let rate = p.n_queried as f64 / p.n_seen.max(1) as f64;
+            let _ = writeln!(
+                s,
+                "| {:.2} | {} | {} | {:.1}% | {:.4} | {} |",
+                p.time,
+                p.n_seen,
+                p.n_queried,
+                100.0 * rate,
+                p.test_error,
+                p.mistakes
+            );
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(label: &str, pts: &[(f64, f64, usize)]) -> ErrorCurve {
+        let mut c = ErrorCurve::new(label);
+        for &(time, err, mistakes) in pts {
+            c.push(CurvePoint {
+                time,
+                n_seen: (time * 100.0) as u64,
+                n_queried: (time * 10.0) as u64,
+                test_error: err,
+                mistakes,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn time_to_error_first_crossing() {
+        let c = curve("a", &[(1.0, 0.5, 50), (2.0, 0.2, 20), (3.0, 0.1, 10)]);
+        assert_eq!(c.time_to_error(0.25), Some(2.0));
+        assert_eq!(c.time_to_error(0.05), None);
+        assert_eq!(c.time_to_mistakes(20), Some(2.0));
+        assert_eq!(c.final_error(), Some(0.1));
+    }
+
+    #[test]
+    fn speedup_table_math() {
+        let slow = curve("ref", &[(10.0, 0.2, 20), (40.0, 0.1, 10)]);
+        let fast = curve("par", &[(2.0, 0.2, 20), (5.0, 0.1, 10)]);
+        let t = SpeedupTable::build(&slow, &[&fast], &[20, 10, 5]);
+        assert_eq!(t.rows.len(), 1);
+        let speeds = &t.rows[0].1;
+        assert!((speeds[0].unwrap() - 5.0).abs() < 1e-12);
+        assert!((speeds[1].unwrap() - 8.0).abs() < 1e-12);
+        assert!(speeds[2].is_none());
+        let md = t.to_markdown();
+        assert!(md.contains("5.00x"));
+        assert!(md.contains("–"));
+    }
+
+    #[test]
+    fn csv_and_markdown_render() {
+        let c = curve("x", &[(1.0, 0.5, 50)]);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("time,"));
+        assert!(csv.lines().count() == 2);
+        let md = curves_to_markdown(&[&c]);
+        assert!(md.contains("### x"));
+        assert!((c.final_query_rate().unwrap() - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,196 @@
+//! Tiny dependency-free SVG line-plot emitter for the figure drivers.
+//!
+//! Renders [`ErrorCurve`]s as Figure-3-style log-y plots (test error vs
+//! simulated training time) so `results/*.svg` can be compared with the
+//! paper's figures directly. No external crates — the offline vendor set
+//! has no plotting library, and SVG is just text.
+
+use super::ErrorCurve;
+use std::fmt::Write as _;
+
+/// Plot geometry.
+const W: f64 = 760.0;
+const H: f64 = 480.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 20.0;
+const MT: f64 = 30.0;
+const MB: f64 = 50.0;
+
+const COLORS: [&str; 8] = [
+    "#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b", "#e377c2", "#17becf",
+];
+
+/// Render curves as an SVG: x = time (linear), y = test error (log10).
+/// Points with zero error are clamped to the smallest positive error seen.
+pub fn curves_to_svg(title: &str, curves: &[&ErrorCurve]) -> String {
+    let mut xmax = 0.0f64;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = 0.0f64;
+    for c in curves {
+        for p in &c.points {
+            xmax = xmax.max(p.time);
+            if p.test_error > 0.0 {
+                ymin = ymin.min(p.test_error);
+            }
+            ymax = ymax.max(p.test_error);
+        }
+    }
+    if !ymin.is_finite() || ymin <= 0.0 {
+        ymin = 1e-4;
+    }
+    if ymax <= ymin {
+        ymax = ymin * 10.0;
+    }
+    if xmax <= 0.0 {
+        xmax = 1.0;
+    }
+    let (ly0, ly1) = (ymin.log10().floor(), ymax.log10().ceil());
+
+    let px = |t: f64| ML + (W - ML - MR) * (t / xmax);
+    let py = |e: f64| {
+        let e = e.max(ymin);
+        MT + (H - MT - MB) * (1.0 - (e.log10() - ly0) / (ly1 - ly0))
+    };
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">"#
+    );
+    let _ = writeln!(s, r#"<rect width="{W}" height="{H}" fill="white"/>"#);
+    let _ = writeln!(
+        s,
+        r#"<text x="{}" y="18" font-family="sans-serif" font-size="14" text-anchor="middle">{}</text>"#,
+        W / 2.0,
+        xml_escape(title)
+    );
+
+    // Axes + log gridlines.
+    let _ = writeln!(
+        s,
+        r#"<line x1="{ML}" y1="{}" x2="{}" y2="{}" stroke="black"/>"#,
+        H - MB,
+        W - MR,
+        H - MB
+    );
+    let _ = writeln!(
+        s,
+        r#"<line x1="{ML}" y1="{MT}" x2="{ML}" y2="{}" stroke="black"/>"#,
+        H - MB
+    );
+    let mut d = ly0;
+    while d <= ly1 + 1e-9 {
+        let y = py(10f64.powf(d));
+        let _ = writeln!(
+            s,
+            r##"<line x1="{ML}" y1="{y:.1}" x2="{}" y2="{y:.1}" stroke="#ddd"/>"##,
+            W - MR
+        );
+        let _ = writeln!(
+            s,
+            r#"<text x="{}" y="{:.1}" font-family="sans-serif" font-size="11" text-anchor="end">1e{}</text>"#,
+            ML - 6.0,
+            y + 4.0,
+            d as i64
+        );
+        d += 1.0;
+    }
+    for i in 0..=5 {
+        let t = xmax * i as f64 / 5.0;
+        let x = px(t);
+        let _ = writeln!(
+            s,
+            r#"<text x="{x:.1}" y="{}" font-family="sans-serif" font-size="11" text-anchor="middle">{t:.0}</text>"#,
+            H - MB + 18.0
+        );
+    }
+    let _ = writeln!(
+        s,
+        r#"<text x="{}" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle">simulated training time (s)</text>"#,
+        (ML + W - MR) / 2.0,
+        H - 12.0
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="16" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle" transform="rotate(-90 16 {})">test error</text>"#,
+        (MT + H - MB) / 2.0,
+        (MT + H - MB) / 2.0
+    );
+
+    // Curves + legend.
+    for (ci, c) in curves.iter().enumerate() {
+        let color = COLORS[ci % COLORS.len()];
+        let mut path = String::new();
+        for (i, p) in c.points.iter().enumerate() {
+            let cmd = if i == 0 { 'M' } else { 'L' };
+            let _ = write!(path, "{cmd}{:.1},{:.1} ", px(p.time), py(p.test_error));
+        }
+        let _ = writeln!(
+            s,
+            r#"<path d="{path}" fill="none" stroke="{color}" stroke-width="1.8"/>"#
+        );
+        let ly = MT + 16.0 * ci as f64 + 8.0;
+        let _ = writeln!(
+            s,
+            r#"<line x1="{}" y1="{ly:.1}" x2="{}" y2="{ly:.1}" stroke="{color}" stroke-width="3"/>"#,
+            W - MR - 190.0,
+            W - MR - 160.0
+        );
+        let _ = writeln!(
+            s,
+            r#"<text x="{}" y="{:.1}" font-family="sans-serif" font-size="11">{}</text>"#,
+            W - MR - 152.0,
+            ly + 4.0,
+            xml_escape(&c.label)
+        );
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+fn xml_escape(t: &str) -> String {
+    t.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CurvePoint;
+
+    fn curve(label: &str) -> ErrorCurve {
+        let mut c = ErrorCurve::new(label);
+        for i in 1..=5u64 {
+            c.push(CurvePoint {
+                time: i as f64,
+                n_seen: i * 100,
+                n_queried: i * 10,
+                test_error: 0.5 / i as f64,
+                mistakes: (50 / i) as usize,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn renders_valid_svg() {
+        let a = curve("passive");
+        let b = curve("parallel k=16 <&>");
+        let svg = curves_to_svg("Fig 3 (left)", &[&a, &b]);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains("passive"));
+        assert!(svg.contains("&lt;&amp;&gt;"), "labels must be escaped");
+        assert_eq!(svg.matches("<path").count(), 2);
+    }
+
+    #[test]
+    fn handles_zero_and_empty() {
+        let mut z = ErrorCurve::new("zeros");
+        z.push(CurvePoint { time: 0.0, n_seen: 0, n_queried: 0, test_error: 0.0, mistakes: 0 });
+        let svg = curves_to_svg("t", &[&z]);
+        assert!(svg.contains("</svg>"));
+        let empty = ErrorCurve::new("empty");
+        let svg2 = curves_to_svg("t", &[&empty]);
+        assert!(svg2.contains("</svg>"));
+    }
+}

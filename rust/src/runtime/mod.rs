@@ -1,0 +1,622 @@
+//! PJRT runtime: load and execute the AOT-compiled sift/update graphs.
+//!
+//! `make artifacts` lowers the L2 JAX graphs (built on the L1 Pallas
+//! kernels) to HLO **text** under `artifacts/`, with a `manifest.json`
+//! describing every entry's input/output shapes. This module loads that
+//! manifest, compiles each entry once on the PJRT CPU client
+//! (`xla` crate: `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`), and exposes typed sifter façades:
+//!
+//! * [`XlaSvmSifter`] — batched RBF margin scores + Eq-5 query probabilities
+//!   from a [`LaSvm`] model's exported support set;
+//! * [`XlaMlpSifter`] — the same for [`AdaGradMlp`] (hidden width padded
+//!   100 → 128 to match the lane-aligned artifact);
+//! * [`XlaMlpStep`] — the AdaGrad train step (used by the e2e example to
+//!   prove the full three-layer composition).
+//!
+//! Python never runs here: the rust binary is self-contained once the
+//! artifacts exist.
+
+use crate::nn::AdaGradMlp;
+use crate::svm::{lasvm::LaSvm, RbfKernel};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Input/output tensor description in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT entry.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// artifacts/manifest.tsv — the line-oriented manifest aot.py emits
+/// alongside the JSON one (this crate is dependency-free by necessity, so
+/// it parses the TSV form).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub entries: Vec<EntrySpec>,
+}
+
+impl Manifest {
+    /// Parse the TSV manifest format (see aot.py `render_tsv`).
+    pub fn parse_tsv(text: &str) -> Result<Manifest> {
+        let mut batch = 0usize;
+        let mut dim = 0usize;
+        let mut hidden = 0usize;
+        let mut entries: Vec<EntrySpec> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("manifest.tsv line {}", lineno + 1);
+            match fields[0] {
+                "meta" => {
+                    if fields.len() != 4 {
+                        bail!("{}: meta wants 4 fields", ctx());
+                    }
+                    batch = fields[1].parse().with_context(ctx)?;
+                    dim = fields[2].parse().with_context(ctx)?;
+                    hidden = fields[3].parse().with_context(ctx)?;
+                }
+                "entry" => {
+                    if fields.len() != 3 {
+                        bail!("{}: entry wants 3 fields", ctx());
+                    }
+                    entries.push(EntrySpec {
+                        name: fields[1].to_string(),
+                        file: fields[2].to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                kind @ ("in" | "out") => {
+                    if fields.len() != 4 {
+                        bail!("{}: {} wants 4 fields", ctx(), kind);
+                    }
+                    let shape: Vec<usize> = fields[3]
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<usize>().with_context(ctx))
+                        .collect::<Result<_>>()?;
+                    let spec = TensorSpec {
+                        name: fields[1].to_string(),
+                        dtype: fields[2].to_string(),
+                        shape,
+                    };
+                    let entry = entries
+                        .last_mut()
+                        .ok_or_else(|| anyhow!("{}: {} before entry", ctx(), kind))?;
+                    if kind == "in" {
+                        entry.inputs.push(spec);
+                    } else {
+                        entry.outputs.push(spec);
+                    }
+                }
+                other => bail!("{}: unknown record {}", ctx(), other),
+            }
+        }
+        if batch == 0 || entries.is_empty() {
+            bail!("manifest.tsv missing meta or entries");
+        }
+        Ok(Manifest { batch, dim, hidden, entries })
+    }
+}
+
+/// Locate the artifacts directory: `$PARA_ACTIVE_ARTIFACTS`, else
+/// `<crate root>/artifacts`, else `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PARA_ACTIVE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_dir.join("manifest.tsv").exists() {
+        return manifest_dir;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Whether AOT artifacts are present (lets tests skip gracefully).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// The PJRT runtime: one CPU client + compiled-executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        let manifest = Manifest::parse_tsv(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Manifest entry by name.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact entry named {name}"))
+    }
+
+    /// Compile (or fetch the cached) executable for an entry.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let file = self.dir.join(&self.entry(name)?.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {file:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an entry with flat f32 inputs shaped per the manifest;
+    /// returns flat f32 outputs (the AOT graphs are all-f32 by design).
+    pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.entry(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in entry.inputs.iter().zip(inputs) {
+            let n: usize = spec.shape.iter().product();
+            if data.len() != n {
+                return Err(anyhow!(
+                    "{name}: input {} expects {} elements (shape {:?}), got {}",
+                    spec.name,
+                    n,
+                    spec.shape,
+                    data.len()
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {:?}: {e:?}", spec.shape))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Eq-5 probabilities recomputed on the rust side (for cross-checking the
+/// artifact's second output).
+pub fn eq5_probability(score: f32, eta: f64, n_seen: u64) -> f64 {
+    2.0 / (1.0 + (eta * score.abs() as f64 * (n_seen as f64).sqrt()).exp())
+}
+
+/// Batched SVM sifter running the `svm_sift_*` artifact.
+pub struct XlaSvmSifter {
+    rt: XlaRuntime,
+    entry: String,
+    batch: usize,
+    capacity: usize,
+    dim: usize,
+    /// Scratch buffers (allocation-free steady state).
+    x_buf: Vec<f32>,
+    sv_buf: Vec<f32>,
+    alpha_buf: Vec<f32>,
+}
+
+impl XlaSvmSifter {
+    /// Pick the smallest artifact capacity that fits `min_capacity` SVs.
+    pub fn new(mut rt: XlaRuntime, min_capacity: usize) -> Result<Self> {
+        let mut candidates: Vec<(usize, String)> = rt
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.name.starts_with("svm_sift_"))
+            .map(|e| (e.inputs[1].shape[0], e.name.clone()))
+            .collect();
+        candidates.sort();
+        let (capacity, entry) = candidates
+            .into_iter()
+            .find(|(cap, _)| *cap >= min_capacity)
+            .ok_or_else(|| anyhow!("no svm_sift artifact with capacity >= {min_capacity}"))?;
+        let batch = rt.manifest.batch;
+        let dim = rt.manifest.dim;
+        // Warm the executable cache up front.
+        rt.executable(&entry)?;
+        Ok(XlaSvmSifter {
+            rt,
+            entry,
+            batch,
+            capacity,
+            dim,
+            x_buf: Vec::new(),
+            sv_buf: Vec::new(),
+            alpha_buf: Vec::new(),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Score a flat batch with the AOT executable. Returns (scores, probs).
+    /// Batches larger than the artifact batch are chunked; the SV set is
+    /// re-uploaded per call (the model changes between rounds).
+    pub fn sift(
+        &mut self,
+        svm: &LaSvm<RbfKernel>,
+        xs: &[f32],
+        eta: f64,
+        n_seen: u64,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = xs.len() / self.dim;
+        let (sv, alpha) = svm.export_support();
+        let n_sv = alpha.len();
+        if n_sv > self.capacity {
+            return Err(anyhow!(
+                "support set {} exceeds artifact capacity {}",
+                n_sv,
+                self.capacity
+            ));
+        }
+        // Pad SVs/alphas to capacity (zero alpha rows are inert).
+        self.sv_buf.clear();
+        self.sv_buf.extend_from_slice(&sv);
+        self.sv_buf.resize(self.capacity * self.dim, 0.0);
+        self.alpha_buf.clear();
+        self.alpha_buf.extend_from_slice(&alpha);
+        self.alpha_buf.resize(self.capacity, 0.0);
+
+        let bias = [svm.bias()];
+        let gamma = [svm.kernel().gamma];
+        let eta_in = [eta as f32];
+        let n_in = [n_seen as f32];
+
+        let mut scores = Vec::with_capacity(n);
+        let mut probs = Vec::with_capacity(n);
+        for chunk in xs.chunks(self.batch * self.dim) {
+            let rows = chunk.len() / self.dim;
+            self.x_buf.clear();
+            self.x_buf.extend_from_slice(chunk);
+            self.x_buf.resize(self.batch * self.dim, 0.0);
+            let outs = self.rt.execute(
+                &self.entry,
+                &[&self.x_buf, &self.sv_buf, &self.alpha_buf, &bias, &gamma, &eta_in, &n_in],
+            )?;
+            scores.extend_from_slice(&outs[0][..rows]);
+            probs.extend_from_slice(&outs[1][..rows]);
+        }
+        Ok((scores, probs))
+    }
+}
+
+/// Batched MLP sifter running the `mlp_sift_*` artifact.
+pub struct XlaMlpSifter {
+    rt: XlaRuntime,
+    entry: String,
+    batch: usize,
+    hidden: usize,
+    dim: usize,
+    x_buf: Vec<f32>,
+}
+
+impl XlaMlpSifter {
+    pub fn new(mut rt: XlaRuntime) -> Result<Self> {
+        let entry = rt
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("mlp_sift_"))
+            .map(|e| e.name.clone())
+            .ok_or_else(|| anyhow!("no mlp_sift artifact"))?;
+        let batch = rt.manifest.batch;
+        let hidden = rt.manifest.hidden;
+        let dim = rt.manifest.dim;
+        rt.executable(&entry)?;
+        Ok(XlaMlpSifter { rt, entry, batch, hidden, dim, x_buf: Vec::new() })
+    }
+
+    /// Score a flat batch. Returns (scores, probs).
+    pub fn sift(
+        &mut self,
+        mlp: &AdaGradMlp,
+        xs: &[f32],
+        eta: f64,
+        n_seen: u64,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = xs.len() / self.dim;
+        let (w1, b1, w2, b2) = mlp.export_padded(self.hidden);
+        let b2 = [b2];
+        let eta_in = [eta as f32];
+        let n_in = [n_seen as f32];
+        let mut scores = Vec::with_capacity(n);
+        let mut probs = Vec::with_capacity(n);
+        for chunk in xs.chunks(self.batch * self.dim) {
+            let rows = chunk.len() / self.dim;
+            self.x_buf.clear();
+            self.x_buf.extend_from_slice(chunk);
+            self.x_buf.resize(self.batch * self.dim, 0.0);
+            let outs = self.rt.execute(
+                &self.entry,
+                &[&self.x_buf, &w1, &b1, &w2, &b2, &eta_in, &n_in],
+            )?;
+            scores.extend_from_slice(&outs[0][..rows]);
+            probs.extend_from_slice(&outs[1][..rows]);
+        }
+        Ok((scores, probs))
+    }
+}
+
+/// The AdaGrad train-step artifact: a full XLA-side MLP update, maintained
+/// as flat parameter/accumulator state (the e2e example's L2 update path).
+pub struct XlaMlpStep {
+    rt: XlaRuntime,
+    entry: String,
+    pub batch: usize,
+    pub hidden: usize,
+    pub dim: usize,
+    /// w1, b1, w2, b2 then the four AdaGrad accumulators.
+    pub state: Vec<Vec<f32>>,
+}
+
+impl XlaMlpStep {
+    /// Initialize from an [`AdaGradMlp`]'s exported parameters (fresh
+    /// accumulators).
+    pub fn new(mut rt: XlaRuntime, mlp: &AdaGradMlp) -> Result<Self> {
+        let entry = rt
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("mlp_step_"))
+            .map(|e| e.name.clone())
+            .ok_or_else(|| anyhow!("no mlp_step artifact"))?;
+        let batch = rt.manifest.batch;
+        let hidden = rt.manifest.hidden;
+        let dim = rt.manifest.dim;
+        rt.executable(&entry)?;
+        let (w1, b1, w2, b2) = mlp.export_padded(hidden);
+        let state = vec![
+            w1.clone(),
+            b1.clone(),
+            w2.clone(),
+            vec![b2],
+            vec![0.0; w1.len()],
+            vec![0.0; b1.len()],
+            vec![0.0; w2.len()],
+            vec![0.0; 1],
+        ];
+        Ok(XlaMlpStep { rt, entry, batch, hidden, dim, state })
+    }
+
+    /// One batched importance-weighted AdaGrad step; rows beyond the data
+    /// get weight 0 (exactly equivalent to dropping them). Returns the loss.
+    pub fn step(&mut self, xs: &[f32], ys: &[f32], wts: &[f32], lr: f32) -> Result<f32> {
+        assert_eq!(xs.len(), ys.len() * self.dim);
+        assert_eq!(ys.len(), wts.len());
+        assert!(ys.len() <= self.batch, "chunk the batch upstream");
+        let mut x_in = xs.to_vec();
+        x_in.resize(self.batch * self.dim, 0.0);
+        let mut y_in = ys.to_vec();
+        y_in.resize(self.batch, 1.0);
+        let mut w_in = wts.to_vec();
+        w_in.resize(self.batch, 0.0);
+        let lr_in = [lr];
+        let inputs: Vec<&[f32]> = self
+            .state
+            .iter()
+            .map(|v| v.as_slice())
+            .chain([x_in.as_slice(), y_in.as_slice(), w_in.as_slice(), lr_in.as_slice()])
+            .collect();
+        let mut outs = self.rt.execute(&self.entry, &inputs)?;
+        let loss = outs[8][0];
+        outs.truncate(8);
+        self.state = outs;
+        Ok(loss)
+    }
+
+    /// Score a batch with the *current* XLA-side parameters via the MLP
+    /// sift entry of the same runtime (convenience for the e2e driver).
+    pub fn scores(&mut self, xs: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .rt
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("mlp_sift_"))
+            .map(|e| e.name.clone())
+            .ok_or_else(|| anyhow!("no mlp_sift artifact"))?;
+        let n = xs.len() / self.dim;
+        let eta = [0.0f32];
+        let n_in = [1.0f32];
+        let mut scores = Vec::with_capacity(n);
+        for chunk in xs.chunks(self.batch * self.dim) {
+            let rows = chunk.len() / self.dim;
+            let mut x_in = chunk.to_vec();
+            x_in.resize(self.batch * self.dim, 0.0);
+            let outs = self.rt.execute(
+                &entry,
+                &[&x_in, &self.state[0], &self.state[1], &self.state[2], &self.state[3], &eta, &n_in],
+            )?;
+            scores.extend_from_slice(&outs[0][..rows]);
+        }
+        Ok(scores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ExampleStream, StreamConfig, DIM};
+    use crate::learner::Learner;
+    use crate::nn::MlpConfig;
+    use crate::svm::LaSvmConfig;
+
+    fn runtime_or_skip() -> Option<XlaRuntime> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(XlaRuntime::load_default().expect("runtime"))
+    }
+
+    fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
+        let cfg = StreamConfig::svm_task();
+        let mut stream = ExampleStream::for_node(&cfg, 0);
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        for _ in 0..n {
+            let ex = stream.next_example();
+            svm.update(&ex.x, ex.y, 1.0);
+        }
+        svm
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_entries() {
+        let Some(rt) = runtime_or_skip() else { return };
+        assert_eq!(rt.manifest.dim, DIM);
+        assert!(rt.entry("mlp_sift_b256_h128").is_ok());
+        assert!(rt.entry("nope").is_err());
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn svm_sifter_matches_native_scores() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let svm = trained_svm(150);
+        let mut sifter = XlaSvmSifter::new(rt, svm.n_support()).expect("sifter");
+        let cfg = StreamConfig::svm_task();
+        let mut stream = ExampleStream::for_node(&cfg, 9);
+        let n = 40;
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0.0f32; n];
+        stream.next_batch_into(&mut xs, &mut ys);
+        let (scores, probs) = sifter.sift(&svm, &xs, 0.1, 5000).expect("sift");
+        assert_eq!(scores.len(), n);
+        for i in 0..n {
+            let native = svm.score(&xs[i * DIM..(i + 1) * DIM]);
+            assert!(
+                (scores[i] - native).abs() < 1e-3 * (1.0 + native.abs()),
+                "row {i}: xla {} vs native {}",
+                scores[i],
+                native
+            );
+            let p_native = eq5_probability(native, 0.1, 5000) as f32;
+            assert!((probs[i] - p_native).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mlp_sifter_matches_native_scores() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let cfg = StreamConfig::nn_task();
+        let mut stream = ExampleStream::for_node(&cfg, 0);
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        for _ in 0..100 {
+            let ex = stream.next_example();
+            mlp.update(&ex.x, ex.y, 1.0);
+        }
+        let mut sifter = XlaMlpSifter::new(rt).expect("sifter");
+        let n = 33;
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0.0f32; n];
+        stream.next_batch_into(&mut xs, &mut ys);
+        let (scores, probs) = sifter.sift(&mlp, &xs, 0.0005, 777).expect("sift");
+        for i in 0..n {
+            let native = mlp.score(&xs[i * DIM..(i + 1) * DIM]);
+            assert!(
+                (scores[i] - native).abs() < 1e-3 * (1.0 + native.abs()),
+                "row {i}: xla {} vs native {}",
+                scores[i],
+                native
+            );
+            let p_native = eq5_probability(native, 0.0005, 777) as f32;
+            assert!((probs[i] - p_native).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mlp_step_reduces_loss() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let cfg = StreamConfig::nn_task();
+        let mut stream = ExampleStream::for_node(&cfg, 1);
+        let mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let mut step = XlaMlpStep::new(rt, &mlp).expect("step");
+        let n = 64;
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0.0f32; n];
+        stream.next_batch_into(&mut xs, &mut ys);
+        let wts = vec![1.0f32; n];
+        let first = step.step(&xs, &ys, &wts, 0.07).expect("step");
+        let mut last = first;
+        for _ in 0..15 {
+            last = step.step(&xs, &ys, &wts, 0.07).expect("step");
+        }
+        assert!(last < first, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn execute_validates_shapes() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let err = rt.execute("mlp_sift_b256_h128", &[&[0.0f32]]);
+        assert!(err.is_err());
+    }
+}

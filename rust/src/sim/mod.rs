@@ -1,0 +1,237 @@
+//! Cluster timing simulation.
+//!
+//! The paper's §4 "Parallel simulation" paragraph defines the measurement
+//! protocol we reproduce: split a global batch into k shards, run each
+//! node's sift phase in turn, take the **largest** sift time across nodes
+//! per round, add the model-update time and the initial warmstart time, and
+//! ignore communication (batched, pipelined broadcasts are dominated by
+//! sifting/updating). [`RoundClock`] implements exactly that.
+//!
+//! Beyond the paper, [`NodeProfile`] adds per-node speed factors (for the
+//! asynchronous experiments E9 — stragglers are the motivation for
+//! Algorithm 2) and [`CommModel`] an optional per-broadcast cost so the
+//! "communication is negligible" assumption is itself testable.
+
+use std::time::{Duration, Instant};
+
+/// Heterogeneous node speeds: node i's work takes `factor[i] ×` as long.
+#[derive(Debug, Clone)]
+pub struct NodeProfile {
+    factors: Vec<f64>,
+}
+
+impl NodeProfile {
+    /// All nodes equally fast (the paper's setting).
+    pub fn uniform(k: usize) -> Self {
+        NodeProfile { factors: vec![1.0; k] }
+    }
+
+    /// One straggler running `slow ×` slower than the rest.
+    pub fn with_straggler(k: usize, slow: f64) -> Self {
+        assert!(k >= 1 && slow >= 1.0);
+        let mut factors = vec![1.0; k];
+        factors[k - 1] = slow;
+        NodeProfile { factors }
+    }
+
+    /// Arbitrary factors.
+    pub fn from_factors(factors: Vec<f64>) -> Self {
+        assert!(!factors.is_empty());
+        NodeProfile { factors }
+    }
+
+    pub fn k(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn factor(&self, node: usize) -> f64 {
+        self.factors[node]
+    }
+}
+
+/// Optional communication cost model for the ordered broadcast.
+#[derive(Debug, Clone, Copy)]
+pub struct CommModel {
+    /// Fixed per-broadcast latency (seconds).
+    pub latency: f64,
+    /// Per-byte cost (seconds/byte); a 784-f32 example is ~3.1 KB.
+    pub per_byte: f64,
+    /// Broadcasts per round are pipelined: total = latency + per_byte * bytes
+    /// (not latency * count).
+    pub pipelined: bool,
+}
+
+impl CommModel {
+    /// The paper's assumption: communication is free.
+    pub fn free() -> Self {
+        CommModel { latency: 0.0, per_byte: 0.0, pipelined: true }
+    }
+
+    /// Cost of broadcasting `count` examples of `bytes` bytes each.
+    pub fn round_cost(&self, count: usize, bytes: usize) -> f64 {
+        if count == 0 {
+            return 0.0;
+        }
+        let payload = self.per_byte * (count * bytes) as f64;
+        if self.pipelined {
+            self.latency + payload
+        } else {
+            self.latency * count as f64 + payload
+        }
+    }
+}
+
+/// Accumulates simulated parallel wall-clock, round by round.
+#[derive(Debug, Clone)]
+pub struct RoundClock {
+    profile: NodeProfile,
+    comm: CommModel,
+    /// Total simulated elapsed seconds.
+    elapsed: f64,
+    /// Per-phase accounting.
+    pub sift_time: f64,
+    pub update_time: f64,
+    pub comm_time: f64,
+    pub warmstart_time: f64,
+    rounds: u64,
+}
+
+impl RoundClock {
+    pub fn new(profile: NodeProfile, comm: CommModel) -> Self {
+        RoundClock {
+            profile,
+            comm,
+            elapsed: 0.0,
+            sift_time: 0.0,
+            update_time: 0.0,
+            comm_time: 0.0,
+            warmstart_time: 0.0,
+            rounds: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.profile.k()
+    }
+
+    /// Charge the warmstart (runs once, on one node).
+    pub fn charge_warmstart(&mut self, seconds: f64) {
+        self.warmstart_time += seconds;
+        self.elapsed += seconds;
+    }
+
+    /// Charge one synchronous round: per-node sift durations (scaled by the
+    /// node profile, max taken), the pooled update, and the broadcasts.
+    pub fn charge_round(
+        &mut self,
+        node_sift_seconds: &[f64],
+        update_seconds: f64,
+        broadcast_count: usize,
+        example_bytes: usize,
+    ) {
+        assert_eq!(node_sift_seconds.len(), self.profile.k());
+        let sift = node_sift_seconds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| s * self.profile.factor(i))
+            .fold(0.0f64, f64::max);
+        let comm = self.comm.round_cost(broadcast_count, example_bytes);
+        self.sift_time += sift;
+        self.update_time += update_seconds;
+        self.comm_time += comm;
+        self.elapsed += sift + update_seconds + comm;
+        self.rounds += 1;
+    }
+
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.elapsed
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+}
+
+/// Wall-clock stopwatch for measuring real phase durations.
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.0);
+        self.0 = now;
+        duration_secs(d)
+    }
+}
+
+fn duration_secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_takes_max_over_nodes() {
+        let mut clock = RoundClock::new(NodeProfile::uniform(3), CommModel::free());
+        clock.charge_round(&[1.0, 3.0, 2.0], 0.5, 10, 3136);
+        assert!((clock.elapsed_seconds() - 3.5).abs() < 1e-12);
+        assert_eq!(clock.rounds(), 1);
+    }
+
+    #[test]
+    fn straggler_dominates() {
+        let mut clock =
+            RoundClock::new(NodeProfile::with_straggler(4, 10.0), CommModel::free());
+        clock.charge_round(&[1.0, 1.0, 1.0, 1.0], 0.0, 0, 0);
+        assert!((clock.elapsed_seconds() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmstart_accumulates() {
+        let mut clock = RoundClock::new(NodeProfile::uniform(1), CommModel::free());
+        clock.charge_warmstart(2.0);
+        clock.charge_round(&[1.0], 1.0, 0, 0);
+        assert!((clock.elapsed_seconds() - 4.0).abs() < 1e-12);
+        assert!((clock.warmstart_time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_model_pipelined_vs_not() {
+        let pipelined = CommModel { latency: 0.1, per_byte: 1e-6, pipelined: true };
+        let serial = CommModel { latency: 0.1, per_byte: 1e-6, pipelined: false };
+        let (n, b) = (100, 3136);
+        assert!(pipelined.round_cost(n, b) < serial.round_cost(n, b));
+        assert_eq!(pipelined.round_cost(0, b), 0.0);
+        let expect = 0.1 + 1e-6 * (n * b) as f64;
+        assert!((pipelined.round_cost(n, b) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_accounting_sums_to_elapsed() {
+        let mut clock = RoundClock::new(
+            NodeProfile::uniform(2),
+            CommModel { latency: 0.01, per_byte: 0.0, pipelined: true },
+        );
+        clock.charge_warmstart(1.0);
+        clock.charge_round(&[0.5, 0.25], 0.2, 5, 100);
+        clock.charge_round(&[0.1, 0.3], 0.1, 2, 100);
+        let sum =
+            clock.warmstart_time + clock.sift_time + clock.update_time + clock.comm_time;
+        assert!((sum - clock.elapsed_seconds()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Vectorization-friendly inner loops for the sift/update hot paths.
+//!
+//! Rust's default float semantics forbid reassociating `acc += d*d` across
+//! iterations, so naive reductions compile to scalar chains. Accumulating
+//! into a fixed-width lane array makes the reassociation explicit and lets
+//! LLVM map it onto SIMD registers (≈8x on AVX2 for the 784-dim loops).
+//! Measured before/after lives in EXPERIMENTS.md §Perf.
+
+const LANES: usize = 8;
+
+/// Squared Euclidean distance ||a - b||^2.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..LANES {
+            let d = xa[i] - xb[i];
+            acc[i] += d * d;
+        }
+    }
+    let mut d2 = acc.iter().sum::<f32>();
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        d2 += d * d;
+    }
+    d2
+}
+
+/// Dot product a·b.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..LANES {
+            acc[i] += xa[i] * xb[i];
+        }
+    }
+    acc.iter().sum::<f32>() + ra.iter().zip(rb).map(|(x, y)| x * y).sum::<f32>()
+}
+
+/// axpy: y += a * x (used by the blocked scorers).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
+            (0..n).map(|_| rng.next_f32() - 0.5).collect(),
+        )
+    }
+
+    #[test]
+    fn sqdist_matches_naive_all_lengths() {
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 100, 784] {
+            let (a, b) = vecs(n, n as u64);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!(
+                (sqdist(&a, &b) - naive).abs() <= 1e-5 * (1.0 + naive),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        for n in [0usize, 1, 5, 8, 13, 784] {
+            let (a, b) = vecs(n, 100 + n as u64);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() <= 1e-5 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        let (x, mut y) = vecs(33, 7);
+        let mut y2 = y.clone();
+        axpy(0.7, &x, &mut y);
+        for (yi, xi) in y2.iter_mut().zip(&x) {
+            *yi += 0.7 * xi;
+        }
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! LRU kernel-row cache.
+//!
+//! The LASVM solver keeps an exact triangular cache for expansion-set
+//! entries; this module provides the complementary *scoring-side* cache:
+//! when the same evaluation points are scored repeatedly against a slowly
+//! changing support set (test-set evaluation every round, re-sifting under
+//! Algorithm 2), the kernel values K(x_eval, sv) can be reused for the
+//! support vectors that did not change. Keys are (row id, support id);
+//! rows are evicted least-recently-used.
+
+use std::collections::HashMap;
+
+/// An LRU cache of f32 kernel rows keyed by an opaque row id.
+#[derive(Debug)]
+pub struct RowCache {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    row: Vec<f32>,
+    /// Version of the support set the row was computed against.
+    version: u64,
+    last_used: u64,
+}
+
+impl RowCache {
+    /// `capacity` = max number of cached rows (each |SV| floats).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RowCache {
+            capacity,
+            map: HashMap::with_capacity(capacity),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fetch the row for `id` computed against support-set `version`, or
+    /// compute it with `fill` (called with a scratch Vec to populate).
+    pub fn get_or_compute(
+        &mut self,
+        id: u64,
+        version: u64,
+        fill: impl FnOnce(&mut Vec<f32>),
+    ) -> &[f32] {
+        self.clock += 1;
+        let clock = self.clock;
+        // Stale or missing -> recompute.
+        let needs_fill = match self.map.get(&id) {
+            Some(e) if e.version == version => false,
+            _ => true,
+        };
+        if needs_fill {
+            self.misses += 1;
+            if !self.map.contains_key(&id) && self.map.len() >= self.capacity {
+                self.evict_lru();
+            }
+            let mut row = match self.map.remove(&id) {
+                Some(e) => e.row,
+                None => Vec::new(),
+            };
+            row.clear();
+            fill(&mut row);
+            self.map.insert(id, Entry { row, version, last_used: clock });
+        } else {
+            self.hits += 1;
+            self.map.get_mut(&id).unwrap().last_used = clock;
+        }
+        &self.map[&id].row
+    }
+
+    fn evict_lru(&mut self) {
+        if let Some((&victim, _)) = self.map.iter().min_by_key(|(_, e)| e.last_used) {
+            self.map.remove(&victim);
+        }
+    }
+
+    /// Drop everything (e.g. after a full model rebuild).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_hits() {
+        let mut c = RowCache::new(4);
+        let mut computes = 0;
+        for _ in 0..3 {
+            let row = c.get_or_compute(7, 1, |r| {
+                computes += 1;
+                r.extend_from_slice(&[1.0, 2.0]);
+            });
+            assert_eq!(row, &[1.0, 2.0]);
+        }
+        assert_eq!(computes, 1);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+        assert!(c.hit_rate() > 0.6);
+    }
+
+    #[test]
+    fn version_invalidates() {
+        let mut c = RowCache::new(4);
+        c.get_or_compute(1, 1, |r| r.push(1.0));
+        let row = c.get_or_compute(1, 2, |r| r.push(2.0));
+        assert_eq!(row, &[2.0]);
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = RowCache::new(2);
+        c.get_or_compute(1, 0, |r| r.push(1.0));
+        c.get_or_compute(2, 0, |r| r.push(2.0));
+        c.get_or_compute(1, 0, |_| panic!("1 should be cached"));
+        c.get_or_compute(3, 0, |r| r.push(3.0)); // evicts 2 (LRU)
+        assert_eq!(c.len(), 2);
+        c.get_or_compute(1, 0, |_| panic!("1 should survive eviction"));
+        let mut recomputed = false;
+        c.get_or_compute(2, 0, |r| {
+            recomputed = true;
+            r.push(2.0);
+        });
+        assert!(recomputed, "2 must have been evicted");
+    }
+
+    #[test]
+    fn reuses_evicted_allocation() {
+        let mut c = RowCache::new(1);
+        c.get_or_compute(1, 0, |r| r.extend([0.0; 64]));
+        c.get_or_compute(2, 0, |r| r.extend([1.0; 64]));
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Kernel functions for the SVM substrate.
+
+/// A Mercer kernel over flat f32 feature vectors.
+pub trait Kernel: Clone + Send + Sync + 'static {
+    /// K(a, b).
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// K(a, a) — overridable when it is cheap (RBF: always 1).
+    fn self_eval(&self, a: &[f32]) -> f32 {
+        self.eval(a, a)
+    }
+}
+
+/// Gaussian RBF kernel K(a, b) = exp(-gamma * ||a - b||^2) — the paper uses
+/// gamma = 0.012 on [-1, 1]-scaled pixels.
+#[derive(Debug, Clone, Copy)]
+pub struct RbfKernel {
+    pub gamma: f32,
+}
+
+impl RbfKernel {
+    pub fn new(gamma: f32) -> Self {
+        RbfKernel { gamma }
+    }
+
+    /// The paper's SVM-experiment bandwidth.
+    pub fn paper() -> Self {
+        RbfKernel { gamma: 0.012 }
+    }
+}
+
+impl Kernel for RbfKernel {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        // Lane-accumulated distance (see crate::simd) — the naive reduction
+        // compiles to a scalar chain and was 8x slower (EXPERIMENTS.md §Perf).
+        (-self.gamma * crate::simd::sqdist(a, b)).exp()
+    }
+
+    #[inline]
+    fn self_eval(&self, _a: &[f32]) -> f32 {
+        1.0
+    }
+}
+
+/// Linear kernel K(a, b) = a·b (baseline / testing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinearKernel;
+
+impl Kernel for LinearKernel {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        crate::simd::dot(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_identity_and_symmetry() {
+        let k = RbfKernel::new(0.5);
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 1.0, 2.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-6);
+        assert_eq!(k.self_eval(&a), 1.0);
+        assert!((k.eval(&a, &b) - k.eval(&b, &a)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rbf_known_value() {
+        let k = RbfKernel::new(0.25);
+        let a = [0.0f32, 0.0];
+        let b = [2.0f32, 0.0];
+        // exp(-0.25 * 4) = exp(-1)
+        assert!((k.eval(&a, &b) - (-1.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rbf_decreases_with_distance() {
+        let k = RbfKernel::new(0.1);
+        let a = [0.0f32; 4];
+        let near = [0.1f32; 4];
+        let far = [1.0f32; 4];
+        assert!(k.eval(&a, &near) > k.eval(&a, &far));
+        assert!(k.eval(&a, &far) > 0.0);
+    }
+
+    #[test]
+    fn linear_matches_dot() {
+        let k = LinearKernel;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, -1.0]), 1.0);
+        assert_eq!(k.self_eval(&[3.0, 4.0]), 25.0);
+    }
+}

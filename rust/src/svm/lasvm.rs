@@ -1,0 +1,556 @@
+//! LASVM — online kernel SVM (Bordes, Ertekin, Weston, Bottou; JMLR 2005) —
+//! with the paper's importance-weighting modifications (§4):
+//!
+//! * each example carries an importance weight w = 1/p, which scales the
+//!   upper bound of its box constraint: `alpha_i in [0, w * C]` (expressed
+//!   below through per-example bounds A_i, B_i on the signed alpha);
+//! * the per-step change of any alpha is clamped to at most C ("we
+//!   constrained the change in alpha_i ... to be at most C"), which tames
+//!   the instability large importance weights cause in the LASVM update.
+//!
+//! The solver maintains the *expansion set* S (candidate support vectors),
+//! their signed dual variables alpha_s, and the gradients
+//! `g_s = y_s - f'(x_s)` where `f'(x) = sum_t alpha_t K(x_t, x)` (bias
+//! excluded inside the solver; the bias b = (g_i + g_j)/2 of the final
+//! violating pair is added at prediction time). Kernel values between set
+//! members are cached exactly in a growing lower-triangular matrix, so
+//! PROCESS costs one kernel row (O(|S| * D)) and each direction step costs
+//! O(|S|).
+
+use super::kernel::Kernel;
+use crate::data::TestSet;
+use crate::learner::Learner;
+
+/// Tuning for the LASVM solver.
+#[derive(Debug, Clone)]
+pub struct LaSvmConfig {
+    /// SVM trade-off parameter C (paper: 1.0).
+    pub c: f32,
+    /// tau-violating pair threshold (Bordes et al. use ~1e-3 * C).
+    pub tau: f32,
+    /// REPROCESS steps after each PROCESS (paper: 2).
+    pub reprocess_steps: usize,
+    /// Clamp each alpha step to at most C (the paper's stability fix).
+    pub clamp_step: bool,
+    /// Compact the expansion set when this fraction of entries is removed.
+    pub gc_fraction: f32,
+}
+
+impl Default for LaSvmConfig {
+    fn default() -> Self {
+        LaSvmConfig {
+            c: 1.0,
+            tau: 1e-3,
+            reprocess_steps: 2,
+            clamp_step: true,
+            gc_fraction: 0.25,
+        }
+    }
+}
+
+/// Online LASVM learner over an arbitrary [`Kernel`].
+#[derive(Clone)]
+pub struct LaSvm<K: Kernel> {
+    kernel: K,
+    cfg: LaSvmConfig,
+    dim: usize,
+    /// Expansion-set points, flat row-major (live and dead rows).
+    pts: Vec<f32>,
+    y: Vec<f32>,
+    alpha: Vec<f32>,
+    /// Gradient g_s = y_s - sum_t alpha_t K(s, t).
+    grad: Vec<f32>,
+    /// Signed box bounds: A_s <= alpha_s <= B_s.
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    /// Lower-triangular kernel cache: `ktri[i][j] = K(i, j)` for j <= i.
+    ktri: Vec<Vec<f32>>,
+    dead: Vec<bool>,
+    n_dead: usize,
+    /// Bias from the last REPROCESS.
+    bias: f32,
+    /// Kernel evaluations performed (cost accounting).
+    kernel_evals: u64,
+}
+
+impl<K: Kernel> LaSvm<K> {
+    pub fn new(kernel: K, dim: usize, cfg: LaSvmConfig) -> Self {
+        LaSvm {
+            kernel,
+            cfg,
+            dim,
+            pts: Vec::new(),
+            y: Vec::new(),
+            alpha: Vec::new(),
+            grad: Vec::new(),
+            lo: Vec::new(),
+            hi: Vec::new(),
+            ktri: Vec::new(),
+            dead: Vec::new(),
+            n_dead: 0,
+            bias: 0.0,
+            kernel_evals: 0,
+        }
+    }
+
+    /// Number of live expansion-set entries.
+    pub fn set_size(&self) -> usize {
+        self.y.len() - self.n_dead
+    }
+
+    /// Number of entries with alpha != 0 (actual support vectors).
+    pub fn n_support(&self) -> usize {
+        (0..self.y.len())
+            .filter(|&s| !self.dead[s] && self.alpha[s] != 0.0)
+            .count()
+    }
+
+    pub fn bias(&self) -> f32 {
+        self.bias
+    }
+
+    pub fn kernel_evals(&self) -> u64 {
+        self.kernel_evals
+    }
+
+    pub fn kernel(&self) -> &K {
+        &self.kernel
+    }
+
+    /// Export live (point, signed alpha) pairs — used by the XLA sifter to
+    /// fill the AOT artifact's padded SV capacity, and by tests.
+    pub fn export_support(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut sv = Vec::new();
+        let mut al = Vec::new();
+        for s in 0..self.y.len() {
+            if !self.dead[s] && self.alpha[s] != 0.0 {
+                sv.extend_from_slice(self.point(s));
+                al.push(self.alpha[s]);
+            }
+        }
+        (sv, al)
+    }
+
+    /// Dual objective value (for invariant tests): W(a) = sum a_s y_s - 1/2 aᵀKa
+    /// with signed alphas: sum_s alpha_s y_s ... using signed form
+    /// W = sum_s alpha_s y_s - 1/2 sum_{s,t} alpha_s alpha_t K(s,t).
+    pub fn dual_objective(&self) -> f64 {
+        let n = self.y.len();
+        let mut lin = 0.0f64;
+        let mut quad = 0.0f64;
+        for i in 0..n {
+            if self.dead[i] || self.alpha[i] == 0.0 {
+                continue;
+            }
+            lin += (self.alpha[i] * self.y[i]) as f64;
+            for j in 0..n {
+                if self.dead[j] || self.alpha[j] == 0.0 {
+                    continue;
+                }
+                quad += (self.alpha[i] * self.alpha[j] * self.k_get(i, j)) as f64;
+            }
+        }
+        lin - 0.5 * quad
+    }
+
+    #[inline]
+    fn point(&self, s: usize) -> &[f32] {
+        &self.pts[s * self.dim..(s + 1) * self.dim]
+    }
+
+    #[inline]
+    fn k_get(&self, i: usize, j: usize) -> f32 {
+        if j <= i {
+            self.ktri[i][j]
+        } else {
+            self.ktri[j][i]
+        }
+    }
+
+    /// Insert x into the expansion set: computes its kernel row and gradient.
+    fn insert(&mut self, x: &[f32], y: f32, weight: f32) -> usize {
+        let idx = self.y.len();
+        self.pts.extend_from_slice(x);
+        self.y.push(y);
+        self.alpha.push(0.0);
+        // Signed bounds: 0 <= y*alpha <= w*C  <=>  alpha in [min(0,yC'), max(0,yC')].
+        let cw = weight * self.cfg.c;
+        self.lo.push((y * cw).min(0.0));
+        self.hi.push((y * cw).max(0.0));
+        self.dead.push(false);
+
+        // Kernel row against all previous entries + diagonal.
+        let mut row = Vec::with_capacity(idx + 1);
+        let mut fx = 0.0f32;
+        for t in 0..idx {
+            let kv = self.kernel.eval(self.point(t), x);
+            row.push(kv);
+            if !self.dead[t] {
+                fx += self.alpha[t] * kv;
+            }
+        }
+        row.push(self.kernel.self_eval(x));
+        self.kernel_evals += idx as u64 + 1;
+        self.ktri.push(row);
+        self.grad.push(y - fx);
+        idx
+    }
+
+    /// argmax over live entries with alpha < hi of grad (the "up" candidate).
+    fn argmax_up(&self, exclude: Option<usize>) -> Option<usize> {
+        let mut best = None;
+        let mut best_g = f32::NEG_INFINITY;
+        for s in 0..self.y.len() {
+            if self.dead[s] || Some(s) == exclude || self.alpha[s] >= self.hi[s] {
+                continue;
+            }
+            if self.grad[s] > best_g {
+                best_g = self.grad[s];
+                best = Some(s);
+            }
+        }
+        best
+    }
+
+    /// argmin over live entries with alpha > lo of grad (the "down" candidate).
+    fn argmin_down(&self, exclude: Option<usize>) -> Option<usize> {
+        let mut best = None;
+        let mut best_g = f32::INFINITY;
+        for s in 0..self.y.len() {
+            if self.dead[s] || Some(s) == exclude || self.alpha[s] <= self.lo[s] {
+                continue;
+            }
+            if self.grad[s] < best_g {
+                best_g = self.grad[s];
+                best = Some(s);
+            }
+        }
+        best
+    }
+
+    /// SMO direction step on the pair (i, j); returns the step size taken.
+    fn pair_step(&mut self, i: usize, j: usize) -> f32 {
+        let gi = self.grad[i];
+        let gj = self.grad[j];
+        let curv = (self.k_get(i, i) + self.k_get(j, j) - 2.0 * self.k_get(i, j)).max(1e-12);
+        let mut lambda = (gi - gj) / curv;
+        lambda = lambda.min(self.hi[i] - self.alpha[i]);
+        lambda = lambda.min(self.alpha[j] - self.lo[j]);
+        if self.cfg.clamp_step {
+            // The paper's stability fix for large importance weights.
+            lambda = lambda.min(self.cfg.c);
+        }
+        if lambda <= 0.0 {
+            return 0.0;
+        }
+        self.alpha[i] += lambda;
+        self.alpha[j] -= lambda;
+        // g_s -= lambda * (K(i,s) - K(j,s)) for every live s.
+        for s in 0..self.y.len() {
+            if self.dead[s] {
+                continue;
+            }
+            let diff = self.k_get(i, s) - self.k_get(j, s);
+            self.grad[s] -= lambda * diff;
+        }
+        lambda
+    }
+
+    /// LASVM PROCESS: add (x, y, weight) to the set and take one direction
+    /// step pairing it with the most violating partner.
+    fn process(&mut self, x: &[f32], y: f32, weight: f32) {
+        let k = self.insert(x, y, weight);
+        let (i, j) = if y > 0.0 {
+            match self.argmin_down(Some(k)) {
+                Some(j) => (k, j),
+                None => return,
+            }
+        } else {
+            match self.argmax_up(Some(k)) {
+                Some(i) => (i, k),
+                None => return,
+            }
+        };
+        if self.grad[i] - self.grad[j] <= self.cfg.tau {
+            return; // not a tau-violating pair
+        }
+        self.pair_step(i, j);
+    }
+
+    /// LASVM REPROCESS: one step on the globally most violating pair, then
+    /// evict blatant non-support-vectors and refresh the bias. Returns
+    /// whether a step was taken.
+    fn reprocess(&mut self) -> bool {
+        let (i, j) = match (self.argmax_up(None), self.argmin_down(None)) {
+            (Some(i), Some(j)) => (i, j),
+            _ => return false,
+        };
+        let violating = self.grad[i] - self.grad[j] > self.cfg.tau;
+        if violating {
+            self.pair_step(i, j);
+        }
+        // Recompute the extreme pair for bias / eviction thresholds.
+        let (i, j) = match (self.argmax_up(None), self.argmin_down(None)) {
+            (Some(i), Some(j)) => (i, j),
+            _ => return violating,
+        };
+        let gi = self.grad[i];
+        let gj = self.grad[j];
+        self.bias = 0.5 * (gi + gj);
+
+        // Evict non-SVs that can no longer enter a violating pair
+        // (Bordes et al., REPROCESS step 4).
+        for s in 0..self.y.len() {
+            if self.dead[s] || self.alpha[s] != 0.0 || s == i || s == j {
+                continue;
+            }
+            let out = if self.y[s] > 0.0 { self.grad[s] <= gj } else { self.grad[s] >= gi };
+            if out {
+                self.dead[s] = true;
+                self.n_dead += 1;
+            }
+        }
+        if self.n_dead as f32 > self.cfg.gc_fraction * self.y.len() as f32 {
+            self.compact();
+        }
+        violating
+    }
+
+    /// Drop dead rows, remapping the triangular cache without re-evaluating
+    /// any kernel entries.
+    fn compact(&mut self) {
+        let n = self.y.len();
+        let keep: Vec<usize> = (0..n).filter(|&s| !self.dead[s]).collect();
+        let mut pts = Vec::with_capacity(keep.len() * self.dim);
+        let mut ktri = Vec::with_capacity(keep.len());
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            pts.extend_from_slice(self.point(old_i));
+            let mut row = Vec::with_capacity(new_i + 1);
+            for &old_j in keep.iter().take(new_i + 1) {
+                row.push(self.k_get(old_i, old_j));
+            }
+            ktri.push(row);
+        }
+        let remap = |v: &Vec<f32>| keep.iter().map(|&s| v[s]).collect::<Vec<f32>>();
+        self.y = remap(&self.y);
+        self.alpha = remap(&self.alpha);
+        self.grad = remap(&self.grad);
+        self.lo = remap(&self.lo);
+        self.hi = remap(&self.hi);
+        self.pts = pts;
+        self.ktri = ktri;
+        self.dead = vec![false; keep.len()];
+        self.n_dead = 0;
+    }
+
+    /// Run REPROCESS until no tau-violating pair remains (LASVM "finishing").
+    pub fn finish(&mut self, max_steps: usize) -> usize {
+        let mut steps = 0;
+        while steps < max_steps && self.reprocess() {
+            steps += 1;
+        }
+        steps
+    }
+}
+
+impl<K: Kernel> Learner for LaSvm<K> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn score(&self, x: &[f32]) -> f32 {
+        let mut f = self.bias;
+        for s in 0..self.y.len() {
+            if self.dead[s] || self.alpha[s] == 0.0 {
+                continue;
+            }
+            f += self.alpha[s] * self.kernel.eval(self.point(s), x);
+        }
+        f
+    }
+
+    fn update(&mut self, x: &[f32], y: f32, w: f32) {
+        self.process(x, y, w);
+        for _ in 0..self.cfg.reprocess_steps {
+            self.reprocess();
+        }
+    }
+
+    fn eval_ops(&self) -> u64 {
+        // One kernel eval per support vector, D mults each: S(n) ~ n_sv * D.
+        self.n_support() as u64 * self.dim as u64
+    }
+
+    fn update_ops(&self) -> u64 {
+        // PROCESS kernel row (|S| * D) + (1 + reprocess) O(|S|) direction steps.
+        let s = self.set_size() as u64;
+        s * self.dim as u64 + (1 + self.cfg.reprocess_steps as u64) * s
+    }
+
+    fn test_error(&self, ts: &TestSet) -> f64 {
+        if ts.is_empty() {
+            return 0.0;
+        }
+        let mut wrong = 0usize;
+        for (x, y) in ts.iter() {
+            if self.score(x) * y <= 0.0 {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / ts.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::svm::kernel::RbfKernel;
+
+    /// 2-D two-Gaussians toy problem, trivially separable.
+    fn toy_example(rng: &mut Rng) -> (Vec<f32>, f32) {
+        let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
+        let cx = if y > 0.0 { 1.5 } else { -1.5 };
+        let x = vec![
+            (cx + 0.4 * rng.normal()) as f32,
+            (0.4 * rng.normal()) as f32,
+        ];
+        (x, y)
+    }
+
+    fn train_toy(n: usize, weight: f32) -> LaSvm<RbfKernel> {
+        let mut svm = LaSvm::new(RbfKernel::new(0.5), 2, LaSvmConfig::default());
+        let mut rng = Rng::new(0);
+        for _ in 0..n {
+            let (x, y) = toy_example(&mut rng);
+            svm.update(&x, y, weight);
+        }
+        svm
+    }
+
+    #[test]
+    fn separates_two_gaussians() {
+        let svm = train_toy(300, 1.0);
+        let mut rng = Rng::new(99);
+        let mut wrong = 0;
+        for _ in 0..200 {
+            let (x, y) = toy_example(&mut rng);
+            if svm.score(&x) * y <= 0.0 {
+                wrong += 1;
+            }
+        }
+        assert!(wrong < 10, "toy error too high: {wrong}/200");
+    }
+
+    #[test]
+    fn alphas_respect_box_constraints() {
+        let svm = train_toy(200, 1.0);
+        for s in 0..svm.y.len() {
+            if svm.dead[s] {
+                continue;
+            }
+            assert!(
+                svm.alpha[s] >= svm.lo[s] - 1e-6 && svm.alpha[s] <= svm.hi[s] + 1e-6,
+                "alpha {} outside [{}, {}]",
+                svm.alpha[s],
+                svm.lo[s],
+                svm.hi[s]
+            );
+            // Signed alpha has the sign of the label (or zero).
+            assert!(svm.alpha[s] * svm.y[s] >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn importance_weight_expands_box() {
+        let mut svm = LaSvm::new(RbfKernel::new(0.5), 2, LaSvmConfig::default());
+        svm.update(&[1.0, 0.0], 1.0, 5.0);
+        // hi for a positive example with weight 5 is 5 * C.
+        assert_eq!(svm.hi[0], 5.0);
+        assert_eq!(svm.lo[0], 0.0);
+        svm.update(&[-1.0, 0.0], -1.0, 3.0);
+        assert_eq!(svm.lo[1], -3.0);
+        assert_eq!(svm.hi[1], 0.0);
+    }
+
+    #[test]
+    fn step_clamp_limits_alpha_growth() {
+        // With a huge importance weight and clamping on, a single update
+        // cannot move any alpha by more than C per direction step.
+        let cfg = LaSvmConfig { reprocess_steps: 0, ..Default::default() };
+        let mut svm = LaSvm::new(RbfKernel::new(0.5), 2, cfg);
+        svm.update(&[1.0, 0.0], 1.0, 1.0);
+        svm.update(&[-1.0, 0.0], -1.0, 1000.0);
+        for &a in &svm.alpha {
+            assert!(a.abs() <= 1.0 + 1e-6, "alpha {a} exceeded step clamp");
+        }
+    }
+
+    #[test]
+    fn dual_objective_is_monotone_under_reprocess() {
+        let mut svm = train_toy(100, 1.0);
+        let before = svm.dual_objective();
+        svm.finish(50);
+        let after = svm.dual_objective();
+        assert!(after >= before - 1e-4, "finish decreased dual: {before} -> {after}");
+    }
+
+    #[test]
+    fn gradient_invariant_holds() {
+        // g_s must equal y_s - f'(x_s) (bias-free margin) at all times.
+        let svm = train_toy(120, 1.0);
+        for s in 0..svm.y.len() {
+            if svm.dead[s] {
+                continue;
+            }
+            let mut fx = 0.0f32;
+            for t in 0..svm.y.len() {
+                if svm.dead[t] || svm.alpha[t] == 0.0 {
+                    continue;
+                }
+                fx += svm.alpha[t] * svm.k_get(s, t);
+            }
+            let expect = svm.y[s] - fx;
+            assert!(
+                (svm.grad[s] - expect).abs() < 1e-3,
+                "grad[{s}] = {} but recomputed {expect}",
+                svm.grad[s]
+            );
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_predictions() {
+        let mut svm = train_toy(150, 1.0);
+        let probe: Vec<Vec<f32>> = (0..10)
+            .map(|i| vec![(i as f32 - 5.0) / 2.0, 0.3])
+            .collect();
+        let before: Vec<f32> = probe.iter().map(|x| svm.score(x)).collect();
+        svm.compact();
+        let after: Vec<f32> = probe.iter().map(|x| svm.score(x)).collect();
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - a).abs() < 1e-5, "compaction changed score {b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn export_support_roundtrip() {
+        let svm = train_toy(100, 1.0);
+        let (sv, alpha) = svm.export_support();
+        assert_eq!(sv.len(), alpha.len() * 2);
+        assert_eq!(alpha.len(), svm.n_support());
+        // Score recomputed from the export must match (modulo bias).
+        let x = [0.7f32, -0.2];
+        let mut f = svm.bias();
+        for (row, a) in sv.chunks_exact(2).zip(&alpha) {
+            f += a * svm.kernel().eval(row, &x);
+        }
+        assert!((f - svm.score(&x)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn kernel_evals_counted() {
+        let svm = train_toy(50, 1.0);
+        assert!(svm.kernel_evals() > 0);
+    }
+}

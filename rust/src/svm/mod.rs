@@ -1,0 +1,10 @@
+//! Kernel-SVM substrate: RBF kernel, exact kernel cache, and the LASVM
+//! online solver (Bordes, Ertekin, Weston, Bottou 2005) with the paper's
+//! importance-weighted modifications.
+
+pub mod cache;
+pub mod kernel;
+pub mod lasvm;
+
+pub use kernel::{Kernel, LinearKernel, RbfKernel};
+pub use lasvm::{LaSvm, LaSvmConfig};

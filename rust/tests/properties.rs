@@ -1,0 +1,204 @@
+//! Property-based tests (hand-rolled sweeps — the offline vendor set has no
+//! proptest): randomized invariants over the kernel, the LASVM solver state,
+//! the querying rule, the IWAL Eq-1 solver, and the data streams.
+
+use para_active::active::iwal::{DelayedIwal, Hypotheses, C1, C2};
+use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::learner::Learner;
+use para_active::rng::Rng;
+use para_active::svm::{kernel::Kernel, lasvm::LaSvm, LaSvmConfig, RbfKernel};
+use para_active::theory::ThresholdClass;
+
+const SEEDS: [u64; 8] = [1, 2, 3, 5, 8, 13, 21, 34];
+
+#[test]
+fn prop_rbf_kernel_is_a_similarity() {
+    // For all inputs: K(a,a)=1, 0 < K(a,b) <= 1, symmetry, and the RBF
+    // triangle-ish bound K(a,c) >= K(a,b)*K(b,c) (log-d2 triangle inequality
+    // gives exp(-(d_ab+d_bc)^2) <= ...; we use the weaker testable form
+    // d(a,c) <= d(a,b)+d(b,c) => K(a,c) >= exp(-g(d_ab+d_bc)^2)).
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        let gamma = (0.001 + rng.next_f64() * 0.5) as f32;
+        let k = RbfKernel::new(gamma);
+        let dim = 1 + rng.below(32);
+        let v = |rng: &mut Rng| -> Vec<f32> {
+            (0..dim).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+        };
+        let (a, b, c) = (v(&mut rng), v(&mut rng), v(&mut rng));
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-6);
+        let kab = k.eval(&a, &b);
+        assert!(kab > 0.0 && kab <= 1.0 + 1e-6);
+        assert!((kab - k.eval(&b, &a)).abs() < 1e-6);
+        let d = |x: &[f32], y: &[f32]| -> f32 {
+            x.iter().zip(y).map(|(p, q)| (p - q) * (p - q)).sum::<f32>().sqrt()
+        };
+        let bound = (-gamma * (d(&a, &b) + d(&b, &c)).powi(2)).exp();
+        assert!(k.eval(&a, &c) >= bound - 1e-5);
+    }
+}
+
+#[test]
+fn prop_lasvm_invariants_across_streams() {
+    // For random streams and importance weights: alphas stay in their boxes,
+    // signed consistently with labels, and the score decomposes over the
+    // exported support set.
+    for &seed in &SEEDS[..5] {
+        let mut rng = Rng::new(seed);
+        let dim = 4;
+        let mut svm = LaSvm::new(RbfKernel::new(0.3), dim, LaSvmConfig::default());
+        for _ in 0..120 {
+            let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
+            let cx = y as f64 * 1.2;
+            let x: Vec<f32> = (0..dim)
+                .map(|i| (cx * ((i == 0) as i32 as f64) + 0.5 * rng.normal()) as f32)
+                .collect();
+            let w = (0.2 + 4.0 * rng.next_f64()) as f32;
+            svm.update(&x, y, w);
+        }
+        // Invariants via public API: export + rescore.
+        let (sv, alpha) = svm.export_support();
+        assert_eq!(sv.len(), alpha.len() * dim);
+        let probe: Vec<f32> = (0..dim).map(|_| rng.next_f32()).collect();
+        let mut f = svm.bias();
+        for (row, a) in sv.chunks_exact(dim).zip(&alpha) {
+            f += a * svm.kernel().eval(row, &probe);
+        }
+        assert!(
+            (f - svm.score(&probe)).abs() < 1e-4,
+            "seed {seed}: export/score mismatch {f} vs {}",
+            svm.score(&probe)
+        );
+        // Dual objective never decreases under extra finishing.
+        let before = svm.dual_objective();
+        svm.finish(20);
+        assert!(svm.dual_objective() >= before - 1e-4, "seed {seed}: dual regressed");
+    }
+}
+
+#[test]
+fn prop_margin_rule_is_a_probability() {
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        let eta = rng.next_f64() * 0.5;
+        let mut sifter = MarginSifter::new(eta, seed);
+        for _ in 0..200 {
+            let score = ((rng.next_f64() - 0.5) * 20.0) as f32;
+            let n = rng.below(1_000_000) as u64;
+            let d = sifter.decide(score, n);
+            assert!(d.p > 0.0 && d.p <= 1.0, "p out of range: {}", d.p);
+            // Monotone: same sifter, larger margin, same n -> smaller p.
+            let p2 = sifter.probability(score * 2.0, n);
+            assert!(p2 <= d.p + 1e-12);
+            // Weight is finite.
+            assert!(d.weight().is_finite());
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_root_solves_equation() {
+    // For random (gap, eps) with gap above the threshold, the returned s
+    // satisfies Eq (1) to tolerance and lies in (0, 1].
+    struct Dummy;
+    impl Hypotheses<f64> for Dummy {
+        fn count(&self) -> usize {
+            2
+        }
+        fn predict(&self, h: usize, _x: &f64) -> i8 {
+            if h == 0 {
+                1
+            } else {
+                -1
+            }
+        }
+    }
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        let eps = 1e-4 + rng.next_f64() * 0.05;
+        let thresh = eps.sqrt() + eps;
+        let gap = thresh * (1.5 + rng.next_f64() * 30.0);
+        let s = DelayedIwal::<f64, Dummy>::solve_eq1(gap, eps);
+        assert!(s > 0.0 && s <= 1.0);
+        let rhs = (C1 / s.sqrt() - C1 + 1.0) * eps.sqrt() + (C2 / s - C2 + 1.0) * eps;
+        assert!(
+            (rhs - gap).abs() < 1e-5 * (1.0 + gap),
+            "seed {seed}: rhs {rhs} vs gap {gap} at s={s}"
+        );
+    }
+}
+
+#[test]
+fn prop_iwal_query_prob_lower_bound() {
+    // Lemma 2's guarantee (loosely): query probabilities never collapse to
+    // zero, so importance weights stay finite across random runs.
+    for &seed in &SEEDS[..4] {
+        let class = ThresholdClass::grid(51);
+        let mut iwal = DelayedIwal::new(class, 2.0, seed);
+        let mut rng = Rng::new(seed ^ 99);
+        for t in 1..=800u64 {
+            iwal.apply_until(t - 1);
+            let x = rng.next_f64();
+            let y = if x >= 0.4 { 1 } else { -1 };
+            let d = iwal.step(x, y);
+            assert!(d.p > 0.0, "seed {seed} t {t}: zero query probability");
+            assert!(d.p <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_streams_are_valid_distributions() {
+    // Any task config: pixels in range, labels in {-1,1}, both classes
+    // appear, examples differ, and per-node streams are disjoint.
+    for &seed in &SEEDS[..4] {
+        for cfg in [
+            StreamConfig::svm_task().with_seed(seed),
+            StreamConfig::nn_task().with_seed(seed),
+        ] {
+            let mut s0 = ExampleStream::for_node(&cfg, 0);
+            let mut s1 = ExampleStream::for_node(&cfg, 1);
+            let mut pos = 0;
+            let mut prev: Option<Vec<f32>> = None;
+            for _ in 0..40 {
+                let e0 = s0.next_example();
+                let e1 = s1.next_example();
+                assert_eq!(e0.x.len(), DIM);
+                assert!(e0.y == 1.0 || e0.y == -1.0);
+                if e0.y > 0.0 {
+                    pos += 1;
+                }
+                assert_ne!(e0.x, e1.x, "node streams identical");
+                if let Some(p) = prev {
+                    assert_ne!(p, e0.x, "stream repeats examples");
+                }
+                prev = Some(e0.x);
+            }
+            assert!(pos > 5 && pos < 35, "class balance off: {pos}/40");
+        }
+    }
+}
+
+#[test]
+fn prop_mlp_updates_bounded() {
+    // AdaGrad steps are bounded by lr per coordinate: no weight explodes
+    // even with extreme importance weights.
+    use para_active::nn::{AdaGradMlp, MlpConfig};
+    for &seed in &SEEDS[..4] {
+        let mut cfg = MlpConfig::paper(8);
+        cfg.hidden = 6;
+        cfg.seed = seed;
+        let mut mlp = AdaGradMlp::new(cfg);
+        let mut rng = Rng::new(seed);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
+            let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
+            let w = (1.0 + rng.next_f64() * 1000.0) as f32;
+            mlp.update(&x, y, w);
+        }
+        let s = mlp.score(&[0.5; 8]);
+        assert!(s.is_finite(), "seed {seed}: score diverged");
+        assert!(s.abs() < 1e4, "seed {seed}: score implausibly large {s}");
+    }
+}
