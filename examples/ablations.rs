@@ -12,16 +12,17 @@
 //!
 //!     cargo run --release --example ablations [budget]
 
-use para_active::active::{margin::MarginSifter, FixedRateSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet, DIM};
-use para_active::learner::Learner;
+use para_active::learner::NativeScorer;
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     learner: &mut LaSvm<RbfKernel>,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     stream: &StreamConfig,
     test: &TestSet,
     nodes: usize,
@@ -32,9 +33,7 @@ fn run(
 ) -> SyncReport {
     let mut sc = SyncConfig::new(nodes, batch, warm, budget).with_label(label);
     sc.eval_every_rounds = 0;
-    let mut scorer =
-        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(learner, sifter, stream, test, &sc, &mut scorer)
+    run_sync(learner, sifter, stream, test, &sc, &NativeScorer)
 }
 
 fn main() {
@@ -52,8 +51,8 @@ fn main() {
     println!("|---|---|---|---|---|");
     for eta in [0.01, 0.03, 0.1, 0.3, 1.0] {
         let mut svm = cfg.make_learner();
-        let mut sifter = MarginSifter::new(eta, 3);
-        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "eta");
+        let sifter = SifterSpec::margin(eta, 3);
+        let r = run(&mut svm, &sifter, &stream, &test, 8, b, warm, budget, "eta");
         println!(
             "| {eta} | {:.1}% | {:.4} | {} | {:.2}s |",
             100.0 * r.query_rate(),
@@ -70,8 +69,8 @@ fn main() {
         let lcfg = LaSvmConfig { clamp_step: clamp, ..Default::default() };
         let mut svm = LaSvm::new(RbfKernel::new(cfg.gamma), DIM, lcfg);
         // Aggressive sifting => large importance weights 1/p.
-        let mut sifter = MarginSifter::new(0.5, 7);
-        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "clamp");
+        let sifter = SifterSpec::margin(0.5, 7);
+        let r = run(&mut svm, &sifter, &stream, &test, 8, b, warm, budget, "clamp");
         let (_, alphas) = svm.export_support();
         let max_a = alphas.iter().fold(0.0f32, |m, a| m.max(a.abs()));
         println!("| {clamp} | {:.4} | {max_a:.2} |", r.final_test_errors());
@@ -83,8 +82,8 @@ fn main() {
     for steps in [0usize, 1, 2, 4] {
         let lcfg = LaSvmConfig { reprocess_steps: steps, ..Default::default() };
         let mut svm = LaSvm::new(RbfKernel::new(cfg.gamma), DIM, lcfg);
-        let mut sifter = MarginSifter::new(0.1, 11);
-        let r = run(&mut svm, &mut sifter, &stream, &test, 8, b, warm, budget, "rp");
+        let sifter = SifterSpec::margin(0.1, 11);
+        let r = run(&mut svm, &sifter, &stream, &test, 8, b, warm, budget, "rp");
         println!(
             "| {steps} | {:.4} | {} | {:.2e} |",
             r.final_test_errors(),
@@ -98,19 +97,19 @@ fn main() {
     println!("|---|---|---|");
     for batch in [250usize, 1000, 4000] {
         let mut svm = cfg.make_learner();
-        let mut sifter = MarginSifter::new(0.1, 13);
-        let r = run(&mut svm, &mut sifter, &stream, &test, 8, batch, warm, budget, "B");
+        let sifter = SifterSpec::margin(0.1, 13);
+        let r = run(&mut svm, &sifter, &stream, &test, 8, batch, warm, budget, "B");
         println!("| {batch} | {:.4} | {:.2}s |", r.final_test_errors(), r.elapsed);
     }
 
     println!("\n## ablation 5: margin sifting vs uniform subsampling (same volume)\n");
     let mut svm = cfg.make_learner();
-    let mut margin = MarginSifter::new(0.1, 17);
-    let rm = run(&mut svm, &mut margin, &stream, &test, 8, b, warm, budget, "margin");
+    let margin = SifterSpec::margin(0.1, 17);
+    let rm = run(&mut svm, &margin, &stream, &test, 8, b, warm, budget, "margin");
     let rate = rm.query_rate().clamp(0.01, 1.0);
     let mut svm2 = cfg.make_learner();
-    let mut fixed = FixedRateSifter::new(rate, 19);
-    let rf = run(&mut svm2, &mut fixed, &stream, &test, 8, b, warm, budget, "fixed");
+    let fixed = SifterSpec::FixedRate { rate, seed: 19 };
+    let rf = run(&mut svm2, &fixed, &stream, &test, 8, b, warm, budget, "fixed");
     println!("| sifter | rate | final err |");
     println!("|---|---|---|");
     println!("| margin (Eq 5) | {:.1}% | {:.4} |", 100.0 * rm.query_rate(), rm.final_test_errors());

@@ -11,15 +11,14 @@
 //!
 //!     cargo run --release --example async_vs_sync [budget]
 
-use para_active::active::margin::MarginSifter;
+use para_active::active::{margin::MarginSifter, SifterSpec};
 use para_active::coordinator::async_sim::{run_async, AsyncConfig};
 use para_active::coordinator::live::{run_live, LiveConfig};
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::NativeScorer;
 use para_active::sim::NodeProfile;
-use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
 fn main() {
     let budget: usize = std::env::args()
@@ -47,14 +46,12 @@ fn main() {
 
         // Synchronous run with the straggler profile.
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 61);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 61);
         let mut sc = SyncConfig::new(k, cfg.global_batch, cfg.warmstart, budget)
             .with_label(format!("sync s={straggle}"));
         sc.profile = Some(profile.clone());
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        let sync_r = run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer);
+        let sync_r = run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer);
 
         // Asynchronous run, same profile (virtual-time simulation).
         let proto = cfg.make_learner();

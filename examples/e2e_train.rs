@@ -16,11 +16,11 @@
 //!
 //!     cargo run --release --example e2e_train [budget]
 
-use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
-use para_active::learner::Learner;
+use para_active::learner::{Learner, LockedScorer};
 use para_active::metrics::curves_to_markdown;
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::runtime::{
@@ -57,15 +57,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut learner = cfg.make_learner();
-    let mut sifter = MarginSifter::new(cfg.eta_parallel, 81);
+    let sifter = SifterSpec::margin(cfg.eta_parallel, 81);
     let sc = SyncConfig::new(4, cfg.global_batch, cfg.warmstart, budget)
         .with_label("e2e svm (XLA sift path)");
     let mut xcheck_max: f32 = 0.0;
     let mut xla_calls: u64 = 0;
     let t0 = Instant::now();
     let report = {
-        let mut scorer = |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
-            // Hot path: the AOT-compiled Pallas RBF-scoring kernel via PJRT.
+        // Hot path: the AOT-compiled Pallas RBF-scoring kernel via PJRT.
+        // The XLA sifter is a stateful single instance, so it enters the
+        // coordinator as a LockedScorer (correct on any backend; scoring
+        // serializes on the accelerator, as it would in production).
+        let scorer = LockedScorer::new(|l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
             let (scores, _probs) = xla_sifter
                 .sift(l, xs, 0.1, 0)
                 .expect("xla sift failed");
@@ -74,8 +77,8 @@ fn main() -> anyhow::Result<()> {
             // Cross-check one row per call against the native scorer.
             let native = l.score(&xs[..DIM]);
             xcheck_max = xcheck_max.max((scores[0] - native).abs());
-        };
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        });
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &scorer)
     };
     println!(
         "svm e2e: {} examples, {} queried ({:.1}%), {} XLA sift calls, \

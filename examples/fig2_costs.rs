@@ -15,11 +15,11 @@
 //!
 //!     cargo run --release --example fig2_costs [budget]
 
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::{NnExperimentConfig, SvmExperimentConfig};
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::{Learner, NativeScorer};
 
 fn row(label: &str, r: &SyncReport) -> String {
     format!(
@@ -33,9 +33,10 @@ fn row(label: &str, r: &SyncReport) -> String {
     )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_one<L: Learner>(
     mut learner: L,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     stream: &StreamConfig,
     test: &TestSet,
     nodes: usize,
@@ -46,9 +47,8 @@ fn run_one<L: Learner>(
 ) -> SyncReport {
     let mut sc = SyncConfig::new(nodes, batch, warmstart, budget).with_label(label);
     sc.eval_every_rounds = 0;
-    let mut scorer = |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
     eprintln!("running {label} ...");
-    run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer)
+    run_sync(&mut learner, sifter, stream, test, &sc, &NativeScorer)
 }
 
 fn main() {
@@ -73,7 +73,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut PassiveSifter,
+            &SifterSpec::Passive,
             &stream,
             &test,
             1,
@@ -86,7 +86,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut MarginSifter::new(cfg.eta_sequential, 41),
+            &SifterSpec::margin(cfg.eta_sequential, 41),
             &stream,
             &test,
             1,
@@ -99,7 +99,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut MarginSifter::new(cfg.eta_parallel, 43),
+            &SifterSpec::margin(cfg.eta_parallel, 43),
             &stream,
             &test,
             k,
@@ -122,7 +122,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut PassiveSifter,
+            &SifterSpec::Passive,
             &stream,
             &test,
             1,
@@ -135,7 +135,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut MarginSifter::new(cfg.eta, 47),
+            &SifterSpec::margin(cfg.eta, 47),
             &stream,
             &test,
             1,
@@ -148,7 +148,7 @@ fn main() {
 
         let r = run_one(
             cfg.make_learner(),
-            &mut MarginSifter::new(cfg.eta, 53),
+            &SifterSpec::margin(cfg.eta, 53),
             &stream,
             &test,
             4,

@@ -9,19 +9,19 @@
 //!
 //!     cargo run --release --example fig3_nn [budget]
 
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::NnExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::NativeScorer;
 use para_active::metrics::curves_to_markdown;
-use para_active::nn::AdaGradMlp;
 
+#[allow(clippy::too_many_arguments)]
 fn run_variant(
     cfg: &NnExperimentConfig,
     stream: &StreamConfig,
     test: &TestSet,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     nodes: usize,
     batch: usize,
     budget: usize,
@@ -29,11 +29,12 @@ fn run_variant(
     label: &str,
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
-    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
+    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget)
+        .with_backend(cfg.backend)
+        .with_label(label);
     sc.eval_every_rounds = eval_every;
-    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
     eprintln!("running {label} ...");
-    let r = run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer);
+    let r = run_sync(&mut learner, sifter, stream, test, &sc, &NativeScorer);
     eprintln!(
         "  -> err {:.4} ({} mistakes/{}), rate {:.2}%, simulated {:.2}s",
         r.final_test_errors(),
@@ -66,25 +67,24 @@ fn main() {
     let b = cfg.global_batch;
     let mut curves = Vec::new();
 
-    let mut passive = PassiveSifter;
     let r = run_variant(
-        &cfg, &stream, &test, &mut passive, 1, 1, budget, b / 2, "nn seq passive",
+        &cfg, &stream, &test, &SifterSpec::Passive, 1, 1, budget, b / 2, "nn seq passive",
     );
     curves.push(r);
 
-    let mut seq_active = MarginSifter::new(cfg.eta, 21);
+    let seq_active = SifterSpec::margin(cfg.eta, 21);
     let r = run_variant(
-        &cfg, &stream, &test, &mut seq_active, 1, 1, budget, b / 2, "nn seq active",
+        &cfg, &stream, &test, &seq_active, 1, 1, budget, b / 2, "nn seq active",
     );
     curves.push(r);
 
     for k in [1usize, 2, 4, 8] {
-        let mut sifter = MarginSifter::new(cfg.eta, 23 + k as u64);
+        let sifter = SifterSpec::margin(cfg.eta, 23 + k as u64);
         let r = run_variant(
             &cfg,
             &stream,
             &test,
-            &mut sifter,
+            &sifter,
             k,
             b,
             budget,

@@ -13,19 +13,19 @@
 //!
 //! Writes results/fig3_svm_<label>.csv per curve and prints a summary.
 
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::NativeScorer;
 use para_active::metrics::curves_to_markdown;
-use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
+#[allow(clippy::too_many_arguments)]
 fn run_variant(
     cfg: &SvmExperimentConfig,
     stream: &StreamConfig,
     test: &TestSet,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     nodes: usize,
     batch: usize,
     budget: usize,
@@ -33,12 +33,12 @@ fn run_variant(
     label: &str,
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
-    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
+    let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget)
+        .with_backend(cfg.backend)
+        .with_label(label);
     sc.eval_every_rounds = eval_every;
-    let mut scorer =
-        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
     eprintln!("running {label} ...");
-    let r = run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer);
+    let r = run_sync(&mut learner, sifter, stream, test, &sc, &NativeScorer);
     eprintln!(
         "  -> err {:.4} ({} mistakes/{}), rate {:.2}%, simulated {:.2}s",
         r.final_test_errors(),
@@ -73,34 +73,33 @@ fn main() {
     let mut curves = Vec::new();
 
     // Sequential passive: update at every example.
-    let mut passive = PassiveSifter;
     let r = run_variant(
-        &cfg, &stream, &test, &mut passive, 1, 1, budget, b / 2, "seq passive",
+        &cfg, &stream, &test, &SifterSpec::Passive, 1, 1, budget, b / 2, "seq passive",
     );
     curves.push(r);
 
     // Sequential active: sift + update at every example (eta = 0.01).
-    let mut seq_active = MarginSifter::new(cfg.eta_sequential, 11);
+    let seq_active = SifterSpec::margin(cfg.eta_sequential, 11);
     let r = run_variant(
-        &cfg, &stream, &test, &mut seq_active, 1, 1, budget, b / 2, "seq active",
+        &cfg, &stream, &test, &seq_active, 1, 1, budget, b / 2, "seq active",
     );
     curves.push(r);
 
     // Batch-delayed active, k = 1 (the paper's surprising strong baseline).
-    let mut batch_active = MarginSifter::new(cfg.eta_parallel, 13);
+    let batch_active = SifterSpec::margin(cfg.eta_parallel, 13);
     let r = run_variant(
-        &cfg, &stream, &test, &mut batch_active, 1, b, budget, 1, "batch active k=1",
+        &cfg, &stream, &test, &batch_active, 1, b, budget, 1, "batch active k=1",
     );
     curves.push(r);
 
     // Parallel active, k in {4, 16, 64}.
     for k in [4usize, 16, 64] {
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 17 + k as u64);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 17 + k as u64);
         let r = run_variant(
             &cfg,
             &stream,
             &test,
-            &mut sifter,
+            &sifter,
             k,
             b,
             budget,

@@ -7,52 +7,61 @@
 //! substantial speedups hold to ~64 nodes and diminish by 128 (the ~2%
 //! sampling rate implies ~50-node ideal parallelism).
 //!
-//!     cargo run --release --example fig4_speedup [budget]
+//! The sift phase runs on the backend named by the second argument
+//! (`serial` | `threaded` | `threaded:N`, default `serial`). The backend
+//! never changes the *statistics* of a curve (selections, errors,
+//! mistakes). Its time axis, however, is the simulated clock fed by
+//! *measured* per-node seconds — noisy run to run on any backend, and
+//! systematically inflated per node under threaded contention — so keep
+//! the default `serial` backend for paper-faithful simulated speedup
+//! tables; `threaded` is for reading the measured wall-sift column.
+//!
+//!     cargo run --release --example fig4_speedup [budget] [backend]
 
-use para_active::active::margin::MarginSifter;
-use para_active::active::PassiveSifter;
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::BackendChoice;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::NativeScorer;
 use para_active::metrics::SpeedupTable;
-use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
 fn main() {
     let budget: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(24_000);
+    let backend = std::env::args()
+        .nth(2)
+        .map(|s| BackendChoice::parse(&s).expect("backend: serial|threaded|threaded:N"))
+        .unwrap_or(BackendChoice::Serial);
 
     let mut cfg = SvmExperimentConfig::paper_defaults();
     cfg.global_batch = (budget / 7).clamp(512, 4000);
     cfg.warmstart = cfg.global_batch;
+    cfg.backend = backend;
     let stream = StreamConfig::svm_task();
     let test = TestSet::generate(&stream, 2000);
     let b = cfg.global_batch;
-
-    let scorer = |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
+    eprintln!("fig4: sift backend = {backend}");
 
     let run_parallel = |k: usize| -> SyncReport {
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 31 + k as u64);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 31 + k as u64);
         let sc = SyncConfig::new(k, b, cfg.warmstart, budget)
+            .with_backend(cfg.backend)
             .with_label(format!("k={k}"));
-        let mut sc2 = sc;
-        sc2.eval_every_rounds = 1;
-        let mut s = scorer;
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc2, &mut s)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
     };
 
     eprintln!("fig4: running passive reference ...");
     let passive = {
         let mut learner = cfg.make_learner();
-        let mut sifter = PassiveSifter;
+        let sifter = SifterSpec::Passive;
         let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget)
             .with_label("passive".to_string());
         sc.eval_every_rounds = b / 2;
-        let mut s = scorer;
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut s)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
     };
     eprintln!(
         "  passive: err {:.4}, simulated {:.2}s",
@@ -66,9 +75,10 @@ fn main() {
         eprintln!("fig4: running parallel active k={k} ...");
         let r = run_parallel(k);
         eprintln!(
-            "  k={k}: err {:.4}, simulated {:.2}s, rate {:.2}%",
+            "  k={k}: err {:.4}, simulated {:.2}s (wall sift {:.2}s), rate {:.2}%",
             r.final_test_errors(),
             r.elapsed,
+            r.wall.sift,
             100.0 * r.query_rate()
         );
         runs.push(r);
@@ -97,15 +107,24 @@ fn main() {
     let right = SpeedupTable::build(&runs[0].curve, &curves, &targets);
     println!("{}", right.to_markdown());
 
+    println!("## simulated vs measured sift time per k (backend: {backend})\n");
+    println!("| k | simulated sift (s) | measured wall sift (s) |");
+    println!("|---|---|---|");
+    for (k, r) in ks.iter().zip(&runs) {
+        println!("| {k} | {:.3} | {:.3} |", r.sift_time, r.wall.sift);
+    }
+
     std::fs::create_dir_all("results").ok();
-    let mut csv = String::from("k,elapsed,final_err,rate\n");
+    let mut csv = String::from("k,elapsed,wall_sift,final_err,rate,backend\n");
     for (k, r) in ks.iter().zip(&runs) {
         csv.push_str(&format!(
-            "{},{:.4},{:.5},{:.5}\n",
+            "{},{:.4},{:.4},{:.5},{:.5},{}\n",
             k,
             r.elapsed,
+            r.wall.sift,
             r.final_test_errors(),
-            r.query_rate()
+            r.query_rate(),
+            r.backend
         ));
     }
     std::fs::write("results/fig4_speedup.csv", csv).expect("write csv");

@@ -1,15 +1,14 @@
 //! E9 bench — asynchronous (Alg 2) vs synchronous (Alg 1) coordination
 //! under node heterogeneity, plus live-thread throughput.
 
-use para_active::learner::Learner;
-use para_active::active::margin::MarginSifter;
+use para_active::active::{margin::MarginSifter, SifterSpec};
 use para_active::coordinator::async_sim::{run_async, AsyncConfig};
 use para_active::coordinator::live::{run_live, LiveConfig};
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
+use para_active::learner::NativeScorer;
 use para_active::sim::NodeProfile;
-use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
 fn main() {
     let mut cfg = SvmExperimentConfig::paper_defaults();
@@ -28,14 +27,12 @@ fn main() {
             NodeProfile::uniform(k)
         };
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(0.1, 5);
+        let sifter = SifterSpec::margin(0.1, 5);
         let mut sc = SyncConfig::new(k, cfg.global_batch, cfg.warmstart, budget)
             .with_label("sync");
         sc.profile = Some(profile.clone());
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        let sync_r = run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer);
+        let sync_r = run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer);
 
         let proto = cfg.make_learner();
         let mut ac = AsyncConfig::new(k, cfg.warmstart, budget - cfg.warmstart);

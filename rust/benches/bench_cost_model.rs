@@ -1,15 +1,16 @@
 //! E5 bench — measured Figure-2 cost counters: operations, time, and
 //! broadcasts for the three strategies, on both learners.
 
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::{NnExperimentConfig, SvmExperimentConfig};
 use para_active::data::{StreamConfig, TestSet};
-use para_active::learner::Learner;
+use para_active::learner::{Learner, NativeScorer};
 
+#[allow(clippy::too_many_arguments)]
 fn run_one<L: Learner>(
     mut learner: L,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     stream: &StreamConfig,
     nodes: usize,
     batch: usize,
@@ -20,8 +21,7 @@ fn run_one<L: Learner>(
     let test = TestSet::generate(stream, 100);
     let mut sc = SyncConfig::new(nodes, batch, warmstart, budget).with_label(label);
     sc.eval_every_rounds = 0;
-    let mut scorer = |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, sifter, stream, &test, &sc, &mut scorer)
+    run_sync(&mut learner, sifter, stream, &test, &sc, &NativeScorer)
 }
 
 fn report(label: &str, r: &SyncReport) {
@@ -48,17 +48,17 @@ fn main() {
     let b = svm_cfg.global_batch;
 
     let r = run_one(
-        svm_cfg.make_learner(), &mut PassiveSifter, &svm_stream, 1, 1,
+        svm_cfg.make_learner(), &SifterSpec::Passive, &svm_stream, 1, 1,
         svm_cfg.warmstart, budget, "svm passive",
     );
     report("svm passive", &r);
     let r = run_one(
-        svm_cfg.make_learner(), &mut MarginSifter::new(0.01, 1), &svm_stream, 1, 1,
+        svm_cfg.make_learner(), &SifterSpec::margin(0.01, 1), &svm_stream, 1, 1,
         svm_cfg.warmstart, budget, "svm seq active",
     );
     report("svm seq active", &r);
     let r = run_one(
-        svm_cfg.make_learner(), &mut MarginSifter::new(0.1, 2), &svm_stream, 16, b,
+        svm_cfg.make_learner(), &SifterSpec::margin(0.1, 2), &svm_stream, 16, b,
         svm_cfg.warmstart, budget, "svm parallel k=16",
     );
     report("svm parallel k=16", &r);
@@ -69,12 +69,12 @@ fn main() {
     let nn_stream = StreamConfig::nn_task();
 
     let r = run_one(
-        nn_cfg.make_learner(), &mut PassiveSifter, &nn_stream, 1, 1,
+        nn_cfg.make_learner(), &SifterSpec::Passive, &nn_stream, 1, 1,
         nn_cfg.warmstart, budget, "nn passive",
     );
     report("nn passive", &r);
     let r = run_one(
-        nn_cfg.make_learner(), &mut MarginSifter::new(0.0005, 3), &nn_stream, 4, 1000,
+        nn_cfg.make_learner(), &SifterSpec::margin(0.0005, 3), &nn_stream, 4, 1000,
         nn_cfg.warmstart, budget, "nn parallel k=4",
     );
     report("nn parallel k=4", &r);

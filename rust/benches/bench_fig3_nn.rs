@@ -1,19 +1,19 @@
 //! E2 bench — compressed Figure 3 (right): the NN regime, where the ~40%
 //! sampling rate and constant-cost updates bound the parallel gain.
 
-use para_active::learner::Learner;
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::NnExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
+use para_active::learner::NativeScorer;
 use para_active::metrics::SpeedupTable;
-use para_active::nn::AdaGradMlp;
 
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     cfg: &NnExperimentConfig,
     stream: &StreamConfig,
     test: &TestSet,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     nodes: usize,
     batch: usize,
     budget: usize,
@@ -22,8 +22,7 @@ fn run_one(
     let mut learner = cfg.make_learner();
     let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
     sc.eval_every_rounds = if batch == 1 { cfg.global_batch / 2 } else { 1 };
-    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer)
+    run_sync(&mut learner, sifter, stream, test, &sc, &NativeScorer)
 }
 
 fn main() {
@@ -36,7 +35,7 @@ fn main() {
 
     println!("# fig3 nn bench: budget={budget} B={}", cfg.global_batch);
     let passive = run_one(
-        &cfg, &stream, &test, &mut PassiveSifter, 1, 1, budget, "nn passive",
+        &cfg, &stream, &test, &SifterSpec::Passive, 1, 1, budget, "nn passive",
     );
     println!(
         "passive:       err {:.4}  simulated {:.2}s",
@@ -46,12 +45,12 @@ fn main() {
 
     let mut runs = Vec::new();
     for k in [1usize, 2, 4, 8] {
-        let mut sifter = MarginSifter::new(cfg.eta, 29 + k as u64);
+        let sifter = SifterSpec::margin(cfg.eta, 29 + k as u64);
         let r = run_one(
             &cfg,
             &stream,
             &test,
-            &mut sifter,
+            &sifter,
             k,
             cfg.global_batch,
             budget,

@@ -2,19 +2,19 @@
 //! sequential passive vs batch-active k=1 vs parallel active k in {4,16,64}
 //! on the SVM task, and prints the speedup rows EXPERIMENTS.md records.
 
-use para_active::learner::Learner;
-use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter};
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet};
+use para_active::learner::NativeScorer;
 use para_active::metrics::SpeedupTable;
-use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     cfg: &SvmExperimentConfig,
     stream: &StreamConfig,
     test: &TestSet,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     nodes: usize,
     batch: usize,
     budget: usize,
@@ -23,9 +23,7 @@ fn run_one(
     let mut learner = cfg.make_learner();
     let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget).with_label(label);
     sc.eval_every_rounds = if batch == 1 { cfg.global_batch / 2 } else { 1 };
-    let mut scorer =
-        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, sifter, stream, test, &sc, &mut scorer)
+    run_sync(&mut learner, sifter, stream, test, &sc, &NativeScorer)
 }
 
 fn main() {
@@ -38,7 +36,7 @@ fn main() {
 
     println!("# fig3 svm bench: budget={budget} B={}", cfg.global_batch);
     let passive = run_one(
-        &cfg, &stream, &test, &mut PassiveSifter, 1, 1, budget, "passive",
+        &cfg, &stream, &test, &SifterSpec::Passive, 1, 1, budget, "passive",
     );
     println!(
         "passive:       err {:.4}  simulated {:.2}s",
@@ -48,12 +46,12 @@ fn main() {
 
     let mut runs = Vec::new();
     for k in [1usize, 4, 16, 64] {
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 17 + k as u64);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 17 + k as u64);
         let r = run_one(
             &cfg,
             &stream,
             &test,
-            &mut sifter,
+            &sifter,
             k,
             cfg.global_batch,
             budget,

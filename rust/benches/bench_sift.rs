@@ -3,12 +3,21 @@
 //! Measures native batch scoring for the SVM (at several support-set sizes)
 //! and the MLP, plus the Eq-5 decision overhead. The per-node sift rate
 //! here bounds the simulated cluster's round time.
+//!
+//! The final section measures the **real** sift-phase speedup of
+//! [`ThreadedBackend`] over [`SerialBackend`] on identical per-node score
+//! jobs — the wall-clock counterpart of the simulated k-division, limited
+//! by this machine's core count (`available_parallelism`).
 
-use para_active::benchlib::{bench_throughput, black_box};
+use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::benchlib::{bench, bench_throughput, black_box};
+use para_active::coordinator::backend::{
+    NodeJob, NodeSift, SerialBackend, SiftBackend, ThreadedBackend,
+};
 use para_active::data::{ExampleStream, StreamConfig, DIM};
 use para_active::learner::Learner;
 use para_active::nn::{AdaGradMlp, MlpConfig};
-use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::sim::Stopwatch;
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
 
 fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
@@ -20,6 +29,35 @@ fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
         svm.update(&ex.x, ex.y, 1.0);
     }
     svm
+}
+
+/// One round of k identical node-sift jobs on `backend`; returns the mean
+/// wall seconds of the whole sift region.
+fn backend_round_secs(
+    backend: &dyn SiftBackend,
+    svm: &LaSvm<RbfKernel>,
+    shards: &[Vec<f32>],
+    outs: &mut [Vec<f32>],
+    warmup: usize,
+    iters: usize,
+) -> f64 {
+    let name = format!("sift round k={} [{}]", shards.len(), backend.name());
+    let stats = bench(&name, warmup, iters, || {
+        let jobs: Vec<NodeJob<'_>> = shards
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|(xs, out)| {
+                let job: NodeJob<'_> = Box::new(move || {
+                    let mut sw = Stopwatch::start();
+                    svm.score_batch(black_box(xs), out);
+                    NodeSift { seconds: sw.lap(), ..NodeSift::default() }
+                });
+                job
+            })
+            .collect();
+        black_box(backend.run_round(jobs));
+    });
+    stats.mean_s
 }
 
 fn main() {
@@ -56,4 +94,33 @@ fn main() {
     bench_throughput("stream generation (elastic)", batch as f64, "ex", 1, 5, || {
         stream.next_batch_into(&mut xs, &mut ys);
     });
+
+    // --- Measured sift speedup: threaded vs serial backend. ---
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n# sift backend speedup (measured wall-clock, {cores} cores)");
+    let svm = trained_svm(1200);
+    let shard = 192usize;
+    for k in [2usize, 4, 8] {
+        // k per-node shards from the k node streams, as in a real round.
+        let shards: Vec<Vec<f32>> = (0..k as u32)
+            .map(|node| {
+                let mut s = ExampleStream::for_node(&cfg, node);
+                let mut sx = vec![0.0f32; shard * DIM];
+                let mut sy = vec![0.0f32; shard];
+                s.next_batch_into(&mut sx, &mut sy);
+                sx
+            })
+            .collect();
+        let mut outs = vec![vec![0.0f32; shard]; k];
+        let serial_s = backend_round_secs(&SerialBackend, &svm, &shards, &mut outs, 1, 5);
+        let threaded_s =
+            backend_round_secs(&ThreadedBackend::auto(), &svm, &shards, &mut outs, 1, 5);
+        println!(
+            "      sift speedup k={k}: {:.2}x (serial {:.1} ms -> threaded {:.1} ms)",
+            serial_s / threaded_s.max(1e-12),
+            serial_s * 1e3,
+            threaded_s * 1e3
+        );
+    }
+    println!("      (ideal = min(k, cores) = cores when oversubscribed)");
 }

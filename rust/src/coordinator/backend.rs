@@ -1,0 +1,286 @@
+//! Pluggable execution backends for the sift phase.
+//!
+//! The paper's central systems observation is that the *search* for
+//! informative examples parallelizes trivially: during a round every node
+//! scores its shard against the same frozen model, so the k per-node
+//! score+decide phases are independent read-only jobs. A [`SiftBackend`]
+//! receives those jobs — one [`NodeJob`] per node — runs them however it
+//! likes, and must return the results **in node-index order**, preserving
+//! the ordered-broadcast guarantee of Figure 1 no matter how execution was
+//! scheduled.
+//!
+//! Two implementations ship:
+//!
+//! * [`SerialBackend`] — runs jobs one after another on the calling thread.
+//!   This is the measurement protocol of the paper's §4 "Parallel
+//!   simulation" (per-node sift times are still recorded separately and fed
+//!   to the simulated [`RoundClock`](crate::sim::RoundClock));
+//! * [`ThreadedBackend`] — a scoped-thread worker pool that executes the
+//!   jobs concurrently. Real wall-clock speedup, same results.
+//!
+//! **The equivalence contract.** For any backend, a run must be
+//! *bit-identical* to the serial run on the same seeds: same selected
+//! examples in the same broadcast order, same importance weights, same
+//! error-curve statistics, same cost counters. The coordinator arranges
+//! the inputs so this holds — every node owns an independent stream and an
+//! independent node-seeded sifter RNG (see
+//! [`SifterSpec`](crate::active::SifterSpec)), and the model is frozen for
+//! the whole phase — and the backend keeps its side of the bargain by
+//! reordering results to node-major order. The contract is enforced by
+//! `tests/backend_equivalence.rs`. Anything derived from a stopwatch is
+//! outside it: `wall` times, and also the *simulated* clock and curve time
+//! axis, which are computed from measured per-node seconds and therefore
+//! vary run to run (and inflate under thread contention).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// What one node produced in one sift phase: the selected examples (in the
+/// node's stream order), the measured sift seconds, and the abstract op
+/// count charged to the cost model.
+#[derive(Debug, Clone, Default)]
+pub struct NodeSift {
+    /// Selected examples, flat row-major.
+    pub sel_x: Vec<f32>,
+    /// Labels of the selected examples.
+    pub sel_y: Vec<f32>,
+    /// Importance weights 1/p of the selected examples.
+    pub sel_w: Vec<f32>,
+    /// Measured wall seconds of this node's score+decide work.
+    pub seconds: f64,
+    /// Abstract scoring operations spent (0 for passive sifting).
+    pub sift_ops: u64,
+}
+
+/// One node's sift work for a round, ready to run on any thread.
+pub type NodeJob<'a> = Box<dyn FnOnce() -> NodeSift + Send + 'a>;
+
+/// Executes the k independent per-node sift jobs of one round.
+///
+/// Implementations may run jobs in any order, on any threads, but must
+/// return exactly one result per job, **in the order the jobs were given**
+/// (node-major), so that the pooled broadcast is identical across backends.
+pub trait SiftBackend: std::fmt::Debug + Send + Sync {
+    /// Short name for reports ("serial", "threaded").
+    fn name(&self) -> &'static str;
+
+    /// Run all jobs and return their results in job order.
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift>;
+}
+
+/// Runs every node's job on the calling thread, in node order — the
+/// seed behavior, and the reference the threaded backend is tested against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialBackend;
+
+impl SiftBackend for SerialBackend {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
+        jobs.into_iter().map(|job| job()).collect()
+    }
+}
+
+/// A scoped-thread worker pool: `threads` workers (0 = one per available
+/// core) pull node jobs from a shared FIFO queue, so k may exceed both the
+/// worker count and the physical core count (oversubscription just queues).
+/// Results are reordered to node-major before returning, which is what
+/// keeps pooled selections in broadcast order regardless of scheduling.
+///
+/// Workers are spawned per round (scoped threads cannot outlive the jobs'
+/// borrows of the coordinator's per-node state). That costs ~0.1 ms per
+/// worker per round — negligible against real shard scoring, but it means
+/// tiny-shard configurations can measure slower than serial; a persistent
+/// cross-round pool is a ROADMAP open item.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedBackend {
+    /// Worker threads per round; 0 means `available_parallelism()`.
+    pub threads: usize,
+}
+
+impl ThreadedBackend {
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        ThreadedBackend { threads: 0 }
+    }
+
+    /// A fixed worker count (tests use this to force oversubscription).
+    pub fn with_threads(threads: usize) -> Self {
+        ThreadedBackend { threads }
+    }
+
+    fn pool_size(&self, jobs: usize) -> usize {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let want = if self.threads == 0 { hw } else { self.threads };
+        want.min(jobs).max(1)
+    }
+}
+
+impl SiftBackend for ThreadedBackend {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
+        let k = jobs.len();
+        let workers = self.pool_size(k);
+        if workers <= 1 || k <= 1 {
+            return SerialBackend.run_round(jobs);
+        }
+        let queue: Mutex<VecDeque<(usize, NodeJob<'_>)>> =
+            Mutex::new(jobs.into_iter().enumerate().collect());
+        let done: Mutex<Vec<(usize, NodeSift)>> = Mutex::new(Vec::with_capacity(k));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let next = queue.lock().expect("sift queue poisoned").pop_front();
+                    let Some((idx, job)) = next else { break };
+                    let result = job();
+                    done.lock().expect("sift results poisoned").push((idx, result));
+                });
+            }
+        });
+        let mut done = done.into_inner().expect("sift results poisoned");
+        debug_assert_eq!(done.len(), k);
+        done.sort_unstable_by_key(|&(idx, _)| idx);
+        done.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+/// Config-level backend selection, carried by
+/// [`SyncConfig`](super::sync::SyncConfig) and the experiment configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Score shards one node at a time on the coordinator thread.
+    #[default]
+    Serial,
+    /// Score shards concurrently on a worker pool (0 = one per core).
+    Threaded { threads: usize },
+}
+
+impl BackendChoice {
+    /// Threaded with one worker per available core.
+    pub fn threaded() -> Self {
+        BackendChoice::Threaded { threads: 0 }
+    }
+
+    /// Instantiate the backend this choice names.
+    pub fn build(self) -> Box<dyn SiftBackend> {
+        match self {
+            BackendChoice::Serial => Box::new(SerialBackend),
+            BackendChoice::Threaded { threads } => Box::new(ThreadedBackend { threads }),
+        }
+    }
+
+    /// Parse a CLI spelling: `serial`, `threaded`, or `threaded:N`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "serial" => Some(BackendChoice::Serial),
+            "threaded" => Some(BackendChoice::Threaded { threads: 0 }),
+            other => other
+                .strip_prefix("threaded:")
+                .and_then(|n| n.parse().ok())
+                .map(|threads| BackendChoice::Threaded { threads }),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendChoice::Serial => write!(f, "serial"),
+            BackendChoice::Threaded { threads: 0 } => write!(f, "threaded"),
+            BackendChoice::Threaded { threads } => write!(f, "threaded:{threads}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Jobs that tag their index and finish in reverse order; any backend
+    /// must still return them in node order.
+    fn tagged_jobs(k: usize, stagger: bool) -> Vec<NodeJob<'static>> {
+        (0..k)
+            .map(|i| {
+                let job: NodeJob<'static> = Box::new(move || {
+                    if stagger {
+                        // Later nodes finish first to invite reordering.
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            2 * (k - i) as u64,
+                        ));
+                    }
+                    NodeSift { sift_ops: i as u64, ..NodeSift::default() }
+                });
+                job
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serial_preserves_node_order() {
+        let out = SerialBackend.run_round(tagged_jobs(5, false));
+        let tags: Vec<u64> = out.iter().map(|r| r.sift_ops).collect();
+        assert_eq!(tags, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn threaded_reorders_results_to_node_major() {
+        let backend = ThreadedBackend::with_threads(4);
+        let out = backend.run_round(tagged_jobs(6, true));
+        let tags: Vec<u64> = out.iter().map(|r| r.sift_ops).collect();
+        assert_eq!(tags, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn threaded_handles_more_jobs_than_workers() {
+        let backend = ThreadedBackend::with_threads(2);
+        let out = backend.run_round(tagged_jobs(17, false));
+        assert_eq!(out.len(), 17);
+        assert!(out.iter().enumerate().all(|(i, r)| r.sift_ops == i as u64));
+    }
+
+    #[test]
+    fn threaded_handles_more_workers_than_jobs() {
+        let backend = ThreadedBackend::with_threads(64);
+        let out = backend.run_round(tagged_jobs(3, true));
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().enumerate().all(|(i, r)| r.sift_ops == i as u64));
+    }
+
+    #[test]
+    fn empty_round_is_fine() {
+        assert!(SerialBackend.run_round(Vec::new()).is_empty());
+        assert!(ThreadedBackend::auto().run_round(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn choice_parses_cli_spellings() {
+        assert_eq!(BackendChoice::parse("serial"), Some(BackendChoice::Serial));
+        assert_eq!(
+            BackendChoice::parse("threaded"),
+            Some(BackendChoice::Threaded { threads: 0 })
+        );
+        assert_eq!(
+            BackendChoice::parse("threaded:12"),
+            Some(BackendChoice::Threaded { threads: 12 })
+        );
+        assert_eq!(BackendChoice::parse("gpu"), None);
+        assert_eq!(BackendChoice::parse("threaded:x"), None);
+        assert_eq!(BackendChoice::default(), BackendChoice::Serial);
+        assert_eq!(BackendChoice::threaded().to_string(), "threaded");
+        assert_eq!(
+            BackendChoice::Threaded { threads: 3 }.to_string(),
+            "threaded:3"
+        );
+    }
+
+    #[test]
+    fn build_names_match() {
+        assert_eq!(BackendChoice::Serial.build().name(), "serial");
+        assert_eq!(BackendChoice::threaded().build().name(), "threaded");
+    }
+}

@@ -1,26 +1,42 @@
 //! L3 coordinator — the paper's system contribution.
 //!
 //! * [`sync`] — Algorithm 1 (synchronous rounds; the configuration the
-//!   paper measures in §4);
+//!   paper measures in §4). The per-node sift phases run on a pluggable
+//!   [`backend::SiftBackend`];
+//! * [`backend`] — sift-phase execution backends:
+//!   [`backend::SerialBackend`] (one node after another, the paper's
+//!   measurement protocol) and [`backend::ThreadedBackend`] (a scoped
+//!   worker pool running the k node phases concurrently), selected per run
+//!   through [`backend::BackendChoice`] on [`sync::SyncConfig`] and the
+//!   experiment configs below. Backends are contractually bit-identical;
+//!   only measured wall-clock differs (see `tests/backend_equivalence.rs`);
 //! * [`async_sim`] — Algorithm 2 (asynchronous dual-queue protocol over an
 //!   ordered broadcast; deterministic event-driven simulation);
-//! * [`live`] — Algorithm 2 on a real tokio runtime (tasks + channels),
-//!   used by the end-to-end example;
+//! * [`live`] — Algorithm 2 on real OS threads (one per node plus a
+//!   sequencer), used by the end-to-end example;
 //! * [`broadcast`] — the sequenced-log ordered-broadcast primitive.
+//!
+//! Every [`sync::SyncReport`] carries both clocks: the **simulated**
+//! parallel time of the paper's protocol (max node sift + update per
+//! round) and the **measured** wall time of each phase as actually
+//! executed ([`sync::WallTimes`]), so modeled and real speedups can be
+//! compared on the same run.
 //!
 //! The experiment-level wrappers [`run_sync_svm`] / [`run_sync_nn`] bundle
 //! the paper's §4 hyper-parameters.
 
 pub mod async_sim;
+pub mod backend;
 pub mod broadcast;
 pub mod live;
 pub mod sync;
 
-use crate::active::{margin::MarginSifter, PassiveSifter};
+use crate::active::SifterSpec;
 use crate::data::{StreamConfig, TestSet, DIM};
-use crate::learner::Learner;
+use crate::learner::NativeScorer;
 use crate::nn::{AdaGradMlp, MlpConfig};
 use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+use backend::BackendChoice;
 use sync::{run_sync, SyncConfig, SyncReport};
 
 /// Hyper-parameters of the paper's SVM experiment (§4, "Support vector
@@ -36,6 +52,8 @@ pub struct SvmExperimentConfig {
     pub warmstart: usize,
     pub test_size: usize,
     pub seed: u64,
+    /// Sift-phase execution backend.
+    pub backend: BackendChoice,
 }
 
 impl SvmExperimentConfig {
@@ -49,6 +67,7 @@ impl SvmExperimentConfig {
             warmstart: 4000,
             test_size: 4065,
             seed: 0x51,
+            backend: BackendChoice::Serial,
         }
     }
 
@@ -78,6 +97,8 @@ pub struct NnExperimentConfig {
     pub warmstart: usize,
     pub test_size: usize,
     pub seed: u64,
+    /// Sift-phase execution backend.
+    pub backend: BackendChoice,
 }
 
 impl NnExperimentConfig {
@@ -89,6 +110,7 @@ impl NnExperimentConfig {
             warmstart: 1000,
             test_size: 4065,
             seed: 0x52,
+            backend: BackendChoice::Serial,
         }
     }
 
@@ -108,7 +130,7 @@ impl NnExperimentConfig {
 
 /// Run the parallel-active SVM experiment on `nodes` nodes with a total
 /// example budget. Uses the native batch scorer (see [`crate::runtime`] for
-/// the XLA-backed alternative).
+/// the XLA-backed alternative) on the backend `cfg.backend` selects.
 pub fn run_sync_svm(
     cfg: &SvmExperimentConfig,
     stream_cfg: &StreamConfig,
@@ -117,13 +139,12 @@ pub fn run_sync_svm(
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
     let eta = if nodes == 1 { cfg.eta_sequential } else { cfg.eta_parallel };
-    let mut sifter = MarginSifter::new(eta, cfg.seed ^ nodes as u64);
+    let sifter = SifterSpec::margin(eta, cfg.seed ^ nodes as u64);
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_backend(cfg.backend)
         .with_label(format!("svm parallel-active k={nodes}"));
-    let mut scorer =
-        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
 
 /// Run the passive SVM baseline (sequential, every example updates).
@@ -133,14 +154,12 @@ pub fn run_passive_svm(
     budget: usize,
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
-    let mut sifter = PassiveSifter;
+    let sifter = SifterSpec::Passive;
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget)
         .with_label("svm sequential-passive".to_string());
     sc.eval_every_rounds = (cfg.global_batch / 2).max(1);
-    let mut scorer =
-        |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
 
 /// Run the parallel-active NN experiment.
@@ -151,12 +170,12 @@ pub fn run_sync_nn(
     budget: usize,
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
-    let mut sifter = MarginSifter::new(cfg.eta, cfg.seed ^ nodes as u64);
+    let sifter = SifterSpec::margin(cfg.eta, cfg.seed ^ nodes as u64);
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_backend(cfg.backend)
         .with_label(format!("nn parallel-active k={nodes}"));
-    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
+    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
 
 /// Run the passive NN baseline.
@@ -166,18 +185,12 @@ pub fn run_passive_nn(
     budget: usize,
 ) -> SyncReport {
     let mut learner = cfg.make_learner();
-    let mut sifter = PassiveSifter;
+    let sifter = SifterSpec::Passive;
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget)
         .with_label("nn sequential-passive".to_string());
     sc.eval_every_rounds = (cfg.global_batch / 2).max(1);
-    let mut scorer = |l: &AdaGradMlp, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-    run_sync(&mut learner, &mut sifter, stream_cfg, &test, &sc, &mut scorer)
-}
-
-/// Helper shared by examples: a native batch scorer closure for any Learner.
-pub fn native_scorer<L: Learner>() -> impl FnMut(&L, &[f32], &mut [f32]) {
-    |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out)
+    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
 
 #[cfg(test)]
@@ -192,6 +205,7 @@ mod tests {
         let r = run_sync_svm(&cfg, &stream, 4, 1600);
         assert!(r.n_seen >= 1600);
         assert!(r.final_test_errors() < 0.5);
+        assert_eq!(r.backend, "serial");
     }
 
     #[test]
@@ -205,6 +219,17 @@ mod tests {
     }
 
     #[test]
+    fn wrapper_backend_is_config_selected() {
+        let mut cfg = SvmExperimentConfig::small();
+        cfg.test_size = 80;
+        cfg.backend = BackendChoice::threaded();
+        let stream = StreamConfig::svm_task();
+        let r = run_sync_svm(&cfg, &stream, 2, 1100);
+        assert_eq!(r.backend, "threaded");
+        assert!(r.n_seen >= 1100);
+    }
+
+    #[test]
     fn paper_defaults_match_section4() {
         let svm = SvmExperimentConfig::paper_defaults();
         assert_eq!(svm.c, 1.0);
@@ -213,6 +238,7 @@ mod tests {
         assert_eq!(svm.eta_sequential, 0.01);
         assert_eq!(svm.global_batch, 4000);
         assert_eq!(svm.test_size, 4065);
+        assert_eq!(svm.backend, BackendChoice::Serial);
         let nn = NnExperimentConfig::paper_defaults();
         assert_eq!(nn.mlp.hidden, 100);
         assert_eq!(nn.mlp.lr, 0.07);

@@ -4,9 +4,29 @@
 //! B/k-example shard with the *current, frozen* model) and a **passive
 //! updating** phase (the selected importance-weighted examples, pooled in
 //! node order, are replayed into the model). At every point all nodes hold
-//! the same model, which is why the sift phase parallelizes trivially; the
-//! simulated parallel time of a round is the max node sift time plus the
-//! update time (the paper's own measurement protocol, see [`crate::sim`]).
+//! the same model, which is why the sift phase parallelizes trivially.
+//!
+//! The per-node score+decide work is delegated to a pluggable
+//! [`SiftBackend`](super::backend::SiftBackend) selected by
+//! [`SyncConfig::backend`]: [`SerialBackend`](super::backend::SerialBackend)
+//! runs nodes one after another (the paper's own measurement protocol),
+//! [`ThreadedBackend`](super::backend::ThreadedBackend) runs them
+//! concurrently on a scoped-thread pool. Both produce **bit-identical**
+//! trajectories on the same seeds — each node owns an independent stream
+//! and a node-seeded sifter RNG, and results are pooled in node-major
+//! broadcast order regardless of scheduling (`tests/backend_equivalence.rs`
+//! enforces this).
+//!
+//! Two clocks are reported side by side in [`SyncReport`]:
+//!
+//! * **simulated** ([`RoundClock`]) — the paper's parallel-time model: per
+//!   round, the max node sift time (scaled by the [`NodeProfile`]) plus the
+//!   update time; warmstart added once; communication per [`CommModel`].
+//!   This is the apples-to-apples number for k-sweeps on any machine.
+//! * **measured** ([`WallTimes`]) — real wall-clock of each phase as
+//!   executed. With the threaded backend `wall.sift` shrinks toward the
+//!   max-node time as cores allow, so serial/threaded ratios give the
+//!   *measured* speedup (`benches/bench_sift.rs` reports it).
 //!
 //! Degenerate settings reproduce the paper's baselines exactly:
 //! * `nodes = 1, global_batch = 1`, margin sifter  → sequential active
@@ -14,12 +34,13 @@
 //! * `nodes = 1`, large batch, margin sifter       → batch-delayed active
 //!   learning (the k=1 "parallel simulation" the paper found to *beat*
 //!   per-example updating at high accuracy);
-//! * [`PassiveSifter`](crate::active::PassiveSifter) → sequential passive
-//!   learning (scoring skipped, every example updates the model).
+//! * [`SifterSpec::Passive`] → sequential passive learning (scoring
+//!   skipped, every example updates the model).
 
-use crate::active::Sifter;
+use super::backend::{BackendChoice, NodeJob, NodeSift, SiftBackend};
+use crate::active::{Sifter, SifterSpec};
 use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
-use crate::learner::Learner;
+use crate::learner::{Learner, SiftScorer};
 use crate::metrics::{CurvePoint, ErrorCurve};
 use crate::sim::{CommModel, NodeProfile, RoundClock, Stopwatch};
 
@@ -40,6 +61,8 @@ pub struct SyncConfig {
     pub profile: Option<NodeProfile>,
     /// Communication model (defaults to free, like the paper).
     pub comm: CommModel,
+    /// Execution backend for the sift phase (defaults to serial).
+    pub backend: BackendChoice,
     /// Label for the report curve.
     pub label: String,
 }
@@ -54,6 +77,7 @@ impl SyncConfig {
             eval_every_rounds: 1,
             profile: None,
             comm: CommModel::free(),
+            backend: BackendChoice::Serial,
             label: format!("sync k={nodes}"),
         }
     }
@@ -62,12 +86,11 @@ impl SyncConfig {
         self.label = label.into();
         self
     }
-}
 
-/// Whether the sift phase needs margin scores at all (passive does not, and
-/// must not be charged for them).
-fn sifter_needs_scores(sifter: &dyn Sifter) -> bool {
-    sifter.name() != "passive"
+    pub fn with_backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
 }
 
 /// Cost/communication counters for the Figure-2 cost model.
@@ -79,6 +102,19 @@ pub struct CostCounters {
     pub update_ops: u64,
     /// Examples broadcast (= labels queried after warmstart): phi(n).
     pub broadcasts: u64,
+}
+
+/// Measured wall-clock seconds per phase — the real-execution counterpart
+/// of the simulated [`RoundClock`] fields. `sift` covers each round's whole
+/// backend region (so with the threaded backend it approaches the max-node
+/// time instead of the sum); `total` additionally includes data generation
+/// and evaluation, which the simulated clock deliberately excludes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WallTimes {
+    pub sift: f64,
+    pub update: f64,
+    pub warmstart: f64,
+    pub total: f64,
 }
 
 /// Result of a synchronous run.
@@ -94,6 +130,10 @@ pub struct SyncReport {
     pub update_time: f64,
     pub warmstart_time: f64,
     pub comm_time: f64,
+    /// Measured wall-clock seconds, phase-split.
+    pub wall: WallTimes,
+    /// Name of the sift backend that executed the run.
+    pub backend: &'static str,
     pub costs: CostCounters,
 }
 
@@ -107,20 +147,78 @@ impl SyncReport {
     }
 }
 
-/// A batch-scoring backend: fills `scores` for a flat row-major batch.
-/// The native path calls [`Learner::score_batch`]; the XLA path
-/// ([`crate::runtime`]) runs the AOT-compiled sift executable.
-pub type BatchScorer<'a, L> = dyn FnMut(&L, &[f32], &mut [f32]) + 'a;
+/// Per-node state owned across rounds: the node's stream, its private
+/// sifter (node-seeded RNG), and reusable shard buffers.
+struct NodeLane {
+    stream: ExampleStream,
+    sifter: Box<dyn Sifter + Send>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    scores: Vec<f32>,
+}
 
-/// Run Algorithm 1. Examples are drawn from per-node streams derived from
-/// `stream_cfg`; the learner is updated in place. Returns the trajectory.
+impl NodeLane {
+    /// One node's sift phase over the already-drawn shard in `self.xs`/`ys`:
+    /// score it against the frozen model and apply the decision rule,
+    /// keeping selections in stream order. Generation happens before the
+    /// jobs are built, so neither the simulated nor the measured sift clock
+    /// ever includes it (the paper's protocol).
+    fn sift_round<L: Learner>(
+        &mut self,
+        frozen: &L,
+        scorer: &dyn SiftScorer<L>,
+        shard: usize,
+        n_phase: u64,
+        needs_scores: bool,
+    ) -> NodeSift {
+        let mut sw = Stopwatch::start();
+        let mut out = NodeSift::default();
+        if needs_scores {
+            scorer.score(frozen, &self.xs, &mut self.scores);
+            out.sift_ops = shard as u64 * frozen.eval_ops();
+        } else {
+            self.scores.fill(0.0);
+        }
+        for i in 0..shard {
+            let d = self.sifter.decide(self.scores[i], n_phase);
+            if d.queried {
+                out.sel_x.extend_from_slice(&self.xs[i * DIM..(i + 1) * DIM]);
+                out.sel_y.push(self.ys[i]);
+                out.sel_w.push(d.weight());
+            }
+        }
+        out.seconds = sw.lap();
+        out
+    }
+}
+
+/// Run Algorithm 1 with the backend named by `cfg.backend`. Examples are
+/// drawn from per-node streams derived from `stream_cfg`; per-node sifters
+/// are built from `sifter`; the learner is updated in place. Returns the
+/// trajectory.
 pub fn run_sync<L: Learner>(
     learner: &mut L,
-    sifter: &mut dyn Sifter,
+    sifter: &SifterSpec,
     stream_cfg: &StreamConfig,
     test: &TestSet,
     cfg: &SyncConfig,
-    scorer: &mut BatchScorer<'_, L>,
+    scorer: &dyn SiftScorer<L>,
+) -> SyncReport {
+    let backend = cfg.backend.build();
+    run_sync_on(learner, sifter, stream_cfg, test, cfg, scorer, backend.as_ref())
+}
+
+/// [`run_sync`] with an explicitly injected backend (for custom
+/// [`SiftBackend`] implementations and the equivalence tests).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sync_on<L: Learner>(
+    learner: &mut L,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    scorer: &dyn SiftScorer<L>,
+    backend: &dyn SiftBackend,
 ) -> SyncReport {
     assert!(cfg.nodes >= 1);
     assert!(cfg.global_batch >= cfg.nodes, "need at least one example per node");
@@ -130,9 +228,18 @@ pub fn run_sync<L: Learner>(
     assert_eq!(profile.k(), k);
     let mut clock = RoundClock::new(profile, cfg.comm);
     let mut costs = CostCounters::default();
+    let mut wall = WallTimes::default();
+    let mut total_sw = Stopwatch::start();
 
-    let mut streams: Vec<ExampleStream> =
-        (0..k as u32).map(|i| ExampleStream::for_node(stream_cfg, i)).collect();
+    let mut lanes: Vec<NodeLane> = (0..k)
+        .map(|node| NodeLane {
+            stream: ExampleStream::for_node(stream_cfg, node as u32),
+            sifter: sifter.build(node),
+            xs: vec![0.0f32; shard * DIM],
+            ys: vec![0.0f32; shard],
+            scores: vec![0.0f32; shard],
+        })
+        .collect();
 
     let mut curve = ErrorCurve::new(cfg.label.clone());
     let mut n_seen: u64 = 0;
@@ -144,7 +251,7 @@ pub fn run_sync<L: Learner>(
         let mut sw = Stopwatch::start();
         let mut warm_secs = 0.0;
         for _ in 0..cfg.warmstart {
-            let y = streams[0].next_into(&mut x); // generation untimed
+            let y = lanes[0].stream.next_into(&mut x); // generation untimed
             sw.lap();
             learner.update(&x, y, 1.0);
             warm_secs += sw.lap();
@@ -152,61 +259,63 @@ pub fn run_sync<L: Learner>(
             n_seen += 1;
         }
         clock.charge_warmstart(warm_secs);
+        wall.warmstart = warm_secs;
     }
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
 
     // --- Rounds. ---
-    let needs_scores = sifter_needs_scores(sifter);
-    let mut xs = vec![0.0f32; shard * DIM];
-    let mut ys = vec![0.0f32; shard];
-    let mut scores = vec![0.0f32; shard];
-    // Selected examples pooled across nodes, in node-major order (the
-    // ordered-broadcast guarantee of Figure 1).
-    let mut sel_x: Vec<f32> = Vec::new();
-    let mut sel_y: Vec<f32> = Vec::new();
-    let mut sel_w: Vec<f32> = Vec::new();
+    let needs_scores = sifter.needs_scores();
 
     while (n_seen as usize) < cfg.budget {
         // n in Eq (5): cumulative examples seen by the cluster before this
         // sift phase begins.
         let n_phase = n_seen;
-        sel_x.clear();
-        sel_y.clear();
-        sel_w.clear();
-        let mut node_sift = vec![0.0f64; k];
 
-        for (node, stream) in streams.iter_mut().enumerate() {
-            stream.next_batch_into(&mut xs, &mut ys); // generation untimed
-            let mut sw = Stopwatch::start();
-            if needs_scores {
-                scorer(learner, &xs, &mut scores);
-                costs.sift_ops += shard as u64 * learner.eval_ops();
-            } else {
-                scores.fill(0.0);
-            }
-            for i in 0..shard {
-                let d = sifter.decide(scores[i], n_phase);
-                if d.queried {
-                    sel_x.extend_from_slice(&xs[i * DIM..(i + 1) * DIM]);
-                    sel_y.push(ys[i]);
-                    sel_w.push(d.weight());
-                }
-            }
-            node_sift[node] = sw.lap();
-            n_seen += shard as u64;
+        // Draw every node's shard up front — generation is untimed and off
+        // both clocks, exactly like the seed protocol.
+        for lane in &mut lanes {
+            lane.stream.next_batch_into(&mut lane.xs, &mut lane.ys);
         }
 
-        // Passive updating phase: replay the pooled broadcast.
+        // Active filtering: one independent job per node against the
+        // frozen model; the backend decides where each job runs.
+        let frozen: &L = learner;
+        let jobs: Vec<NodeJob<'_>> = lanes
+            .iter_mut()
+            .map(|lane| {
+                let job: NodeJob<'_> = Box::new(move || {
+                    lane.sift_round(frozen, scorer, shard, n_phase, needs_scores)
+                });
+                job
+            })
+            .collect();
         let mut sw = Stopwatch::start();
-        for ((x, &y), &w) in sel_x.chunks_exact(DIM).zip(sel_y.iter()).zip(sel_w.iter()) {
-            learner.update(x, y, w);
-            costs.update_ops += learner.update_ops();
+        let results = backend.run_round(jobs);
+        wall.sift += sw.lap();
+        n_seen += (k * shard) as u64;
+
+        // Passive updating: replay the pooled broadcast in node-major order
+        // (the ordered-broadcast guarantee of Figure 1 — the backend already
+        // returned results in node order).
+        let mut sw = Stopwatch::start();
+        let mut selected = 0usize;
+        for node in &results {
+            for ((x, &y), &w) in
+                node.sel_x.chunks_exact(DIM).zip(node.sel_y.iter()).zip(node.sel_w.iter())
+            {
+                learner.update(x, y, w);
+                costs.update_ops += learner.update_ops();
+            }
+            selected += node.sel_y.len();
+            costs.sift_ops += node.sift_ops;
         }
         let update_secs = sw.lap();
-        n_queried += sel_y.len() as u64;
-        costs.broadcasts += sel_y.len() as u64;
+        wall.update += update_secs;
+        n_queried += selected as u64;
+        costs.broadcasts += selected as u64;
 
-        clock.charge_round(&node_sift, update_secs, sel_y.len(), DIM * 4);
+        let node_sift: Vec<f64> = results.iter().map(|r| r.seconds).collect();
+        clock.charge_round(&node_sift, update_secs, selected, DIM * 4);
 
         let do_eval = cfg.eval_every_rounds > 0
             && clock.rounds() % cfg.eval_every_rounds as u64 == 0;
@@ -215,6 +324,7 @@ pub fn run_sync<L: Learner>(
         }
     }
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
+    wall.total = total_sw.lap();
 
     SyncReport {
         rounds: clock.rounds(),
@@ -225,6 +335,8 @@ pub fn run_sync<L: Learner>(
         update_time: clock.update_time,
         warmstart_time: clock.warmstart_time,
         comm_time: clock.comm_time,
+        wall,
+        backend: backend.name(),
         costs,
         curve,
     }
@@ -251,14 +363,9 @@ fn record<L: Learner>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::active::{margin::MarginSifter, PassiveSifter};
-    use crate::data::StreamConfig;
+    use crate::learner::NativeScorer;
     use crate::nn::{AdaGradMlp, MlpConfig};
     use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
-
-    fn native_scorer<L: Learner>() -> impl FnMut(&L, &[f32], &mut [f32]) {
-        |l: &L, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out)
-    }
 
     fn small_svm() -> LaSvm<RbfKernel> {
         LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default())
@@ -269,11 +376,9 @@ mod tests {
         let stream_cfg = StreamConfig::svm_task();
         let test = TestSet::generate(&stream_cfg, 200);
         let mut svm = small_svm();
-        let mut sifter = MarginSifter::new(0.1, 7);
+        let sifter = SifterSpec::margin(0.1, 7);
         let cfg = SyncConfig::new(4, 400, 300, 2300);
-        let mut scorer = native_scorer();
-        let report =
-            run_sync(&mut svm, &mut sifter, &stream_cfg, &test, &cfg, &mut scorer);
+        let report = run_sync(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
         assert!(report.n_seen >= 2300);
         assert_eq!(report.rounds, 5); // (2300 - 300) / 400
         assert!(report.final_test_errors() < 0.25, "err {}", report.final_test_errors());
@@ -281,6 +386,9 @@ mod tests {
         assert!(report.query_rate() < 1.0);
         assert!(report.elapsed > 0.0);
         assert!(report.costs.broadcasts == report.n_queried);
+        assert_eq!(report.backend, "serial");
+        assert!(report.wall.sift > 0.0);
+        assert!(report.wall.total >= report.wall.sift);
     }
 
     #[test]
@@ -288,11 +396,9 @@ mod tests {
         let stream_cfg = StreamConfig::nn_task();
         let test = TestSet::generate(&stream_cfg, 50);
         let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
-        let mut sifter = PassiveSifter;
+        let sifter = SifterSpec::Passive;
         let cfg = SyncConfig::new(1, 50, 100, 400);
-        let mut scorer = native_scorer();
-        let report =
-            run_sync(&mut mlp, &mut sifter, &stream_cfg, &test, &cfg, &mut scorer);
+        let report = run_sync(&mut mlp, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
         // Everything after warmstart is queried with p = 1.
         assert_eq!(report.n_queried, report.n_seen - 100);
         // Passive must not pay scoring costs.
@@ -304,12 +410,10 @@ mod tests {
         let stream_cfg = StreamConfig::nn_task();
         let test = TestSet::generate(&stream_cfg, 50);
         let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
-        let mut sifter = MarginSifter::new(0.0005, 3);
+        let sifter = SifterSpec::margin(0.0005, 3);
         let mut cfg = SyncConfig::new(1, 1, 50, 300);
         cfg.eval_every_rounds = 125;
-        let mut scorer = native_scorer();
-        let report =
-            run_sync(&mut mlp, &mut sifter, &stream_cfg, &test, &cfg, &mut scorer);
+        let report = run_sync(&mut mlp, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
         assert_eq!(report.rounds, 250);
         assert!(report.costs.sift_ops > 0);
     }
@@ -322,11 +426,10 @@ mod tests {
         let test = TestSet::generate(&stream_cfg, 30);
         let run_k = |k: usize| {
             let mut svm = small_svm();
-            let mut sifter = MarginSifter::new(0.1, 11);
+            let sifter = SifterSpec::margin(0.1, 11);
             let mut cfg = SyncConfig::new(k, 512, 256, 3000);
             cfg.eval_every_rounds = 0;
-            let mut scorer = native_scorer();
-            run_sync(&mut svm, &mut sifter, &stream_cfg, &test, &cfg, &mut scorer)
+            run_sync(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer)
         };
         let r1 = run_k(1);
         let r8 = run_k(8);
@@ -344,15 +447,28 @@ mod tests {
         let test = TestSet::generate(&stream_cfg, 20);
         let run_with = |profile: NodeProfile| {
             let mut svm = small_svm();
-            let mut sifter = MarginSifter::new(0.1, 5);
+            let sifter = SifterSpec::margin(0.1, 5);
             let mut cfg = SyncConfig::new(4, 400, 200, 1400);
             cfg.profile = Some(profile);
             cfg.eval_every_rounds = 0;
-            let mut scorer = native_scorer();
-            run_sync(&mut svm, &mut sifter, &stream_cfg, &test, &cfg, &mut scorer)
+            run_sync(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer)
         };
         let fair = run_with(NodeProfile::uniform(4));
         let strag = run_with(NodeProfile::with_straggler(4, 8.0));
         assert!(strag.sift_time > 2.0 * fair.sift_time);
+    }
+
+    #[test]
+    fn threaded_backend_runs_via_config() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 40);
+        let mut svm = small_svm();
+        let sifter = SifterSpec::margin(0.1, 13);
+        let cfg = SyncConfig::new(4, 200, 100, 700).with_backend(BackendChoice::threaded());
+        let report = run_sync(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+        assert_eq!(report.backend, "threaded");
+        assert_eq!(report.rounds, 3);
+        assert!(report.n_seen >= 700);
+        assert!(report.wall.sift > 0.0);
     }
 }

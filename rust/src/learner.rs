@@ -5,15 +5,28 @@
 //! importance-weighted labeled example. The two concrete learners from the
 //! paper's §4 are [`crate::svm::lasvm::LaSvm`] and [`crate::nn::AdaGradMlp`].
 //!
+//! Thread contract: `Learner: Send + Sync`, and every read-only method
+//! (`score`, `score_batch`, `eval_ops`, `test_error`) takes `&self`, so a
+//! `&L` can be shared across the worker threads of
+//! [`ThreadedBackend`](crate::coordinator::backend::ThreadedBackend) while
+//! the model is frozen for a sift phase. Mutation (`update`) stays confined
+//! to the coordinator thread between phases.
+//!
 //! Cost accounting: [`Learner::eval_ops`] and [`Learner::update_ops`] report
 //! the abstract per-call operation counts `S(·)` and the marginal training
 //! cost that Figure 2 of the paper reasons about; the coordinator aggregates
 //! them alongside measured wall-clock.
 
+use std::sync::Mutex;
+
 use crate::data::TestSet;
 
 /// A passive online learner consuming importance-weighted examples.
-pub trait Learner {
+///
+/// `Send + Sync` are supertraits so a frozen `&L` may be scored from many
+/// threads at once; concrete learners hold only owned data, so this costs
+/// them nothing.
+pub trait Learner: Send + Sync {
     /// Input dimensionality.
     fn dim(&self) -> usize;
 
@@ -60,11 +73,46 @@ pub trait Learner {
     }
 }
 
-/// Batch scoring backends the sift phase can run on: the native rust path
-/// or the AOT-compiled XLA executable (see [`crate::runtime`]).
-pub trait ScoreBatch {
-    /// Scores for a flat row-major batch.
-    fn scores(&mut self, xs: &[f32], out: &mut [f32]);
+/// A batch-scoring strategy for the sift phase: the native rust path, or an
+/// adapter over the AOT-compiled XLA executable (see [`crate::runtime`]).
+///
+/// `Sync` is a supertrait because the threaded sift backend shares one
+/// scorer across all worker threads; stateless scorers ([`NativeScorer`])
+/// satisfy it trivially, stateful ones wrap themselves in [`LockedScorer`].
+pub trait SiftScorer<L: Learner>: Sync {
+    /// Fill `out` with margin scores for the flat row-major batch `xs`
+    /// (`xs.len() == out.len() * learner.dim()`).
+    fn score(&self, learner: &L, xs: &[f32], out: &mut [f32]);
+}
+
+/// The default scorer: [`Learner::score_batch`] on the calling thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeScorer;
+
+impl<L: Learner> SiftScorer<L> for NativeScorer {
+    fn score(&self, learner: &L, xs: &[f32], out: &mut [f32]) {
+        learner.score_batch(xs, out);
+    }
+}
+
+/// Adapts a stateful scoring closure (e.g. the PJRT/XLA executable path,
+/// which owns scratch buffers and an executable cache) into a [`SiftScorer`]
+/// by serializing calls through a mutex. Scoring through it is correct on
+/// any backend; it simply does not parallelize, which is the honest cost of
+/// a single-instance accelerator resource.
+pub struct LockedScorer<F>(Mutex<F>);
+
+impl<F> LockedScorer<F> {
+    pub fn new(f: F) -> Self {
+        LockedScorer(Mutex::new(f))
+    }
+}
+
+impl<L: Learner, F: FnMut(&L, &[f32], &mut [f32]) + Send> SiftScorer<L> for LockedScorer<F> {
+    fn score(&self, learner: &L, xs: &[f32], out: &mut [f32]) {
+        let mut f = self.0.lock().expect("scorer mutex poisoned");
+        (*f)(learner, xs, out)
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +172,36 @@ mod tests {
         fn update_ops(&self) -> u64 {
             self.mu_pos.len() as u64
         }
+    }
+
+    #[test]
+    fn native_scorer_matches_score_batch() {
+        let mut c = Centroid::new(2);
+        c.update(&[1.0, 0.0], 1.0, 1.0);
+        c.update(&[0.0, 1.0], -1.0, 1.0);
+        let xs = [0.9f32, 0.1, 0.2, 0.8];
+        let mut via_scorer = [0.0f32; 2];
+        let mut direct = [0.0f32; 2];
+        NativeScorer.score(&c, &xs, &mut via_scorer);
+        c.score_batch(&xs, &mut direct);
+        assert_eq!(via_scorer, direct);
+    }
+
+    #[test]
+    fn locked_scorer_runs_stateful_closures() {
+        let c = Centroid::new(2);
+        let mut calls = 0u32;
+        let scorer = LockedScorer::new(|l: &Centroid, xs: &[f32], out: &mut [f32]| {
+            calls += 1;
+            l.score_batch(xs, out);
+        });
+        let xs = [0.5f32, 0.5];
+        let mut out = [0.0f32; 1];
+        scorer.score(&c, &xs, &mut out);
+        scorer.score(&c, &xs, &mut out);
+        drop(scorer);
+        assert_eq!(calls, 2);
+        assert_eq!(out[0], c.score(&xs));
     }
 
     #[test]

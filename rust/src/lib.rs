@@ -11,7 +11,9 @@
 //!
 //! Layering (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator: synchronous rounds ([`coordinator::sync`],
-//!   Algorithm 1), asynchronous dual-queue protocol ([`coordinator::async_sim`],
+//!   Algorithm 1) over pluggable sift backends ([`coordinator::backend`],
+//!   serial or real threads — bit-identical by contract), asynchronous
+//!   dual-queue protocol ([`coordinator::async_sim`],
 //!   Algorithm 2), IWAL with delays ([`active::iwal`], Algorithm 3), the
 //!   LASVM solver ([`svm`]), the MLP trainer ([`nn`]), the data substrate
 //!   ([`data`]), cluster timing simulation ([`sim`]), metrics ([`metrics`]).
@@ -46,10 +48,13 @@ pub mod theory;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::active::{
-        margin::MarginSifter, PassiveSifter, QueryDecision, Sifter,
+        margin::MarginSifter, PassiveSifter, QueryDecision, Sifter, SifterSpec,
+    };
+    pub use crate::coordinator::backend::{
+        BackendChoice, SerialBackend, SiftBackend, ThreadedBackend,
     };
     pub use crate::coordinator::sync::{
-        run_sync, SyncConfig, SyncReport,
+        run_sync, run_sync_on, SyncConfig, SyncReport, WallTimes,
     };
     pub use crate::coordinator::{
         run_sync_nn, run_sync_svm, NnExperimentConfig, SvmExperimentConfig,
@@ -58,7 +63,7 @@ pub mod prelude {
         stream::{ExampleStream, StreamConfig},
         TestSet,
     };
-    pub use crate::learner::{Learner, ScoreBatch};
+    pub use crate::learner::{Learner, LockedScorer, NativeScorer, SiftScorer};
     pub use crate::metrics::{ErrorCurve, SpeedupTable};
     pub use crate::nn::{AdaGradMlp, MlpConfig};
     pub use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};

@@ -7,6 +7,7 @@
 //! Dependency note: the build environment is offline with a fixed vendor
 //! set, so argument parsing is hand-rolled (no clap).
 
+use para_active::coordinator::backend::BackendChoice;
 use para_active::coordinator::{
     run_passive_nn, run_passive_svm, run_sync_nn, run_sync_svm, NnExperimentConfig,
     SvmExperimentConfig,
@@ -24,11 +25,16 @@ USAGE: para-active <COMMAND> [OPTIONS]
 
 COMMANDS:
   quickstart                quick SVM parallel-active demo (small budgets)
-  svm       [--nodes K] [--budget N]   parallel-active kernel SVM (Fig 3 left)
-  nn        [--nodes K] [--budget N]   parallel-active neural net (Fig 3 right)
+  svm       [--nodes K] [--budget N] [--backend B]   parallel-active kernel SVM
+  nn        [--nodes K] [--budget N] [--backend B]   parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
   artifacts                 inspect the AOT manifest; verify PJRT loads it
+
+BACKENDS (--backend): the sift phase runs on `serial` (default; one node
+after another, the paper's measurement protocol), `threaded` (a worker per
+core), or `threaded:N` (N workers). Results are bit-identical across
+backends; only measured wall-clock changes.
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -51,6 +57,13 @@ impl Args {
             }
         }
     }
+}
+
+/// Parse the --backend flag shared by the svm/nn subcommands.
+fn backend_arg(args: &Args) -> anyhow::Result<BackendChoice> {
+    let spelled: String = args.get("--backend", "serial".to_string())?;
+    BackendChoice::parse(&spelled)
+        .ok_or_else(|| anyhow::anyhow!("bad --backend {spelled} (serial|threaded|threaded:N)"))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -80,7 +93,8 @@ fn main() -> anyhow::Result<()> {
         "svm" => {
             let nodes: usize = args.get("--nodes", 8)?;
             let budget: usize = args.get("--budget", 30_000)?;
-            let cfg = SvmExperimentConfig::paper_defaults();
+            let mut cfg = SvmExperimentConfig::paper_defaults();
+            cfg.backend = backend_arg(&args)?;
             let stream = StreamConfig::svm_task();
             let r = run_sync_svm(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
@@ -92,15 +106,26 @@ fn main() -> anyhow::Result<()> {
                 r.update_time,
                 r.warmstart_time
             );
+            println!(
+                "backend={} measured wall: sift={:.2}s update={:.2}s total={:.2}s",
+                r.backend, r.wall.sift, r.wall.update, r.wall.total
+            );
         }
         "nn" => {
             let nodes: usize = args.get("--nodes", 2)?;
             let budget: usize = args.get("--budget", 20_000)?;
-            let cfg = NnExperimentConfig::paper_defaults();
+            let mut cfg = NnExperimentConfig::paper_defaults();
+            cfg.backend = backend_arg(&args)?;
             let stream = StreamConfig::nn_task();
             let r = run_sync_nn(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
-            println!("rounds={} rate={:.2}%", r.rounds, 100.0 * r.query_rate());
+            println!(
+                "rounds={} rate={:.2}% backend={} wall sift={:.2}s",
+                r.rounds,
+                100.0 * r.query_rate(),
+                r.backend,
+                r.wall.sift
+            );
         }
         "passive" => {
             let learner: String = args.get("--learner", "svm".to_string())?;

@@ -1,0 +1,133 @@
+//! The load-bearing contract of the sift backends: a threaded run is
+//! **bit-identical** to the serial run on the same seeds — same queries,
+//! same broadcast order, same importance weights, same model, same curve —
+//! for any node count, worker count, or scheduling. Only measured
+//! wall-clock (and the simulated clock derived from it) may differ, so
+//! those fields are excluded from the comparison.
+
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use para_active::learner::{Learner, NativeScorer};
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::sim::NodeProfile;
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+/// Final-model fingerprint: exact bits of the scores on a fixed probe set.
+fn probe_bits<L: Learner>(learner: &L, stream: &StreamConfig) -> Vec<u32> {
+    let mut probe = ExampleStream::for_node(stream, 9_999_999);
+    (0..16).map(|_| learner.score(&probe.next_example().x).to_bits()).collect()
+}
+
+/// Assert every statistical field of two reports is exactly equal
+/// (time fields are measurement noise and intentionally skipped).
+fn assert_reports_identical(a: &SyncReport, b: &SyncReport, what: &str) {
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.n_seen, b.n_seen, "{what}: n_seen");
+    assert_eq!(a.n_queried, b.n_queried, "{what}: n_queried");
+    assert_eq!(a.costs.sift_ops, b.costs.sift_ops, "{what}: sift_ops");
+    assert_eq!(a.costs.update_ops, b.costs.update_ops, "{what}: update_ops");
+    assert_eq!(a.costs.broadcasts, b.costs.broadcasts, "{what}: broadcasts");
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: curve length");
+    for (i, (pa, pb)) in a.curve.points.iter().zip(&b.curve.points).enumerate() {
+        assert_eq!(pa.n_seen, pb.n_seen, "{what}: point {i} n_seen");
+        assert_eq!(pa.n_queried, pb.n_queried, "{what}: point {i} n_queried");
+        assert_eq!(pa.mistakes, pb.mistakes, "{what}: point {i} mistakes");
+        assert_eq!(
+            pa.test_error.to_bits(),
+            pb.test_error.to_bits(),
+            "{what}: point {i} test_error bits"
+        );
+    }
+}
+
+fn svm_run(k: usize, batch: usize, budget: usize, choice: BackendChoice) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(k, batch, 128, budget).with_backend(choice);
+    let report = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&svm, &stream);
+    (report, bits)
+}
+
+fn mlp_run(k: usize, choice: BackendChoice) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 60);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let sifter = SifterSpec::margin(0.0005, 11);
+    let cfg = SyncConfig::new(k, 128, 96, 900).with_backend(choice);
+    let report = run_sync(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&mlp, &stream);
+    (report, bits)
+}
+
+#[test]
+fn threaded_is_bit_identical_to_serial_svm() {
+    for k in [1usize, 2, 8] {
+        let (serial, serial_bits) = svm_run(k, 256, 1500, BackendChoice::Serial);
+        let (threaded, threaded_bits) = svm_run(k, 256, 1500, BackendChoice::threaded());
+        assert_eq!(serial.backend, "serial");
+        assert_eq!(threaded.backend, "threaded");
+        assert_reports_identical(&serial, &threaded, &format!("svm k={k}"));
+        assert_eq!(serial_bits, threaded_bits, "svm k={k}: final model scores");
+        assert!(serial.n_queried > 0, "svm k={k}: degenerate run");
+    }
+}
+
+#[test]
+fn threaded_is_bit_identical_to_serial_mlp() {
+    for k in [2usize, 8] {
+        let (serial, serial_bits) = mlp_run(k, BackendChoice::Serial);
+        let (threaded, threaded_bits) = mlp_run(k, BackendChoice::threaded());
+        assert_reports_identical(&serial, &threaded, &format!("mlp k={k}"));
+        assert_eq!(serial_bits, threaded_bits, "mlp k={k}: final model scores");
+    }
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    // 1, 2, or 64 workers (more than this machine has cores) — all equal.
+    let (reference, ref_bits) = svm_run(8, 256, 1200, BackendChoice::Serial);
+    for threads in [1usize, 2, 64] {
+        let (run, bits) = svm_run(8, 256, 1200, BackendChoice::Threaded { threads });
+        assert_reports_identical(&reference, &run, &format!("threads={threads}"));
+        assert_eq!(ref_bits, bits, "threads={threads}: final model scores");
+    }
+}
+
+#[test]
+fn oversubscribed_nodes_complete_and_match() {
+    // Far more nodes than cores: the pool must queue, finish, and still
+    // deliver node-major broadcast order.
+    let (serial, serial_bits) = svm_run(32, 320, 1400, BackendChoice::Serial);
+    let (threaded, threaded_bits) = svm_run(32, 320, 1400, BackendChoice::threaded());
+    assert_reports_identical(&serial, &threaded, "k=32 oversubscribed");
+    assert_eq!(serial_bits, threaded_bits, "k=32: final model scores");
+}
+
+#[test]
+fn straggler_profile_with_threads_completes_and_matches() {
+    // The simulated straggler scaling applies identically on both backends
+    // (it post-processes measured per-node times) and must not perturb the
+    // statistical trajectory.
+    let run_with = |choice: BackendChoice| {
+        let stream = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream, 40);
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let sifter = SifterSpec::margin(0.1, 3);
+        let mut cfg = SyncConfig::new(6, 240, 100, 1000).with_backend(choice);
+        cfg.profile = Some(NodeProfile::with_straggler(6, 8.0));
+        let r = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &NativeScorer);
+        let bits = probe_bits(&svm, &stream);
+        (r, bits)
+    };
+    let (serial, serial_bits) = run_with(BackendChoice::Serial);
+    let (threaded, threaded_bits) = run_with(BackendChoice::Threaded { threads: 3 });
+    assert_reports_identical(&serial, &threaded, "straggler profile");
+    assert_eq!(serial_bits, threaded_bits, "straggler: final model scores");
+    // The straggler still dominates the simulated clock on both backends.
+    assert!(serial.sift_time > 0.0 && threaded.sift_time > 0.0);
+}

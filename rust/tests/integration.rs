@@ -2,7 +2,7 @@
 //! data substrate with both learners, the paper's qualitative claims at
 //! small scale, and sync/async/live agreement.
 
-use para_active::active::{margin::MarginSifter, PassiveSifter};
+use para_active::active::{margin::MarginSifter, SifterSpec};
 use para_active::coordinator::async_sim::{run_async, AsyncConfig};
 use para_active::coordinator::live::{run_live, LiveConfig};
 use para_active::coordinator::sync::{run_sync, SyncConfig};
@@ -10,7 +10,7 @@ use para_active::coordinator::{
     run_passive_svm, run_sync_nn, run_sync_svm, NnExperimentConfig, SvmExperimentConfig,
 };
 use para_active::data::{StreamConfig, TestSet, DIM};
-use para_active::learner::Learner;
+use para_active::learner::{Learner, NativeScorer};
 use para_active::sim::NodeProfile;
 use para_active::svm::{lasvm::LaSvm, RbfKernel};
 
@@ -107,24 +107,20 @@ fn batch_delayed_active_matches_per_example_active() {
 
     let per_example = {
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_sequential, 5);
+        let sifter = SifterSpec::margin(cfg.eta_sequential, 5);
         let test = TestSet::generate(&stream, cfg.test_size);
         let mut sc = SyncConfig::new(1, 1, cfg.warmstart, budget).with_label("per-ex");
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
     };
     let batched = {
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 5);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 5);
         let test = TestSet::generate(&stream, cfg.test_size);
         let mut sc =
             SyncConfig::new(1, cfg.global_batch, cfg.warmstart, budget).with_label("batched");
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
     };
     assert!(
         batched.final_test_errors() <= per_example.final_test_errors() + 0.05,
@@ -188,13 +184,11 @@ fn async_tolerates_stragglers_better_than_sync() {
     };
     let sync_time = |profile: NodeProfile| {
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 9);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 9);
         let mut sc = SyncConfig::new(k, 500, 300, budget).with_label("s");
         sc.profile = Some(profile);
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
             .sift_time
     };
 
@@ -236,13 +230,10 @@ fn passive_sifter_equals_weight_one_training() {
 
     let mut via_coord = cfg.make_learner();
     {
-        let mut sifter = PassiveSifter;
+        let sifter = SifterSpec::Passive;
         let mut sc = SyncConfig::new(1, 1, 0, 500).with_label("p");
         sc.eval_every_rounds = 0;
-        let mut scorer = |l: &para_active::nn::AdaGradMlp, xs: &[f32], out: &mut [f32]| {
-            l.score_batch(xs, out)
-        };
-        run_sync(&mut via_coord, &mut sifter, &stream, &test, &sc, &mut scorer);
+        run_sync(&mut via_coord, &sifter, &stream, &test, &sc, &NativeScorer);
     }
 
     let mut direct = cfg.make_learner();

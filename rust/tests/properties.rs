@@ -3,7 +3,7 @@
 //! the querying rule, the IWAL Eq-1 solver, and the data streams.
 
 use para_active::active::iwal::{DelayedIwal, Hypotheses, C1, C2};
-use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter, SifterSpec};
 use para_active::data::{ExampleStream, StreamConfig, DIM};
 use para_active::learner::Learner;
 use para_active::rng::Rng;
@@ -93,6 +93,85 @@ fn prop_margin_rule_is_a_probability() {
             assert!(p2 <= d.p + 1e-12);
             // Weight is finite.
             assert!(d.weight().is_finite());
+        }
+    }
+}
+
+#[test]
+fn prop_importance_weight_at_least_one_when_queried() {
+    // IWAL soundness: p is a probability, so the weight 1/p of any queried
+    // example can never fall below 1 — for every sifter the coordinator can
+    // build, across random margins, stream positions, and nodes.
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        let specs = [
+            SifterSpec::Passive,
+            SifterSpec::margin(rng.next_f64() * 0.5, seed),
+            SifterSpec::FixedRate { rate: 0.05 + 0.9 * rng.next_f64(), seed },
+        ];
+        for spec in &specs {
+            for node in [0usize, 1, 7] {
+                let mut sifter = spec.build(node);
+                for _ in 0..300 {
+                    let score = ((rng.next_f64() - 0.5) * 30.0) as f32;
+                    let n = rng.below(10_000_000) as u64;
+                    let d = sifter.decide(score, n);
+                    assert!(d.p > 0.0 && d.p <= 1.0, "{}: p={}", spec.name(), d.p);
+                    if d.queried {
+                        let w = d.weight();
+                        assert!(
+                            w >= 1.0 && w.is_finite(),
+                            "{} node {node}: queried weight {w} < 1",
+                            spec.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_query_probability_monotone_in_margin() {
+    // Eq 5: p must be non-increasing in |f(x)| at fixed n — more confident
+    // examples are never *more* likely to be queried.
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        let eta = 1e-4 + rng.next_f64() * 0.8;
+        let sifter = MarginSifter::new(eta, seed);
+        for _ in 0..50 {
+            let n = 1 + rng.below(5_000_000) as u64;
+            let mut prev = f64::INFINITY;
+            let mut margin = 0.0f32;
+            for _ in 0..40 {
+                let p = sifter.probability(margin, n);
+                assert!(
+                    p <= prev + 1e-15,
+                    "seed {seed}: p({margin}, {n}) = {p} > p(smaller margin) = {prev}"
+                );
+                // Sign-symmetric: only |margin| matters.
+                assert_eq!(p, sifter.probability(-margin, n));
+                prev = p;
+                margin += (rng.next_f64() * 0.6) as f32;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_passive_queries_everything_with_weight_exactly_one() {
+    for &seed in &SEEDS[..4] {
+        let mut rng = Rng::new(seed);
+        let mut direct = PassiveSifter;
+        let mut built = SifterSpec::Passive.build(seed as usize % 5);
+        for _ in 0..500 {
+            let score = ((rng.next_f64() - 0.5) * 100.0) as f32;
+            let n = rng.below(1_000_000_000) as u64;
+            for d in [direct.decide(score, n), built.decide(score, n)] {
+                assert!(d.queried, "passive must query everything");
+                assert_eq!(d.p, 1.0);
+                assert_eq!(d.weight(), 1.0, "passive weight must be exactly 1");
+            }
         }
     }
 }

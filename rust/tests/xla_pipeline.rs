@@ -3,11 +3,11 @@
 //! train step must train. Tests skip (with a notice) if `make artifacts`
 //! has not run.
 
-use para_active::active::margin::MarginSifter;
+use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
-use para_active::learner::Learner;
+use para_active::learner::{Learner, LockedScorer, NativeScorer};
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::runtime::{
     artifacts_available, XlaMlpSifter, XlaMlpStep, XlaRuntime, XlaSvmSifter,
@@ -35,28 +35,26 @@ fn coordinator_with_xla_scorer_matches_native_run() {
 
     let native = {
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 7);
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 7);
         let mut sc =
             SyncConfig::new(4, cfg.global_batch, cfg.warmstart, budget).with_label("native");
         sc.eval_every_rounds = 0;
-        let mut scorer =
-            |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| l.score_batch(xs, out);
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &NativeScorer)
     };
 
     let xla = {
         let rt = XlaRuntime::load_default().expect("runtime");
         let mut xla_sifter = XlaSvmSifter::new(rt, 2048).expect("sifter");
         let mut learner = cfg.make_learner();
-        let mut sifter = MarginSifter::new(cfg.eta_parallel, 7); // same coin seed
+        let sifter = SifterSpec::margin(cfg.eta_parallel, 7); // same coin seeds
         let mut sc =
             SyncConfig::new(4, cfg.global_batch, cfg.warmstart, budget).with_label("xla");
         sc.eval_every_rounds = 0;
-        let mut scorer = |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
+        let scorer = LockedScorer::new(|l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
             let (scores, _) = xla_sifter.sift(l, xs, 0.1, 0).expect("xla sift");
             out.copy_from_slice(&scores);
-        };
-        run_sync(&mut learner, &mut sifter, &stream, &test, &sc, &mut scorer)
+        });
+        run_sync(&mut learner, &sifter, &stream, &test, &sc, &scorer)
     };
 
     // Same seeds + scores equal to f32 tolerance. A single boundary coin

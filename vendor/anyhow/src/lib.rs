@@ -1,0 +1,145 @@
+//! Minimal, dependency-free subset of the `anyhow` API, vendored because
+//! the build environment is offline. Covers what this repository uses:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`], [`ensure!`], and the
+//! [`Context`] extension trait. Errors are message-only (no backtraces, no
+//! downcasting) — entirely sufficient for CLI/test error reporting here.
+
+use std::fmt;
+
+/// A message-carrying error type.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Construct from a std error (API parity with `anyhow::Error::new`).
+    pub fn new<E: std::error::Error>(err: E) -> Self {
+        Error { msg: err.to_string() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error { msg: err.to_string() }
+    }
+}
+
+/// `Result` specialized to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` or to `Option::None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e:?}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e:?}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_failure() -> std::result::Result<i32, std::num::ParseIntError> {
+        "nope".parse::<i32>()
+    }
+
+    #[test]
+    fn macros_and_context_compose() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+        let r: Result<i32> = parse_failure().with_context(|| "reading n");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("reading n: "), "{msg}");
+        let none: Option<i32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n = "12".parse::<i32>()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+}

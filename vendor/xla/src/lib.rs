@@ -1,0 +1,132 @@
+//! Offline stub of the `xla-rs` PJRT API surface the [`runtime`] module
+//! compiles against. The real crate links libxla/PJRT, which this build
+//! environment does not ship; this stub keeps the crate compiling and
+//! reports "PJRT runtime unavailable" the moment anyone tries to create a
+//! client. Callers already handle that path: the AOT-artifact tests and
+//! examples check `artifacts_available()` / `XlaRuntime::load()` and skip
+//! with a notice, so no stubbed method is ever reached in a green run.
+//!
+//! Method signatures mirror `xla-rs` closely enough that swapping the real
+//! crate back in is a Cargo.toml change, not a code change.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` (callers only format it).
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime not available in this build (offline stub); \
+         link the real xla crate to execute AOT artifacts"
+    )))
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub of `xla::Literal` (host-side tensor).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("PJRT runtime not available"), "{msg}");
+    }
+
+    #[test]
+    fn literal_shape_plumbing_is_inert() {
+        let lit = Literal::vec1(&[1.0, 2.0]).reshape(&[2]).expect("reshape is shape-only");
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal.to_tuple().is_err());
+    }
+}
