@@ -9,6 +9,11 @@
 //!    fixed budget.
 //! 5. **fixed-rate vs margin sifting**: same communication volume, without
 //!    the informativeness signal.
+//! 6. **replay staleness s** (Theorem 1's delay tolerance, runtime knob):
+//!    up to s rounds of broadcast updates may lag behind the sift phases,
+//!    so nodes sift with a slightly outdated model — error vs s at a
+//!    fixed budget. (Minibatch *size* is deliberately not ablated: it is
+//!    bit-identical by contract, see `rust/tests/replay_equivalence.rs`.)
 //!
 //!     cargo run --release --example ablations [budget]
 
@@ -16,6 +21,7 @@ use para_active::active::SifterSpec;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::exec::ReplayConfig;
 use para_active::learner::NativeScorer;
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
 
@@ -120,4 +126,24 @@ fn main() {
         rm.final_test_errors(),
         rf.final_test_errors()
     );
+
+    println!("\n## ablation 6: replay staleness s (Thm-1 delay knob), k=8\n");
+    println!("| s | query rate | final err | max backlog (rounds) |");
+    println!("|---|---|---|---|");
+    for stale in [0usize, 1, 4] {
+        let mut svm = cfg.make_learner();
+        let sifter = SifterSpec::margin(0.1, 23);
+        let mut sc = SyncConfig::new(8, b, warm, budget)
+            .with_replay(ReplayConfig::stale(64, stale))
+            .with_label("stale");
+        sc.eval_every_rounds = 0;
+        let r = run_sync(&mut svm, &sifter, &stream, &test, &sc, &NativeScorer);
+        assert_eq!(r.replay.applied, r.replay.submitted, "s={stale}: backlog not drained");
+        println!(
+            "| {stale} | {:.1}% | {:.4} | {} |",
+            100.0 * r.query_rate(),
+            r.final_test_errors(),
+            r.replay.max_pending_rounds
+        );
+    }
 }

@@ -7,8 +7,11 @@
 //! 2. **runtime** — rust loads them over PJRT (`XlaSvmSifter`,
 //!    `XlaMlpSifter`, `XlaMlpStep`);
 //! 3. **L3 coordinator** — Algorithm 1 runs the SVM experiment with the
-//!    *XLA executable on the sift path* (the hot path), LASVM updating
-//!    natively; then the NN experiment with BOTH sift and update running
+//!    *XLA executable on the sift path* (the hot path): one executable
+//!    instance per pool worker (`exec::ScorerPool`) on the threaded
+//!    backend, so accelerator scoring parallelizes instead of serializing
+//!    behind a global lock; LASVM updates natively through the minibatched
+//!    `ReplayExecutor`. Then the NN experiment runs BOTH sift and update
 //!    as XLA executables.
 //!
 //! Cross-checks XLA scores against the native scorer on every round and
@@ -17,16 +20,20 @@
 //!     cargo run --release --example e2e_train [budget]
 
 use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
+use para_active::coordinator::backend::BackendChoice;
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::coordinator::SvmExperimentConfig;
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
-use para_active::learner::{Learner, LockedScorer};
+use para_active::exec::{ReplayConfig, ScorerPool, WorkerScorer};
+use para_active::learner::Learner;
 use para_active::metrics::curves_to_markdown;
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::runtime::{
     artifacts_available, eq5_probability, XlaMlpStep, XlaRuntime, XlaSvmSifter,
 };
 use para_active::svm::{lasvm::LaSvm, RbfKernel};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -47,39 +54,53 @@ fn main() -> anyhow::Result<()> {
     let stream = StreamConfig::svm_task();
     let test = TestSet::generate(&stream, 500);
 
-    let rt = XlaRuntime::load_default()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut xla_sifter = XlaSvmSifter::new(rt, 2048.min(2048))?;
-    println!(
-        "svm_sift artifact: capacity {} SVs, batch {}",
-        xla_sifter.capacity(),
-        cfg.global_batch
-    );
+    // Hot path: the AOT-compiled Pallas RBF-scoring kernel via PJRT, one
+    // executable instance **per pool worker** (a ScorerPool). Worker w of
+    // the threaded backend always scores through its own runtime, so
+    // accelerator scoring scales with workers instead of serializing
+    // behind the old global LockedScorer mutex.
+    let workers = 2usize;
+    let xla_calls = Arc::new(AtomicU64::new(0));
+    let xcheck_max = Arc::new(Mutex::new(0.0f32));
+    let mut slots: Vec<Box<dyn WorkerScorer<LaSvm<RbfKernel>>>> = Vec::with_capacity(workers);
+    for slot in 0..workers {
+        let rt = XlaRuntime::load_default()?;
+        if slot == 0 {
+            println!("PJRT platform: {}", rt.platform());
+        }
+        let mut xla_sifter = XlaSvmSifter::new(rt, 2048)?;
+        if slot == 0 {
+            println!(
+                "svm_sift artifact: capacity {} SVs, batch {} ({workers} instances)",
+                xla_sifter.capacity(),
+                cfg.global_batch
+            );
+        }
+        let calls = Arc::clone(&xla_calls);
+        let xmax = Arc::clone(&xcheck_max);
+        slots.push(Box::new(move |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
+            let (scores, _probs) = xla_sifter.sift(l, xs, 0.1, 0).expect("xla sift failed");
+            out.copy_from_slice(&scores);
+            calls.fetch_add(1, Ordering::Relaxed);
+            // Cross-check one row per call against the native scorer.
+            let native = l.score(&xs[..DIM]);
+            let d = (scores[0] - native).abs();
+            let mut m = xmax.lock().expect("xcheck mutex");
+            *m = m.max(d);
+        }));
+    }
+    let scorer = ScorerPool::new(slots);
 
     let mut learner = cfg.make_learner();
     let sifter = SifterSpec::margin(cfg.eta_parallel, 81);
     let sc = SyncConfig::new(4, cfg.global_batch, cfg.warmstart, budget)
+        .with_backend(BackendChoice::Threaded { threads: workers })
+        .with_replay(ReplayConfig::synchronous(128))
         .with_label("e2e svm (XLA sift path)");
-    let mut xcheck_max: f32 = 0.0;
-    let mut xla_calls: u64 = 0;
     let t0 = Instant::now();
-    let report = {
-        // Hot path: the AOT-compiled Pallas RBF-scoring kernel via PJRT.
-        // The XLA sifter is a stateful single instance, so it enters the
-        // coordinator as a LockedScorer (correct on any backend; scoring
-        // serializes on the accelerator, as it would in production).
-        let scorer = LockedScorer::new(|l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
-            let (scores, _probs) = xla_sifter
-                .sift(l, xs, 0.1, 0)
-                .expect("xla sift failed");
-            out.copy_from_slice(&scores);
-            xla_calls += 1;
-            // Cross-check one row per call against the native scorer.
-            let native = l.score(&xs[..DIM]);
-            xcheck_max = xcheck_max.max((scores[0] - native).abs());
-        });
-        run_sync(&mut learner, &sifter, &stream, &test, &sc, &scorer)
-    };
+    let report = run_sync(&mut learner, &sifter, &stream, &test, &sc, &scorer);
+    let xla_calls = xla_calls.load(Ordering::Relaxed);
+    let xcheck_max = *xcheck_max.lock().expect("xcheck mutex");
     println!(
         "svm e2e: {} examples, {} queried ({:.1}%), {} XLA sift calls, \
          max |xla - native| = {:.2e}, wall {:.1}s",
@@ -89,6 +110,11 @@ fn main() -> anyhow::Result<()> {
         xla_calls,
         xcheck_max,
         t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "exec pool: {} workers, {} threads spawned (once per run), \
+         {} replay minibatches",
+        report.pool.workers, report.pool.threads_spawned, report.replay.minibatches
     );
     assert!(xcheck_max < 1e-2, "XLA/native scorer mismatch");
     println!("{}", curves_to_markdown(&[&report.curve]));

@@ -31,6 +31,7 @@ fn run_variant(
     let mut learner = cfg.make_learner();
     let mut sc = SyncConfig::new(nodes, batch, cfg.warmstart, budget)
         .with_backend(cfg.backend)
+        .with_replay(cfg.replay)
         .with_label(label);
     sc.eval_every_rounds = eval_every;
     eprintln!("running {label} ...");

@@ -4,10 +4,14 @@
 //! and the MLP, plus the Eq-5 decision overhead. The per-node sift rate
 //! here bounds the simulated cluster's round time.
 //!
-//! The final section measures the **real** sift-phase speedup of
-//! [`ThreadedBackend`] over [`SerialBackend`] on identical per-node score
-//! jobs — the wall-clock counterpart of the simulated k-division, limited
-//! by this machine's core count (`available_parallelism`).
+//! The final section measures the **real** sift-phase speedup over
+//! [`SerialBackend`] on identical per-node score jobs, two ways per k:
+//! `threaded` runs each round on a throwaway session (workers spawned per
+//! round — the seed behavior), `pooled` runs all rounds inside one
+//! persistent session (workers spawned once, the production path), so the
+//! pooled-minus-threaded gap is exactly the per-round spawn tax that
+//! `rust/src/exec/pool.rs` retires. Results are also written to
+//! `BENCH_sift.json` so the perf trajectory is machine-readable across PRs.
 
 use para_active::active::{margin::MarginSifter, Sifter};
 use para_active::benchlib::{bench, bench_throughput, black_box};
@@ -31,23 +35,24 @@ fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
     svm
 }
 
-/// One round of k identical node-sift jobs on `backend`; returns the mean
-/// wall seconds of the whole sift region.
-fn backend_round_secs(
-    backend: &dyn SiftBackend,
+/// One round of k identical node-sift jobs handed to `run`; returns the
+/// mean wall seconds of the whole sift region. `run` is either a one-shot
+/// backend round (spawns workers per call) or a persistent session round.
+fn measured_round_secs(
+    name: &str,
+    run: &dyn for<'a> Fn(Vec<NodeJob<'a>>) -> Vec<NodeSift>,
     svm: &LaSvm<RbfKernel>,
     shards: &[Vec<f32>],
     outs: &mut [Vec<f32>],
     warmup: usize,
     iters: usize,
 ) -> f64 {
-    let name = format!("sift round k={} [{}]", shards.len(), backend.name());
-    let stats = bench(&name, warmup, iters, || {
+    let stats = bench(name, warmup, iters, || {
         let jobs: Vec<NodeJob<'_>> = shards
             .iter()
             .zip(outs.iter_mut())
             .map(|(xs, out)| {
-                let job: NodeJob<'_> = Box::new(move || {
+                let job: NodeJob<'_> = Box::new(move |_worker| {
                     let mut sw = Stopwatch::start();
                     svm.score_batch(black_box(xs), out);
                     NodeSift { seconds: sw.lap(), ..NodeSift::default() }
@@ -55,9 +60,44 @@ fn backend_round_secs(
                 job
             })
             .collect();
-        black_box(backend.run_round(jobs));
+        black_box(run(jobs));
     });
     stats.mean_s
+}
+
+/// One row of the machine-readable sweep.
+struct SweepRow {
+    k: usize,
+    serial_s: f64,
+    threaded_s: f64,
+    pooled_s: f64,
+}
+
+fn write_json(cores: usize, shard: usize, rows: &[SweepRow]) {
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 1,\n");
+    body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
+    body.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"k\": {}, \"serial_ms\": {:.6}, \"threaded_ms\": {:.6}, \
+             \"pooled_ms\": {:.6}, \"speedup_threaded\": {:.4}, \"speedup_pooled\": {:.4}}}{}\n",
+            r.k,
+            r.serial_s * 1e3,
+            r.threaded_s * 1e3,
+            r.pooled_s * 1e3,
+            r.serial_s / r.threaded_s.max(1e-12),
+            r.serial_s / r.pooled_s.max(1e-12),
+            comma
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_sift.json", &body) {
+        Ok(()) => println!("\nwrote BENCH_sift.json"),
+        Err(e) => eprintln!("could not write BENCH_sift.json: {e}"),
+    }
 }
 
 fn main() {
@@ -95,11 +135,12 @@ fn main() {
         stream.next_batch_into(&mut xs, &mut ys);
     });
 
-    // --- Measured sift speedup: threaded vs serial backend. ---
+    // --- Measured sift speedup: threaded / pooled vs serial backend. ---
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("\n# sift backend speedup (measured wall-clock, {cores} cores)");
     let svm = trained_svm(1200);
     let shard = 192usize;
+    let mut rows = Vec::new();
     for k in [2usize, 4, 8] {
         // k per-node shards from the k node streams, as in a real round.
         let shards: Vec<Vec<f32>> = (0..k as u32)
@@ -112,15 +153,48 @@ fn main() {
             })
             .collect();
         let mut outs = vec![vec![0.0f32; shard]; k];
-        let serial_s = backend_round_secs(&SerialBackend, &svm, &shards, &mut outs, 1, 5);
-        let threaded_s =
-            backend_round_secs(&ThreadedBackend::auto(), &svm, &shards, &mut outs, 1, 5);
-        println!(
-            "      sift speedup k={k}: {:.2}x (serial {:.1} ms -> threaded {:.1} ms)",
-            serial_s / threaded_s.max(1e-12),
-            serial_s * 1e3,
-            threaded_s * 1e3
+        let serial_s = measured_round_secs(
+            &format!("sift round k={k} [serial]"),
+            &|jobs| SerialBackend.run_round(jobs),
+            &svm,
+            &shards,
+            &mut outs,
+            1,
+            5,
         );
+        // Throwaway session per round: pays the per-round spawn tax.
+        let threaded_s = measured_round_secs(
+            &format!("sift round k={k} [threaded]"),
+            &|jobs| ThreadedBackend::auto().run_round(jobs),
+            &svm,
+            &shards,
+            &mut outs,
+            1,
+            5,
+        );
+        // One persistent session for all iterations: workers spawn once.
+        let mut pooled_s = 0.0;
+        ThreadedBackend::auto().with_session(&mut |session| {
+            pooled_s = measured_round_secs(
+                &format!("sift round k={k} [pooled]"),
+                &|jobs| session.run_round(jobs),
+                &svm,
+                &shards,
+                &mut outs,
+                1,
+                5,
+            );
+        });
+        println!(
+            "      sift speedup k={k}: threaded {:.2}x, pooled {:.2}x \
+             (serial {:.1} ms; spawn tax {:.2} ms/round)",
+            serial_s / threaded_s.max(1e-12),
+            serial_s / pooled_s.max(1e-12),
+            serial_s * 1e3,
+            (threaded_s - pooled_s) * 1e3
+        );
+        rows.push(SweepRow { k, serial_s, threaded_s, pooled_s });
     }
     println!("      (ideal = min(k, cores) = cores when oversubscribed)");
+    write_json(cores, shard, &rows);
 }

@@ -4,19 +4,32 @@
 //! informative examples parallelizes trivially: during a round every node
 //! scores its shard against the same frozen model, so the k per-node
 //! score+decide phases are independent read-only jobs. A [`SiftBackend`]
-//! receives those jobs — one [`NodeJob`] per node — runs them however it
-//! likes, and must return the results **in node-index order**, preserving
-//! the ordered-broadcast guarantee of Figure 1 no matter how execution was
+//! owns how those jobs — one [`NodeJob`] per node — execute. Since the
+//! execution pool landed (see [`crate::exec`]), a backend's unit of work
+//! is a **run**, not a round: [`SiftBackend::with_session`] sets up
+//! whatever persistent state the backend wants (worker threads, queues),
+//! hands the caller a [`SiftSession`], and tears the state down when the
+//! run is over. Each round is then one [`SiftSession::run_round`] call,
+//! and results always come back **in node-index order**, preserving the
+//! ordered-broadcast guarantee of Figure 1 no matter how execution was
 //! scheduled.
 //!
-//! Two implementations ship:
+//! Three configurations ship ([`BackendChoice`]):
 //!
-//! * [`SerialBackend`] — runs jobs one after another on the calling thread.
+//! * [`SerialBackend`] — jobs run one after another on the calling thread.
 //!   This is the measurement protocol of the paper's §4 "Parallel
 //!   simulation" (per-node sift times are still recorded separately and fed
 //!   to the simulated [`RoundClock`](crate::sim::RoundClock));
-//! * [`ThreadedBackend`] — a scoped-thread worker pool that executes the
-//!   jobs concurrently. Real wall-clock speedup, same results.
+//! * [`ThreadedBackend`] — a persistent [`WorkerPool`]: workers spawn once
+//!   per run and pull node jobs from a shared FIFO across all rounds, so
+//!   tiny-shard configurations no longer pay a per-round spawn tax;
+//! * [`ThreadedBackend::pinned`] — the same pool with deterministic
+//!   placement (node i on worker `i % workers`), for the straggler
+//!   experiments.
+//!
+//! Every job receives the executing worker's lane index, which is how
+//! per-worker scorer instances ([`crate::exec::ScorerPool`]) are reached
+//! without a global lock.
 //!
 //! **The equivalence contract.** For any backend, a run must be
 //! *bit-identical* to the serial run on the same seeds: same selected
@@ -32,8 +45,8 @@
 //! axis, which are computed from measured per-node seconds and therefore
 //! vary run to run (and inflate under thread contention).
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use crate::exec::{PoolConfig, PoolStats, WorkerPool};
+use std::cell::Cell;
 
 /// What one node produced in one sift phase: the selected examples (in the
 /// node's stream order), the measured sift seconds, and the abstract op
@@ -52,100 +65,168 @@ pub struct NodeSift {
     pub sift_ops: u64,
 }
 
-/// One node's sift work for a round, ready to run on any thread.
-pub type NodeJob<'a> = Box<dyn FnOnce() -> NodeSift + Send + 'a>;
+/// One node's sift work for a round, ready to run on any thread. The
+/// argument is the executing worker's lane index (0 on the serial
+/// backend), for routing to per-worker resources.
+pub type NodeJob<'a> = crate::exec::Job<'a, NodeSift>;
 
-/// Executes the k independent per-node sift jobs of one round.
+/// A per-run execution session. Obtained from
+/// [`SiftBackend::with_session`]; persistent backends keep their worker
+/// threads alive between `run_round` calls.
+pub trait SiftSession {
+    /// Run all jobs of one round and return their results in job order.
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift>;
+
+    /// Execution counters so far (worker count, threads spawned, rounds).
+    fn stats(&self) -> PoolStats;
+}
+
+/// Executes the k independent per-node sift jobs of every round of a run.
 ///
 /// Implementations may run jobs in any order, on any threads, but must
 /// return exactly one result per job, **in the order the jobs were given**
 /// (node-major), so that the pooled broadcast is identical across backends.
 pub trait SiftBackend: std::fmt::Debug + Send + Sync {
-    /// Short name for reports ("serial", "threaded").
+    /// Short name for reports ("serial", "threaded", "pinned").
     fn name(&self) -> &'static str;
 
-    /// Run all jobs and return their results in job order.
-    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift>;
+    /// Set up the backend's per-run state, call `body` exactly once with a
+    /// session over it, and tear the state down afterwards. The persistent
+    /// pool backends spawn their workers here — once per run, not per
+    /// round.
+    fn with_session(&self, body: &mut dyn FnMut(&dyn SiftSession));
+
+    /// One-shot convenience: run a single round on a throwaway session
+    /// (benchmarks and unit tests; a real run uses [`Self::with_session`]
+    /// so workers persist across rounds).
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
+        let mut jobs = Some(jobs);
+        let mut out = None;
+        self.with_session(&mut |session| {
+            out = Some(session.run_round(jobs.take().expect("session body ran twice")));
+        });
+        out.expect("backend never ran the session body")
+    }
 }
 
 /// Runs every node's job on the calling thread, in node order — the
-/// seed behavior, and the reference the threaded backend is tested against.
+/// seed behavior, and the reference the pooled backends are tested against.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SerialBackend;
+
+/// The serial session: jobs run inline, always as worker 0.
+#[derive(Default)]
+struct SerialSession {
+    rounds: Cell<u64>,
+}
+
+impl SiftSession for SerialSession {
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
+        self.rounds.set(self.rounds.get() + 1);
+        jobs.into_iter().map(|job| job(0)).collect()
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats { workers: 1, threads_spawned: 0, rounds: self.rounds.get() }
+    }
+}
 
 impl SiftBackend for SerialBackend {
     fn name(&self) -> &'static str {
         "serial"
     }
 
-    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
-        jobs.into_iter().map(|job| job()).collect()
+    fn with_session(&self, body: &mut dyn FnMut(&dyn SiftSession)) {
+        body(&SerialSession::default());
     }
 }
 
-/// A scoped-thread worker pool: `threads` workers (0 = one per available
-/// core) pull node jobs from a shared FIFO queue, so k may exceed both the
-/// worker count and the physical core count (oversubscription just queues).
-/// Results are reordered to node-major before returning, which is what
-/// keeps pooled selections in broadcast order regardless of scheduling.
+/// A persistent worker pool: `threads` workers (0 = one per available
+/// core) spawn once per run and serve every round over channels, so k may
+/// exceed both the worker count and the physical core count
+/// (oversubscription just queues). Results are reordered to node-major
+/// before returning, which is what keeps pooled selections in broadcast
+/// order regardless of scheduling.
 ///
-/// Workers are spawned per round (scoped threads cannot outlive the jobs'
-/// borrows of the coordinator's per-node state). That costs ~0.1 ms per
-/// worker per round — negligible against real shard scoring, but it means
-/// tiny-shard configurations can measure slower than serial; a persistent
-/// cross-round pool is a ROADMAP open item.
+/// With `pin` set, node i always executes on worker `i % threads` instead
+/// of the shared queue — deterministic placement for the straggler
+/// experiments, at the cost of no work stealing.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ThreadedBackend {
-    /// Worker threads per round; 0 means `available_parallelism()`.
+    /// Worker threads per run; 0 means `available_parallelism()`.
     pub threads: usize,
+    /// Pin node i to worker `i % threads` (no shared queue).
+    pub pin: bool,
+}
+
+/// A session over one persistent [`WorkerPool`].
+struct PoolSession<'a> {
+    pool: &'a WorkerPool<NodeSift>,
+}
+
+impl SiftSession for PoolSession<'_> {
+    fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
+        self.pool.run_round(jobs)
+    }
+
+    fn stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
 }
 
 impl ThreadedBackend {
-    /// One worker per available core.
+    /// One worker per available core, shared queue.
     pub fn auto() -> Self {
-        ThreadedBackend { threads: 0 }
+        ThreadedBackend { threads: 0, pin: false }
     }
 
     /// A fixed worker count (tests use this to force oversubscription).
     pub fn with_threads(threads: usize) -> Self {
-        ThreadedBackend { threads }
+        ThreadedBackend { threads, pin: false }
     }
 
-    fn pool_size(&self, jobs: usize) -> usize {
-        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let want = if self.threads == 0 { hw } else { self.threads };
-        want.min(jobs).max(1)
+    /// A fixed worker count with deterministic node-to-worker pinning.
+    pub fn pinned(threads: usize) -> Self {
+        ThreadedBackend { threads, pin: true }
+    }
+
+    fn pool_config(&self) -> PoolConfig {
+        PoolConfig { workers: self.threads, pinned: self.pin }
     }
 }
 
 impl SiftBackend for ThreadedBackend {
     fn name(&self) -> &'static str {
-        "threaded"
+        if self.pin {
+            "pinned"
+        } else {
+            "threaded"
+        }
+    }
+
+    fn with_session(&self, body: &mut dyn FnMut(&dyn SiftSession)) {
+        WorkerPool::scope(self.pool_config(), |pool| {
+            body(&PoolSession { pool });
+        });
     }
 
     fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
-        let k = jobs.len();
-        let workers = self.pool_size(k);
-        if workers <= 1 || k <= 1 {
-            return SerialBackend.run_round(jobs);
+        // A one-shot round knows its job count up front, so don't spawn
+        // workers that could never receive work (a persistent session
+        // cannot clamp — it sees the jobs only after the workers exist).
+        // For jobs <= threads pinned placement is the identity map either
+        // way, so clamping never changes where a job runs.
+        if jobs.is_empty() {
+            return Vec::new();
         }
-        let queue: Mutex<VecDeque<(usize, NodeJob<'_>)>> =
-            Mutex::new(jobs.into_iter().enumerate().collect());
-        let done: Mutex<Vec<(usize, NodeSift)>> = Mutex::new(Vec::with_capacity(k));
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let next = queue.lock().expect("sift queue poisoned").pop_front();
-                    let Some((idx, job)) = next else { break };
-                    let result = job();
-                    done.lock().expect("sift results poisoned").push((idx, result));
-                });
-            }
+        let threads = self.pool_config().resolved_workers().min(jobs.len());
+        let clamped = ThreadedBackend { threads, pin: self.pin };
+        let mut jobs = Some(jobs);
+        let mut out = None;
+        clamped.with_session(&mut |session| {
+            out = Some(session.run_round(jobs.take().expect("session body ran twice")));
         });
-        let mut done = done.into_inner().expect("sift results poisoned");
-        debug_assert_eq!(done.len(), k);
-        done.sort_unstable_by_key(|&(idx, _)| idx);
-        done.into_iter().map(|(_, r)| r).collect()
+        out.expect("backend never ran the session body")
     }
 }
 
@@ -156,8 +237,11 @@ pub enum BackendChoice {
     /// Score shards one node at a time on the coordinator thread.
     #[default]
     Serial,
-    /// Score shards concurrently on a worker pool (0 = one per core).
+    /// Score shards concurrently on a persistent worker pool (0 = one
+    /// worker per core).
     Threaded { threads: usize },
+    /// Like `Threaded`, with node i pinned to worker `i % threads`.
+    Pinned { threads: usize },
 }
 
 impl BackendChoice {
@@ -166,23 +250,48 @@ impl BackendChoice {
         BackendChoice::Threaded { threads: 0 }
     }
 
+    /// Pinned with one worker per available core.
+    pub fn pinned() -> Self {
+        BackendChoice::Pinned { threads: 0 }
+    }
+
     /// Instantiate the backend this choice names.
     pub fn build(self) -> Box<dyn SiftBackend> {
         match self {
             BackendChoice::Serial => Box::new(SerialBackend),
-            BackendChoice::Threaded { threads } => Box::new(ThreadedBackend { threads }),
+            BackendChoice::Threaded { threads } => {
+                Box::new(ThreadedBackend { threads, pin: false })
+            }
+            BackendChoice::Pinned { threads } => Box::new(ThreadedBackend { threads, pin: true }),
         }
     }
 
-    /// Parse a CLI spelling: `serial`, `threaded`, or `threaded:N`.
+    /// Parse a CLI spelling: `serial`, `threaded[:N]`, or `pinned[:N]`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "serial" => Some(BackendChoice::Serial),
             "threaded" => Some(BackendChoice::Threaded { threads: 0 }),
-            other => other
-                .strip_prefix("threaded:")
-                .and_then(|n| n.parse().ok())
-                .map(|threads| BackendChoice::Threaded { threads }),
+            "pinned" => Some(BackendChoice::Pinned { threads: 0 }),
+            other => {
+                if let Some(n) = other.strip_prefix("threaded:") {
+                    n.parse().ok().map(|threads| BackendChoice::Threaded { threads })
+                } else if let Some(n) = other.strip_prefix("pinned:") {
+                    n.parse().ok().map(|threads| BackendChoice::Pinned { threads })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Override the worker count, keeping the dispatch mode; `serial`
+    /// becomes `threaded:N` (used by the `--workers` CLI flag).
+    pub fn with_workers(self, workers: usize) -> Self {
+        match self {
+            BackendChoice::Serial | BackendChoice::Threaded { .. } => {
+                BackendChoice::Threaded { threads: workers }
+            }
+            BackendChoice::Pinned { .. } => BackendChoice::Pinned { threads: workers },
         }
     }
 }
@@ -193,6 +302,8 @@ impl std::fmt::Display for BackendChoice {
             BackendChoice::Serial => write!(f, "serial"),
             BackendChoice::Threaded { threads: 0 } => write!(f, "threaded"),
             BackendChoice::Threaded { threads } => write!(f, "threaded:{threads}"),
+            BackendChoice::Pinned { threads: 0 } => write!(f, "pinned"),
+            BackendChoice::Pinned { threads } => write!(f, "pinned:{threads}"),
         }
     }
 }
@@ -206,7 +317,7 @@ mod tests {
     fn tagged_jobs(k: usize, stagger: bool) -> Vec<NodeJob<'static>> {
         (0..k)
             .map(|i| {
-                let job: NodeJob<'static> = Box::new(move || {
+                let job: NodeJob<'static> = Box::new(move |_worker| {
                     if stagger {
                         // Later nodes finish first to invite reordering.
                         std::thread::sleep(std::time::Duration::from_millis(
@@ -258,6 +369,85 @@ mod tests {
     }
 
     #[test]
+    fn session_reuses_workers_across_rounds() {
+        let backend = ThreadedBackend::with_threads(3);
+        backend.with_session(&mut |session| {
+            for round in 1..=5 {
+                let out = session.run_round(tagged_jobs(4, false));
+                assert!(out.iter().enumerate().all(|(i, r)| r.sift_ops == i as u64));
+                assert_eq!(session.stats().rounds, round);
+            }
+            let stats = session.stats();
+            assert_eq!(stats.workers, 3);
+            assert_eq!(stats.threads_spawned, 3, "threads must spawn once per run");
+        });
+    }
+
+    #[test]
+    fn serial_session_counts_rounds_without_threads() {
+        SerialBackend.with_session(&mut |session| {
+            session.run_round(tagged_jobs(2, false));
+            session.run_round(tagged_jobs(2, false));
+            let stats = session.stats();
+            assert_eq!(stats.workers, 1);
+            assert_eq!(stats.threads_spawned, 0);
+            assert_eq!(stats.rounds, 2);
+        });
+    }
+
+    #[test]
+    fn pinned_runs_node_i_on_worker_i_mod_w() {
+        let backend = ThreadedBackend::pinned(2);
+        let jobs: Vec<NodeJob<'static>> = (0..6)
+            .map(|_| {
+                let job: NodeJob<'static> = Box::new(|worker| NodeSift {
+                    sift_ops: worker as u64,
+                    ..NodeSift::default()
+                });
+                job
+            })
+            .collect();
+        let out = backend.run_round(jobs);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.sift_ops, (i % 2) as u64, "node {i} ran on worker {}", r.sift_ops);
+        }
+    }
+
+    #[test]
+    fn jobs_receive_worker_lane_indices() {
+        let backend = ThreadedBackend::with_threads(3);
+        let jobs: Vec<NodeJob<'static>> = (0..9)
+            .map(|_| {
+                let job: NodeJob<'static> = Box::new(|worker| NodeSift {
+                    sift_ops: worker as u64,
+                    ..NodeSift::default()
+                });
+                job
+            })
+            .collect();
+        let out = backend.run_round(jobs);
+        assert!(out.iter().all(|r| r.sift_ops < 3), "lane index out of range");
+    }
+
+    #[test]
+    fn one_shot_round_clamps_workers_to_jobs() {
+        // A throwaway round must not spawn (or hand lanes to) more workers
+        // than it has jobs; lane indices prove the pool was clamped.
+        let backend = ThreadedBackend::with_threads(64);
+        let jobs: Vec<NodeJob<'static>> = (0..3)
+            .map(|_| {
+                let job: NodeJob<'static> = Box::new(|worker| NodeSift {
+                    sift_ops: worker as u64,
+                    ..NodeSift::default()
+                });
+                job
+            })
+            .collect();
+        let out = backend.run_round(jobs);
+        assert!(out.iter().all(|r| r.sift_ops < 3), "worker lane beyond clamped pool");
+    }
+
+    #[test]
     fn choice_parses_cli_spellings() {
         assert_eq!(BackendChoice::parse("serial"), Some(BackendChoice::Serial));
         assert_eq!(
@@ -268,13 +458,37 @@ mod tests {
             BackendChoice::parse("threaded:12"),
             Some(BackendChoice::Threaded { threads: 12 })
         );
+        assert_eq!(BackendChoice::parse("pinned"), Some(BackendChoice::Pinned { threads: 0 }));
+        assert_eq!(
+            BackendChoice::parse("pinned:4"),
+            Some(BackendChoice::Pinned { threads: 4 })
+        );
         assert_eq!(BackendChoice::parse("gpu"), None);
         assert_eq!(BackendChoice::parse("threaded:x"), None);
+        assert_eq!(BackendChoice::parse("pinned:x"), None);
         assert_eq!(BackendChoice::default(), BackendChoice::Serial);
         assert_eq!(BackendChoice::threaded().to_string(), "threaded");
+        assert_eq!(BackendChoice::pinned().to_string(), "pinned");
         assert_eq!(
             BackendChoice::Threaded { threads: 3 }.to_string(),
             "threaded:3"
+        );
+        assert_eq!(BackendChoice::Pinned { threads: 5 }.to_string(), "pinned:5");
+    }
+
+    #[test]
+    fn with_workers_keeps_dispatch_mode() {
+        assert_eq!(
+            BackendChoice::Serial.with_workers(4),
+            BackendChoice::Threaded { threads: 4 }
+        );
+        assert_eq!(
+            BackendChoice::Threaded { threads: 0 }.with_workers(2),
+            BackendChoice::Threaded { threads: 2 }
+        );
+        assert_eq!(
+            BackendChoice::Pinned { threads: 1 }.with_workers(8),
+            BackendChoice::Pinned { threads: 8 }
         );
     }
 
@@ -282,5 +496,6 @@ mod tests {
     fn build_names_match() {
         assert_eq!(BackendChoice::Serial.build().name(), "serial");
         assert_eq!(BackendChoice::threaded().build().name(), "threaded");
+        assert_eq!(BackendChoice::pinned().build().name(), "pinned");
     }
 }

@@ -1,13 +1,23 @@
 //! Algorithm 2 on real OS threads — the deployable asynchronous coordinator.
 //!
-//! Each node is a thread owning its model replica, its local stream (Q_F),
-//! and an mpsc receiver (Q_S). A dedicated **sequencer** thread implements
-//! the ordered broadcast of Figure 1: it receives selected examples from
-//! all nodes over a single mpsc channel (which serializes them into one
-//! global order) and forwards each to every node's Q_S in that order. The
-//! node loop follows the paper's priority rule: drain Q_S completely, then
-//! sift one fresh example and publish it (with its query probability) if
+//! Each node owns its model replica, its local stream (Q_F), and an mpsc
+//! receiver (Q_S). A dedicated **sequencer** thread implements the ordered
+//! broadcast of Figure 1: it receives selected examples from all nodes
+//! over a single mpsc channel (which serializes them into one global
+//! order) and forwards each to every node's Q_S in that order. The node
+//! loop follows the paper's priority rule: drain Q_S completely, then sift
+//! one fresh example and publish it (with its query probability) if
 //! selected.
+//!
+//! Since the execution pool landed, node loops are hosted on the same
+//! [`WorkerPool`](crate::exec::WorkerPool) abstraction the synchronous
+//! backends use, in **pinned** mode: the pool runs one worker per node and
+//! node i lives on worker i for the whole run (`i % workers` with
+//! `workers == k`). That gives live runs deterministic thread placement —
+//! the property the straggler experiments rely on — plus the pool's
+//! [`PoolStats`] accounting for free. The pool's completion barrier
+//! replaces the seed's hand-rolled join loop, and results come back in
+//! node order.
 //!
 //! The deterministic event-driven variant lives in [`super::async_sim`];
 //! this module is the "it actually runs" counterpart used by the
@@ -15,6 +25,7 @@
 
 use crate::active::Sifter;
 use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use crate::exec::{Job, PoolConfig, PoolStats, WorkerPool};
 use crate::learner::Learner;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -54,9 +65,11 @@ pub struct LiveReport {
     pub wall_seconds: f64,
     pub replicas_agree: bool,
     pub test_error: f64,
+    /// Counters of the pinned node pool (workers == nodes).
+    pub pool: PoolStats,
 }
 
-/// Run Algorithm 2 on `nodes` OS threads plus a sequencer thread.
+/// Run Algorithm 2 on a pinned `nodes`-worker pool plus a sequencer thread.
 pub fn run_live<L, S, F>(
     proto: &L,
     mut make_sifter: F,
@@ -109,7 +122,9 @@ where
         total // uplink closed: all nodes done sifting
     });
 
-    let mut handles = Vec::with_capacity(k);
+    // One long-running job per node; pinned dispatch puts node i on worker
+    // i, so the pool is exactly the paper's one-thread-per-node layout.
+    let mut jobs: Vec<Job<'static, (L, u64)>> = Vec::with_capacity(k);
     for (node, down_rx) in down_rxs.into_iter().enumerate() {
         let up = up_tx.clone();
         let mut learner = warm.clone();
@@ -117,7 +132,7 @@ where
         let mut stream = ExampleStream::for_node(stream_cfg, node as u32);
         let per_node = cfg.per_node;
         let warm_n = cfg.warmstart as u64;
-        handles.push(std::thread::spawn(move || {
+        jobs.push(Box::new(move |_worker| {
             let mut x = vec![0.0f32; DIM];
             let mut applied: u64 = 0;
             for i in 0..per_node {
@@ -152,8 +167,12 @@ where
     }
     drop(up_tx);
 
-    let results: Vec<(L, u64)> =
-        handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect();
+    // All k node loops must run concurrently (they rendezvous through the
+    // sequencer), so the pool gets exactly one worker per node.
+    let (results, pool) = WorkerPool::scope(PoolConfig::pinned(k), |pool| {
+        let results = pool.run_round(jobs);
+        (results, pool.stats())
+    });
     let n_broadcast = sequencer.join().expect("sequencer panicked");
     let wall_seconds = started.elapsed().as_secs_f64();
 
@@ -179,6 +198,7 @@ where
         wall_seconds,
         replicas_agree: counts_agree && scores_agree,
         test_error: results[0].0.test_error(test),
+        pool,
     }
 }
 
@@ -205,6 +225,9 @@ mod tests {
         assert!(r.replicas_agree, "live replicas diverged");
         assert!(r.n_queried > 0);
         assert!(r.test_error < 0.45, "err {}", r.test_error);
+        // One pinned pool worker per node, spawned once.
+        assert_eq!(r.pool.workers, 3);
+        assert_eq!(r.pool.threads_spawned, 3);
     }
 
     #[test]
@@ -222,6 +245,7 @@ mod tests {
         );
         assert!(r.replicas_agree);
         assert_eq!(r.n_seen, 300);
+        assert_eq!(r.pool.workers, 1);
     }
 
     #[test]
@@ -239,5 +263,6 @@ mod tests {
         );
         assert!(r.replicas_agree);
         assert_eq!(r.n_seen, 60 + 6 * 40);
+        assert_eq!(r.pool.workers, 6);
     }
 }

@@ -5,11 +5,15 @@
 //!   [`backend::SiftBackend`];
 //! * [`backend`] — sift-phase execution backends:
 //!   [`backend::SerialBackend`] (one node after another, the paper's
-//!   measurement protocol) and [`backend::ThreadedBackend`] (a scoped
-//!   worker pool running the k node phases concurrently), selected per run
-//!   through [`backend::BackendChoice`] on [`sync::SyncConfig`] and the
-//!   experiment configs below. Backends are contractually bit-identical;
-//!   only measured wall-clock differs (see `tests/backend_equivalence.rs`);
+//!   measurement protocol) and [`backend::ThreadedBackend`] (a persistent
+//!   [`crate::exec::WorkerPool`] whose workers spawn once per run and
+//!   serve every round, optionally with deterministic node-to-worker
+//!   pinning), selected per run through [`backend::BackendChoice`] on
+//!   [`sync::SyncConfig`] and the experiment configs below. Backends are
+//!   contractually bit-identical; only measured wall-clock differs (see
+//!   `tests/backend_equivalence.rs`). The update phase replays through
+//!   [`crate::exec::ReplayExecutor`] (deterministic minibatches, bounded
+//!   staleness — see `tests/replay_equivalence.rs`);
 //! * [`async_sim`] — Algorithm 2 (asynchronous dual-queue protocol over an
 //!   ordered broadcast; deterministic event-driven simulation);
 //! * [`live`] — Algorithm 2 on real OS threads (one per node plus a
@@ -33,6 +37,7 @@ pub mod sync;
 
 use crate::active::SifterSpec;
 use crate::data::{StreamConfig, TestSet, DIM};
+use crate::exec::ReplayConfig;
 use crate::learner::NativeScorer;
 use crate::nn::{AdaGradMlp, MlpConfig};
 use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
@@ -54,6 +59,8 @@ pub struct SvmExperimentConfig {
     pub seed: u64,
     /// Sift-phase execution backend.
     pub backend: BackendChoice,
+    /// Update-phase replay tuning (minibatch size, bounded staleness).
+    pub replay: ReplayConfig,
 }
 
 impl SvmExperimentConfig {
@@ -68,6 +75,7 @@ impl SvmExperimentConfig {
             test_size: 4065,
             seed: 0x51,
             backend: BackendChoice::Serial,
+            replay: ReplayConfig::default(),
         }
     }
 
@@ -99,6 +107,8 @@ pub struct NnExperimentConfig {
     pub seed: u64,
     /// Sift-phase execution backend.
     pub backend: BackendChoice,
+    /// Update-phase replay tuning (minibatch size, bounded staleness).
+    pub replay: ReplayConfig,
 }
 
 impl NnExperimentConfig {
@@ -111,6 +121,7 @@ impl NnExperimentConfig {
             test_size: 4065,
             seed: 0x52,
             backend: BackendChoice::Serial,
+            replay: ReplayConfig::default(),
         }
     }
 
@@ -143,6 +154,7 @@ pub fn run_sync_svm(
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
         .with_backend(cfg.backend)
+        .with_replay(cfg.replay)
         .with_label(format!("svm parallel-active k={nodes}"));
     run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
@@ -174,6 +186,7 @@ pub fn run_sync_nn(
     let test = TestSet::generate(stream_cfg, cfg.test_size);
     let sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
         .with_backend(cfg.backend)
+        .with_replay(cfg.replay)
         .with_label(format!("nn parallel-active k={nodes}"));
     run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
 }
@@ -239,6 +252,8 @@ mod tests {
         assert_eq!(svm.global_batch, 4000);
         assert_eq!(svm.test_size, 4065);
         assert_eq!(svm.backend, BackendChoice::Serial);
+        assert_eq!(svm.replay, ReplayConfig::default());
+        assert_eq!(svm.replay.max_stale_rounds, 0, "paper defaults are synchronous");
         let nn = NnExperimentConfig::paper_defaults();
         assert_eq!(nn.mlp.hidden, 100);
         assert_eq!(nn.mlp.lr, 0.07);

@@ -11,11 +11,18 @@
 //! [`SyncConfig::backend`]: [`SerialBackend`](super::backend::SerialBackend)
 //! runs nodes one after another (the paper's own measurement protocol),
 //! [`ThreadedBackend`](super::backend::ThreadedBackend) runs them
-//! concurrently on a scoped-thread pool. Both produce **bit-identical**
-//! trajectories on the same seeds — each node owns an independent stream
-//! and a node-seeded sifter RNG, and results are pooled in node-major
-//! broadcast order regardless of scheduling (`tests/backend_equivalence.rs`
-//! enforces this).
+//! concurrently on a persistent [`WorkerPool`](crate::exec::WorkerPool)
+//! whose threads spawn **once per run** and serve every round. Both
+//! produce **bit-identical** trajectories on the same seeds — each node
+//! owns an independent stream and a node-seeded sifter RNG, and results
+//! are pooled in node-major broadcast order regardless of scheduling
+//! (`tests/backend_equivalence.rs` enforces this).
+//!
+//! The updating phase runs on a [`ReplayExecutor`] configured by
+//! [`SyncConfig::replay`]: deterministic minibatches (bit-identical to the
+//! seed's per-example loop for any batch size) plus a bounded-staleness
+//! knob that lets up to s rounds of updates lag behind the sift phases,
+//! mirroring Theorem 1's delay tolerance (`tests/replay_equivalence.rs`).
 //!
 //! Two clocks are reported side by side in [`SyncReport`]:
 //!
@@ -37,9 +44,10 @@
 //! * [`SifterSpec::Passive`] → sequential passive learning (scoring
 //!   skipped, every example updates the model).
 
-use super::backend::{BackendChoice, NodeJob, NodeSift, SiftBackend};
+use super::backend::{BackendChoice, NodeJob, NodeSift, SiftBackend, SiftSession};
 use crate::active::{Sifter, SifterSpec};
 use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use crate::exec::{PoolStats, ReplayConfig, ReplayExecutor, ReplayOutcome, ReplayStats};
 use crate::learner::{Learner, SiftScorer};
 use crate::metrics::{CurvePoint, ErrorCurve};
 use crate::sim::{CommModel, NodeProfile, RoundClock, Stopwatch};
@@ -63,6 +71,8 @@ pub struct SyncConfig {
     pub comm: CommModel,
     /// Execution backend for the sift phase (defaults to serial).
     pub backend: BackendChoice,
+    /// Replay tuning for the update phase (defaults to synchronous).
+    pub replay: ReplayConfig,
     /// Label for the report curve.
     pub label: String,
 }
@@ -78,6 +88,7 @@ impl SyncConfig {
             profile: None,
             comm: CommModel::free(),
             backend: BackendChoice::Serial,
+            replay: ReplayConfig::default(),
             label: format!("sync k={nodes}"),
         }
     }
@@ -89,6 +100,11 @@ impl SyncConfig {
 
     pub fn with_backend(mut self, backend: BackendChoice) -> Self {
         self.backend = backend;
+        self
+    }
+
+    pub fn with_replay(mut self, replay: ReplayConfig) -> Self {
+        self.replay = replay;
         self
     }
 }
@@ -134,6 +150,12 @@ pub struct SyncReport {
     pub wall: WallTimes,
     /// Name of the sift backend that executed the run.
     pub backend: &'static str,
+    /// Execution-pool counters (worker count, threads spawned, rounds). A
+    /// healthy persistent pool reports `threads_spawned == workers` no
+    /// matter how many rounds ran.
+    pub pool: PoolStats,
+    /// Replay-stage counters (minibatches, backlog high-water mark).
+    pub replay: ReplayStats,
     pub costs: CostCounters,
 }
 
@@ -162,7 +184,8 @@ impl NodeLane {
     /// score it against the frozen model and apply the decision rule,
     /// keeping selections in stream order. Generation happens before the
     /// jobs are built, so neither the simulated nor the measured sift clock
-    /// ever includes it (the paper's protocol).
+    /// ever includes it (the paper's protocol). `worker` is the executing
+    /// pool lane, routed to per-worker scorer instances.
     fn sift_round<L: Learner>(
         &mut self,
         frozen: &L,
@@ -170,11 +193,12 @@ impl NodeLane {
         shard: usize,
         n_phase: u64,
         needs_scores: bool,
+        worker: usize,
     ) -> NodeSift {
         let mut sw = Stopwatch::start();
         let mut out = NodeSift::default();
         if needs_scores {
-            scorer.score(frozen, &self.xs, &mut self.scores);
+            scorer.score_on(worker, frozen, &self.xs, &mut self.scores);
             out.sift_ops = shard as u64 * frozen.eval_ops();
         } else {
             self.scores.fill(0.0);
@@ -209,7 +233,9 @@ pub fn run_sync<L: Learner>(
 }
 
 /// [`run_sync`] with an explicitly injected backend (for custom
-/// [`SiftBackend`] implementations and the equivalence tests).
+/// [`SiftBackend`] implementations and the equivalence tests). The whole
+/// round loop executes inside the backend's session, so persistent
+/// backends keep their workers alive across every round of the run.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sync_on<L: Learner>(
     learner: &mut L,
@@ -220,6 +246,35 @@ pub fn run_sync_on<L: Learner>(
     scorer: &dyn SiftScorer<L>,
     backend: &dyn SiftBackend,
 ) -> SyncReport {
+    let name = backend.name();
+    let mut report = None;
+    backend.with_session(&mut |session| {
+        report = Some(run_rounds(
+            &mut *learner,
+            sifter,
+            stream_cfg,
+            test,
+            cfg,
+            scorer,
+            name,
+            session,
+        ));
+    });
+    report.expect("backend never ran the session body")
+}
+
+/// The round loop proper, generic over the executing session.
+#[allow(clippy::too_many_arguments)]
+fn run_rounds<L: Learner>(
+    learner: &mut L,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    scorer: &dyn SiftScorer<L>,
+    backend_name: &'static str,
+    session: &dyn SiftSession,
+) -> SyncReport {
     assert!(cfg.nodes >= 1);
     assert!(cfg.global_batch >= cfg.nodes, "need at least one example per node");
     let k = cfg.nodes;
@@ -229,6 +284,7 @@ pub fn run_sync_on<L: Learner>(
     let mut clock = RoundClock::new(profile, cfg.comm);
     let mut costs = CostCounters::default();
     let mut wall = WallTimes::default();
+    let mut replay = ReplayExecutor::new(cfg.replay, DIM);
     let mut total_sw = Stopwatch::start();
 
     let mut lanes: Vec<NodeLane> = (0..k)
@@ -278,37 +334,47 @@ pub fn run_sync_on<L: Learner>(
         }
 
         // Active filtering: one independent job per node against the
-        // frozen model; the backend decides where each job runs.
+        // frozen model; the session decides where each job runs.
         let frozen: &L = learner;
         let jobs: Vec<NodeJob<'_>> = lanes
             .iter_mut()
             .map(|lane| {
-                let job: NodeJob<'_> = Box::new(move || {
-                    lane.sift_round(frozen, scorer, shard, n_phase, needs_scores)
+                let job: NodeJob<'_> = Box::new(move |worker| {
+                    lane.sift_round(frozen, scorer, shard, n_phase, needs_scores, worker)
                 });
                 job
             })
             .collect();
         let mut sw = Stopwatch::start();
-        let results = backend.run_round(jobs);
+        let results = session.run_round(jobs);
         wall.sift += sw.lap();
         n_seen += (k * shard) as u64;
 
-        // Passive updating: replay the pooled broadcast in node-major order
-        // (the ordered-broadcast guarantee of Figure 1 — the backend already
-        // returned results in node order).
+        // Passive updating: pool the broadcast in node-major order (the
+        // ordered-broadcast guarantee of Figure 1 — the session already
+        // returned results in node order) and replay what is due under the
+        // configured minibatch/staleness policy. With no staleness budget
+        // each node's selections apply straight from the broadcast slices
+        // (zero-copy); buffering only happens when deferral needs it.
+        let direct = cfg.replay.max_stale_rounds == 0;
         let mut sw = Stopwatch::start();
         let mut selected = 0usize;
+        let mut applied = ReplayOutcome::default();
         for node in &results {
-            for ((x, &y), &w) in
-                node.sel_x.chunks_exact(DIM).zip(node.sel_y.iter()).zip(node.sel_w.iter())
-            {
-                learner.update(x, y, w);
-                costs.update_ops += learner.update_ops();
+            if direct {
+                let out = replay.apply_node_direct(learner, &node.sel_x, &node.sel_y, &node.sel_w);
+                applied.absorb(out);
+            } else {
+                replay.submit_node(&node.sel_x, &node.sel_y, &node.sel_w);
             }
             selected += node.sel_y.len();
             costs.sift_ops += node.sift_ops;
         }
+        if !direct {
+            replay.end_round();
+            applied.absorb(replay.replay_due(learner));
+        }
+        costs.update_ops += applied.update_ops;
         let update_secs = sw.lap();
         wall.update += update_secs;
         n_queried += selected as u64;
@@ -323,6 +389,17 @@ pub fn run_sync_on<L: Learner>(
             record(&mut curve, &clock, learner, test, n_seen, n_queried);
         }
     }
+
+    // Drain the staleness backlog (a no-op for synchronous replay) so the
+    // final model has absorbed every broadcast selection.
+    if replay.pending_examples() > 0 {
+        let mut sw = Stopwatch::start();
+        let tail = replay.flush(learner);
+        let tail_secs = sw.lap();
+        costs.update_ops += tail.update_ops;
+        wall.update += tail_secs;
+        clock.charge_update(tail_secs);
+    }
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
     wall.total = total_sw.lap();
 
@@ -336,7 +413,9 @@ pub fn run_sync_on<L: Learner>(
         warmstart_time: clock.warmstart_time,
         comm_time: clock.comm_time,
         wall,
-        backend: backend.name(),
+        backend: backend_name,
+        pool: session.stats(),
+        replay: replay.stats(),
         costs,
         curve,
     }
@@ -389,6 +468,11 @@ mod tests {
         assert_eq!(report.backend, "serial");
         assert!(report.wall.sift > 0.0);
         assert!(report.wall.total >= report.wall.sift);
+        // Serial sessions never spawn threads; the replay drained fully.
+        assert_eq!(report.pool.threads_spawned, 0);
+        assert_eq!(report.pool.rounds, report.rounds);
+        assert_eq!(report.replay.applied, report.replay.submitted);
+        assert_eq!(report.replay.applied, report.n_queried);
     }
 
     #[test]
@@ -470,5 +554,26 @@ mod tests {
         assert_eq!(report.rounds, 3);
         assert!(report.n_seen >= 700);
         assert!(report.wall.sift > 0.0);
+        // The pool persisted across the run: one spawn per worker.
+        assert!(report.pool.workers >= 1);
+        assert_eq!(report.pool.threads_spawned, report.pool.workers as u64);
+        assert_eq!(report.pool.rounds, report.rounds);
+    }
+
+    #[test]
+    fn stale_replay_defers_but_flushes_everything() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 40);
+        let mut svm = small_svm();
+        let sifter = SifterSpec::margin(0.1, 9);
+        let cfg = SyncConfig::new(2, 200, 100, 1100).with_replay(ReplayConfig::stale(16, 2));
+        let report = run_sync(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+        assert!(report.n_queried > 0);
+        // Every selection was eventually applied, and the backlog really
+        // lagged at some point.
+        assert_eq!(report.replay.applied, report.replay.submitted);
+        assert_eq!(report.replay.applied, report.n_queried);
+        assert!(report.replay.max_pending_rounds > 1);
+        assert!(report.final_test_errors() < 0.5);
     }
 }

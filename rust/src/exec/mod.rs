@@ -1,0 +1,53 @@
+//! Persistent execution pool for the coordinator's hot phases.
+//!
+//! The paper's systems story has two halves: the sift phase parallelizes
+//! almost perfectly (independent read-only jobs against a frozen model),
+//! and Theorem 1 proves the learning guarantee survives a slightly stale
+//! model, so the update phase may be batched and even deferred. This
+//! module is the shared machinery that exploits both at runtime speed:
+//!
+//! * [`WorkerPool`] (`pool.rs`) — a cross-round worker pool created **once
+//!   per run**: the whole round loop executes inside a single
+//!   [`std::thread::scope`], jobs are fed to long-lived workers over
+//!   channels, and results return in deterministic node-major order. This
+//!   retires the seed's per-round thread spawns (~0.1 ms/worker/round),
+//!   which dominated tiny-shard configurations. Optional **pinning** runs
+//!   job i on worker `i % workers` for deterministic placement (straggler
+//!   experiments, the live coordinator).
+//! * [`ScorerPool`] (`scorer.rs`) — one stateful scorer instance per pool
+//!   worker, so accelerator scoring (the PJRT/XLA executable path) scales
+//!   with workers instead of serializing behind the old global
+//!   [`LockedScorer`](crate::learner::LockedScorer) mutex. Worker lane
+//!   indices are stable for a pool's lifetime; the serial backend scores
+//!   as worker 0.
+//! * [`ReplayExecutor`] (`replay.rs`) — the broadcast update phase as an
+//!   explicit stage: deterministic minibatches ([`ReplayConfig::batch`])
+//!   that stay bit-identical to per-example replay, plus a
+//!   bounded-staleness knob ([`ReplayConfig::max_stale_rounds`]) mirroring
+//!   Theorem 1's delay tolerance.
+//!
+//! # Pool lifecycle
+//!
+//! ```text
+//! WorkerPool::scope(cfg, |pool| {        // workers spawn here, once
+//!     for round in 0..r {
+//!         let jobs = ...;                // jobs borrow round-local state
+//!         let out = pool.run_round(jobs);// barrier: all results collected
+//!     }
+//!     pool.stats()                       // threads_spawned == workers
+//! })                                     // workers join here
+//! ```
+//!
+//! The coordinator consumes this through
+//! [`SiftBackend::with_session`](crate::coordinator::backend::SiftBackend):
+//! a session wraps one pool whose lifetime is one run, and
+//! `tests/backend_equivalence.rs` asserts both the bit-for-bit contract
+//! and the spawn-once regression (`PoolStats::threads_spawned`).
+
+pub mod pool;
+pub mod replay;
+pub mod scorer;
+
+pub use pool::{Job, PoolConfig, PoolStats, WorkerPool};
+pub use replay::{ReplayConfig, ReplayExecutor, ReplayOutcome, ReplayStats};
+pub use scorer::{ScorerPool, WorkerScorer};

@@ -1,0 +1,420 @@
+//! A persistent, cross-round worker pool on scoped threads.
+//!
+//! The seed's `ThreadedBackend` spawned its workers inside every round
+//! (~0.1 ms per worker per round), because scoped threads cannot outlive
+//! the borrows held by that round's jobs. [`WorkerPool`] inverts the
+//! structure instead: the **whole run** executes inside one
+//! [`std::thread::scope`] — [`WorkerPool::scope`] spawns the workers once,
+//! hands the caller a pool handle, and joins the workers when the caller's
+//! closure returns. Rounds then become [`WorkerPool::run_round`] calls:
+//! jobs are fed to the workers over in-process channels and the results
+//! come back tagged with their submission index, so the pool can return
+//! them in deterministic node-major order no matter how execution was
+//! scheduled.
+//!
+//! Two dispatch modes ([`PoolConfig`]):
+//!
+//! * **shared** — all workers pull from one FIFO queue; k may exceed the
+//!   worker count (oversubscription just queues) and idle workers steal
+//!   whatever is next;
+//! * **pinned** — job i always runs on worker `i % workers`. Deterministic
+//!   placement, used by the straggler experiments and by the live
+//!   coordinator (node i lives on worker i for its whole run).
+//!
+//! # Lifetime erasure
+//!
+//! Round jobs borrow per-round coordinator state (shard buffers, the frozen
+//! model), so their true lifetime is shorter than the workers'. The pool
+//! sends them across the channel with that lifetime erased (the standard
+//! worker-pool technique; rayon does the same). Soundness rests on a
+//! completion barrier: [`WorkerPool::run_round`] does not return — or
+//! unwind — until every dispatched job has reported back, so no erased job
+//! can outlive the borrows it captures. A job panic is caught on the
+//! worker, shipped back as a result, and re-raised on the caller *after*
+//! the barrier; the pool remains usable afterwards.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+
+/// One unit of pool work: receives the executing worker's lane index
+/// (0-based, stable for the pool's lifetime) and returns a result.
+pub type Job<'env, T> = Box<dyn FnOnce(usize) -> T + Send + 'env>;
+
+/// A job whose borrow lifetime has been erased for channel transport.
+/// Only ever constructed inside [`WorkerPool::run_round`], which guarantees
+/// completion before the real lifetime ends.
+type ErasedJob<T> = Box<dyn FnOnce(usize) -> T + Send + 'static>;
+
+/// What a worker sends back: the job's submission index and its outcome
+/// (`Err` carries a caught panic payload).
+type RoundResult<T> = (usize, std::thread::Result<T>);
+
+/// Shape of a [`WorkerPool`]: how many workers, and how jobs reach them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Worker threads; 0 means one per available core.
+    pub workers: usize,
+    /// Pin job i to worker `i % workers` instead of the shared queue.
+    pub pinned: bool,
+}
+
+impl PoolConfig {
+    /// Shared-queue dispatch (the default for sift rounds).
+    pub fn shared(workers: usize) -> Self {
+        PoolConfig { workers, pinned: false }
+    }
+
+    /// Deterministic `i % workers` placement (straggler experiments, the
+    /// live coordinator's one-node-per-worker layout).
+    pub fn pinned(workers: usize) -> Self {
+        PoolConfig { workers, pinned: true }
+    }
+
+    /// The concrete worker count this config resolves to on this machine.
+    pub fn resolved_workers(&self) -> usize {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if self.workers == 0 {
+            hw
+        } else {
+            self.workers
+        }
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig::shared(0)
+    }
+}
+
+/// Execution counters of one pool (or pool-like session). The regression
+/// contract for tiny-shard configs lives here: a healthy persistent pool
+/// reports `threads_spawned == workers` however many rounds it ran.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Workers serving this pool (1 for a serial session).
+    pub workers: usize,
+    /// OS threads spawned over the pool's lifetime (0 for serial).
+    pub threads_spawned: u64,
+    /// `run_round` calls served so far.
+    pub rounds: u64,
+}
+
+/// A closable FIFO job queue: one per pool (shared mode) or one per worker
+/// (pinned mode).
+struct JobQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+struct QueueState<T> {
+    jobs: VecDeque<(usize, ErasedJob<T>)>,
+    closed: bool,
+}
+
+impl<T> JobQueue<T> {
+    fn new() -> Self {
+        JobQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, idx: usize, job: ErasedJob<T>) {
+        let mut state = self.state.lock().expect("job queue poisoned");
+        debug_assert!(!state.closed, "push after pool shutdown");
+        state.jobs.push_back((idx, job));
+        self.ready.notify_one();
+    }
+
+    /// Block until a job arrives or the queue closes empty.
+    fn pop(&self) -> Option<(usize, ErasedJob<T>)> {
+        let mut state = self.state.lock().expect("job queue poisoned");
+        loop {
+            if let Some(item) = state.jobs.pop_front() {
+                return Some(item);
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.ready.wait(state).expect("job queue poisoned");
+        }
+    }
+
+    fn close(&self) {
+        let mut state = self.state.lock().expect("job queue poisoned");
+        state.closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// The persistent pool. Construct only through [`WorkerPool::scope`], which
+/// ties the workers' lifetime to a caller-provided closure.
+pub struct WorkerPool<T: Send> {
+    queues: Vec<JobQueue<T>>,
+    results_tx: Sender<RoundResult<T>>,
+    /// Held across dispatch + collection, so concurrent `run_round` calls
+    /// serialize instead of interleaving their tagged results.
+    results_rx: Mutex<Receiver<RoundResult<T>>>,
+    workers: usize,
+    pinned: bool,
+    rounds: AtomicU64,
+    spawned: AtomicU64,
+}
+
+/// Closes the pool's queues when dropped, so workers drain and exit even if
+/// the scope body unwinds.
+struct CloseOnDrop<'a, T: Send>(&'a WorkerPool<T>);
+
+impl<T: Send> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        for q in &self.0.queues {
+            q.close();
+        }
+    }
+}
+
+impl<T: Send> WorkerPool<T> {
+    fn new(cfg: PoolConfig) -> Self {
+        let workers = cfg.resolved_workers().max(1);
+        let n_queues = if cfg.pinned { workers } else { 1 };
+        let (results_tx, results_rx) = channel();
+        WorkerPool {
+            queues: (0..n_queues).map(|_| JobQueue::new()).collect(),
+            results_tx,
+            results_rx: Mutex::new(results_rx),
+            workers,
+            pinned: cfg.pinned,
+            rounds: AtomicU64::new(0),
+            spawned: AtomicU64::new(0),
+        }
+    }
+
+    /// Run `body` with a pool whose workers are spawned **once**, before
+    /// `body` starts, and joined after it returns (or unwinds). All
+    /// `run_round` calls inside `body` reuse the same threads.
+    pub fn scope<R>(cfg: PoolConfig, body: impl FnOnce(&WorkerPool<T>) -> R) -> R {
+        let pool = WorkerPool::new(cfg);
+        std::thread::scope(|s| {
+            let closer = CloseOnDrop(&pool);
+            for w in 0..pool.workers {
+                let p = &pool;
+                let tx = pool.results_tx.clone();
+                // Counted here, on the spawning thread, so stats() never
+                // races against worker startup.
+                pool.spawned.fetch_add(1, Ordering::Relaxed);
+                s.spawn(move || p.worker_loop(w, tx));
+            }
+            let out = body(&pool);
+            drop(closer); // let the workers drain and exit before the join
+            out
+        })
+    }
+
+    fn worker_loop(&self, worker: usize, tx: Sender<RoundResult<T>>) {
+        let queue = if self.pinned { &self.queues[worker] } else { &self.queues[0] };
+        while let Some((idx, job)) = queue.pop() {
+            // Catch panics so the round barrier always receives one result
+            // per job; the caller re-raises after the barrier.
+            let result = catch_unwind(AssertUnwindSafe(|| job(worker)));
+            if tx.send((idx, result)).is_err() {
+                break;
+            }
+        }
+    }
+
+    /// Execute one round of jobs and return their results **in submission
+    /// order**. Blocks until every job has finished; a panicking job is
+    /// re-raised here once all of its round's siblings completed.
+    pub fn run_round<'env>(&self, jobs: Vec<Job<'env, T>>) -> Vec<T> {
+        let k = jobs.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        // Taking the receiver first serializes whole rounds.
+        let rx = self.results_rx.lock().expect("pool results poisoned");
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        for (idx, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the collection barrier below receives exactly one
+            // result per dispatched job before this function returns or
+            // unwinds, so no erased job outlives the borrows it captures.
+            let erased = unsafe { std::mem::transmute::<Job<'env, T>, ErasedJob<T>>(job) };
+            let queue =
+                if self.pinned { &self.queues[idx % self.workers] } else { &self.queues[0] };
+            queue.push(idx, erased);
+        }
+        let mut out: Vec<Option<T>> = (0..k).map(|_| None).collect();
+        let mut panic = None;
+        for _ in 0..k {
+            let Ok((idx, result)) = rx.recv() else {
+                // Workers gone mid-round: erased jobs may be un-run and the
+                // barrier can never complete. No sound continuation exists.
+                std::process::abort();
+            };
+            match result {
+                Ok(value) => out[idx] = Some(value),
+                Err(payload) => {
+                    if panic.is_none() {
+                        panic = Some(payload);
+                    }
+                }
+            }
+        }
+        drop(rx);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+        out.into_iter().map(|v| v.expect("worker delivered every job")).collect()
+    }
+
+    /// Execution counters so far (workers, threads spawned, rounds run).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            threads_spawned: self.spawned.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tagged_jobs(k: usize, stagger: bool) -> Vec<Job<'static, usize>> {
+        (0..k)
+            .map(|i| {
+                let job: Job<'static, usize> = Box::new(move |_worker| {
+                    if stagger {
+                        // Later jobs finish first to invite reordering.
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            2 * (k - i) as u64,
+                        ));
+                    }
+                    i
+                });
+                job
+            })
+            .collect()
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        WorkerPool::scope(PoolConfig::shared(4), |pool| {
+            let out = pool.run_round(tagged_jobs(6, true));
+            assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+        });
+    }
+
+    #[test]
+    fn oversubscription_queues_and_completes() {
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let out = pool.run_round(tagged_jobs(17, false));
+            assert_eq!(out, (0..17).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        WorkerPool::scope(PoolConfig::shared(8), |pool| {
+            let out = pool.run_round(tagged_jobs(3, true));
+            assert_eq!(out, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn empty_round_is_fine() {
+        WorkerPool::<usize>::scope(PoolConfig::shared(2), |pool| {
+            assert!(pool.run_round(Vec::new()).is_empty());
+            assert_eq!(pool.stats().rounds, 0);
+        });
+    }
+
+    #[test]
+    fn workers_spawn_once_across_rounds() {
+        WorkerPool::scope(PoolConfig::shared(3), |pool| {
+            for round in 0..5 {
+                let out = pool.run_round(tagged_jobs(4, false));
+                assert_eq!(out.len(), 4);
+                assert_eq!(pool.stats().rounds, round + 1);
+            }
+            let stats = pool.stats();
+            assert_eq!(stats.workers, 3);
+            assert_eq!(stats.threads_spawned, 3, "threads must spawn once per run");
+        });
+    }
+
+    #[test]
+    fn pinned_runs_job_i_on_worker_i_mod_w() {
+        WorkerPool::scope(PoolConfig::pinned(2), |pool| {
+            let jobs: Vec<Job<'static, usize>> = (0..6)
+                .map(|_| {
+                    let job: Job<'static, usize> = Box::new(|worker| worker);
+                    job
+                })
+                .collect();
+            let out = pool.run_round(jobs);
+            for (i, worker) in out.iter().enumerate() {
+                assert_eq!(*worker, i % 2, "job {i} ran on worker {worker}");
+            }
+        });
+    }
+
+    #[test]
+    fn jobs_borrow_round_local_state() {
+        WorkerPool::scope(PoolConfig::shared(3), |pool| {
+            for round in 0..3usize {
+                // Fresh per-round buffers, mutably borrowed by the jobs —
+                // exactly the coordinator's shard-buffer pattern.
+                let mut bufs = vec![0usize; 5];
+                let jobs: Vec<Job<'_, usize>> = bufs
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, slot)| {
+                        let job: Job<'_, usize> = Box::new(move |_w| {
+                            *slot = i + round;
+                            *slot
+                        });
+                        job
+                    })
+                    .collect();
+                let out = pool.run_round(jobs);
+                assert_eq!(out, (0..5).map(|i| i + round).collect::<Vec<_>>());
+                assert_eq!(bufs, out);
+            }
+        });
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let jobs: Vec<Job<'static, usize>> = (0..4)
+                .map(|i| {
+                    let job: Job<'static, usize> = Box::new(move |_w| {
+                        if i == 2 {
+                            panic!("job 2 exploded");
+                        }
+                        i
+                    });
+                    job
+                })
+                .collect();
+            let err = catch_unwind(AssertUnwindSafe(|| pool.run_round(jobs)));
+            assert!(err.is_err(), "panic must propagate to the caller");
+            // The barrier completed, so the pool keeps working.
+            let out = pool.run_round(tagged_jobs(3, false));
+            assert_eq!(out, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn body_result_is_returned() {
+        let got = WorkerPool::<usize>::scope(PoolConfig::pinned(1), |pool| {
+            pool.run_round(tagged_jobs(2, false)).iter().sum::<usize>()
+        });
+        assert_eq!(got, 1);
+    }
+}

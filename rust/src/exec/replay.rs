@@ -1,0 +1,397 @@
+//! Deterministic minibatched replay of the broadcast update phase.
+//!
+//! Algorithm 1's passive-updating phase replays the pooled selections of a
+//! round — node-major, the ordered-broadcast guarantee of Figure 1 — into
+//! the model. The seed did this inline, one example at a time, strictly
+//! synchronously. [`ReplayExecutor`] makes the phase an explicit, tunable
+//! stage with two knobs ([`ReplayConfig`]):
+//!
+//! * **`batch`** — the minibatch quantum. Selections are applied in chunks
+//!   of `batch` examples, in exactly their broadcast order, so the result
+//!   is **bit-identical** to per-example replay for every batch size (the
+//!   chunk members are applied in order; only scheduling granularity and
+//!   instrumentation change). `tests/replay_equivalence.rs` enforces this
+//!   for batch sizes {1, 7, 64} across all sift backends.
+//! * **`max_stale_rounds`** — the bounded-staleness knob mirroring the
+//!   paper's Theorem 1, which proves the IWAL guarantee survives updates
+//!   delayed by up to τ examples. With staleness `s`, up to `s` rounds of
+//!   selections may remain unapplied when the next sift phase begins, so
+//!   nodes sift with a slightly outdated model (τ ≤ s·B). `0` — the
+//!   default — is the fully synchronous seed behavior. Runs stay
+//!   deterministic for any `s`: deferral only shifts *when* the same
+//!   update sequence is applied.
+//!
+//! The executor accounts per-example `update_ops` exactly like the seed's
+//! inline loop (the op cost is sampled after every single update, which
+//! matters for learners whose model grows, like LASVM), so cost counters
+//! participate in the bit-for-bit equivalence contract too.
+//!
+//! With no staleness budget there is nothing to defer, so the coordinator
+//! takes [`ReplayExecutor::apply_node_direct`] — a zero-copy fast path
+//! that applies each node's selections straight from the broadcast slices
+//! instead of staging them in a round buffer. Buffering only happens when
+//! `max_stale_rounds > 0` actually needs it.
+
+use crate::learner::Learner;
+use std::collections::VecDeque;
+
+/// Tuning of the replay stage; the default reproduces the seed exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayConfig {
+    /// Minibatch quantum (examples per applied chunk), >= 1.
+    pub batch: usize,
+    /// Rounds of selections allowed to lag unapplied (Theorem 1's delay
+    /// tolerance); 0 = fully synchronous.
+    pub max_stale_rounds: usize,
+}
+
+impl ReplayConfig {
+    /// Synchronous replay in minibatches of `batch`.
+    pub fn synchronous(batch: usize) -> Self {
+        ReplayConfig { batch, max_stale_rounds: 0 }
+    }
+
+    /// Bounded-staleness replay: minibatches of `batch`, up to
+    /// `max_stale_rounds` rounds applied late.
+    pub fn stale(batch: usize, max_stale_rounds: usize) -> Self {
+        ReplayConfig { batch, max_stale_rounds }
+    }
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig { batch: 64, max_stale_rounds: 0 }
+    }
+}
+
+/// Lifetime counters of one executor.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Examples handed to the executor via `submit_node`.
+    pub submitted: u64,
+    /// Examples applied to the model so far.
+    pub applied: u64,
+    /// Minibatches applied so far.
+    pub minibatches: u64,
+    /// Largest backlog observed, in rounds, right after an `end_round`.
+    pub max_pending_rounds: usize,
+}
+
+/// What one `replay_due` / `flush` call did, for the caller's cost and
+/// wall-clock accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayOutcome {
+    /// Examples applied by this call.
+    pub examples: u64,
+    /// Sum of per-example `Learner::update_ops` over those updates.
+    pub update_ops: u64,
+}
+
+impl ReplayOutcome {
+    pub(crate) fn absorb(&mut self, other: ReplayOutcome) {
+        self.examples += other.examples;
+        self.update_ops += other.update_ops;
+    }
+}
+
+/// One round's pooled selections, already in node-major broadcast order.
+#[derive(Default)]
+struct RoundBuf {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    ws: Vec<f32>,
+}
+
+/// The replay stage: collects each round's selections, applies them in
+/// deterministic minibatches, and optionally lets a bounded backlog lag.
+pub struct ReplayExecutor {
+    cfg: ReplayConfig,
+    dim: usize,
+    current: RoundBuf,
+    pending: VecDeque<RoundBuf>,
+    stats: ReplayStats,
+}
+
+impl ReplayExecutor {
+    pub fn new(cfg: ReplayConfig, dim: usize) -> Self {
+        assert!(cfg.batch >= 1, "replay batch must be >= 1");
+        assert!(dim >= 1);
+        ReplayExecutor {
+            cfg,
+            dim,
+            current: RoundBuf::default(),
+            pending: VecDeque::new(),
+            stats: ReplayStats::default(),
+        }
+    }
+
+    /// Append one node's selections to the round being assembled. Nodes
+    /// must be submitted in node order (the broadcast order).
+    pub fn submit_node(&mut self, xs: &[f32], ys: &[f32], ws: &[f32]) {
+        assert_eq!(xs.len(), ys.len() * self.dim);
+        assert_eq!(ys.len(), ws.len());
+        self.current.xs.extend_from_slice(xs);
+        self.current.ys.extend_from_slice(ys);
+        self.current.ws.extend_from_slice(ws);
+    }
+
+    /// Zero-copy fast path for the fully synchronous case: apply one
+    /// node's selections immediately, in submission (broadcast) order,
+    /// without staging them in a round buffer. Bit-identical to
+    /// `submit_node` + `end_round` + `replay_due` when no staleness is
+    /// allowed — the coordinator uses it when `max_stale_rounds == 0`, so
+    /// the default configuration pays no copy on the update hot path.
+    pub fn apply_node_direct<L: Learner>(
+        &mut self,
+        learner: &mut L,
+        xs: &[f32],
+        ys: &[f32],
+        ws: &[f32],
+    ) -> ReplayOutcome {
+        assert_eq!(self.cfg.max_stale_rounds, 0, "direct replay with a staleness budget");
+        debug_assert!(self.pending.is_empty() && self.current.ys.is_empty());
+        assert_eq!(xs.len(), ys.len() * self.dim);
+        assert_eq!(ys.len(), ws.len());
+        self.stats.submitted += ys.len() as u64;
+        self.apply_slice(learner, xs, ys, ws)
+    }
+
+    /// Seal the round under assembly and queue it for replay. Returns how
+    /// many examples the round selected.
+    pub fn end_round(&mut self) -> usize {
+        let selected = self.current.ys.len();
+        self.stats.submitted += selected as u64;
+        self.pending.push_back(std::mem::take(&mut self.current));
+        self.stats.max_pending_rounds = self.stats.max_pending_rounds.max(self.pending.len());
+        selected
+    }
+
+    /// Apply queued rounds until at most `max_stale_rounds` remain.
+    pub fn replay_due<L: Learner>(&mut self, learner: &mut L) -> ReplayOutcome {
+        self.apply_until(learner, self.cfg.max_stale_rounds)
+    }
+
+    /// Apply everything still queued (end of run).
+    pub fn flush<L: Learner>(&mut self, learner: &mut L) -> ReplayOutcome {
+        debug_assert!(self.current.ys.is_empty(), "flush with an unsealed round");
+        self.apply_until(learner, 0)
+    }
+
+    /// Rounds currently queued (unapplied).
+    pub fn pending_rounds(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Examples currently queued (unapplied).
+    pub fn pending_examples(&self) -> usize {
+        self.pending.iter().map(|r| r.ys.len()).sum()
+    }
+
+    pub fn stats(&self) -> ReplayStats {
+        self.stats
+    }
+
+    fn apply_until<L: Learner>(&mut self, learner: &mut L, keep: usize) -> ReplayOutcome {
+        let mut out = ReplayOutcome::default();
+        while self.pending.len() > keep {
+            let round = self.pending.pop_front().expect("non-empty backlog");
+            out.absorb(self.apply_round(learner, &round));
+        }
+        out
+    }
+
+    /// Replay one round's selections in order, chunked into minibatches.
+    fn apply_round<L: Learner>(&mut self, learner: &mut L, round: &RoundBuf) -> ReplayOutcome {
+        self.apply_slice(learner, &round.xs, &round.ys, &round.ws)
+    }
+
+    /// Apply a node-major selection slice in order, chunked into
+    /// minibatches of `cfg.batch`. Per-example `update_ops` are sampled
+    /// after every single update, exactly like the seed's inline loop.
+    fn apply_slice<L: Learner>(
+        &mut self,
+        learner: &mut L,
+        xs: &[f32],
+        ys: &[f32],
+        ws: &[f32],
+    ) -> ReplayOutcome {
+        let n = ys.len();
+        let mut out = ReplayOutcome::default();
+        let mut start = 0;
+        while start < n {
+            let end = (start + self.cfg.batch).min(n);
+            for i in start..end {
+                let x = &xs[i * self.dim..(i + 1) * self.dim];
+                learner.update(x, ys[i], ws[i]);
+                out.update_ops += learner.update_ops();
+            }
+            self.stats.minibatches += 1;
+            start = end;
+        }
+        out.examples = n as u64;
+        self.stats.applied += n as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TestSet;
+
+    /// Records the exact update sequence and charges growing op costs,
+    /// like LASVM's support set does.
+    struct Tally {
+        seen: Vec<(f32, f32, f32)>, // (x[0], y, w) in application order
+    }
+
+    impl Tally {
+        fn new() -> Self {
+            Tally { seen: Vec::new() }
+        }
+    }
+
+    impl Learner for Tally {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn score(&self, _x: &[f32]) -> f32 {
+            self.seen.len() as f32
+        }
+        fn update(&mut self, x: &[f32], y: f32, w: f32) {
+            self.seen.push((x[0], y, w));
+        }
+        fn eval_ops(&self) -> u64 {
+            1
+        }
+        fn update_ops(&self) -> u64 {
+            // Model-size-dependent, so mis-ordered accounting shows up.
+            self.seen.len() as u64
+        }
+        fn test_error(&self, _ts: &TestSet) -> f64 {
+            0.0
+        }
+    }
+
+    fn round(tag: f32, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let xs: Vec<f32> = (0..n).flat_map(|i| [tag + i as f32, 0.0]).collect();
+        let ys: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ws: Vec<f32> = (0..n).map(|i| 1.0 + i as f32).collect();
+        (xs, ys, ws)
+    }
+
+    #[test]
+    fn minibatched_replay_matches_direct_updates_exactly() {
+        for batch in [1usize, 3, 64] {
+            let (xs, ys, ws) = round(10.0, 7);
+            let mut direct = Tally::new();
+            let mut direct_ops = 0u64;
+            for i in 0..7 {
+                direct.update(&xs[i * 2..(i + 1) * 2], ys[i], ws[i]);
+                direct_ops += direct.update_ops();
+            }
+
+            let mut replayed = Tally::new();
+            let mut exec = ReplayExecutor::new(ReplayConfig::synchronous(batch), 2);
+            exec.submit_node(&xs[..6], &ys[..3], &ws[..3]);
+            exec.submit_node(&xs[6..], &ys[3..], &ws[3..]);
+            exec.end_round();
+            let outcome = exec.replay_due(&mut replayed);
+
+            assert_eq!(replayed.seen, direct.seen, "batch {batch}: order diverged");
+            assert_eq!(outcome.update_ops, direct_ops, "batch {batch}: ops diverged");
+            assert_eq!(outcome.examples, 7);
+        }
+    }
+
+    #[test]
+    fn minibatch_count_is_ceil_division() {
+        let mut learner = Tally::new();
+        let mut exec = ReplayExecutor::new(ReplayConfig::synchronous(2), 2);
+        let (xs, ys, ws) = round(0.0, 5);
+        exec.submit_node(&xs, &ys, &ws);
+        exec.end_round();
+        exec.replay_due(&mut learner);
+        assert_eq!(exec.stats().minibatches, 3); // ceil(5 / 2)
+        assert_eq!(exec.stats().applied, 5);
+    }
+
+    #[test]
+    fn staleness_defers_then_flush_catches_up() {
+        let mut learner = Tally::new();
+        let mut exec = ReplayExecutor::new(ReplayConfig::stale(4, 1), 2);
+
+        let (xs, ys, ws) = round(0.0, 3);
+        exec.submit_node(&xs, &ys, &ws);
+        exec.end_round();
+        let first = exec.replay_due(&mut learner);
+        // One round may lag: nothing applied yet.
+        assert_eq!(first.examples, 0);
+        assert_eq!(exec.pending_rounds(), 1);
+        assert_eq!(exec.pending_examples(), 3);
+
+        let (xs2, ys2, ws2) = round(100.0, 2);
+        exec.submit_node(&xs2, &ys2, &ws2);
+        exec.end_round();
+        let second = exec.replay_due(&mut learner);
+        // Round 1 became due; round 2 still lags.
+        assert_eq!(second.examples, 3);
+        assert_eq!(exec.pending_rounds(), 1);
+
+        let tail = exec.flush(&mut learner);
+        assert_eq!(tail.examples, 2);
+        assert_eq!(exec.pending_rounds(), 0);
+        assert_eq!(exec.stats().applied, exec.stats().submitted);
+        assert_eq!(exec.stats().max_pending_rounds, 2);
+        // Order preserved across the deferral.
+        let tags: Vec<f32> = learner.seen.iter().map(|(x, _, _)| *x).collect();
+        assert_eq!(tags, vec![0.0, 1.0, 2.0, 100.0, 101.0]);
+    }
+
+    #[test]
+    fn direct_path_matches_buffered_sync_replay() {
+        for batch in [1usize, 3, 64] {
+            let (xs, ys, ws) = round(5.0, 7);
+            let mut buffered = Tally::new();
+            let mut exec_b = ReplayExecutor::new(ReplayConfig::synchronous(batch), 2);
+            exec_b.submit_node(&xs, &ys, &ws);
+            exec_b.end_round();
+            let out_b = exec_b.replay_due(&mut buffered);
+
+            let mut direct = Tally::new();
+            let mut exec_d = ReplayExecutor::new(ReplayConfig::synchronous(batch), 2);
+            let out_d = exec_d.apply_node_direct(&mut direct, &xs, &ys, &ws);
+
+            assert_eq!(direct.seen, buffered.seen, "batch {batch}: order diverged");
+            assert_eq!(out_d.update_ops, out_b.update_ops, "batch {batch}: ops diverged");
+            assert_eq!(out_d.examples, 7);
+            assert_eq!(exec_d.stats().applied, exec_d.stats().submitted);
+            assert_eq!(exec_d.stats().minibatches, exec_b.stats().minibatches);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "staleness budget")]
+    fn direct_path_rejects_staleness_budgets() {
+        let mut exec = ReplayExecutor::new(ReplayConfig::stale(4, 1), 2);
+        let (xs, ys, ws) = round(0.0, 2);
+        exec.apply_node_direct(&mut Tally::new(), &xs, &ys, &ws);
+    }
+
+    #[test]
+    fn empty_rounds_cost_nothing() {
+        let mut learner = Tally::new();
+        let mut exec = ReplayExecutor::new(ReplayConfig::default(), 2);
+        exec.end_round();
+        exec.end_round();
+        let out = exec.replay_due(&mut learner);
+        assert_eq!(out.examples, 0);
+        assert_eq!(exec.stats().minibatches, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay batch")]
+    fn zero_batch_is_rejected() {
+        ReplayExecutor::new(ReplayConfig::synchronous(0), 2);
+    }
+}

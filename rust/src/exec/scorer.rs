@@ -1,0 +1,174 @@
+//! Per-worker scorer instances for the sift phase.
+//!
+//! The seed's answer to stateful scorers (the PJRT/XLA executable path,
+//! which owns scratch buffers and an executable cache) was
+//! [`LockedScorer`](crate::learner::LockedScorer): one instance behind one
+//! mutex, correct everywhere, parallel nowhere — every worker of the
+//! threaded backend serialized on the same lock, so accelerator scoring
+//! never scaled with workers. [`ScorerPool`] retires that mutex from the
+//! hot path: it owns one [`WorkerScorer`] instance **per pool worker**, and
+//! worker `w` always scores through slot `w % slots`. Each slot still sits
+//! behind its own mutex (the [`SiftScorer`] surface is `&self`), but a slot
+//! is only ever touched by the single worker pinned to it, so the lock is
+//! uncontended — per-worker state without per-call contention.
+//!
+//! The contract with the execution pool: worker lane indices are stable
+//! for a pool's lifetime ([`WorkerPool`](super::WorkerPool) guarantees
+//! this), the serial backend always scores as worker 0, and a pool with
+//! one slot behaves exactly like the old single-instance path. Per-node
+//! results stay bit-identical across backends as long as every slot
+//! computes the same function — which instances of the same AOT executable
+//! do by construction.
+
+use crate::learner::{Learner, SiftScorer};
+use std::sync::Mutex;
+
+/// A stateful batch scorer owned by one pool worker (`&mut self`, unlike
+/// the shared [`SiftScorer`] surface). Closures implement it directly.
+pub trait WorkerScorer<L: Learner>: Send {
+    /// Fill `out` with margin scores for the flat row-major batch `xs`.
+    fn score(&mut self, learner: &L, xs: &[f32], out: &mut [f32]);
+}
+
+impl<L: Learner, F> WorkerScorer<L> for F
+where
+    F: FnMut(&L, &[f32], &mut [f32]) + Send,
+{
+    fn score(&mut self, learner: &L, xs: &[f32], out: &mut [f32]) {
+        self(learner, xs, out)
+    }
+}
+
+/// One scorer instance per pool worker; see the module docs.
+pub struct ScorerPool<L: Learner> {
+    slots: Vec<Mutex<Box<dyn WorkerScorer<L>>>>,
+}
+
+impl<L: Learner> ScorerPool<L> {
+    /// Wrap pre-built per-worker instances (at least one).
+    pub fn new(slots: Vec<Box<dyn WorkerScorer<L>>>) -> Self {
+        assert!(!slots.is_empty(), "a scorer pool needs at least one slot");
+        ScorerPool { slots: slots.into_iter().map(Mutex::new).collect() }
+    }
+
+    /// Build `n` instances from a fallible factory (slot index passed in),
+    /// e.g. one AOT runtime per worker.
+    pub fn build<S, E, F>(n: usize, mut make: F) -> Result<Self, E>
+    where
+        S: WorkerScorer<L> + 'static,
+        F: FnMut(usize) -> Result<S, E>,
+    {
+        let mut slots: Vec<Box<dyn WorkerScorer<L>>> = Vec::with_capacity(n);
+        for slot in 0..n {
+            slots.push(Box::new(make(slot)?));
+        }
+        Ok(ScorerPool::new(slots))
+    }
+
+    /// Number of per-worker instances.
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl<L: Learner> SiftScorer<L> for ScorerPool<L> {
+    fn score(&self, learner: &L, xs: &[f32], out: &mut [f32]) {
+        self.score_on(0, learner, xs, out);
+    }
+
+    fn score_on(&self, worker: usize, learner: &L, xs: &[f32], out: &mut [f32]) {
+        let slot = &self.slots[worker % self.slots.len()];
+        let mut scorer = slot.lock().expect("scorer slot poisoned");
+        scorer.score(learner, xs, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TestSet;
+
+    /// Minimal learner so the scorer traits have something to hang off.
+    struct Flat;
+
+    impl Learner for Flat {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn score(&self, x: &[f32]) -> f32 {
+            x[0]
+        }
+        fn update(&mut self, _x: &[f32], _y: f32, _w: f32) {}
+        fn eval_ops(&self) -> u64 {
+            1
+        }
+        fn update_ops(&self) -> u64 {
+            1
+        }
+        fn test_error(&self, _ts: &TestSet) -> f64 {
+            0.0
+        }
+    }
+
+    fn constant_slot(value: f32) -> Box<dyn WorkerScorer<Flat>> {
+        Box::new(move |_l: &Flat, _xs: &[f32], out: &mut [f32]| out.fill(value))
+    }
+
+    #[test]
+    fn workers_route_to_their_own_slot() {
+        let pool = ScorerPool::new(vec![constant_slot(10.0), constant_slot(20.0)]);
+        let mut out = [0.0f32; 2];
+        pool.score_on(0, &Flat, &[0.0, 0.0], &mut out);
+        assert_eq!(out, [10.0, 10.0]);
+        pool.score_on(1, &Flat, &[0.0, 0.0], &mut out);
+        assert_eq!(out, [20.0, 20.0]);
+        // Worker indices beyond the slot count wrap around.
+        pool.score_on(2, &Flat, &[0.0, 0.0], &mut out);
+        assert_eq!(out, [10.0, 10.0]);
+    }
+
+    #[test]
+    fn plain_score_uses_slot_zero() {
+        let pool = ScorerPool::new(vec![constant_slot(7.0), constant_slot(9.0)]);
+        let mut out = [0.0f32; 1];
+        pool.score(&Flat, &[0.0], &mut out);
+        assert_eq!(out, [7.0]);
+    }
+
+    #[test]
+    fn slots_keep_private_mutable_state() {
+        let make = |slot: usize| {
+            let mut n = 0u32;
+            move |_l: &Flat, _xs: &[f32], out: &mut [f32]| {
+                n += 1;
+                out.fill((slot * 100) as f32 + n as f32);
+            }
+        };
+        let pool = ScorerPool::new(vec![Box::new(make(0)), Box::new(make(1))]);
+        let mut out = [0.0f32; 1];
+        pool.score_on(0, &Flat, &[0.0], &mut out);
+        assert_eq!(out, [1.0]);
+        pool.score_on(0, &Flat, &[0.0], &mut out);
+        assert_eq!(out, [2.0]); // slot 0 advanced twice
+        pool.score_on(1, &Flat, &[0.0], &mut out);
+        assert_eq!(out, [101.0]); // slot 1 advanced once
+    }
+
+    #[test]
+    fn build_propagates_factory_errors() {
+        let ok = ScorerPool::<Flat>::build(2, |slot| {
+            Ok::<_, String>(move |_l: &Flat, _xs: &[f32], out: &mut [f32]| {
+                out.fill(slot as f32)
+            })
+        });
+        assert_eq!(ok.expect("factory ok").slots(), 2);
+        let err = ScorerPool::<Flat>::build(2, |slot| {
+            if slot == 1 {
+                Err("no runtime".to_string())
+            } else {
+                Ok(|_l: &Flat, _xs: &[f32], out: &mut [f32]| out.fill(0.0))
+            }
+        });
+        assert!(err.is_err());
+    }
+}

@@ -78,11 +78,24 @@ pub trait Learner: Send + Sync {
 ///
 /// `Sync` is a supertrait because the threaded sift backend shares one
 /// scorer across all worker threads; stateless scorers ([`NativeScorer`])
-/// satisfy it trivially, stateful ones wrap themselves in [`LockedScorer`].
+/// satisfy it trivially. Stateful scorers have two options: a
+/// [`crate::exec::ScorerPool`] (one instance per pool worker, reached via
+/// [`SiftScorer::score_on`] — the scaling path) or a [`LockedScorer`]
+/// (one instance behind one mutex — correct anywhere, parallel nowhere).
 pub trait SiftScorer<L: Learner>: Sync {
     /// Fill `out` with margin scores for the flat row-major batch `xs`
     /// (`xs.len() == out.len() * learner.dim()`).
     fn score(&self, learner: &L, xs: &[f32], out: &mut [f32]);
+
+    /// Worker-indexed entry point used by the execution pool: worker `w`
+    /// of the sift backend scores through `score_on(w, ...)`, so
+    /// implementations holding per-worker state can route to a private
+    /// instance. Stateless scorers ignore the index (this default). The
+    /// serial backend always passes 0.
+    fn score_on(&self, worker: usize, learner: &L, xs: &[f32], out: &mut [f32]) {
+        let _ = worker;
+        self.score(learner, xs, out);
+    }
 }
 
 /// The default scorer: [`Learner::score_batch`] on the calling thread.
@@ -98,8 +111,10 @@ impl<L: Learner> SiftScorer<L> for NativeScorer {
 /// Adapts a stateful scoring closure (e.g. the PJRT/XLA executable path,
 /// which owns scratch buffers and an executable cache) into a [`SiftScorer`]
 /// by serializing calls through a mutex. Scoring through it is correct on
-/// any backend; it simply does not parallelize, which is the honest cost of
-/// a single-instance accelerator resource.
+/// any backend; it simply does not parallelize — when only a single
+/// instance of the resource can exist. When one instance per worker is
+/// possible, use [`crate::exec::ScorerPool`] instead, which keeps the
+/// threaded sift hot path lock-contention-free.
 pub struct LockedScorer<F>(Mutex<F>);
 
 impl<F> LockedScorer<F> {

@@ -12,8 +12,10 @@
 //! Layering (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator: synchronous rounds ([`coordinator::sync`],
 //!   Algorithm 1) over pluggable sift backends ([`coordinator::backend`],
-//!   serial or real threads — bit-identical by contract), asynchronous
-//!   dual-queue protocol ([`coordinator::async_sim`],
+//!   serial or real threads — bit-identical by contract) backed by the
+//!   persistent execution pool ([`exec`]: cross-round worker pool,
+//!   per-worker scorer instances, minibatched bounded-staleness update
+//!   replay), asynchronous dual-queue protocol ([`coordinator::async_sim`],
 //!   Algorithm 2), IWAL with delays ([`active::iwal`], Algorithm 3), the
 //!   LASVM solver ([`svm`]), the MLP trainer ([`nn`]), the data substrate
 //!   ([`data`]), cluster timing simulation ([`sim`]), metrics ([`metrics`]).
@@ -35,6 +37,7 @@ pub mod active;
 pub mod benchlib;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod learner;
 pub mod metrics;
 pub mod nn;
@@ -51,7 +54,7 @@ pub mod prelude {
         margin::MarginSifter, PassiveSifter, QueryDecision, Sifter, SifterSpec,
     };
     pub use crate::coordinator::backend::{
-        BackendChoice, SerialBackend, SiftBackend, ThreadedBackend,
+        BackendChoice, SerialBackend, SiftBackend, SiftSession, ThreadedBackend,
     };
     pub use crate::coordinator::sync::{
         run_sync, run_sync_on, SyncConfig, SyncReport, WallTimes,
@@ -62,6 +65,10 @@ pub mod prelude {
     pub use crate::data::{
         stream::{ExampleStream, StreamConfig},
         TestSet,
+    };
+    pub use crate::exec::{
+        PoolConfig, PoolStats, ReplayConfig, ReplayExecutor, ScorerPool, WorkerPool,
+        WorkerScorer,
     };
     pub use crate::learner::{Learner, LockedScorer, NativeScorer, SiftScorer};
     pub use crate::metrics::{ErrorCurve, SpeedupTable};

@@ -13,6 +13,7 @@ use para_active::coordinator::{
     SvmExperimentConfig,
 };
 use para_active::data::StreamConfig;
+use para_active::exec::ReplayConfig;
 use para_active::metrics::curves_to_markdown;
 use para_active::runtime::{artifacts_available, XlaRuntime};
 use para_active::theory::{run_delayed_iwal, TheoryConfig};
@@ -25,16 +26,26 @@ USAGE: para-active <COMMAND> [OPTIONS]
 
 COMMANDS:
   quickstart                quick SVM parallel-active demo (small budgets)
-  svm       [--nodes K] [--budget N] [--backend B]   parallel-active kernel SVM
-  nn        [--nodes K] [--budget N] [--backend B]   parallel-active neural net
+  svm       [--nodes K] [--budget N] [--backend B] [--workers W]
+            [--batch M] [--stale S]               parallel-active kernel SVM
+  nn        [--nodes K] [--budget N] [--backend B] [--workers W]
+            [--batch M] [--stale S]               parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
   artifacts                 inspect the AOT manifest; verify PJRT loads it
 
 BACKENDS (--backend): the sift phase runs on `serial` (default; one node
-after another, the paper's measurement protocol), `threaded` (a worker per
-core), or `threaded:N` (N workers). Results are bit-identical across
-backends; only measured wall-clock changes.
+after another, the paper's measurement protocol), `threaded[:N]` (a
+persistent worker pool, spawned once per run; N workers, default one per
+core), or `pinned[:N]` (same pool, node i pinned to worker i % N).
+`--workers W` overrides the pool's worker count (>= 1; serial becomes
+threaded:W). Results are bit-identical across backends; only measured
+wall-clock changes.
+
+REPLAY: the update phase applies the pooled broadcast in deterministic
+minibatches of `--batch M` examples (default 64; bit-identical for any M)
+and may lag up to `--stale S` rounds behind the sift phases (default 0 =
+fully synchronous; Theorem 1 tolerates the delay).
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -45,14 +56,23 @@ struct Args(Vec<String>);
 
 impl Args {
     fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
-        match self.0.iter().position(|a| a == name) {
+        match self.opt(name)? {
+            Some(v) => Ok(v),
             None => Ok(default),
+        }
+    }
+
+    /// Like [`Args::get`] but distinguishes an absent flag from a value.
+    fn opt<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>> {
+        match self.0.iter().position(|a| a == name) {
+            None => Ok(None),
             Some(i) => {
                 let v = self
                     .0
                     .get(i + 1)
                     .ok_or_else(|| anyhow::anyhow!("{name} needs a value"))?;
                 v.parse()
+                    .map(Some)
                     .map_err(|_| anyhow::anyhow!("bad value for {name}: {v}"))
             }
         }
@@ -62,8 +82,56 @@ impl Args {
 /// Parse the --backend flag shared by the svm/nn subcommands.
 fn backend_arg(args: &Args) -> anyhow::Result<BackendChoice> {
     let spelled: String = args.get("--backend", "serial".to_string())?;
-    BackendChoice::parse(&spelled)
-        .ok_or_else(|| anyhow::anyhow!("bad --backend {spelled} (serial|threaded|threaded:N)"))
+    BackendChoice::parse(&spelled).ok_or_else(|| {
+        anyhow::anyhow!("bad --backend {spelled} (serial|threaded[:N]|pinned[:N])")
+    })
+}
+
+/// Validate the execution flags shared by svm/nn: an optional `--workers`
+/// override, the replay minibatch and staleness. Rejects zeros outright
+/// and returns a warning when the worker count oversubscribes the machine.
+fn resolve_exec_flags(
+    backend: BackendChoice,
+    workers: Option<usize>,
+    batch: usize,
+    stale: usize,
+    cores: usize,
+) -> Result<(BackendChoice, ReplayConfig, Option<String>), String> {
+    if workers == Some(0) {
+        return Err("--workers must be >= 1 (use --backend serial for the serial path)".into());
+    }
+    if batch == 0 {
+        return Err("--batch must be >= 1".into());
+    }
+    let backend = match workers {
+        Some(w) => backend.with_workers(w),
+        None => backend,
+    };
+    // Warn on the *resolved* worker count, whichever spelling set it
+    // (--workers W or --backend threaded:N / pinned:N). 0 means one
+    // worker per core and can never oversubscribe.
+    let threads = match backend {
+        BackendChoice::Serial => 0,
+        BackendChoice::Threaded { threads } | BackendChoice::Pinned { threads } => threads,
+    };
+    let warn = (threads > cores)
+        .then(|| format!("{threads} workers oversubscribes this machine ({cores} cores)"));
+    Ok((backend, ReplayConfig { batch, max_stale_rounds: stale }, warn))
+}
+
+/// Gather, validate, and apply the shared execution flags.
+fn exec_args(args: &Args) -> anyhow::Result<(BackendChoice, ReplayConfig)> {
+    let backend = backend_arg(args)?;
+    let workers: Option<usize> = args.opt("--workers")?;
+    let batch: usize = args.get("--batch", 64)?;
+    let stale: usize = args.get("--stale", 0)?;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (backend, replay, warn) = resolve_exec_flags(backend, workers, batch, stale, cores)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(w) = warn {
+        eprintln!("warning: {w}");
+    }
+    Ok((backend, replay))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -94,7 +162,7 @@ fn main() -> anyhow::Result<()> {
             let nodes: usize = args.get("--nodes", 8)?;
             let budget: usize = args.get("--budget", 30_000)?;
             let mut cfg = SvmExperimentConfig::paper_defaults();
-            cfg.backend = backend_arg(&args)?;
+            (cfg.backend, cfg.replay) = exec_args(&args)?;
             let stream = StreamConfig::svm_task();
             let r = run_sync_svm(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
@@ -110,12 +178,20 @@ fn main() -> anyhow::Result<()> {
                 "backend={} measured wall: sift={:.2}s update={:.2}s total={:.2}s",
                 r.backend, r.wall.sift, r.wall.update, r.wall.total
             );
+            println!(
+                "pool: workers={} threads_spawned={} rounds={}; replay: minibatches={} max_lag={}",
+                r.pool.workers,
+                r.pool.threads_spawned,
+                r.pool.rounds,
+                r.replay.minibatches,
+                r.replay.max_pending_rounds
+            );
         }
         "nn" => {
             let nodes: usize = args.get("--nodes", 2)?;
             let budget: usize = args.get("--budget", 20_000)?;
             let mut cfg = NnExperimentConfig::paper_defaults();
-            cfg.backend = backend_arg(&args)?;
+            (cfg.backend, cfg.replay) = exec_args(&args)?;
             let stream = StreamConfig::nn_task();
             let r = run_sync_nn(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
@@ -125,6 +201,10 @@ fn main() -> anyhow::Result<()> {
                 100.0 * r.query_rate(),
                 r.backend,
                 r.wall.sift
+            );
+            println!(
+                "pool: workers={} threads_spawned={}; replay: minibatches={}",
+                r.pool.workers, r.pool.threads_spawned, r.replay.minibatches
             );
         }
         "passive" => {
@@ -184,4 +264,70 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_flags_reject_zero_workers() {
+        let err = resolve_exec_flags(BackendChoice::Serial, Some(0), 64, 0, 8);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("--workers"));
+    }
+
+    #[test]
+    fn exec_flags_reject_zero_batch() {
+        let err = resolve_exec_flags(BackendChoice::threaded(), None, 0, 0, 8);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("--batch"));
+    }
+
+    #[test]
+    fn exec_flags_warn_on_oversubscription() {
+        let (backend, replay, warn) =
+            resolve_exec_flags(BackendChoice::Serial, Some(16), 32, 1, 2).expect("valid");
+        assert_eq!(backend, BackendChoice::Threaded { threads: 16 });
+        assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1 });
+        let warn = warn.expect("16 workers on 2 cores must warn");
+        assert!(warn.contains("oversubscribes"), "warning text: {warn}");
+    }
+
+    #[test]
+    fn exec_flags_warn_on_oversubscribed_backend_spelling() {
+        // --backend threaded:64 must warn just like --workers 64.
+        let (backend, _, warn) =
+            resolve_exec_flags(BackendChoice::Threaded { threads: 64 }, None, 64, 0, 2)
+                .expect("valid");
+        assert_eq!(backend, BackendChoice::Threaded { threads: 64 });
+        let warn = warn.expect("threaded:64 on 2 cores must warn");
+        assert!(warn.contains("oversubscribes"), "warning text: {warn}");
+    }
+
+    #[test]
+    fn exec_flags_pass_through_when_sane() {
+        let (backend, replay, warn) =
+            resolve_exec_flags(BackendChoice::pinned(), Some(2), 64, 0, 8).expect("valid");
+        assert_eq!(backend, BackendChoice::Pinned { threads: 2 });
+        assert_eq!(replay, ReplayConfig::default());
+        assert!(warn.is_none());
+    }
+
+    #[test]
+    fn exec_flags_keep_backend_without_workers() {
+        let (backend, _, warn) =
+            resolve_exec_flags(BackendChoice::Serial, None, 64, 0, 1).expect("valid");
+        assert_eq!(backend, BackendChoice::Serial);
+        assert!(warn.is_none(), "no --workers, no oversubscription warning");
+    }
+
+    #[test]
+    fn args_opt_distinguishes_absent_from_bad() {
+        let args = Args(vec!["--workers".into(), "4".into()]);
+        assert_eq!(args.opt::<usize>("--workers").expect("parses"), Some(4));
+        assert_eq!(args.opt::<usize>("--batch").expect("absent ok"), None);
+        let bad = Args(vec!["--workers".into(), "x".into()]);
+        assert!(bad.opt::<usize>("--workers").is_err());
+    }
 }

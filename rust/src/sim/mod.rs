@@ -143,6 +143,13 @@ impl RoundClock {
         self.rounds += 1;
     }
 
+    /// Charge update work that happens outside any sift round — the final
+    /// flush of a bounded-staleness replay backlog. No round is counted.
+    pub fn charge_update(&mut self, seconds: f64) {
+        self.update_time += seconds;
+        self.elapsed += seconds;
+    }
+
     pub fn elapsed_seconds(&self) -> f64 {
         self.elapsed
     }

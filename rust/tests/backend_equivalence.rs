@@ -4,71 +4,35 @@
 //! for any node count, worker count, or scheduling. Only measured
 //! wall-clock (and the simulated clock derived from it) may differ, so
 //! those fields are excluded from the comparison.
+//!
+//! Since the execution pool landed (`rust/src/exec/`), the suite also
+//! enforces the pool's structural guarantees: workers spawn **once per
+//! run** however many rounds execute (the tiny-shard regression), pinned
+//! dispatch is equivalent to shared dispatch, and per-worker scorer
+//! instances (`ScorerPool`) reproduce the single-scorer path exactly —
+//! which is what lets the XLA path drop the global `LockedScorer` mutex.
+//!
+//! The CI workers-matrix smoke job re-runs this file and
+//! `replay_equivalence.rs` with `PARA_ACTIVE_TEST_WORKERS` in {1, 2, 8};
+//! see [`worker_matrix_from_env`].
 
+mod common;
+
+use common::{assert_reports_identical, matrix_workers, mlp_run_sync, probe_bits, svm_run_sync};
 use para_active::active::SifterSpec;
 use para_active::coordinator::backend::BackendChoice;
-use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
-use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
-use para_active::learner::{Learner, NativeScorer};
-use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::coordinator::sync::{run_sync, SyncConfig};
+use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::exec::ScorerPool;
+use para_active::learner::NativeScorer;
 use para_active::sim::NodeProfile;
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
-
-/// Final-model fingerprint: exact bits of the scores on a fixed probe set.
-fn probe_bits<L: Learner>(learner: &L, stream: &StreamConfig) -> Vec<u32> {
-    let mut probe = ExampleStream::for_node(stream, 9_999_999);
-    (0..16).map(|_| learner.score(&probe.next_example().x).to_bits()).collect()
-}
-
-/// Assert every statistical field of two reports is exactly equal
-/// (time fields are measurement noise and intentionally skipped).
-fn assert_reports_identical(a: &SyncReport, b: &SyncReport, what: &str) {
-    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
-    assert_eq!(a.n_seen, b.n_seen, "{what}: n_seen");
-    assert_eq!(a.n_queried, b.n_queried, "{what}: n_queried");
-    assert_eq!(a.costs.sift_ops, b.costs.sift_ops, "{what}: sift_ops");
-    assert_eq!(a.costs.update_ops, b.costs.update_ops, "{what}: update_ops");
-    assert_eq!(a.costs.broadcasts, b.costs.broadcasts, "{what}: broadcasts");
-    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: curve length");
-    for (i, (pa, pb)) in a.curve.points.iter().zip(&b.curve.points).enumerate() {
-        assert_eq!(pa.n_seen, pb.n_seen, "{what}: point {i} n_seen");
-        assert_eq!(pa.n_queried, pb.n_queried, "{what}: point {i} n_queried");
-        assert_eq!(pa.mistakes, pb.mistakes, "{what}: point {i} mistakes");
-        assert_eq!(
-            pa.test_error.to_bits(),
-            pb.test_error.to_bits(),
-            "{what}: point {i} test_error bits"
-        );
-    }
-}
-
-fn svm_run(k: usize, batch: usize, budget: usize, choice: BackendChoice) -> (SyncReport, Vec<u32>) {
-    let stream = StreamConfig::svm_task();
-    let test = TestSet::generate(&stream, 80);
-    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
-    let sifter = SifterSpec::margin(0.1, 7);
-    let cfg = SyncConfig::new(k, batch, 128, budget).with_backend(choice);
-    let report = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &NativeScorer);
-    let bits = probe_bits(&svm, &stream);
-    (report, bits)
-}
-
-fn mlp_run(k: usize, choice: BackendChoice) -> (SyncReport, Vec<u32>) {
-    let stream = StreamConfig::nn_task();
-    let test = TestSet::generate(&stream, 60);
-    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
-    let sifter = SifterSpec::margin(0.0005, 11);
-    let cfg = SyncConfig::new(k, 128, 96, 900).with_backend(choice);
-    let report = run_sync(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
-    let bits = probe_bits(&mlp, &stream);
-    (report, bits)
-}
 
 #[test]
 fn threaded_is_bit_identical_to_serial_svm() {
     for k in [1usize, 2, 8] {
-        let (serial, serial_bits) = svm_run(k, 256, 1500, BackendChoice::Serial);
-        let (threaded, threaded_bits) = svm_run(k, 256, 1500, BackendChoice::threaded());
+        let (serial, serial_bits) = svm_run_sync(k, 256, 1500, BackendChoice::Serial);
+        let (threaded, threaded_bits) = svm_run_sync(k, 256, 1500, BackendChoice::threaded());
         assert_eq!(serial.backend, "serial");
         assert_eq!(threaded.backend, "threaded");
         assert_reports_identical(&serial, &threaded, &format!("svm k={k}"));
@@ -80,21 +44,110 @@ fn threaded_is_bit_identical_to_serial_svm() {
 #[test]
 fn threaded_is_bit_identical_to_serial_mlp() {
     for k in [2usize, 8] {
-        let (serial, serial_bits) = mlp_run(k, BackendChoice::Serial);
-        let (threaded, threaded_bits) = mlp_run(k, BackendChoice::threaded());
+        let (serial, serial_bits) = mlp_run_sync(k, BackendChoice::Serial);
+        let (threaded, threaded_bits) = mlp_run_sync(k, BackendChoice::threaded());
         assert_reports_identical(&serial, &threaded, &format!("mlp k={k}"));
         assert_eq!(serial_bits, threaded_bits, "mlp k={k}: final model scores");
     }
 }
 
 #[test]
+fn pinned_is_bit_identical_to_serial() {
+    // Deterministic node-to-worker placement (node i on worker i % 3) is
+    // still just a scheduling choice; statistics cannot move.
+    let (serial, serial_bits) = svm_run_sync(6, 240, 1300, BackendChoice::Serial);
+    let (pinned, pinned_bits) = svm_run_sync(6, 240, 1300, BackendChoice::Pinned { threads: 3 });
+    assert_eq!(pinned.backend, "pinned");
+    assert_reports_identical(&serial, &pinned, "pinned k=6");
+    assert_eq!(serial_bits, pinned_bits, "pinned: final model scores");
+}
+
+#[test]
 fn worker_count_never_changes_results() {
     // 1, 2, or 64 workers (more than this machine has cores) — all equal.
-    let (reference, ref_bits) = svm_run(8, 256, 1200, BackendChoice::Serial);
+    let (reference, ref_bits) = svm_run_sync(8, 256, 1200, BackendChoice::Serial);
     for threads in [1usize, 2, 64] {
-        let (run, bits) = svm_run(8, 256, 1200, BackendChoice::Threaded { threads });
+        let (run, bits) = svm_run_sync(8, 256, 1200, BackendChoice::Threaded { threads });
         assert_reports_identical(&reference, &run, &format!("threads={threads}"));
         assert_eq!(ref_bits, bits, "threads={threads}: final model scores");
+    }
+}
+
+#[test]
+fn worker_matrix_from_env() {
+    // CI smoke entry point: the workers-matrix job exports
+    // PARA_ACTIVE_TEST_WORKERS in {1, 2, 8} and re-proves the contract at
+    // exactly that pool width (local runs default to 2).
+    let workers = matrix_workers();
+    assert!(workers >= 1, "matrix worker count must be >= 1");
+    let (serial, serial_bits) = svm_run_sync(4, 256, 1200, BackendChoice::Serial);
+    let (run, bits) = svm_run_sync(4, 256, 1200, BackendChoice::Threaded { threads: workers });
+    assert_reports_identical(&serial, &run, &format!("matrix workers={workers}"));
+    assert_eq!(serial_bits, bits, "matrix workers={workers}: final model scores");
+    assert_eq!(run.pool.workers, workers);
+}
+
+#[test]
+fn persistent_pool_spawns_threads_once_per_run() {
+    // The tiny-shard regression: the seed spawned scoped workers inside
+    // every round, so a many-round run paid the spawn tax repeatedly. The
+    // persistent pool must report exactly one OS thread per worker no
+    // matter how many rounds execute.
+    let (run, _) = svm_run_sync(4, 160, 2000, BackendChoice::Threaded { threads: 4 });
+    assert!(run.rounds >= 10, "need a many-round run, got {}", run.rounds);
+    assert_eq!(run.pool.workers, 4);
+    assert_eq!(
+        run.pool.threads_spawned, 4,
+        "threads must spawn once per run, not per round (rounds={})",
+        run.rounds
+    );
+    assert_eq!(run.pool.rounds, run.rounds, "every round ran on the pool");
+
+    // The serial path never spawns at all.
+    let (serial, _) = svm_run_sync(4, 160, 2000, BackendChoice::Serial);
+    assert_eq!(serial.pool.threads_spawned, 0);
+}
+
+#[test]
+fn scorer_pool_matches_shared_scorer_bit_for_bit() {
+    // Per-worker scorer instances (the LockedScorer-retirement path): a
+    // ScorerPool routing worker w to its own stateful instance must be
+    // bit-identical to the single shared NativeScorer, because every slot
+    // computes the same function. This is the contract that lets the XLA
+    // executable path scale with workers instead of serializing on one
+    // global mutex.
+    let run_with_pool = |threads: usize, slots: usize| {
+        let stream = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream, 80);
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(4, 256, 128, 1500)
+            .with_backend(BackendChoice::Threaded { threads });
+        let pool = ScorerPool::build(slots, |_slot| {
+            // Each slot is its own stateful instance (private scratch
+            // buffer), as one AOT runtime per worker would be.
+            let mut scratch: Vec<f32> = Vec::new();
+            Ok::<_, std::convert::Infallible>(
+                move |l: &LaSvm<RbfKernel>, xs: &[f32], out: &mut [f32]| {
+                    scratch.resize(out.len(), 0.0);
+                    l.score_batch(xs, &mut scratch);
+                    out.copy_from_slice(&scratch);
+                },
+            )
+        })
+        .expect("infallible factory");
+        assert_eq!(pool.slots(), slots);
+        let report = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &pool);
+        let bits = probe_bits(&svm, &stream);
+        (report, bits)
+    };
+
+    let (reference, ref_bits) = svm_run_sync(4, 256, 1500, BackendChoice::Serial);
+    for (threads, slots) in [(1usize, 1usize), (3, 3), (4, 2)] {
+        let (run, bits) = run_with_pool(threads, slots);
+        let what = format!("scorer pool threads={threads} slots={slots}");
+        assert_reports_identical(&reference, &run, &what);
+        assert_eq!(ref_bits, bits, "{what}: final model scores");
     }
 }
 
@@ -102,8 +155,8 @@ fn worker_count_never_changes_results() {
 fn oversubscribed_nodes_complete_and_match() {
     // Far more nodes than cores: the pool must queue, finish, and still
     // deliver node-major broadcast order.
-    let (serial, serial_bits) = svm_run(32, 320, 1400, BackendChoice::Serial);
-    let (threaded, threaded_bits) = svm_run(32, 320, 1400, BackendChoice::threaded());
+    let (serial, serial_bits) = svm_run_sync(32, 320, 1400, BackendChoice::Serial);
+    let (threaded, threaded_bits) = svm_run_sync(32, 320, 1400, BackendChoice::threaded());
     assert_reports_identical(&serial, &threaded, "k=32 oversubscribed");
     assert_eq!(serial_bits, threaded_bits, "k=32: final model scores");
 }

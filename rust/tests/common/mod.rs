@@ -1,0 +1,103 @@
+//! Shared helpers for the execution-equivalence suites
+//! (`backend_equivalence.rs`, `replay_equivalence.rs`): canonical SVM/MLP
+//! runs plus exact-bits comparison of reports and final models.
+
+// Each suite compiles this module separately and uses its own subset.
+#![allow(dead_code)]
+
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
+use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use para_active::exec::ReplayConfig;
+use para_active::learner::{Learner, NativeScorer};
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+/// Pool width for the CI workers-matrix job: `PARA_ACTIVE_TEST_WORKERS`,
+/// defaulting to 2 when absent. A set-but-invalid value panics, so broken
+/// matrix wiring cannot silently test the default width.
+pub fn matrix_workers() -> usize {
+    match std::env::var("PARA_ACTIVE_TEST_WORKERS") {
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|_| panic!("bad PARA_ACTIVE_TEST_WORKERS: {v:?}")),
+        Err(_) => 2,
+    }
+}
+
+/// Final-model fingerprint: exact bits of the scores on a fixed probe set.
+pub fn probe_bits<L: Learner>(learner: &L, stream: &StreamConfig) -> Vec<u32> {
+    let mut probe = ExampleStream::for_node(stream, 9_999_999);
+    (0..16).map(|_| learner.score(&probe.next_example().x).to_bits()).collect()
+}
+
+/// Assert every statistical field of two reports is exactly equal
+/// (time fields are measurement noise and intentionally skipped).
+pub fn assert_reports_identical(a: &SyncReport, b: &SyncReport, what: &str) {
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.n_seen, b.n_seen, "{what}: n_seen");
+    assert_eq!(a.n_queried, b.n_queried, "{what}: n_queried");
+    assert_eq!(a.costs.sift_ops, b.costs.sift_ops, "{what}: sift_ops");
+    assert_eq!(a.costs.update_ops, b.costs.update_ops, "{what}: update_ops");
+    assert_eq!(a.costs.broadcasts, b.costs.broadcasts, "{what}: broadcasts");
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: curve length");
+    for (i, (pa, pb)) in a.curve.points.iter().zip(&b.curve.points).enumerate() {
+        assert_eq!(pa.n_seen, pb.n_seen, "{what}: point {i} n_seen");
+        assert_eq!(pa.n_queried, pb.n_queried, "{what}: point {i} n_queried");
+        assert_eq!(pa.mistakes, pb.mistakes, "{what}: point {i} mistakes");
+        assert_eq!(
+            pa.test_error.to_bits(),
+            pb.test_error.to_bits(),
+            "{what}: point {i} test_error bits"
+        );
+    }
+}
+
+/// A canonical SVM run: k nodes, the margin sifter on fixed seeds, the
+/// given backend and replay tuning. Returns the report plus the final
+/// model's probe bits.
+pub fn svm_run(
+    k: usize,
+    batch: usize,
+    budget: usize,
+    choice: BackendChoice,
+    replay: ReplayConfig,
+) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(k, batch, 128, budget).with_backend(choice).with_replay(replay);
+    let report = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&svm, &stream);
+    (report, bits)
+}
+
+/// [`svm_run`] with the default (synchronous) replay configuration.
+pub fn svm_run_sync(
+    k: usize,
+    batch: usize,
+    budget: usize,
+    choice: BackendChoice,
+) -> (SyncReport, Vec<u32>) {
+    svm_run(k, batch, budget, choice, ReplayConfig::default())
+}
+
+/// [`mlp_run`] with the default (synchronous) replay configuration.
+pub fn mlp_run_sync(k: usize, choice: BackendChoice) -> (SyncReport, Vec<u32>) {
+    mlp_run(k, choice, ReplayConfig::default())
+}
+
+/// A canonical MLP run (AdaGrad updates are order-sensitive, so any replay
+/// reordering shows up immediately in the probe bits).
+pub fn mlp_run(k: usize, choice: BackendChoice, replay: ReplayConfig) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 60);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let sifter = SifterSpec::margin(0.0005, 11);
+    let cfg = SyncConfig::new(k, 128, 96, 900).with_backend(choice).with_replay(replay);
+    let report = run_sync(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&mlp, &stream);
+    (report, bits)
+}

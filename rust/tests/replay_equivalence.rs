@@ -1,0 +1,122 @@
+//! The replay half of the execution-pool contract: the broadcast update
+//! phase, run through `ReplayExecutor` in deterministic minibatches, is
+//! **bit-identical** to the seed's per-example replay loop — for every
+//! minibatch size, on every sift backend, for both learners. Minibatching
+//! only changes scheduling granularity and instrumentation, never the
+//! order in which selections reach `Learner::update`, so the model, the
+//! curve, and the cost counters cannot move.
+//!
+//! Bounded staleness (`max_stale_rounds > 0`, Theorem 1's delay knob) is
+//! *allowed* to change the trajectory — nodes sift against an older model —
+//! so for it the suite asserts determinism and completeness instead:
+//! identical runs produce identical bits, the backlog really lags, and
+//! every selection is eventually applied.
+
+mod common;
+
+use common::{assert_reports_identical, matrix_workers, mlp_run, svm_run};
+use para_active::coordinator::backend::BackendChoice;
+use para_active::exec::ReplayConfig;
+
+/// The reference replay: one example per minibatch, fully synchronous —
+/// exactly the seed's inline update loop.
+fn per_example() -> ReplayConfig {
+    ReplayConfig::synchronous(1)
+}
+
+#[test]
+fn minibatched_replay_is_bit_identical_for_all_batches_svm() {
+    let (reference, ref_bits) = svm_run(4, 256, 1500, BackendChoice::Serial, per_example());
+    for batch in [1usize, 7, 64] {
+        let (run, bits) =
+            svm_run(4, 256, 1500, BackendChoice::Serial, ReplayConfig::synchronous(batch));
+        assert_reports_identical(&reference, &run, &format!("svm batch={batch}"));
+        assert_eq!(ref_bits, bits, "svm batch={batch}: final model scores");
+        assert!(run.replay.minibatches > 0, "batch={batch}: no minibatches ran");
+    }
+}
+
+#[test]
+fn minibatched_replay_is_bit_identical_for_all_batches_mlp() {
+    // AdaGrad accumulators make the MLP maximally order-sensitive: any
+    // within-batch reordering diverges the probe bits immediately.
+    let (reference, ref_bits) = mlp_run(4, BackendChoice::Serial, per_example());
+    for batch in [7usize, 64] {
+        let (run, bits) = mlp_run(4, BackendChoice::Serial, ReplayConfig::synchronous(batch));
+        assert_reports_identical(&reference, &run, &format!("mlp batch={batch}"));
+        assert_eq!(ref_bits, bits, "mlp batch={batch}: final model scores");
+    }
+}
+
+#[test]
+fn replay_equivalence_holds_on_every_backend() {
+    // The full cross: minibatch sizes {1, 7, 64} x backend choices. One
+    // reference (serial, per-example) pins them all.
+    let (reference, ref_bits) = svm_run(6, 240, 1300, BackendChoice::Serial, per_example());
+    let backends = [
+        BackendChoice::Serial,
+        BackendChoice::Threaded { threads: 0 },
+        BackendChoice::Threaded { threads: 2 },
+        BackendChoice::Pinned { threads: 3 },
+    ];
+    for backend in backends {
+        for batch in [1usize, 7, 64] {
+            let (run, bits) = svm_run(6, 240, 1300, backend, ReplayConfig::synchronous(batch));
+            let what = format!("backend={backend} batch={batch}");
+            assert_reports_identical(&reference, &run, &what);
+            assert_eq!(ref_bits, bits, "{what}: final model scores");
+        }
+    }
+}
+
+#[test]
+fn worker_matrix_from_env() {
+    // CI smoke entry point: the workers-matrix job exports
+    // PARA_ACTIVE_TEST_WORKERS in {1, 2, 8}; replay equivalence must hold
+    // at exactly that pool width (local runs default to 2).
+    let workers = matrix_workers();
+    let (reference, ref_bits) = svm_run(4, 256, 1500, BackendChoice::Serial, per_example());
+    let (run, bits) = svm_run(
+        4,
+        256,
+        1500,
+        BackendChoice::Threaded { threads: workers },
+        ReplayConfig::synchronous(7),
+    );
+    assert_reports_identical(&reference, &run, &format!("matrix workers={workers} batch=7"));
+    assert_eq!(ref_bits, bits, "matrix workers={workers}: final model scores");
+    assert_eq!(run.pool.workers, workers);
+}
+
+#[test]
+fn stale_replay_is_deterministic_and_complete() {
+    // Bounded staleness changes *which* model sifts (legitimately, per
+    // Theorem 1) but must stay a pure function of the seeds: two identical
+    // runs agree bit-for-bit, the backlog actually lags, and the final
+    // flush leaves nothing behind.
+    for backend in [BackendChoice::Serial, BackendChoice::threaded()] {
+        let stale = ReplayConfig::stale(16, 2);
+        let (a, a_bits) = svm_run(4, 200, 1400, backend, stale);
+        let (b, b_bits) = svm_run(4, 200, 1400, backend, stale);
+        assert_reports_identical(&a, &b, &format!("stale determinism on {backend}"));
+        assert_eq!(a_bits, b_bits, "stale run not deterministic on {backend}");
+        assert!(
+            a.replay.max_pending_rounds > 1,
+            "backlog never lagged on {backend} (max_pending={})",
+            a.replay.max_pending_rounds
+        );
+        assert_eq!(a.replay.applied, a.replay.submitted, "flush left a backlog");
+        assert_eq!(a.replay.applied, a.n_queried, "selections lost in replay");
+    }
+}
+
+#[test]
+fn stale_replay_matches_across_backends() {
+    // Staleness composes with the sift-backend contract: serial and
+    // threaded runs under the same staleness policy are still bit-equal.
+    let stale = ReplayConfig::stale(8, 1);
+    let (serial, serial_bits) = svm_run(4, 200, 1400, BackendChoice::Serial, stale);
+    let (threaded, threaded_bits) = svm_run(4, 200, 1400, BackendChoice::threaded(), stale);
+    assert_reports_identical(&serial, &threaded, "stale serial vs threaded");
+    assert_eq!(serial_bits, threaded_bits, "stale: final model scores");
+}
