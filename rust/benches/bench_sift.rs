@@ -1,8 +1,14 @@
 //! Sift-phase throughput: the n·S(phi(n)) term of Figure 2.
 //!
 //! Measures native batch scoring for the SVM (at several support-set sizes)
-//! and the MLP, plus the Eq-5 decision overhead. The per-node sift rate
-//! here bounds the simulated cluster's round time.
+//! and the MLP — each both ways: a **seed-faithful scalar baseline**
+//! (one example at a time, exactly the pre-engine `score` paths: the SVM
+//! re-streams the support set per row, the MLP heap-allocates its hidden
+//! buffer per call — reconstructed here because `score` itself now rides
+//! the blocked engine) against the **blocked engine** (`score_batch` on
+//! the tiled kernels of `crate::simd`). The rows/s pair per path lands in
+//! `BENCH_sift.json`. Also times the Eq-5 decision overhead. The per-node
+//! sift rate here bounds the simulated cluster's round time.
 //!
 //! The final section measures the **real** sift-phase speedup over
 //! [`SerialBackend`] on identical per-node score jobs, two ways per k:
@@ -22,7 +28,7 @@ use para_active::data::{ExampleStream, StreamConfig, DIM};
 use para_active::learner::Learner;
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::sim::Stopwatch;
-use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
 
 fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
     let cfg = StreamConfig::svm_task();
@@ -65,7 +71,92 @@ fn measured_round_secs(
     stats.mean_s
 }
 
-/// One row of the machine-readable sweep.
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Seed-faithful scalar SVM baseline: score one row at a time by streaming
+/// the exported support set through `Kernel::eval` — the pre-engine
+/// `LaSvm::score` path (since this PR, `score` itself rides the blocked
+/// engine's one-row case, so the old path is reconstructed here).
+struct SvmScalar {
+    sv: Vec<f32>,
+    alpha: Vec<f32>,
+    bias: f32,
+    kernel: RbfKernel,
+}
+
+impl SvmScalar {
+    fn new(svm: &LaSvm<RbfKernel>) -> Self {
+        let (sv, alpha) = svm.export_support();
+        SvmScalar { sv, alpha, bias: svm.bias(), kernel: *svm.kernel() }
+    }
+
+    fn score_rows(&self, xs: &[f32], out: &mut [f32]) {
+        for (row, o) in xs.chunks_exact(DIM).zip(out.iter_mut()) {
+            let mut f = self.bias;
+            for (p, a) in self.sv.chunks_exact(DIM).zip(&self.alpha) {
+                f += a * self.kernel.eval(p, row);
+            }
+            *o = f;
+        }
+    }
+}
+
+/// Seed-faithful scalar MLP baseline: per-row forward over row-major `w1`
+/// that heap-allocates its hidden buffer **per call**, exactly like the
+/// seed's `AdaGradMlp::score` did before the blocked engine.
+struct MlpScalar {
+    w1_rows: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: f32,
+    h: usize,
+}
+
+impl MlpScalar {
+    fn new(m: &AdaGradMlp) -> Self {
+        let h = m.config().hidden;
+        let (w1_cols, b1, w2, b2) = m.export_padded(h); // (D, H) column layout
+        let mut w1_rows = vec![0.0f32; h * DIM];
+        for i in 0..DIM {
+            for j in 0..h {
+                w1_rows[j * DIM + i] = w1_cols[i * h + j];
+            }
+        }
+        MlpScalar { w1_rows, b1, w2, b2, h }
+    }
+
+    fn score_rows(&self, xs: &[f32], out: &mut [f32]) {
+        for (row, o) in xs.chunks_exact(DIM).zip(out.iter_mut()) {
+            let mut hidden = vec![0.0f32; self.h]; // the seed's per-call alloc
+            let mut f = self.b2;
+            for j in 0..self.h {
+                let w = &self.w1_rows[j * DIM..(j + 1) * DIM];
+                let s = sigmoid(self.b1[j] + para_active::simd::dot(w, row));
+                hidden[j] = s;
+                f += self.w2[j] * s;
+            }
+            black_box(&hidden); // the buffer is the point: keep it alive
+            *o = f;
+        }
+    }
+}
+
+/// One scalar-vs-blocked throughput comparison (rows/s).
+struct PathRow {
+    name: String,
+    scalar_rps: f64,
+    blocked_rps: f64,
+}
+
+/// One row of the machine-readable backend sweep.
 struct SweepRow {
     k: usize,
     serial_s: f64,
@@ -73,11 +164,25 @@ struct SweepRow {
     pooled_s: f64,
 }
 
-fn write_json(cores: usize, shard: usize, rows: &[SweepRow]) {
+fn write_json(cores: usize, shard: usize, paths: &[PathRow], rows: &[SweepRow]) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 1,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 2,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
+    body.push_str("  \"paths\": [\n");
+    for (i, p) in paths.iter().enumerate() {
+        let comma = if i + 1 < paths.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"path\": \"{}\", \"scalar_rows_per_s\": {:.1}, \
+             \"blocked_rows_per_s\": {:.1}, \"speedup\": {:.4}}}{}\n",
+            p.name,
+            p.scalar_rps,
+            p.blocked_rps,
+            p.blocked_rps / p.scalar_rps.max(1e-12),
+            comma
+        ));
+    }
+    body.push_str("  ],\n");
     body.push_str("  \"sweep\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
@@ -109,19 +214,49 @@ fn main() {
     stream.next_batch_into(&mut xs, &mut ys);
     let mut out = vec![0.0f32; batch];
 
-    println!("# sift throughput (examples/s), batch = {batch}");
+    println!("# sift throughput (rows/s), batch = {batch}: scalar per-example vs blocked engine");
+    let mut paths: Vec<PathRow> = Vec::new();
     for n_train in [100usize, 400, 1600] {
         let svm = trained_svm(n_train);
-        let name = format!("svm score_batch (|SV|={})", svm.n_support());
-        bench_throughput(&name, batch as f64, "ex", 2, 10, || {
+        let nsv = svm.n_support();
+        let scalar = SvmScalar::new(&svm);
+        let scalar_name = format!("svm scalar per-example (|SV|={nsv})");
+        let s = bench_throughput(&scalar_name, batch as f64, "row", 2, 10, || {
+            scalar.score_rows(black_box(&xs), &mut out);
+        });
+        let blocked_name = format!("svm blocked score_batch (|SV|={nsv})");
+        let b = bench_throughput(&blocked_name, batch as f64, "row", 2, 10, || {
             svm.score_batch(black_box(&xs), &mut out);
+        });
+        paths.push(PathRow {
+            name: format!("svm_sv{nsv}"),
+            scalar_rps: batch as f64 / s.mean_s,
+            blocked_rps: batch as f64 / b.mean_s,
         });
     }
 
     let mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
-    bench_throughput("mlp score_batch (h=100)", batch as f64, "ex", 2, 20, || {
+    let mlp_scalar = MlpScalar::new(&mlp);
+    let s = bench_throughput("mlp scalar per-example (h=100)", batch as f64, "row", 2, 20, || {
+        mlp_scalar.score_rows(black_box(&xs), &mut out);
+    });
+    let b = bench_throughput("mlp blocked score_batch (h=100)", batch as f64, "row", 2, 20, || {
         mlp.score_batch(black_box(&xs), &mut out);
     });
+    paths.push(PathRow {
+        name: "mlp_h100".to_string(),
+        scalar_rps: batch as f64 / s.mean_s,
+        blocked_rps: batch as f64 / b.mean_s,
+    });
+    for p in &paths {
+        println!(
+            "      blocked speedup {:12} {:.2}x ({:.0} -> {:.0} rows/s)",
+            p.name,
+            p.blocked_rps / p.scalar_rps.max(1e-12),
+            p.scalar_rps,
+            p.blocked_rps
+        );
+    }
 
     let mut sifter = MarginSifter::new(0.1, 3);
     bench_throughput("margin rule decide (Eq 5)", batch as f64, "ex", 2, 50, || {
@@ -196,5 +331,5 @@ fn main() {
         rows.push(SweepRow { k, serial_s, threaded_s, pooled_s });
     }
     println!("      (ideal = min(k, cores) = cores when oversubscribed)");
-    write_json(cores, shard, &rows);
+    write_json(cores, shard, &paths, &rows);
 }

@@ -19,7 +19,10 @@
 //!   with workers instead of serializing behind the old global
 //!   [`LockedScorer`](crate::learner::LockedScorer) mutex. Worker lane
 //!   indices are stable for a pool's lifetime; the serial backend scores
-//!   as worker 0.
+//!   as worker 0. [`ScorerPool::native`] instantiates the same shape for
+//!   the native blocked scoring engine: one
+//!   [`ScoreScratch`](crate::simd::ScoreScratch) per worker, so batch
+//!   scoring stays allocation-free under any pool width.
 //! * [`ReplayExecutor`] (`replay.rs`) — the broadcast update phase as an
 //!   explicit stage: deterministic minibatches ([`ReplayConfig::batch`])
 //!   that stay bit-identical to per-example replay, plus a

@@ -21,6 +21,7 @@
 //! do by construction.
 
 use crate::learner::{Learner, SiftScorer};
+use crate::simd::ScoreScratch;
 use std::sync::Mutex;
 
 /// A stateful batch scorer owned by one pool worker (`&mut self`, unlike
@@ -68,6 +69,29 @@ impl<L: Learner> ScorerPool<L> {
     /// Number of per-worker instances.
     pub fn slots(&self) -> usize {
         self.slots.len()
+    }
+
+    /// One **native blocked scorer per worker**, each owning a private
+    /// [`ScoreScratch`]: worker `w` scores through
+    /// [`Learner::score_batch_scratch`] on scratch that nobody else ever
+    /// touches, so the sift hot path is allocation-free *and*
+    /// contention-free without relying on thread-local storage. This is
+    /// the native-engine twin of the per-worker AOT-runtime pools built
+    /// with [`ScorerPool::build`].
+    pub fn native(slots: usize) -> Self
+    where
+        L: 'static,
+    {
+        ScorerPool::new(
+            (0..slots)
+                .map(|_| {
+                    let mut scratch = ScoreScratch::new();
+                    Box::new(move |l: &L, xs: &[f32], out: &mut [f32]| {
+                        l.score_batch_scratch(xs, out, &mut scratch)
+                    }) as Box<dyn WorkerScorer<L>>
+                })
+                .collect(),
+        )
     }
 }
 
@@ -152,6 +176,20 @@ mod tests {
         assert_eq!(out, [2.0]); // slot 0 advanced twice
         pool.score_on(1, &Flat, &[0.0], &mut out);
         assert_eq!(out, [101.0]); // slot 1 advanced once
+    }
+
+    #[test]
+    fn native_pool_scores_with_private_scratch() {
+        let pool = ScorerPool::<Flat>::native(2);
+        assert_eq!(pool.slots(), 2);
+        let mut out = [0.0f32; 2];
+        pool.score_on(0, &Flat, &[1.0, 2.0], &mut out);
+        assert_eq!(out, [1.0, 2.0]);
+        pool.score_on(1, &Flat, &[3.0, 4.0], &mut out);
+        assert_eq!(out, [3.0, 4.0]);
+        // Repeated calls reuse the same slot scratch without issue.
+        pool.score_on(0, &Flat, &[5.0, 6.0], &mut out);
+        assert_eq!(out, [5.0, 6.0]);
     }
 
     #[test]

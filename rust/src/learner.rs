@@ -20,6 +20,10 @@
 use std::sync::Mutex;
 
 use crate::data::TestSet;
+use crate::simd::ScoreScratch;
+
+/// Rows scored per [`Learner::test_error`] chunk (stack-allocated output).
+const TEST_CHUNK: usize = 128;
 
 /// A passive online learner consuming importance-weighted examples.
 ///
@@ -34,12 +38,24 @@ pub trait Learner: Send + Sync {
     fn score(&self, x: &[f32]) -> f32;
 
     /// Score a flat row-major batch (`xs.len() == out.len() * dim()`).
-    /// Implementations may override with a blocked/vectorized path.
+    /// Implementations may override with a blocked/vectorized path; the
+    /// concrete learners route through [`Learner::score_batch_scratch`] on
+    /// this thread's private scratch, so the override stays allocation-free.
     fn score_batch(&self, xs: &[f32], out: &mut [f32]) {
         let d = self.dim();
         for (row, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
             *o = self.score(row);
         }
+    }
+
+    /// [`Learner::score_batch`] through caller-provided scratch — the
+    /// allocation-free entry point of the blocked scoring engine. Callers
+    /// that own long-lived scratch (pool workers via
+    /// [`crate::exec::ScorerPool::native`], benches) reuse it across every
+    /// call; the default simply ignores the scratch.
+    fn score_batch_scratch(&self, xs: &[f32], out: &mut [f32], scratch: &mut ScoreScratch) {
+        let _ = scratch;
+        self.score_batch(xs, out);
     }
 
     /// One online update with importance weight `w` (w = 1/p for queried
@@ -52,15 +68,24 @@ pub trait Learner: Send + Sync {
     /// Abstract cost of one update at the current model size.
     fn update_ops(&self) -> u64;
 
-    /// 0/1 test error over a held-out set.
+    /// 0/1 test error over a held-out set, evaluated through
+    /// [`Learner::score_batch`] in fixed-size chunks so learners with a
+    /// blocked batch path get it for free (and the output buffer lives on
+    /// the stack — no per-eval allocation).
     fn test_error(&self, ts: &TestSet) -> f64 {
         if ts.is_empty() {
             return 0.0;
         }
+        let d = self.dim();
+        let mut out = [0.0f32; TEST_CHUNK];
         let mut wrong = 0usize;
-        for (x, y) in ts.iter() {
-            if self.score(x) * y <= 0.0 {
-                wrong += 1;
+        for (xc, yc) in ts.xs.chunks(TEST_CHUNK * d).zip(ts.ys.chunks(TEST_CHUNK)) {
+            let m = yc.len();
+            self.score_batch(xc, &mut out[..m]);
+            for (f, y) in out[..m].iter().zip(yc) {
+                if f * y <= 0.0 {
+                    wrong += 1;
+                }
             }
         }
         wrong as f64 / ts.len() as f64
@@ -89,7 +114,9 @@ pub trait SiftScorer<L: Learner>: Sync {
 
     /// Worker-indexed entry point used by the execution pool: worker `w`
     /// of the sift backend scores through `score_on(w, ...)`, so
-    /// implementations holding per-worker state can route to a private
+    /// implementations holding per-worker state — an AOT runtime, or the
+    /// native engine's per-worker [`ScoreScratch`] (see
+    /// [`crate::exec::ScorerPool::native`]) — can route to a private
     /// instance. Stateless scorers ignore the index (this default). The
     /// serial backend always passes 0.
     fn score_on(&self, worker: usize, learner: &L, xs: &[f32], out: &mut [f32]) {

@@ -71,6 +71,7 @@ pub mod prelude {
         WorkerScorer,
     };
     pub use crate::learner::{Learner, LockedScorer, NativeScorer, SiftScorer};
+    pub use crate::simd::ScoreScratch;
     pub use crate::metrics::{ErrorCurve, SpeedupTable};
     pub use crate::nn::{AdaGradMlp, MlpConfig};
     pub use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};

@@ -2,10 +2,19 @@
 //! 100 sigmoidal units, linear output, logistic loss — trained by SGD with
 //! AdaGrad-style adaptive per-parameter step sizes (Duchi et al. 2011;
 //! McMahan & Streeter 2010), with importance-weighted gradients.
+//!
+//! Scoring runs on the blocked engine (`crate::simd`): a tiled
+//! batch×hidden forward that keeps a block of example rows cache-resident
+//! and streams each `w1` row across the block once, with the sigmoid and
+//! output layer folded into the same pass. Single-example scoring is the
+//! one-row case of the same kernel, so `score` and `score_batch` are
+//! bit-for-bit identical at every batch size
+//! (`rust/tests/scoring_equivalence.rs`), and both are allocation-free —
+//! scratch comes from the caller or the thread-local pool.
 
-use crate::data::TestSet;
 use crate::learner::Learner;
 use crate::rng::Rng;
+use crate::simd::{self, ScoreScratch};
 
 /// Hyper-parameters for [`AdaGradMlp`].
 #[derive(Debug, Clone)]
@@ -119,6 +128,10 @@ impl AdaGradMlp {
         (w1, b1, w2, self.b2)
     }
 
+    /// Per-example forward pass that also exposes the hidden activations —
+    /// the update path needs them for backprop. Accumulation order matches
+    /// the blocked kernel exactly (same [`simd::dot`] per unit, `f` summed
+    /// in unit order), so scores agree bit-for-bit with `score_batch`.
     #[inline]
     fn forward(&self, x: &[f32], hidden_out: &mut [f32]) -> f32 {
         let d = self.cfg.input_dim;
@@ -140,8 +153,43 @@ impl Learner for AdaGradMlp {
     }
 
     fn score(&self, x: &[f32]) -> f32 {
-        let mut hidden = vec![0.0f32; self.cfg.hidden];
-        self.forward(x, &mut hidden)
+        // One-row case of the blocked kernel on thread-local scratch: no
+        // per-call heap allocation (the seed allocated a hidden buffer per
+        // example here), bit-identical to the batch path.
+        let mut out = [0.0f32; 1];
+        simd::with_thread_scratch(|s| self.score_batch_scratch(x, &mut out, s));
+        out[0]
+    }
+
+    fn score_batch(&self, xs: &[f32], out: &mut [f32]) {
+        simd::with_thread_scratch(|s| self.score_batch_scratch(xs, out, s));
+    }
+
+    /// Tiled batch×hidden forward: for each block of [`simd::BLOCK_ROWS`]
+    /// examples, one micro-GEMM (`xs · w1ᵀ`) computes every pre-activation
+    /// while each `w1` row is streamed across the block once; the sigmoid
+    /// and the `w2` output fold run in the same pass over the tile.
+    fn score_batch_scratch(&self, xs: &[f32], out: &mut [f32], scratch: &mut ScoreScratch) {
+        let d = self.cfg.input_dim;
+        let h = self.cfg.hidden;
+        debug_assert_eq!(xs.len(), out.len() * d);
+        let z = scratch.primary(simd::BLOCK_ROWS * h);
+        let m_total = out.len();
+        let mut i0 = 0;
+        while i0 < m_total {
+            let m = simd::BLOCK_ROWS.min(m_total - i0);
+            let xb = &xs[i0 * d..(i0 + m) * d];
+            simd::gemm_nt(m, h, d, xb, &self.w1, &mut z[..m * h]);
+            for i in 0..m {
+                let zi = &z[i * h..(i + 1) * h];
+                let mut f = self.b2;
+                for j in 0..h {
+                    f += self.w2[j] * sigmoid(zi[j] + self.b1[j]);
+                }
+                out[i0 + i] = f;
+            }
+            i0 += m;
+        }
     }
 
     fn update(&mut self, x: &[f32], y: f32, w: f32) {
@@ -200,19 +248,9 @@ impl Learner for AdaGradMlp {
         2 * (self.cfg.input_dim * self.cfg.hidden) as u64
     }
 
-    fn test_error(&self, ts: &TestSet) -> f64 {
-        if ts.is_empty() {
-            return 0.0;
-        }
-        let mut hidden = vec![0.0f32; self.cfg.hidden];
-        let mut wrong = 0usize;
-        for (x, y) in ts.iter() {
-            if self.forward(x, &mut hidden) * y <= 0.0 {
-                wrong += 1;
-            }
-        }
-        wrong as f64 / ts.len() as f64
-    }
+    // `test_error` uses the trait default, which chunks through the
+    // blocked `score_batch` — strictly faster than the seed's per-example
+    // forward and bit-identical to it.
 }
 
 #[cfg(test)]
@@ -347,6 +385,30 @@ mod tests {
         assert_eq!(&b1[2..], &[0.0, 0.0, 0.0]);
         // Transposition: w1[(i, j)] == internal w1[j * d + i].
         assert_eq!(w1[0 * 5 + 1], m.w1[1 * 3 + 0]);
+    }
+
+    #[test]
+    fn blocked_batch_is_bit_identical_to_forward() {
+        // Remainder input dim (13 % 8 != 0) and batch sizes straddling the
+        // block height: the tiled kernel must reproduce the per-example
+        // forward pass exactly.
+        let mut cfg = MlpConfig::paper(13);
+        cfg.hidden = 5;
+        let mut m = AdaGradMlp::new(cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..13).map(|_| rng.next_f32() - 0.5).collect();
+            m.update(&x, if rng.coin(0.5) { 1.0 } else { -1.0 }, 1.0);
+        }
+        let mut hidden = vec![0.0f32; 5];
+        for n in [1usize, 7, 8, 33] {
+            let xs: Vec<f32> = (0..n * 13).map(|_| rng.next_f32() - 0.5).collect();
+            let mut out = vec![0.0f32; n];
+            m.score_batch(&xs, &mut out);
+            for (r, o) in xs.chunks_exact(13).zip(&out) {
+                assert_eq!(m.forward(r, &mut hidden).to_bits(), o.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]

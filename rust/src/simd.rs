@@ -1,12 +1,39 @@
-//! Vectorization-friendly inner loops for the sift/update hot paths.
+//! Vectorization-friendly inner loops and the tiled-kernel layer behind
+//! the blocked batch-scoring engine.
 //!
-//! Rust's default float semantics forbid reassociating `acc += d*d` across
-//! iterations, so naive reductions compile to scalar chains. Accumulating
-//! into a fixed-width lane array makes the reassociation explicit and lets
-//! LLVM map it onto SIMD registers (≈8x on AVX2 for the 784-dim loops).
-//! Measured before/after lives in EXPERIMENTS.md §Perf.
+//! Two ideas live here:
+//!
+//! 1. **Lane accumulators.** Rust's default float semantics forbid
+//!    reassociating `acc += d*d` across iterations, so naive reductions
+//!    compile to scalar chains. Accumulating into a fixed-width lane array
+//!    makes the reassociation explicit and lets LLVM map it onto SIMD
+//!    registers (≈8x on AVX2 for the 784-dim loops). Measured before/after
+//!    lives in EXPERIMENTS.md §Perf.
+//! 2. **Row blocking.** The sift hot path scores whole shards against a
+//!    frozen model, so the batch dimension is free parallel structure:
+//!    [`gemm_nt`] keeps a block of [`BLOCK_ROWS`] example rows resident in
+//!    cache and streams each weight/SV row across the block **once**,
+//!    instead of re-streaming the full weight matrix (MLP: 100×784 ≈
+//!    300 KB) or support set per example. Both learners build their
+//!    `score_batch` override on these tiles; [`ScoreScratch`] supplies the
+//!    reusable buffers so the hot path performs zero heap allocations.
+//!
+//! Bit-for-bit discipline: every tile entry is produced by the *same*
+//! [`dot`] kernel regardless of block shape, so blocked results are
+//! invariant to batch size and identical across backends. The equivalence
+//! contract is enforced by `rust/tests/scoring_equivalence.rs`.
+
+use std::cell::RefCell;
 
 const LANES: usize = 8;
+
+/// Example-block height of the tiled scoring kernels: this many input rows
+/// stay cache-resident while weight/SV rows stream across them.
+pub const BLOCK_ROWS: usize = 8;
+
+/// Weight/SV-tile width of the blocked kernels: scratch tiles hold
+/// `BLOCK_ROWS * BLOCK_COLS` values (small enough for L1).
+pub const BLOCK_COLS: usize = 16;
 
 /// Squared Euclidean distance ||a - b||^2.
 #[inline]
@@ -46,6 +73,51 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     acc.iter().sum::<f32>() + ra.iter().zip(rb).map(|(x, y)| x * y).sum::<f32>()
 }
 
+/// Squared Euclidean norm ||a||^2, lane-accumulated. Produces exactly the
+/// bits of `dot(a, a)` (same accumulation pattern), so snapshot norms and
+/// on-the-fly norms agree.
+#[inline]
+pub fn sqnorm(a: &[f32]) -> f32 {
+    let ca = a.chunks_exact(LANES);
+    let r = ca.remainder();
+    let mut acc = [0.0f32; LANES];
+    for xa in ca {
+        for i in 0..LANES {
+            acc[i] += xa[i] * xa[i];
+        }
+    }
+    acc.iter().sum::<f32>() + r.iter().map(|x| x * x).sum::<f32>()
+}
+
+/// Fused a·b **and** ||a||^2 in one pass over `a`, for norm-trick kernels
+/// (`||a - b||^2 = ||a||^2 + ||b||^2 - 2 a·b`) that stream a fresh row
+/// exactly once. Each component is bit-identical to [`dot`] / [`sqnorm`]
+/// run separately, so a fused caller stays on the equivalence contract.
+///
+/// The blocked engine itself does **not** call this: there every example
+/// row meets many SV tiles, so norms are computed once per block
+/// ([`sqnorm`]) and reused, which beats re-fusing them into any single
+/// tile's dots. It belongs to single-pass consumers (streaming scorers,
+/// one-shot kernel rows).
+#[inline]
+pub fn dot_sqnorm(a: &[f32], b: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut dacc = [0.0f32; LANES];
+    let mut nacc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..LANES {
+            dacc[i] += xa[i] * xb[i];
+            nacc[i] += xa[i] * xa[i];
+        }
+    }
+    let d = dacc.iter().sum::<f32>() + ra.iter().zip(rb).map(|(x, y)| x * y).sum::<f32>();
+    let n = nacc.iter().sum::<f32>() + ra.iter().map(|x| x * x).sum::<f32>();
+    (d, n)
+}
+
 /// axpy: y += a * x (used by the blocked scorers).
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
@@ -53,6 +125,84 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += a * xi;
     }
+}
+
+/// Lane-accumulator micro-GEMM against a transposed weight matrix:
+/// `out[i * n + j] = xs_i · ws_j` for `m` rows of `xs` and `n` rows of
+/// `ws`, all of length `d` (`out` is m×n row-major).
+///
+/// Blocking: [`BLOCK_ROWS`] example rows stay cache-resident while each
+/// `ws` row is streamed across the whole block, cutting weight-matrix
+/// memory traffic by the block height — the main win when `ws` (the MLP's
+/// `w1`, an SV tile) exceeds L1/L2. Every entry is produced by the same
+/// [`dot`] kernel, so results are bit-identical for any `m`, which is what
+/// keeps blocked scoring invariant to batch size.
+pub fn gemm_nt(m: usize, n: usize, d: usize, xs: &[f32], ws: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), m * d);
+    debug_assert_eq!(ws.len(), n * d);
+    debug_assert_eq!(out.len(), m * n);
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = BLOCK_ROWS.min(m - i0);
+        for j in 0..n {
+            let w = &ws[j * d..(j + 1) * d];
+            for i in i0..i0 + ib {
+                out[i * n + j] = dot(&xs[i * d..(i + 1) * d], w);
+            }
+        }
+        i0 += ib;
+    }
+}
+
+/// Reusable buffers for the blocked scoring engine. The hot path borrows
+/// slices that grow monotonically and are reused across calls, so
+/// steady-state scoring performs **zero heap allocations**. Contents are
+/// unspecified on entry — kernels must write before reading.
+///
+/// Ownership model: each execution-pool worker owns one (via
+/// [`ScorerPool::native`](crate::exec::ScorerPool::native)), and every
+/// other thread falls back to its private thread-local instance through
+/// [`with_thread_scratch`]; no scratch is ever shared between threads.
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> Self {
+        ScoreScratch::default()
+    }
+
+    /// Borrow the primary buffer with at least `n` elements.
+    pub fn primary(&mut self, n: usize) -> &mut [f32] {
+        grow(&mut self.a, n)
+    }
+
+    /// Borrow two disjoint buffers (e.g. a kernel tile plus row norms).
+    pub fn pair(&mut self, na: usize, nb: usize) -> (&mut [f32], &mut [f32]) {
+        (grow(&mut self.a, na), grow(&mut self.b, nb))
+    }
+}
+
+fn grow(v: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+    &mut v[..n]
+}
+
+thread_local! {
+    static TLS_SCRATCH: RefCell<ScoreScratch> = RefCell::new(ScoreScratch::new());
+}
+
+/// Run `f` with this thread's private [`ScoreScratch`]. Pool workers are
+/// distinct OS threads, so the threaded sift backends get one scratch per
+/// worker with no locking and no allocation after warm-up. Not reentrant:
+/// `f` must not call back into `with_thread_scratch` (the blocked scoring
+/// overrides never do).
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut ScoreScratch) -> R) -> R {
+    TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 #[cfg(test)]
@@ -87,6 +237,73 @@ mod tests {
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() <= 1e-5 * (1.0 + naive.abs()), "n={n}");
         }
+    }
+
+    #[test]
+    fn sqnorm_is_self_dot_bit_for_bit() {
+        for n in [0usize, 1, 7, 8, 9, 33, 784] {
+            let (a, _) = vecs(n, 900 + n as u64);
+            assert_eq!(sqnorm(&a).to_bits(), dot(&a, &a).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_sqnorm_matches_parts_bit_for_bit() {
+        for n in [1usize, 5, 8, 13, 100, 784] {
+            let (a, b) = vecs(n, 300 + n as u64);
+            let (d, nn) = dot_sqnorm(&a, &b);
+            assert_eq!(d.to_bits(), dot(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(nn.to_bits(), sqnorm(&a).to_bits(), "norm n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_per_pair_dot_bit_for_bit() {
+        // Block-shape invariance: every (m, n, d) — including remainders in
+        // every dimension — must reproduce the per-pair dot exactly.
+        const SHAPES: [(usize, usize, usize); 5] =
+            [(1, 1, 3), (3, 5, 13), (8, 16, 8), (9, 17, 21), (33, 7, 784)];
+        for &(m, n, d) in &SHAPES {
+            let mut rng = Rng::new((m * 1000 + n * 10 + d) as u64);
+            let xs: Vec<f32> = (0..m * d).map(|_| rng.next_f32() - 0.5).collect();
+            let ws: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+            let mut out = vec![0.0f32; m * n];
+            gemm_nt(m, n, d, &xs, &ws, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let naive = dot(&xs[i * d..(i + 1) * d], &ws[j * d..(j + 1) * d]);
+                    assert_eq!(
+                        out[i * n + j].to_bits(),
+                        naive.to_bits(),
+                        "m={m} n={n} d={d} at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_not_reallocated() {
+        let mut s = ScoreScratch::new();
+        let p1 = s.primary(128).as_ptr();
+        // A smaller (or equal) request must reuse the same allocation.
+        let p2 = s.primary(64).as_ptr();
+        assert_eq!(p1, p2);
+        let (a, b) = s.pair(100, 50);
+        a[0] = 1.0;
+        b[0] = 2.0; // disjoint buffers
+        assert_eq!(s.pair(100, 50).0[0], 1.0);
+        assert_eq!(s.pair(100, 50).1[0], 2.0);
+    }
+
+    #[test]
+    fn thread_scratch_is_usable() {
+        let sum: f32 = with_thread_scratch(|s| {
+            let buf = s.primary(16);
+            buf.fill(0.5);
+            buf.iter().sum()
+        });
+        assert_eq!(sum, 8.0);
     }
 
     #[test]

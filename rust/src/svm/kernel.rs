@@ -9,6 +9,36 @@ pub trait Kernel: Clone + Send + Sync + 'static {
     fn self_eval(&self, a: &[f32]) -> f32 {
         self.eval(a, a)
     }
+
+    /// Fill the m×n tile `out[i * n + j] = K(xs_i, svs_j)` for `m` example
+    /// rows and `n` support-vector rows of length `d` (`m`/`n` are taken
+    /// from the norm slices; `out` must hold `m * n` values).
+    ///
+    /// `x_sqnorms[i] = ||xs_i||^2` and `sv_sqnorms[j] = ||svs_j||^2` are
+    /// precomputed by the caller (the SV side once per snapshot, the
+    /// example side once per block) so norm-trick kernels pay only a
+    /// dot-product micro-GEMM per tile. Kernels that don't need norms
+    /// ignore them; this default evaluates pairwise and is bit-identical
+    /// to [`Kernel::eval`].
+    fn eval_tile(
+        &self,
+        d: usize,
+        xs: &[f32],
+        x_sqnorms: &[f32],
+        svs: &[f32],
+        sv_sqnorms: &[f32],
+        out: &mut [f32],
+    ) {
+        let (m, n) = (x_sqnorms.len(), sv_sqnorms.len());
+        debug_assert_eq!(xs.len(), m * d);
+        debug_assert_eq!(svs.len(), n * d);
+        debug_assert_eq!(out.len(), m * n);
+        for (i, x) in xs.chunks_exact(d).enumerate() {
+            for (j, s) in svs.chunks_exact(d).enumerate() {
+                out[i * n + j] = self.eval(x, s);
+            }
+        }
+    }
 }
 
 /// Gaussian RBF kernel K(a, b) = exp(-gamma * ||a - b||^2) — the paper uses
@@ -41,6 +71,32 @@ impl Kernel for RbfKernel {
     fn self_eval(&self, _a: &[f32]) -> f32 {
         1.0
     }
+
+    /// Norm-trick tile: one dot-product micro-GEMM, then
+    /// `exp(-gamma * (||a||^2 + ||b||^2 - 2 a·b))` in place. The `max(0.0)`
+    /// clamps the tiny negative distances cancellation can produce when
+    /// a ≈ b (exact zero is what `sqdist` returns there).
+    fn eval_tile(
+        &self,
+        d: usize,
+        xs: &[f32],
+        x_sqnorms: &[f32],
+        svs: &[f32],
+        sv_sqnorms: &[f32],
+        out: &mut [f32],
+    ) {
+        let (m, n) = (x_sqnorms.len(), sv_sqnorms.len());
+        if m == 0 || n == 0 {
+            return;
+        }
+        crate::simd::gemm_nt(m, n, d, xs, svs, out);
+        for (row, &xn) in out.chunks_exact_mut(n).zip(x_sqnorms.iter().take(m)) {
+            for (o, &svn) in row.iter_mut().zip(sv_sqnorms) {
+                let d2 = (xn + svn - 2.0 * *o).max(0.0);
+                *o = (-self.gamma * d2).exp();
+            }
+        }
+    }
 }
 
 /// Linear kernel K(a, b) = a·b (baseline / testing).
@@ -51,6 +107,20 @@ impl Kernel for LinearKernel {
     #[inline]
     fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
         crate::simd::dot(a, b)
+    }
+
+    /// The linear tile *is* the micro-GEMM; norms are unused, and the
+    /// result is bit-identical to pairwise [`Kernel::eval`].
+    fn eval_tile(
+        &self,
+        d: usize,
+        xs: &[f32],
+        x_sqnorms: &[f32],
+        svs: &[f32],
+        sv_sqnorms: &[f32],
+        out: &mut [f32],
+    ) {
+        crate::simd::gemm_nt(x_sqnorms.len(), sv_sqnorms.len(), d, xs, svs, out);
     }
 }
 
@@ -92,5 +162,61 @@ mod tests {
         let k = LinearKernel;
         assert_eq!(k.eval(&[1.0, 2.0], &[3.0, -1.0]), 1.0);
         assert_eq!(k.self_eval(&[3.0, 4.0]), 25.0);
+    }
+
+    fn tile_fixture(m: usize, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::rng::Rng::new((m * 100 + n * 10 + d) as u64);
+        let xs: Vec<f32> = (0..m * d).map(|_| rng.next_f32() - 0.5).collect();
+        let svs: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+        let xn: Vec<f32> = xs.chunks_exact(d).map(crate::simd::sqnorm).collect();
+        let svn: Vec<f32> = svs.chunks_exact(d).map(crate::simd::sqnorm).collect();
+        (xs, svs, xn, svn)
+    }
+
+    #[test]
+    fn rbf_tile_matches_pairwise_eval() {
+        // The norm trick reassociates the distance, so this is a tight
+        // tolerance check, not a bits check (kernel values live in (0, 1]).
+        for &(m, n, d) in &[(1usize, 1usize, 3usize), (3, 5, 13), (9, 17, 8), (8, 16, 784)] {
+            let k = RbfKernel::new(0.4);
+            let (xs, svs, xn, svn) = tile_fixture(m, n, d);
+            let mut out = vec![0.0f32; m * n];
+            k.eval_tile(d, &xs, &xn, &svs, &svn, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let pairwise = k.eval(&xs[i * d..(i + 1) * d], &svs[j * d..(j + 1) * d]);
+                    assert!(
+                        (out[i * n + j] - pairwise).abs() < 1e-5,
+                        "m={m} n={n} d={d} ({i},{j}): {} vs {pairwise}",
+                        out[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn linear_and_default_tiles_are_bit_identical_to_eval() {
+        let (m, n, d) = (5usize, 7usize, 13usize);
+        let (xs, svs, xn, svn) = tile_fixture(m, n, d);
+        let mut lin = vec![0.0f32; m * n];
+        LinearKernel.eval_tile(d, &xs, &xn, &svs, &svn, &mut lin);
+        // Default tile path, via a kernel that doesn't override it.
+        #[derive(Clone)]
+        struct PlainDot;
+        impl Kernel for PlainDot {
+            fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+                crate::simd::dot(a, b)
+            }
+        }
+        let mut def = vec![0.0f32; m * n];
+        PlainDot.eval_tile(d, &xs, &xn, &svs, &svn, &mut def);
+        for i in 0..m {
+            for j in 0..n {
+                let e = crate::simd::dot(&xs[i * d..(i + 1) * d], &svs[j * d..(j + 1) * d]);
+                assert_eq!(lin[i * n + j].to_bits(), e.to_bits());
+                assert_eq!(def[i * n + j].to_bits(), e.to_bits());
+            }
+        }
     }
 }

@@ -17,9 +17,11 @@
 //! PROCESS costs one kernel row (O(|S| * D)) and each direction step costs
 //! O(|S|).
 
+use std::sync::RwLock;
+
 use super::kernel::Kernel;
-use crate::data::TestSet;
 use crate::learner::Learner;
+use crate::simd::{self, ScoreScratch};
 
 /// Tuning for the LASVM solver.
 #[derive(Debug, Clone)]
@@ -48,8 +50,28 @@ impl Default for LaSvmConfig {
     }
 }
 
+/// Compacted view of the live support vectors (`alpha != 0`, not dead):
+/// contiguous points, their signed alphas, and precomputed squared norms
+/// for norm-trick kernels. Rebuilt lazily after a dual step mutates any
+/// alpha; every read path (scoring, `n_support`, `export_support`) then
+/// walks this dense array instead of re-scanning the expansion set's dead
+/// and zero-alpha entries.
+#[derive(Clone, Debug, Default)]
+struct SvSnapshot {
+    /// Live-SV points, flat row-major, in expansion-set index order.
+    pts: Vec<f32>,
+    alpha: Vec<f32>,
+    /// `||sv||^2` per row (the SV side of the RBF norm trick).
+    sqnorms: Vec<f32>,
+}
+
 /// Online LASVM learner over an arbitrary [`Kernel`].
-#[derive(Clone)]
+///
+/// Batch scoring runs on the blocked engine: an example-tile × SV-tile
+/// loop over the compacted [`SvSnapshot`], with [`Kernel::eval_tile`]
+/// producing each tile (for the RBF kernel: a dot-product micro-GEMM plus
+/// the norm trick). Single-example [`Learner::score`] is the one-row case
+/// of the same kernel, so scores are invariant to batch size.
 pub struct LaSvm<K: Kernel> {
     kernel: K,
     cfg: LaSvmConfig,
@@ -71,6 +93,39 @@ pub struct LaSvm<K: Kernel> {
     bias: f32,
     /// Kernel evaluations performed (cost accounting).
     kernel_evals: u64,
+    /// Count of entries with `alpha != 0` (live support vectors),
+    /// maintained incrementally across the 0 ↔ nonzero transitions of
+    /// `pair_step` — the only place alphas move. Makes `n_support` O(1)
+    /// without touching the snapshot.
+    n_live_sv: usize,
+    /// Live-SV snapshot; `None` marks it stale. Interior mutability lets
+    /// the frozen model rebuild it on first read of a sift phase, and the
+    /// lock is only ever write-contended in that instant — all scoring
+    /// afterwards takes the uncontended read path.
+    snapshot: RwLock<Option<SvSnapshot>>,
+}
+
+impl<K: Kernel> Clone for LaSvm<K> {
+    fn clone(&self) -> Self {
+        LaSvm {
+            kernel: self.kernel.clone(),
+            cfg: self.cfg.clone(),
+            dim: self.dim,
+            pts: self.pts.clone(),
+            y: self.y.clone(),
+            alpha: self.alpha.clone(),
+            grad: self.grad.clone(),
+            lo: self.lo.clone(),
+            hi: self.hi.clone(),
+            ktri: self.ktri.clone(),
+            dead: self.dead.clone(),
+            n_dead: self.n_dead,
+            bias: self.bias,
+            kernel_evals: self.kernel_evals,
+            n_live_sv: self.n_live_sv,
+            snapshot: RwLock::new(self.snapshot.read().expect("snapshot lock poisoned").clone()),
+        }
+    }
 }
 
 impl<K: Kernel> LaSvm<K> {
@@ -90,7 +145,56 @@ impl<K: Kernel> LaSvm<K> {
             n_dead: 0,
             bias: 0.0,
             kernel_evals: 0,
+            n_live_sv: 0,
+            snapshot: RwLock::new(Some(SvSnapshot::default())),
         }
+    }
+
+    /// Run `f` against the current live-SV snapshot, rebuilding it first if
+    /// a dual step invalidated it. The fast path is one uncontended read
+    /// lock; the rebuild happens at most once per mutation epoch, and `f`
+    /// always executes under a **shared** read lock — holding the write
+    /// lock across `f` would serialize concurrent sift workers on the
+    /// first pass after every update phase.
+    fn with_snapshot<R>(&self, f: impl FnOnce(&SvSnapshot) -> R) -> R {
+        {
+            let guard = self.snapshot.read().expect("snapshot lock poisoned");
+            if let Some(snap) = guard.as_ref() {
+                return f(snap);
+            }
+        }
+        {
+            let mut guard = self.snapshot.write().expect("snapshot lock poisoned");
+            if guard.is_none() {
+                *guard = Some(self.rebuild_snapshot());
+            }
+        }
+        // Invalidation needs `&mut self`, which cannot coexist with the
+        // `&self` we hold, so the snapshot stays `Some` until we read it.
+        let guard = self.snapshot.read().expect("snapshot lock poisoned");
+        f(guard.as_ref().expect("snapshot rebuilt above"))
+    }
+
+    /// Compact the live support vectors (expansion-set index order, so the
+    /// scoring accumulation order is stable) and precompute their norms.
+    fn rebuild_snapshot(&self) -> SvSnapshot {
+        let mut snap = SvSnapshot::default();
+        for s in 0..self.y.len() {
+            if self.dead[s] || self.alpha[s] == 0.0 {
+                continue;
+            }
+            snap.pts.extend_from_slice(self.point(s));
+            snap.alpha.push(self.alpha[s]);
+            snap.sqnorms.push(simd::sqnorm(self.point(s)));
+        }
+        snap
+    }
+
+    /// Mark the snapshot stale after an alpha changed (`&mut self`, so the
+    /// lock is free and this is just a store).
+    #[inline]
+    fn invalidate_snapshot(&mut self) {
+        *self.snapshot.get_mut().expect("snapshot lock poisoned") = None;
     }
 
     /// Number of live expansion-set entries.
@@ -98,11 +202,11 @@ impl<K: Kernel> LaSvm<K> {
         self.y.len() - self.n_dead
     }
 
-    /// Number of entries with alpha != 0 (actual support vectors).
+    /// Number of entries with alpha != 0 (actual support vectors). O(1):
+    /// the count is maintained across dual steps, never rescanned — and
+    /// reading it does not force a snapshot rebuild.
     pub fn n_support(&self) -> usize {
-        (0..self.y.len())
-            .filter(|&s| !self.dead[s] && self.alpha[s] != 0.0)
-            .count()
+        self.n_live_sv
     }
 
     pub fn bias(&self) -> f32 {
@@ -118,17 +222,10 @@ impl<K: Kernel> LaSvm<K> {
     }
 
     /// Export live (point, signed alpha) pairs — used by the XLA sifter to
-    /// fill the AOT artifact's padded SV capacity, and by tests.
+    /// fill the AOT artifact's padded SV capacity, and by tests. A copy of
+    /// the compacted snapshot, so no dead-entry scan.
     pub fn export_support(&self) -> (Vec<f32>, Vec<f32>) {
-        let mut sv = Vec::new();
-        let mut al = Vec::new();
-        for s in 0..self.y.len() {
-            if !self.dead[s] && self.alpha[s] != 0.0 {
-                sv.extend_from_slice(self.point(s));
-                al.push(self.alpha[s]);
-            }
-        }
-        (sv, al)
+        self.with_snapshot(|snap| (snap.pts.clone(), snap.alpha.clone()))
     }
 
     /// Dual objective value (for invariant tests): W(a) = sum a_s y_s - 1/2 aᵀKa
@@ -243,8 +340,13 @@ impl<K: Kernel> LaSvm<K> {
         if lambda <= 0.0 {
             return 0.0;
         }
+        let live_before = (self.alpha[i] != 0.0) as isize + (self.alpha[j] != 0.0) as isize;
         self.alpha[i] += lambda;
         self.alpha[j] -= lambda;
+        let live_after = (self.alpha[i] != 0.0) as isize + (self.alpha[j] != 0.0) as isize;
+        self.n_live_sv = (self.n_live_sv as isize + live_after - live_before) as usize;
+        // Alphas moved: the live-SV snapshot no longer reflects the model.
+        self.invalidate_snapshot();
         // g_s -= lambda * (K(i,s) - K(j,s)) for every live s.
         for s in 0..self.y.len() {
             if self.dead[s] {
@@ -359,14 +461,65 @@ impl<K: Kernel> Learner for LaSvm<K> {
     }
 
     fn score(&self, x: &[f32]) -> f32 {
-        let mut f = self.bias;
-        for s in 0..self.y.len() {
-            if self.dead[s] || self.alpha[s] == 0.0 {
-                continue;
+        // One-row case of the blocked engine: dead entries cost nothing
+        // (the snapshot is dense) and the result is bit-identical to
+        // `score_batch` at any batch size.
+        let mut out = [0.0f32; 1];
+        simd::with_thread_scratch(|s| self.score_batch_scratch(x, &mut out, s));
+        out[0]
+    }
+
+    fn score_batch(&self, xs: &[f32], out: &mut [f32]) {
+        simd::with_thread_scratch(|s| self.score_batch_scratch(xs, out, s));
+    }
+
+    /// Example-tile × SV-tile scoring over the compacted snapshot:
+    /// [`Kernel::eval_tile`] fills each tile (RBF: micro-GEMM + norm
+    /// trick with both squared-norm sides precomputed), then the alphas
+    /// fold into the accumulators in expansion-set order — the same order
+    /// for every tile shape, so results don't depend on batch size.
+    fn score_batch_scratch(&self, xs: &[f32], out: &mut [f32], scratch: &mut ScoreScratch) {
+        let d = self.dim;
+        debug_assert_eq!(xs.len(), out.len() * d);
+        self.with_snapshot(|snap| {
+            let n_sv = snap.alpha.len();
+            if n_sv == 0 {
+                out.fill(self.bias);
+                return;
             }
-            f += self.alpha[s] * self.kernel.eval(self.point(s), x);
-        }
-        f
+            let (tile, xn) = scratch.pair(simd::BLOCK_ROWS * simd::BLOCK_COLS, simd::BLOCK_ROWS);
+            let m_total = out.len();
+            let mut i0 = 0;
+            while i0 < m_total {
+                let m = simd::BLOCK_ROWS.min(m_total - i0);
+                let xb = &xs[i0 * d..(i0 + m) * d];
+                for (i, row) in xb.chunks_exact(d).enumerate() {
+                    xn[i] = simd::sqnorm(row);
+                }
+                out[i0..i0 + m].fill(self.bias);
+                let mut j0 = 0;
+                while j0 < n_sv {
+                    let n = simd::BLOCK_COLS.min(n_sv - j0);
+                    self.kernel.eval_tile(
+                        d,
+                        xb,
+                        &xn[..m],
+                        &snap.pts[j0 * d..(j0 + n) * d],
+                        &snap.sqnorms[j0..j0 + n],
+                        &mut tile[..m * n],
+                    );
+                    let alphas = &snap.alpha[j0..j0 + n];
+                    for i in 0..m {
+                        let o = &mut out[i0 + i];
+                        for (kv, a) in tile[i * n..(i + 1) * n].iter().zip(alphas) {
+                            *o += a * kv;
+                        }
+                    }
+                    j0 += n;
+                }
+                i0 += m;
+            }
+        });
     }
 
     fn update(&mut self, x: &[f32], y: f32, w: f32) {
@@ -387,18 +540,9 @@ impl<K: Kernel> Learner for LaSvm<K> {
         s * self.dim as u64 + (1 + self.cfg.reprocess_steps as u64) * s
     }
 
-    fn test_error(&self, ts: &TestSet) -> f64 {
-        if ts.is_empty() {
-            return 0.0;
-        }
-        let mut wrong = 0usize;
-        for (x, y) in ts.iter() {
-            if self.score(x) * y <= 0.0 {
-                wrong += 1;
-            }
-        }
-        wrong as f64 / ts.len() as f64
-    }
+    // `test_error` uses the trait default, which chunks through the
+    // blocked `score_batch` — the snapshot is rebuilt once, then every
+    // chunk rides the tiled kernel.
 }
 
 #[cfg(test)]
@@ -526,7 +670,9 @@ mod tests {
             .map(|i| vec![(i as f32 - 5.0) / 2.0, 0.3])
             .collect();
         let before: Vec<f32> = probe.iter().map(|x| svm.score(x)).collect();
+        let support_before = svm.n_support();
         svm.compact();
+        assert_eq!(svm.n_support(), support_before, "compaction changed the live count");
         let after: Vec<f32> = probe.iter().map(|x| svm.score(x)).collect();
         for (b, a) in before.iter().zip(&after) {
             assert!((b - a).abs() < 1e-5, "compaction changed score {b} -> {a}");
@@ -539,18 +685,81 @@ mod tests {
         let (sv, alpha) = svm.export_support();
         assert_eq!(sv.len(), alpha.len() * 2);
         assert_eq!(alpha.len(), svm.n_support());
-        // Score recomputed from the export must match (modulo bias).
+        // Score recomputed from the export must match (modulo bias). The
+        // blocked engine computes RBF values via the norm trick while
+        // `Kernel::eval` streams `sqdist`, so this is a tolerance check.
         let x = [0.7f32, -0.2];
         let mut f = svm.bias();
         for (row, a) in sv.chunks_exact(2).zip(&alpha) {
             f += a * svm.kernel().eval(row, &x);
         }
-        assert!((f - svm.score(&x)).abs() < 1e-5);
+        assert!((f - svm.score(&x)).abs() < 1e-4);
     }
 
     #[test]
     fn kernel_evals_counted() {
         let svm = train_toy(50, 1.0);
         assert!(svm.kernel_evals() > 0);
+    }
+
+    /// Reference count straight off the expansion set (the pre-snapshot
+    /// `n_support` scan).
+    fn scan_support(svm: &LaSvm<RbfKernel>) -> usize {
+        (0..svm.y.len())
+            .filter(|&s| !svm.dead[s] && svm.alpha[s] != 0.0)
+            .count()
+    }
+
+    #[test]
+    fn snapshot_tracks_mutation() {
+        // Updates must invalidate the cached snapshot: scores and support
+        // counts after further training have to match a from-scratch scan
+        // of the expansion set.
+        let mut svm = train_toy(60, 1.0);
+        assert_eq!(svm.n_support(), scan_support(&svm));
+        let probe = [0.2f32, -0.1];
+        let _ = svm.score(&probe); // warm the snapshot
+        let mut rng = Rng::new(7);
+        for _ in 0..40 {
+            let (x, y) = toy_example(&mut rng);
+            svm.update(&x, y, 1.0);
+        }
+        assert_eq!(svm.n_support(), scan_support(&svm));
+        let mut f = svm.bias();
+        for s in 0..svm.y.len() {
+            if !svm.dead[s] && svm.alpha[s] != 0.0 {
+                f += svm.alpha[s] * svm.kernel.eval(svm.point(s), &probe);
+            }
+        }
+        assert!(
+            (f - svm.score(&probe)).abs() < 1e-4,
+            "stale snapshot: scan {f} vs score {}",
+            svm.score(&probe)
+        );
+    }
+
+    #[test]
+    fn batch_scoring_matches_single_bit_for_bit() {
+        // score is the one-row case of the blocked engine, so blocked
+        // batches of any size must reproduce it exactly.
+        let svm = train_toy(120, 1.0);
+        let mut rng = Rng::new(42);
+        for n in [1usize, 7, 8, 33] {
+            let xs: Vec<f32> = (0..n * 2).map(|_| rng.next_f32() - 0.5).collect();
+            let mut out = vec![0.0f32; n];
+            svm.score_batch(&xs, &mut out);
+            for (row, o) in xs.chunks_exact(2).zip(&out) {
+                assert_eq!(svm.score(row).to_bits(), o.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn clone_preserves_scores_and_snapshot() {
+        let svm = train_toy(80, 1.0);
+        let probe = [0.4f32, 0.1];
+        let cloned = svm.clone();
+        assert_eq!(svm.score(&probe).to_bits(), cloned.score(&probe).to_bits());
+        assert_eq!(svm.n_support(), cloned.n_support());
     }
 }

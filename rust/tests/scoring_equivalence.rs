@@ -1,0 +1,266 @@
+//! Contract of the blocked batch-scoring engine (`crate::simd` +
+//! the `score_batch` overrides): blocked scoring is **equivalent to the
+//! per-example path** — bit-for-bit for the MLP (whose kernel reuses the
+//! exact per-unit dot), bit-for-bit across batch sizes for both learners
+//! (tile shape never changes accumulation order), and tolerance-bounded
+//! against naive scalar references where the RBF norm trick reassociates
+//! the distance computation.
+//!
+//! The suite also re-proves that the engine cannot perturb execution
+//! semantics: serial, threaded, and pinned backends — and per-worker
+//! scratch via `ScorerPool::native` — stay bit-identical on full runs.
+//! The CI workers matrix re-runs this file with
+//! `PARA_ACTIVE_TEST_WORKERS` in {1, 2, 8}.
+
+mod common;
+
+use common::{assert_reports_identical, matrix_workers, mlp_run_sync, probe_bits, svm_run_sync};
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::sync::{run_sync, SyncConfig};
+use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use para_active::exec::ScorerPool;
+use para_active::learner::Learner;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::rng::Rng;
+use para_active::simd;
+use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, LinearKernel, RbfKernel};
+
+/// Batch sizes below, at, and straddling the engine's block height.
+const BATCHES: [usize; 5] = [1, 7, 8, 33, 256];
+
+/// Input dims with and without lane remainders (LANES = 8), plus the real
+/// 784-dim task.
+const DIMS: [usize; 4] = [5, 8, 13, 784];
+
+fn random_rows(d: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+fn trained_mlp(d: usize) -> AdaGradMlp {
+    let mut cfg = MlpConfig::paper(d);
+    if d < 100 {
+        cfg.hidden = 7; // keep remainder-dim models tiny but nontrivial
+    }
+    let mut m = AdaGradMlp::new(cfg);
+    let mut rng = Rng::new(d as u64);
+    for _ in 0..40 {
+        let x = random_rows(d, 1, rng.next_u64());
+        m.update(&x, if rng.coin(0.5) { 1.0 } else { -1.0 }, 1.0);
+    }
+    m
+}
+
+fn trained_svm<K: Kernel>(kernel: K, d: usize, n: usize) -> LaSvm<K> {
+    let mut svm = LaSvm::new(kernel, d, LaSvmConfig::default());
+    let mut rng = Rng::new(100 + d as u64);
+    for _ in 0..n {
+        let y = if rng.coin(0.5) { 1.0f32 } else { -1.0 };
+        let mut x = random_rows(d, 1, rng.next_u64());
+        x[0] += y * 1.2; // separable-ish so a real support set forms
+        svm.update(&x, y, 1.0);
+    }
+    svm
+}
+
+#[test]
+fn mlp_blocked_matches_per_example_bit_for_bit() {
+    for &d in &DIMS {
+        let m = trained_mlp(d);
+        for &n in &BATCHES {
+            let xs = random_rows(d, n, 7 * d as u64 + n as u64);
+            let mut out = vec![0.0f32; n];
+            m.score_batch(&xs, &mut out);
+            for (row, o) in xs.chunks_exact(d).zip(&out) {
+                assert_eq!(
+                    m.score(row).to_bits(),
+                    o.to_bits(),
+                    "mlp d={d} batch={n}: blocked != per-example"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mlp_blocked_matches_naive_forward() {
+    // Independent scalar reference (f64 accumulation, no lanes, no tiles).
+    for &d in &[13usize, 784] {
+        let m = trained_mlp(d);
+        let xs = random_rows(d, 9, 31 + d as u64);
+        let mut out = vec![0.0f32; 9];
+        m.score_batch(&xs, &mut out);
+        // Rebuild the forward pass from exported parameters.
+        let h = m.config().hidden;
+        let (w1, b1, w2, b2) = m.export_padded(h); // (D, H) column layout
+        for (r, (row, o)) in xs.chunks_exact(d).zip(&out).enumerate() {
+            let mut f = b2 as f64;
+            for j in 0..h {
+                let mut z = b1[j] as f64;
+                for i in 0..d {
+                    z += (w1[i * h + j] as f64) * (row[i] as f64);
+                }
+                let s = 1.0 / (1.0 + (-z).exp());
+                f += (w2[j] as f64) * s;
+            }
+            assert!(
+                (f - *o as f64).abs() < 1e-3 * (1.0 + f.abs()),
+                "mlp d={d} row {r}: naive {f} vs blocked {o}"
+            );
+        }
+    }
+}
+
+#[test]
+fn svm_blocked_matches_per_example_bit_for_bit() {
+    for &d in &[5usize, 13, 784] {
+        let n_train = if d == 784 { 120 } else { 200 };
+        let svm = trained_svm(RbfKernel::new(0.1), d, n_train);
+        assert!(svm.n_support() > 0, "d={d}: degenerate support set");
+        for &n in &BATCHES {
+            let xs = random_rows(d, n, 900 + 13 * d as u64 + n as u64);
+            let mut out = vec![0.0f32; n];
+            svm.score_batch(&xs, &mut out);
+            for (row, o) in xs.chunks_exact(d).zip(&out) {
+                assert_eq!(
+                    svm.score(row).to_bits(),
+                    o.to_bits(),
+                    "svm d={d} batch={n}: blocked != per-example"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn svm_blocked_is_batch_size_invariant() {
+    // Scoring the same rows inside different batch shapes must be exact:
+    // tile boundaries never change the accumulation order.
+    let svm = trained_svm(RbfKernel::paper(), DIM, 150);
+    let xs = random_rows(DIM, 256, 5151);
+    let mut whole = vec![0.0f32; 256];
+    svm.score_batch(&xs, &mut whole);
+    for &chunk in &[1usize, 7, 33] {
+        for (c, (xc, expect)) in xs.chunks(chunk * DIM).zip(whole.chunks(chunk)).enumerate() {
+            let m = xc.len() / DIM;
+            let mut out = vec![0.0f32; m];
+            svm.score_batch(xc, &mut out);
+            for (a, b) in out.iter().zip(expect) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk} block {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn svm_blocked_matches_naive_reference_within_tolerance() {
+    // The RBF norm trick reassociates ||a - b||^2, so the blocked path is
+    // compared against the exported-support scalar recomputation with a
+    // tight tolerance (kernel values live in (0, 1], alphas are box-
+    // bounded, so absolute-plus-relative 1e-4 is conservative).
+    let svm = trained_svm(RbfKernel::new(0.05), 13, 200);
+    let (sv, alpha) = svm.export_support();
+    let xs = random_rows(13, 33, 777);
+    let mut out = vec![0.0f32; 33];
+    svm.score_batch(&xs, &mut out);
+    for (row, o) in xs.chunks_exact(13).zip(&out) {
+        let mut f = svm.bias();
+        for (p, a) in sv.chunks_exact(13).zip(&alpha) {
+            f += a * svm.kernel().eval(p, row);
+        }
+        assert!(
+            (f - o).abs() < 1e-4 * (1.0 + f.abs()),
+            "naive {f} vs blocked {o}"
+        );
+    }
+}
+
+#[test]
+fn linear_kernel_blocked_is_bit_identical_to_naive() {
+    // No reassociation anywhere on the linear path: tile = micro-GEMM =
+    // the same simd::dot the scalar loop uses, so exact bits end to end.
+    let svm = trained_svm(LinearKernel, 13, 150);
+    assert!(svm.n_support() > 0);
+    let (sv, alpha) = svm.export_support();
+    let xs = random_rows(13, 33, 888);
+    let mut out = vec![0.0f32; 33];
+    svm.score_batch(&xs, &mut out);
+    for (row, o) in xs.chunks_exact(13).zip(&out) {
+        let mut f = svm.bias();
+        for (p, a) in sv.chunks_exact(13).zip(&alpha) {
+            f += a * simd::dot(p, row);
+        }
+        assert_eq!(f.to_bits(), o.to_bits(), "linear naive vs blocked");
+    }
+}
+
+#[test]
+fn blocked_engine_keeps_backends_bit_identical() {
+    // Full runs: the engine sits under every backend, so serial, threaded
+    // (at the CI matrix width), and pinned must still agree exactly.
+    let workers = matrix_workers();
+    let at_width = BackendChoice::Threaded { threads: workers };
+    let (serial, serial_bits) = svm_run_sync(4, 256, 1400, BackendChoice::Serial);
+    let (threaded, threaded_bits) = svm_run_sync(4, 256, 1400, at_width);
+    assert_reports_identical(&serial, &threaded, &format!("svm workers={workers}"));
+    assert_eq!(serial_bits, threaded_bits, "svm workers={workers}: final model");
+    let (pinned, pinned_bits) = svm_run_sync(4, 256, 1400, BackendChoice::Pinned { threads: 2 });
+    assert_reports_identical(&serial, &pinned, "svm pinned");
+    assert_eq!(serial_bits, pinned_bits, "svm pinned: final model");
+
+    let (mserial, mserial_bits) = mlp_run_sync(4, BackendChoice::Serial);
+    let (mthreaded, mthreaded_bits) = mlp_run_sync(4, at_width);
+    assert_reports_identical(&mserial, &mthreaded, &format!("mlp workers={workers}"));
+    assert_eq!(mserial_bits, mthreaded_bits, "mlp workers={workers}: final model");
+    assert!(serial.n_queried > 0 && mserial.n_queried > 0, "degenerate runs");
+}
+
+#[test]
+fn native_scorer_pool_scratch_is_bit_identical() {
+    // Per-worker ScoreScratch instances (ScorerPool::native) against the
+    // shared thread-local path: same engine, same bits, any slot count.
+    let workers = matrix_workers();
+    let run_with_native_pool = |slots: usize| {
+        let stream = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream, 80);
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(4, 256, 128, 1500)
+            .with_backend(BackendChoice::Threaded { threads: workers });
+        let pool: ScorerPool<LaSvm<RbfKernel>> = ScorerPool::native(slots);
+        let report = run_sync(&mut svm, &sifter, &stream, &test, &cfg, &pool);
+        let bits = probe_bits(&svm, &stream);
+        (report, bits)
+    };
+    let (reference, ref_bits) = svm_run_sync(4, 256, 1500, BackendChoice::Serial);
+    for slots in [1usize, 3] {
+        let (run, bits) = run_with_native_pool(slots);
+        assert_reports_identical(&reference, &run, &format!("native pool slots={slots}"));
+        assert_eq!(ref_bits, bits, "native pool slots={slots}: final model");
+    }
+}
+
+#[test]
+fn scoring_real_stream_shards_is_consistent() {
+    // End-to-end sanity on real stream data at shard scale: blocked
+    // scoring of a full shard equals per-example scoring of the same
+    // shard, for both learners.
+    let cfg = StreamConfig::svm_task();
+    let mut stream = ExampleStream::for_node(&cfg, 3);
+    let shard = 192usize;
+    let mut xs = vec![0.0f32; shard * DIM];
+    let mut ys = vec![0.0f32; shard];
+    stream.next_batch_into(&mut xs, &mut ys);
+
+    let svm = trained_svm(RbfKernel::paper(), DIM, 150);
+    let mlp = trained_mlp(DIM);
+    let mut svm_out = vec![0.0f32; shard];
+    let mut mlp_out = vec![0.0f32; shard];
+    svm.score_batch(&xs, &mut svm_out);
+    mlp.score_batch(&xs, &mut mlp_out);
+    for (i, row) in xs.chunks_exact(DIM).enumerate() {
+        assert_eq!(svm.score(row).to_bits(), svm_out[i].to_bits(), "svm row {i}");
+        assert_eq!(mlp.score(row).to_bits(), mlp_out[i].to_bits(), "mlp row {i}");
+    }
+}
