@@ -1,0 +1,252 @@
+"""Numerical mirror of the Rust fused-minibatch-AdaGrad contract.
+
+The dev container has no Rust toolchain (tier-1 runs in CI), so this
+script re-implements the exact float32 arithmetic of
+`rust/src/nn/mod.rs` — lane-accumulated dots, the stable sigmoid, the
+sequential `update`, and the fused `update_batch` (gradient accumulation
+against frozen pre-batch weights + one AdaGrad apply) — and checks the
+bit-level claims `rust/tests/pipeline_equivalence.rs` enforces in CI:
+
+  1. fused batch-of-1 == sequential update, exact f32 bits;
+  2. fused != sequential for batches > 1 (minibatch SGD is a different,
+     deliberately distinct trajectory);
+  3. the pipelined round schedule (replay round t-1 while sifting round
+     t against a snapshot) applies updates and versions sift models
+     identically to the sequential loop under ReplayConfig::stale(·, 1).
+
+Run: python3 python/verify_fused_adagrad.py
+"""
+
+import struct
+
+import numpy as np
+
+LANES = 8
+F32 = np.float32
+
+
+def f32(x):
+    return F32(x)
+
+
+def bits(x):
+    return struct.unpack("<I", struct.pack("<f", float(x)))[0]
+
+
+def lane_dot(a, b):
+    """rust simd::dot — 8-lane accumulator, then an in-order lane sum."""
+    n = len(a)
+    acc = [F32(0.0)] * LANES
+    main = n - n % LANES
+    for c in range(0, main, LANES):
+        for i in range(LANES):
+            acc[i] = F32(acc[i] + F32(a[c + i] * b[c + i]))
+    s = F32(0.0)
+    for i in range(LANES):
+        s = F32(s + acc[i])
+    rem = F32(0.0)
+    for i in range(main, n):
+        rem = F32(rem + F32(a[i] * b[i]))
+    return F32(s + rem)
+
+
+def sigmoid(z):
+    z = F32(z)
+    if z >= 0:
+        e = F32(np.exp(F32(-z)))
+        return F32(F32(1.0) / F32(F32(1.0) + e))
+    e = F32(np.exp(z))
+    return F32(e / F32(F32(1.0) + e))
+
+
+class Mlp:
+    def __init__(self, d, h, rng):
+        self.d, self.h = d, h
+        self.lr = F32(0.07)
+        self.eps = F32(1e-6)
+        self.w1 = rng.uniform(-0.05, 0.05, (h, d)).astype(F32)
+        self.b1 = np.zeros(h, F32)
+        self.w2 = rng.uniform(-0.05, 0.05, h).astype(F32)
+        self.b2 = F32(0.0)
+        self.a_w1 = np.zeros((h, d), F32)
+        self.a_b1 = np.zeros(h, F32)
+        self.a_w2 = np.zeros(h, F32)
+        self.a_b2 = F32(0.0)
+
+    def clone(self):
+        import copy
+
+        return copy.deepcopy(self)
+
+    def forward(self, x):
+        hidden = np.zeros(self.h, F32)
+        f = self.b2
+        for j in range(self.h):
+            z = F32(self.b1[j] + lane_dot(self.w1[j], x))
+            hj = sigmoid(z)
+            hidden[j] = hj
+            f = F32(f + F32(self.w2[j] * hj))
+        return hidden, f
+
+    def update(self, x, y, w):
+        """rust AdaGradMlp::update, statement for statement."""
+        hidden, f = self.forward(x)
+        dl_df = F32(F32(-w * y) * sigmoid(F32(-y * f)))
+        for j in range(self.h):
+            hj = hidden[j]
+            delta = F32(F32(dl_df * self.w2[j]) * F32(hj * F32(F32(1.0) - hj)))
+            if delta == 0.0:
+                continue
+            for i in range(self.d):
+                g = F32(delta * x[i])
+                self.a_w1[j, i] = F32(self.a_w1[j, i] + F32(g * g))
+                self.w1[j, i] = F32(
+                    self.w1[j, i]
+                    - F32(F32(self.lr * g) / F32(F32(np.sqrt(self.a_w1[j, i])) + self.eps))
+                )
+            self.a_b1[j] = F32(self.a_b1[j] + F32(delta * delta))
+            self.b1[j] = F32(
+                self.b1[j]
+                - F32(F32(self.lr * delta) / F32(F32(np.sqrt(self.a_b1[j])) + self.eps))
+            )
+        for j in range(self.h):
+            g = F32(dl_df * hidden[j])
+            self.a_w2[j] = F32(self.a_w2[j] + F32(g * g))
+            self.w2[j] = F32(
+                self.w2[j] - F32(F32(self.lr * g) / F32(F32(np.sqrt(self.a_w2[j])) + self.eps))
+            )
+        self.a_b2 = F32(self.a_b2 + F32(dl_df * dl_df))
+        self.b2 = F32(
+            self.b2 - F32(F32(self.lr * dl_df) / F32(F32(np.sqrt(self.a_b2)) + self.eps))
+        )
+
+    def update_batch(self, xs, ys, ws):
+        """rust AdaGradMlp::update_batch — fused: accumulate, one apply."""
+        g_w1 = np.zeros((self.h, self.d), F32)
+        g_b1 = np.zeros(self.h, F32)
+        g_w2 = np.zeros(self.h, F32)
+        g_b2 = F32(0.0)
+        for x, y, w in zip(xs, ys, ws):
+            hidden, f = self.forward(x)
+            dl_df = F32(F32(-w * y) * sigmoid(F32(-y * f)))
+            for j in range(self.h):
+                hj = hidden[j]
+                g_w2[j] = F32(g_w2[j] + F32(dl_df * hj))
+                delta = F32(F32(dl_df * self.w2[j]) * F32(hj * F32(F32(1.0) - hj)))
+                if delta != 0.0:
+                    g_b1[j] = F32(g_b1[j] + delta)
+                    for i in range(self.d):  # simd::axpy
+                        g_w1[j, i] = F32(g_w1[j, i] + F32(delta * x[i]))
+            g_b2 = F32(g_b2 + dl_df)
+        # apply_adagrad
+        for j in range(self.h):
+            for i in range(self.d):
+                g = g_w1[j, i]
+                self.a_w1[j, i] = F32(self.a_w1[j, i] + F32(g * g))
+                self.w1[j, i] = F32(
+                    self.w1[j, i]
+                    - F32(F32(self.lr * g) / F32(F32(np.sqrt(self.a_w1[j, i])) + self.eps))
+                )
+        for j in range(self.h):
+            g = g_b1[j]
+            self.a_b1[j] = F32(self.a_b1[j] + F32(g * g))
+            self.b1[j] = F32(
+                self.b1[j] - F32(F32(self.lr * g) / F32(F32(np.sqrt(self.a_b1[j])) + self.eps))
+            )
+        for j in range(self.h):
+            g = g_w2[j]
+            self.a_w2[j] = F32(self.a_w2[j] + F32(g * g))
+            self.w2[j] = F32(
+                self.w2[j] - F32(F32(self.lr * g) / F32(F32(np.sqrt(self.a_w2[j])) + self.eps))
+            )
+        self.a_b2 = F32(self.a_b2 + F32(g_b2 * g_b2))
+        self.b2 = F32(
+            self.b2 - F32(F32(self.lr * g_b2) / F32(F32(np.sqrt(self.a_b2)) + self.eps))
+        )
+
+    def state_bits(self):
+        return (
+            [bits(v) for v in self.w1.ravel()]
+            + [bits(v) for v in self.b1]
+            + [bits(v) for v in self.w2]
+            + [bits(self.b2)]
+        )
+
+
+def check_fused_vs_sequential():
+    rng = np.random.default_rng(7)
+    d, h = 13, 5
+    m = Mlp(d, h, rng)
+    for _ in range(15):  # warm
+        x = rng.uniform(-0.5, 0.5, d).astype(F32)
+        # zeros mixed in to hit the delta*0.0 == -0.0 corner
+        x[rng.integers(0, d)] = F32(0.0)
+        m.update(x, F32(rng.choice([-1.0, 1.0])), F32(1.0))
+
+    seq, fused = m.clone(), m.clone()
+    for step in range(25):
+        x = rng.uniform(-0.5, 0.5, d).astype(F32)
+        x[rng.integers(0, d)] = F32(0.0)
+        y, w = F32(rng.choice([-1.0, 1.0])), F32(1.0 + step % 3)
+        seq.update(x, y, w)
+        fused.update_batch([x], [y], [w])
+    assert seq.state_bits() == fused.state_bits(), "batch=1 fused != sequential (bits)"
+    print("ok: fused batch-of-1 == sequential update, exact f32 bits (25 steps)")
+
+    seq, fused = m.clone(), m.clone()
+    xs = [rng.uniform(-0.5, 0.5, d).astype(F32) for _ in range(8)]
+    ys = [F32(rng.choice([-1.0, 1.0])) for _ in range(8)]
+    ws = [F32(1.0)] * 8
+    for x, y, w in zip(xs, ys, ws):
+        seq.update(x, y, w)
+    fused.update_batch(xs, ys, ws)
+    assert seq.state_bits() != fused.state_bits(), "batch=8 fused should differ"
+    print("ok: fused batch-of-8 is a (deliberately) different trajectory")
+
+
+def check_pipeline_schedule():
+    """Trace the coordinator loops symbolically: which model version each
+    round sifts with, and in what order updates apply."""
+
+    def sequential_stale1(rounds):
+        applied, pending, trace = [], [], []
+        for t in range(1, rounds + 1):
+            trace.append(("sift", t, tuple(applied)))  # model = applied rounds
+            pending.append(t)
+            while len(pending) > 1:  # replay_due, keep 1
+                applied.append(pending.pop(0))
+            trace.append(("eval", t, tuple(applied)))
+        while pending:  # final flush
+            applied.append(pending.pop(0))
+        trace.append(("final", rounds, tuple(applied)))
+        return trace
+
+    # The subtlety the loop must honor: the snapshot is cloned before the
+    # overlapped flush, so round t sifts with rounds 1..t-2 applied.
+    def pipelined_correct(rounds):
+        applied, pending, trace = [], [], []
+        for t in range(1, rounds + 1):
+            snapshot = tuple(applied)  # clone before overlap
+            while pending:  # overlap: flush round t-1 into the live model
+                applied.append(pending.pop(0))
+            trace.append(("sift", t, snapshot))
+            pending.append(t)  # submit + end_round after the barrier
+            trace.append(("eval", t, tuple(applied)))
+        while pending:
+            applied.append(pending.pop(0))
+        trace.append(("final", rounds, tuple(applied)))
+        return trace
+
+    a = sequential_stale1(6)
+    b = pipelined_correct(6)
+    # Compare sift-model versions, eval-model versions and final state.
+    sa = [e for e in a if e[0] in ("sift", "eval", "final")]
+    sb = [e for e in b if e[0] in ("sift", "eval", "final")]
+    assert sa == sb, f"schedules diverge:\n  stale(1): {sa}\n  pipeline: {sb}"
+    print("ok: pipelined schedule == stale(·,1) schedule (sift/eval/final model versions)")
+
+
+if __name__ == "__main__":
+    check_fused_vs_sequential()
+    check_pipeline_schedule()
+    print("all checks passed")

@@ -10,22 +10,34 @@
 //! `BENCH_sift.json`. Also times the Eq-5 decision overhead. The per-node
 //! sift rate here bounds the simulated cluster's round time.
 //!
-//! The final section measures the **real** sift-phase speedup over
+//! The next section measures the **real** sift-phase speedup over
 //! [`SerialBackend`] on identical per-node score jobs, two ways per k:
 //! `threaded` runs each round on a throwaway session (workers spawned per
 //! round — the seed behavior), `pooled` runs all rounds inside one
 //! persistent session (workers spawned once, the production path), so the
 //! pooled-minus-threaded gap is exactly the per-round spawn tax that
-//! `rust/src/exec/pool.rs` retires. Results are also written to
-//! `BENCH_sift.json` so the perf trajectory is machine-readable across PRs.
+//! `rust/src/exec/pool.rs` retires.
+//!
+//! Two sections cover the **update phase** (the post-PR-4 bottleneck):
+//! replay throughput of the MLP, sequential per-example vs the fused
+//! minibatch AdaGrad step (`ReplayConfig::fused` — one optimizer apply
+//! per minibatch, forward on the gemm tiles) at several minibatch sizes;
+//! and the end-to-end round time of a full threaded-backend NN run,
+//! strictly-sequenced loop vs the pipelined coordinator
+//! (`coordinator::pipeline`, sift overlapped with replay). Results are
+//! written to `BENCH_sift.json` (schema 3) so the perf trajectory is
+//! machine-readable across PRs.
 
-use para_active::active::{margin::MarginSifter, Sifter};
+use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::benchlib::{bench, bench_throughput, black_box};
 use para_active::coordinator::backend::{
-    NodeJob, NodeSift, SerialBackend, SiftBackend, ThreadedBackend,
+    BackendChoice, NodeJob, NodeSift, SerialBackend, SiftBackend, ThreadedBackend,
 };
-use para_active::data::{ExampleStream, StreamConfig, DIM};
-use para_active::learner::Learner;
+use para_active::coordinator::pipeline::run_pipelined;
+use para_active::coordinator::sync::{run_sync, SyncConfig};
+use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use para_active::exec::{ReplayConfig, ReplayExecutor};
+use para_active::learner::{Learner, NativeScorer};
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::sim::Stopwatch;
 use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
@@ -164,10 +176,33 @@ struct SweepRow {
     pooled_s: f64,
 }
 
-fn write_json(cores: usize, shard: usize, paths: &[PathRow], rows: &[SweepRow]) {
+/// One row of the update-phase (replay) comparison: sequential
+/// per-example replay vs the fused minibatch step, same examples.
+struct UpdateRow {
+    batch: usize,
+    sequential_rps: f64,
+    batched_rps: f64,
+}
+
+/// End-to-end round time of a full NN run: strictly-sequenced loop vs
+/// the pipelined coordinator, identical knobs otherwise.
+struct PipelineRow {
+    rounds: u64,
+    serial_run_s: f64,
+    pipelined_run_s: f64,
+}
+
+fn write_json(
+    cores: usize,
+    shard: usize,
+    paths: &[PathRow],
+    rows: &[SweepRow],
+    updates: &[UpdateRow],
+    pipe: &PipelineRow,
+) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 2,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 3,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -198,7 +233,31 @@ fn write_json(cores: usize, shard: usize, paths: &[PathRow], rows: &[SweepRow]) 
             comma
         ));
     }
-    body.push_str("  ]\n}\n");
+    body.push_str("  ],\n");
+    body.push_str("  \"update\": [\n");
+    for (i, u) in updates.iter().enumerate() {
+        let comma = if i + 1 < updates.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"learner\": \"mlp_h100\", \"batch\": {}, \
+             \"sequential_rows_per_s\": {:.1}, \"batched_rows_per_s\": {:.1}, \
+             \"speedup\": {:.4}}}{}\n",
+            u.batch,
+            u.sequential_rps,
+            u.batched_rps,
+            u.batched_rps / u.sequential_rps.max(1e-12),
+            comma
+        ));
+    }
+    body.push_str("  ],\n");
+    body.push_str(&format!(
+        "  \"pipeline\": {{\"rounds\": {}, \"serial_ms_per_round\": {:.6}, \
+         \"pipelined_ms_per_round\": {:.6}, \"speedup\": {:.4}}}\n",
+        pipe.rounds,
+        pipe.serial_run_s * 1e3 / pipe.rounds.max(1) as f64,
+        pipe.pipelined_run_s * 1e3 / pipe.rounds.max(1) as f64,
+        pipe.serial_run_s / pipe.pipelined_run_s.max(1e-12),
+    ));
+    body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
         Ok(()) => println!("\nwrote BENCH_sift.json"),
         Err(e) => eprintln!("could not write BENCH_sift.json: {e}"),
@@ -331,5 +390,111 @@ fn main() {
         rows.push(SweepRow { k, serial_s, threaded_s, pooled_s });
     }
     println!("      (ideal = min(k, cores) = cores when oversubscribed)");
-    write_json(cores, shard, &paths, &rows);
+
+    // --- Update-phase throughput: sequential vs fused-batched replay. ---
+    // The same broadcast slice replayed into clones of one warmed MLP,
+    // through the ReplayExecutor both times, so the only difference is
+    // per-example `update` loops vs one fused `update_batch` per chunk.
+    println!("\n# update-phase (replay) throughput, MLP h=100");
+    let nn_stream_cfg = StreamConfig::nn_task();
+    let mut nn_stream = ExampleStream::for_node(&nn_stream_cfg, 5);
+    let proto = {
+        let mut m = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..256 {
+            let y = nn_stream.next_into(&mut x);
+            m.update(&x, y, 1.0);
+        }
+        m
+    };
+    let n_upd = 1024usize;
+    let mut uxs = vec![0.0f32; n_upd * DIM];
+    let mut uys = vec![0.0f32; n_upd];
+    nn_stream.next_batch_into(&mut uxs, &mut uys);
+    let uws = vec![1.0f32; n_upd];
+    let mut updates = Vec::new();
+    for batch in [8usize, 64, 256] {
+        let s = bench_throughput(
+            &format!("mlp replay sequential (batch={batch})"),
+            n_upd as f64,
+            "row",
+            1,
+            5,
+            || {
+                let mut m = proto.clone();
+                let mut exec = ReplayExecutor::new(ReplayConfig::synchronous(batch), DIM);
+                black_box(exec.apply_node_direct(&mut m, &uxs, &uys, &uws));
+            },
+        );
+        let b = bench_throughput(
+            &format!("mlp replay fused      (batch={batch})"),
+            n_upd as f64,
+            "row",
+            1,
+            5,
+            || {
+                let mut m = proto.clone();
+                let mut exec = ReplayExecutor::new(ReplayConfig::fused_batches(batch), DIM);
+                black_box(exec.apply_node_direct(&mut m, &uxs, &uys, &uws));
+            },
+        );
+        let row = UpdateRow {
+            batch,
+            sequential_rps: n_upd as f64 / s.mean_s,
+            batched_rps: n_upd as f64 / b.mean_s,
+        };
+        println!(
+            "      batched replay speedup (batch={batch}): {:.2}x ({:.0} -> {:.0} rows/s)",
+            row.batched_rps / row.sequential_rps.max(1e-12),
+            row.sequential_rps,
+            row.batched_rps
+        );
+        updates.push(row);
+    }
+
+    // --- End-to-end round time: strict loop vs pipelined coordinator. ---
+    // One full NN training run per iteration, identical knobs (threaded
+    // backend, fused stale(64, 1) replay — the policy the pipeline
+    // realizes), so the gap is exactly the sift/update overlap.
+    println!("\n# end-to-end NN round time, serial loop vs pipelined (threaded backend)");
+    let nn_test = TestSet::generate(&nn_stream_cfg, 50);
+    let (k_pipe, batch_pipe, warm_pipe) = (4usize, 512usize, 256usize);
+    let budget_pipe = warm_pipe + 8 * batch_pipe; // 8 rounds
+    let base_cfg = || {
+        let mut cfg = SyncConfig::new(k_pipe, batch_pipe, warm_pipe, budget_pipe)
+            .with_backend(BackendChoice::threaded())
+            .with_replay(ReplayConfig::stale(64, 1).with_fused(true));
+        cfg.eval_every_rounds = 0; // keep evaluation out of the round loop
+        cfg
+    };
+    let mut rounds_run = 0u64;
+    let serial_stats = bench("nn run 8 rounds [strict loop]", 1, 3, || {
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let sifter = SifterSpec::margin(0.0005, 5);
+        let r = run_sync(&mut mlp, &sifter, &nn_stream_cfg, &nn_test, &base_cfg(), &NativeScorer);
+        rounds_run = r.rounds;
+        black_box(r.n_queried);
+    });
+    let piped_stats = bench("nn run 8 rounds [pipelined]", 1, 3, || {
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let sifter = SifterSpec::margin(0.0005, 5);
+        let cfg = base_cfg().with_pipeline();
+        let r = run_pipelined(&mut mlp, &sifter, &nn_stream_cfg, &nn_test, &cfg, &NativeScorer);
+        assert!(r.pipelined, "pipelined bench fell back to the strict loop");
+        black_box(r.n_queried);
+    });
+    let pipe = PipelineRow {
+        rounds: rounds_run,
+        serial_run_s: serial_stats.mean_s,
+        pipelined_run_s: piped_stats.mean_s,
+    };
+    println!(
+        "      pipelined round speedup: {:.2}x ({:.2} -> {:.2} ms/round over {} rounds)",
+        pipe.serial_run_s / pipe.pipelined_run_s.max(1e-12),
+        pipe.serial_run_s * 1e3 / pipe.rounds.max(1) as f64,
+        pipe.pipelined_run_s * 1e3 / pipe.rounds.max(1) as f64,
+        pipe.rounds
+    );
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe);
 }

@@ -77,6 +77,26 @@ pub trait SiftSession {
     /// Run all jobs of one round and return their results in job order.
     fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift>;
 
+    /// Run one round's jobs while `overlap` executes on the calling
+    /// thread; results still come back in job order. This is the hook the
+    /// pipelined coordinator uses to replay round t's updates into the
+    /// live model while the backend sifts round t+1 against an immutable
+    /// snapshot. Contract: `overlap` must not touch anything the jobs
+    /// borrow (the snapshot discipline guarantees it).
+    ///
+    /// The default runs `overlap` first, then the jobs, inline — correct
+    /// (and bit-identical, since the jobs read only the snapshot) for
+    /// sessions without real concurrency; the pool session overrides this
+    /// with a genuine overlap ([`WorkerPool::run_round_with`]).
+    fn run_round_overlapping(
+        &self,
+        jobs: Vec<NodeJob<'_>>,
+        overlap: &mut dyn FnMut(),
+    ) -> Vec<NodeSift> {
+        overlap();
+        self.run_round(jobs)
+    }
+
     /// Execution counters so far (worker count, threads spawned, rounds).
     fn stats(&self) -> PoolStats;
 }
@@ -167,6 +187,16 @@ struct PoolSession<'a> {
 impl SiftSession for PoolSession<'_> {
     fn run_round(&self, jobs: Vec<NodeJob<'_>>) -> Vec<NodeSift> {
         self.pool.run_round(jobs)
+    }
+
+    fn run_round_overlapping(
+        &self,
+        jobs: Vec<NodeJob<'_>>,
+        overlap: &mut dyn FnMut(),
+    ) -> Vec<NodeSift> {
+        // Genuine overlap: the workers sift while the caller's closure
+        // runs on the coordinator thread, meeting at the pool's barrier.
+        self.pool.run_round_with(jobs, overlap).0
     }
 
     fn stats(&self) -> PoolStats {
@@ -393,6 +423,24 @@ mod tests {
             assert_eq!(stats.threads_spawned, 0);
             assert_eq!(stats.rounds, 2);
         });
+    }
+
+    #[test]
+    fn overlapping_round_returns_node_order_on_every_backend() {
+        let backends: Vec<Box<dyn SiftBackend>> =
+            vec![Box::new(SerialBackend), Box::new(ThreadedBackend::with_threads(3))];
+        for backend in backends {
+            backend.with_session(&mut |session| {
+                let mut overlapped = 0u32;
+                let out = session.run_round_overlapping(tagged_jobs(5, true), &mut || {
+                    overlapped += 1;
+                });
+                let tags: Vec<u64> = out.iter().map(|r| r.sift_ops).collect();
+                assert_eq!(tags, vec![0, 1, 2, 3, 4], "{}", backend.name());
+                assert_eq!(overlapped, 1, "{}: overlap ran once", backend.name());
+                assert_eq!(session.stats().rounds, 1);
+            });
+        }
     }
 
     #[test]

@@ -22,6 +22,16 @@
 //! The deterministic event-driven variant lives in [`super::async_sim`];
 //! this module is the "it actually runs" counterpart used by the
 //! end-to-end example and smoke tests.
+//!
+//! Live replicas deliberately do **not** use the fused minibatch update
+//! path ([`Learner::update_batch`]): each node drains its Q_S at
+//! timing-dependent moments, so fused chunk *boundaries* would differ
+//! between replicas — and for a fused learner (minibatch SGD) different
+//! boundaries mean different models, breaking the replica-agreement
+//! invariant this module asserts. Per-example application keeps every
+//! replica a pure function of the broadcast order alone. Batched updates
+//! belong to the synchronous/pipelined coordinators, where chunking is
+//! deterministic ([`crate::exec::ReplayConfig::fused`]).
 
 use crate::active::Sifter;
 use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};

@@ -3,6 +3,14 @@
 //! * [`sync`] — Algorithm 1 (synchronous rounds; the configuration the
 //!   paper measures in §4). The per-node sift phases run on a pluggable
 //!   [`backend::SiftBackend`];
+//! * [`pipeline`] — Algorithm 1 with **pipelined rounds**: the backend
+//!   sifts round t+1 against an epoch-versioned immutable model snapshot
+//!   while the coordinator thread replays round t's selections (Theorem
+//!   1's one-round staleness, realized as overlap). Bit-identical to a
+//!   `ReplayConfig::stale(·, 1)` sequential run
+//!   (`tests/pipeline_equivalence.rs`); selected via
+//!   [`sync::SyncConfig::with_pipeline`] or the `pipeline` field on the
+//!   experiment configs below;
 //! * [`backend`] — sift-phase execution backends:
 //!   [`backend::SerialBackend`] (one node after another, the paper's
 //!   measurement protocol) and [`backend::ThreadedBackend`] (a persistent
@@ -33,6 +41,7 @@ pub mod async_sim;
 pub mod backend;
 pub mod broadcast;
 pub mod live;
+pub mod pipeline;
 pub mod sync;
 
 use crate::active::SifterSpec;
@@ -59,8 +68,12 @@ pub struct SvmExperimentConfig {
     pub seed: u64,
     /// Sift-phase execution backend.
     pub backend: BackendChoice,
-    /// Update-phase replay tuning (minibatch size, bounded staleness).
+    /// Update-phase replay tuning (minibatch size, bounded staleness,
+    /// fused minibatch application).
     pub replay: ReplayConfig,
+    /// Pipelined rounds: overlap each round's sift with the previous
+    /// round's replay (implies one round of staleness).
+    pub pipeline: bool,
 }
 
 impl SvmExperimentConfig {
@@ -76,6 +89,7 @@ impl SvmExperimentConfig {
             seed: 0x51,
             backend: BackendChoice::Serial,
             replay: ReplayConfig::default(),
+            pipeline: false,
         }
     }
 
@@ -107,8 +121,12 @@ pub struct NnExperimentConfig {
     pub seed: u64,
     /// Sift-phase execution backend.
     pub backend: BackendChoice,
-    /// Update-phase replay tuning (minibatch size, bounded staleness).
+    /// Update-phase replay tuning (minibatch size, bounded staleness,
+    /// fused minibatch application).
     pub replay: ReplayConfig,
+    /// Pipelined rounds: overlap each round's sift with the previous
+    /// round's replay (implies one round of staleness).
+    pub pipeline: bool,
 }
 
 impl NnExperimentConfig {
@@ -122,6 +140,7 @@ impl NnExperimentConfig {
             seed: 0x52,
             backend: BackendChoice::Serial,
             replay: ReplayConfig::default(),
+            pipeline: false,
         }
     }
 
@@ -156,7 +175,12 @@ pub fn run_sync_svm(
         .with_backend(cfg.backend)
         .with_replay(cfg.replay)
         .with_label(format!("svm parallel-active k={nodes}"));
-    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    if cfg.pipeline {
+        let sc = sc.with_pipeline();
+        pipeline::run_pipelined(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    } else {
+        run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    }
 }
 
 /// Run the passive SVM baseline (sequential, every example updates).
@@ -188,7 +212,12 @@ pub fn run_sync_nn(
         .with_backend(cfg.backend)
         .with_replay(cfg.replay)
         .with_label(format!("nn parallel-active k={nodes}"));
-    run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    if cfg.pipeline {
+        let sc = sc.with_pipeline();
+        pipeline::run_pipelined(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    } else {
+        run_sync(&mut learner, &sifter, stream_cfg, &test, &sc, &NativeScorer)
+    }
 }
 
 /// Run the passive NN baseline.
@@ -240,6 +269,26 @@ mod tests {
         let r = run_sync_svm(&cfg, &stream, 2, 1100);
         assert_eq!(r.backend, "threaded");
         assert!(r.n_seen >= 1100);
+    }
+
+    #[test]
+    fn wrapper_pipeline_is_config_selected() {
+        let mut cfg = SvmExperimentConfig::small();
+        cfg.test_size = 80;
+        cfg.pipeline = true;
+        cfg.backend = BackendChoice::threaded();
+        let stream = StreamConfig::svm_task();
+        let r = run_sync_svm(&cfg, &stream, 2, 1100);
+        assert!(r.pipelined);
+        assert_eq!(r.backend, "threaded");
+        assert!(r.n_seen >= 1100);
+        let mut nn_cfg = NnExperimentConfig::small();
+        nn_cfg.test_size = 60;
+        nn_cfg.pipeline = true;
+        nn_cfg.replay = ReplayConfig::fused_batches(32);
+        let r = run_sync_nn(&nn_cfg, &StreamConfig::nn_task(), 2, 700);
+        assert!(r.pipelined);
+        assert!(r.replay.fused_minibatches > 0);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Pipelined rounds — overlap the sift phase with the update phase.
+//!
+//! Theorem 1 is the license for this module: the IWAL guarantee "does not
+//! deteriorate when the sifting process relies on a slightly outdated
+//! model", so round t+1's sift does not have to wait for round t's
+//! updates. [`run_pipelined`] turns the strictly alternating
+//! sift → update → sift loop of [`super::sync`] into a two-stage
+//! pipeline:
+//!
+//! ```text
+//!             round t                round t+1              round t+2
+//! backend:    sift vs snapshot(t-1)  sift vs snapshot(t)    sift vs ...
+//! coordinator:replay round t-1       replay round t         replay ...
+//! ```
+//!
+//! Each round clones the learner into an **epoch-versioned immutable
+//! snapshot** (epoch = rounds fully applied; for LASVM the clone carries
+//! the PR 4 compacted live-SV snapshot, for the MLP the flat weight
+//! state), hands the backend one sift job per node against that snapshot,
+//! and — *while those jobs run* — replays the previous round's pooled
+//! selections into the live model on the coordinator thread
+//! ([`SiftSession::run_round_overlapping`], backed by
+//! [`WorkerPool::run_round_with`](crate::exec::WorkerPool::run_round_with)
+//! on the pool backends). The sifted model therefore lags the applied
+//! updates by exactly one round.
+//!
+//! **The equivalence contract.** That one-round lag is precisely the
+//! `max_stale_rounds = 1` policy of
+//! [`ReplayConfig`](crate::exec::ReplayConfig), so a pipelined run is
+//! **bit-identical** to a `ReplayConfig::stale(batch, 1)` run of the
+//! sequential loop on the same seeds — same selections, same broadcast
+//! order, same curve, same cost counters — on every backend
+//! (`tests/pipeline_equivalence.rs` enforces the full cross). Pipelining
+//! changes only wall-clock and the simulated round charge, which becomes
+//! `max(sift, update)` instead of `sift + update`
+//! ([`RoundClock::charge_round_overlapped`]).
+//!
+//! Combine with [`ReplayConfig::fused`] to make the overlapped update
+//! phase itself data-parallel over each minibatch (the MLP's fused
+//! AdaGrad step): `--pipeline --update-batch` on the CLI.
+
+use super::backend::{NodeJob, SiftBackend, SiftSession};
+use super::sync::{
+    make_lanes, record, warmstart_phase, CostCounters, SyncConfig, SyncReport, WallTimes,
+};
+use crate::active::SifterSpec;
+use crate::data::{StreamConfig, TestSet, DIM};
+use crate::exec::{ReplayExecutor, ReplayOutcome};
+use crate::learner::{Learner, SiftScorer};
+use crate::metrics::ErrorCurve;
+use crate::sim::{NodeProfile, RoundClock, Stopwatch};
+
+/// Run Algorithm 1 with pipelined rounds on the backend named by
+/// `cfg.backend`. Requires `Learner: Clone` for the per-round model
+/// snapshots; `cfg.replay.max_stale_rounds` must be 1 (see
+/// [`SyncConfig::with_pipeline`], which arranges both this and the flag).
+pub fn run_pipelined<L: Learner + Clone>(
+    learner: &mut L,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    scorer: &dyn SiftScorer<L>,
+) -> SyncReport {
+    let backend = cfg.backend.build();
+    run_pipelined_on(learner, sifter, stream_cfg, test, cfg, scorer, backend.as_ref())
+}
+
+/// [`run_pipelined`] with an explicitly injected backend (equivalence
+/// tests, custom backends). The whole round loop executes inside the
+/// backend's session, exactly like [`super::sync::run_sync_on`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipelined_on<L: Learner + Clone>(
+    learner: &mut L,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    scorer: &dyn SiftScorer<L>,
+    backend: &dyn SiftBackend,
+) -> SyncReport {
+    let name = backend.name();
+    let mut report = None;
+    backend.with_session(&mut |session| {
+        report = Some(run_rounds_pipelined(
+            &mut *learner,
+            sifter,
+            stream_cfg,
+            test,
+            cfg,
+            scorer,
+            name,
+            session,
+        ));
+    });
+    report.expect("backend never ran the session body")
+}
+
+/// The pipelined round loop proper. Mirrors `sync::run_rounds` statement
+/// for statement wherever the two share semantics; the differences are
+/// exactly (1) sift jobs score an epoch-versioned snapshot clone, (2) the
+/// previous round's replay happens inside the overlap closure, (3) the
+/// simulated clock charges `max(sift, update)`.
+#[allow(clippy::too_many_arguments)]
+fn run_rounds_pipelined<L: Learner + Clone>(
+    learner: &mut L,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    scorer: &dyn SiftScorer<L>,
+    backend_name: &'static str,
+    session: &dyn SiftSession,
+) -> SyncReport {
+    assert!(cfg.nodes >= 1);
+    assert!(cfg.global_batch >= cfg.nodes, "need at least one example per node");
+    assert_eq!(
+        cfg.replay.max_stale_rounds, 1,
+        "pipelined rounds realize exactly one round of staleness; \
+         use SyncConfig::with_pipeline (it sets max_stale_rounds = 1)"
+    );
+    let k = cfg.nodes;
+    let shard = cfg.global_batch / k;
+    let profile = cfg.profile.clone().unwrap_or_else(|| NodeProfile::uniform(k));
+    assert_eq!(profile.k(), k);
+    let mut clock = RoundClock::new(profile, cfg.comm);
+    let mut costs = CostCounters::default();
+    let mut wall = WallTimes::default();
+    let mut replay = ReplayExecutor::new(cfg.replay, DIM);
+    let mut total_sw = Stopwatch::start();
+
+    let mut lanes = make_lanes(stream_cfg, sifter, k, shard);
+
+    let mut curve = ErrorCurve::new(cfg.label.clone());
+    let mut n_seen: u64 = 0;
+    let mut n_queried: u64 = 0;
+
+    // --- Warmstart: identical to the sequential loop. ---
+    warmstart_phase(
+        learner,
+        &mut lanes[0],
+        cfg.warmstart,
+        &mut clock,
+        &mut costs,
+        &mut wall,
+        &mut n_seen,
+    );
+    record(&mut curve, &clock, learner, test, n_seen, n_queried);
+
+    // --- Pipelined rounds. ---
+    let needs_scores = sifter.needs_scores();
+    // Snapshot version: rounds whose selections the snapshot has absorbed.
+    // The clone taken at round t carries epoch t-1 (round t-1 is still in
+    // flight), which is exactly the model a stale(·, 1) sequential run
+    // sifts with.
+    let mut epoch: u64 = 0;
+
+    while (n_seen as usize) < cfg.budget {
+        // n in Eq (5): cumulative examples seen before this sift phase.
+        let n_phase = n_seen;
+
+        // Draw every node's shard up front — generation untimed, off both
+        // clocks, exactly like the sequential loop.
+        for lane in &mut lanes {
+            lane.stream.next_batch_into(&mut lane.xs, &mut lane.ys);
+        }
+
+        // The epoch-versioned immutable snapshot this round sifts against.
+        // Cloned before the overlap, so the pending replay cannot touch it.
+        let frozen: L = learner.clone();
+        let jobs: Vec<NodeJob<'_>> = lanes
+            .iter_mut()
+            .map(|lane| {
+                let frozen = &frozen;
+                let job: NodeJob<'_> = Box::new(move |worker| {
+                    lane.sift_round(frozen, scorer, shard, n_phase, needs_scores, worker)
+                });
+                job
+            })
+            .collect();
+
+        // Stage overlap: the backend sifts round t against the snapshot
+        // while this thread replays round t-1 into the live model.
+        let mut update_secs = 0.0;
+        let mut applied = ReplayOutcome::default();
+        let mut sw = Stopwatch::start();
+        let results = session.run_round_overlapping(jobs, &mut || {
+            let mut usw = Stopwatch::start();
+            applied.absorb(replay.flush(learner));
+            update_secs += usw.lap();
+        });
+        // `wall.sift` takes the whole overlapped region — which contains
+        // the concurrent replay — and `wall.update` reports the replay on
+        // its own; see the WallTimes docs for why they double-cover here
+        // (the decomposition is unknowable under true overlap).
+        wall.sift += sw.lap();
+        n_seen += (k * shard) as u64;
+        drop(frozen);
+
+        // Pool this round's selections in node-major broadcast order; they
+        // stay queued until the next round's overlap (the one-round lag).
+        let mut selected = 0usize;
+        let mut ssw = Stopwatch::start();
+        for node in &results {
+            replay.submit_node(&node.sel_x, &node.sel_y, &node.sel_w);
+            selected += node.sel_y.len();
+            costs.sift_ops += node.sift_ops;
+        }
+        replay.end_round();
+        update_secs += ssw.lap();
+        costs.update_ops += applied.update_ops;
+        wall.update += update_secs;
+        n_queried += selected as u64;
+        costs.broadcasts += selected as u64;
+        epoch += 1;
+
+        // The overlapped phases cost max(sift, update) of simulated time.
+        let node_sift: Vec<f64> = results.iter().map(|r| r.seconds).collect();
+        clock.charge_round_overlapped(&node_sift, update_secs, selected, DIM * 4);
+
+        let do_eval = cfg.eval_every_rounds > 0
+            && clock.rounds() % cfg.eval_every_rounds as u64 == 0;
+        if do_eval {
+            record(&mut curve, &clock, learner, test, n_seen, n_queried);
+        }
+    }
+    debug_assert_eq!(epoch, clock.rounds());
+
+    // Drain the one round still in flight so the final model has absorbed
+    // every broadcast selection (identical to the stale(·, 1) drain).
+    if replay.pending_examples() > 0 {
+        let mut sw = Stopwatch::start();
+        let tail = replay.flush(learner);
+        let tail_secs = sw.lap();
+        costs.update_ops += tail.update_ops;
+        wall.update += tail_secs;
+        clock.charge_update(tail_secs);
+    }
+    record(&mut curve, &clock, learner, test, n_seen, n_queried);
+    wall.total = total_sw.lap();
+
+    SyncReport {
+        rounds: clock.rounds(),
+        n_seen,
+        n_queried,
+        elapsed: clock.elapsed_seconds(),
+        sift_time: clock.sift_time,
+        update_time: clock.update_time,
+        warmstart_time: clock.warmstart_time,
+        comm_time: clock.comm_time,
+        wall,
+        backend: backend_name,
+        pipelined: true,
+        pool: session.stats(),
+        replay: replay.stats(),
+        costs,
+        curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::BackendChoice;
+    use crate::exec::ReplayConfig;
+    use crate::learner::NativeScorer;
+    use crate::nn::{AdaGradMlp, MlpConfig};
+    use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+    fn small_svm() -> LaSvm<RbfKernel> {
+        LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default())
+    }
+
+    #[test]
+    fn pipelined_svm_learns_and_reports() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 150);
+        let mut svm = small_svm();
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(4, 400, 300, 2300).with_pipeline();
+        let report = run_pipelined(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+        assert!(report.pipelined);
+        assert_eq!(report.rounds, 5);
+        assert!(report.n_queried > 0);
+        assert!(report.final_test_errors() < 0.3, "err {}", report.final_test_errors());
+        // Every deferred selection was eventually applied.
+        assert_eq!(report.replay.applied, report.replay.submitted);
+        assert_eq!(report.replay.applied, report.n_queried);
+        // The simulated clock charged max(sift, update), never their sum:
+        // total elapsed stays at or below the phase totals plus warmstart.
+        let phases = report.sift_time
+            + report.update_time
+            + report.comm_time
+            + report.warmstart_time;
+        assert!(report.elapsed <= phases + 1e-12);
+    }
+
+    #[test]
+    fn pipelined_runs_on_the_threaded_backend() {
+        let stream_cfg = StreamConfig::nn_task();
+        let test = TestSet::generate(&stream_cfg, 60);
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let sifter = SifterSpec::margin(0.0005, 11);
+        let cfg = SyncConfig::new(2, 128, 96, 700)
+            .with_backend(BackendChoice::Threaded { threads: 2 })
+            .with_replay(ReplayConfig::fused_batches(16))
+            .with_pipeline();
+        let report = run_pipelined(&mut mlp, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+        assert!(report.pipelined);
+        assert_eq!(report.backend, "threaded");
+        assert_eq!(report.pool.threads_spawned, 2);
+        assert!(report.n_seen >= 700);
+        // The MLP fuses, so fused minibatches were really applied.
+        assert!(report.replay.fused_minibatches > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "one round of staleness")]
+    fn pipelined_rejects_mismatched_staleness() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let mut svm = small_svm();
+        let sifter = SifterSpec::margin(0.1, 7);
+        // `pipeline` set by hand without the stale(·, 1) policy.
+        let mut cfg = SyncConfig::new(2, 100, 50, 400);
+        cfg.pipeline = true;
+        run_pipelined(&mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+    }
+
+    #[test]
+    #[should_panic(expected = "run_pipelined")]
+    fn sequential_loop_rejects_the_pipeline_flag() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let mut svm = small_svm();
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(2, 100, 50, 400).with_pipeline();
+        crate::coordinator::sync::run_sync(
+            &mut svm, &sifter, &stream_cfg, &test, &cfg, &NativeScorer,
+        );
+    }
+}

@@ -73,6 +73,14 @@ pub struct SyncConfig {
     pub backend: BackendChoice,
     /// Replay tuning for the update phase (defaults to synchronous).
     pub replay: ReplayConfig,
+    /// Run the two-stage pipelined round loop
+    /// ([`super::pipeline::run_pipelined`]): the backend sifts round t+1
+    /// against an immutable model snapshot while the coordinator thread
+    /// replays round t's selections. Requires `Learner: Clone` — the
+    /// plain [`run_sync`] entry points reject it — and implies
+    /// `replay.max_stale_rounds == 1`, which is exactly the lag the
+    /// pipeline realizes.
+    pub pipeline: bool,
     /// Label for the report curve.
     pub label: String,
 }
@@ -89,6 +97,7 @@ impl SyncConfig {
             comm: CommModel::free(),
             backend: BackendChoice::Serial,
             replay: ReplayConfig::default(),
+            pipeline: false,
             label: format!("sync k={nodes}"),
         }
     }
@@ -105,6 +114,16 @@ impl SyncConfig {
 
     pub fn with_replay(mut self, replay: ReplayConfig) -> Self {
         self.replay = replay;
+        self
+    }
+
+    /// Switch on the pipelined round loop. Forces
+    /// `replay.max_stale_rounds = 1` — pipelining realizes exactly one
+    /// round of staleness, so `pipeline ≡ stale(·, 1)` by construction
+    /// (`tests/pipeline_equivalence.rs`).
+    pub fn with_pipeline(mut self) -> Self {
+        self.pipeline = true;
+        self.replay.max_stale_rounds = 1;
         self
     }
 }
@@ -125,6 +144,13 @@ pub struct CostCounters {
 /// backend region (so with the threaded backend it approaches the max-node
 /// time instead of the sum); `total` additionally includes data generation
 /// and evaluation, which the simulated clock deliberately excludes.
+///
+/// **Pipelined runs** ([`SyncReport::pipelined`]): the phases overlap by
+/// construction, so `sift` covers the whole overlapped region — which
+/// *contains* the concurrent replay — while `update` still reports the
+/// replay work on its own. The two deliberately double-cover the overlap
+/// and must not be summed; compare `total` (or the simulated clock, which
+/// charges `max(sift, update)`) across runs instead.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WallTimes {
     pub sift: f64,
@@ -150,6 +176,10 @@ pub struct SyncReport {
     pub wall: WallTimes,
     /// Name of the sift backend that executed the run.
     pub backend: &'static str,
+    /// Whether the pipelined round loop produced this report (sift and
+    /// update phases overlapped; the simulated clock charged
+    /// `max(sift, update)` per round instead of their sum).
+    pub pipelined: bool,
     /// Execution-pool counters (worker count, threads spawned, rounds). A
     /// healthy persistent pool reports `threads_spawned == workers` no
     /// matter how many rounds ran.
@@ -170,13 +200,62 @@ impl SyncReport {
 }
 
 /// Per-node state owned across rounds: the node's stream, its private
-/// sifter (node-seeded RNG), and reusable shard buffers.
-struct NodeLane {
-    stream: ExampleStream,
+/// sifter (node-seeded RNG), and reusable shard buffers. Shared with the
+/// pipelined loop (`super::pipeline`), which is what keeps per-node
+/// behavior — stream order, sifter RNG state, shard layout — identical
+/// across the two round loops.
+pub(crate) struct NodeLane {
+    pub(crate) stream: ExampleStream,
     sifter: Box<dyn Sifter + Send>,
-    xs: Vec<f32>,
-    ys: Vec<f32>,
+    pub(crate) xs: Vec<f32>,
+    pub(crate) ys: Vec<f32>,
     scores: Vec<f32>,
+}
+
+/// Build the k per-node lanes of a run (node-seeded streams and sifters,
+/// preallocated shard buffers).
+pub(crate) fn make_lanes(
+    stream_cfg: &StreamConfig,
+    sifter: &SifterSpec,
+    k: usize,
+    shard: usize,
+) -> Vec<NodeLane> {
+    (0..k)
+        .map(|node| NodeLane {
+            stream: ExampleStream::for_node(stream_cfg, node as u32),
+            sifter: sifter.build(node),
+            xs: vec![0.0f32; shard * DIM],
+            ys: vec![0.0f32; shard],
+            scores: vec![0.0f32; shard],
+        })
+        .collect()
+}
+
+/// Warmstart phase shared by the synchronous and pipelined loops: passive
+/// training on the head of node 0's stream, charged to both clocks
+/// (generation untimed, as everywhere).
+pub(crate) fn warmstart_phase<L: Learner>(
+    learner: &mut L,
+    lane0: &mut NodeLane,
+    n: usize,
+    clock: &mut RoundClock,
+    costs: &mut CostCounters,
+    wall: &mut WallTimes,
+    n_seen: &mut u64,
+) {
+    let mut x = vec![0.0f32; DIM];
+    let mut sw = Stopwatch::start();
+    let mut warm_secs = 0.0;
+    for _ in 0..n {
+        let y = lane0.stream.next_into(&mut x); // generation untimed
+        sw.lap();
+        learner.update(&x, y, 1.0);
+        warm_secs += sw.lap();
+        costs.update_ops += learner.update_ops();
+        *n_seen += 1;
+    }
+    clock.charge_warmstart(warm_secs);
+    wall.warmstart = warm_secs;
 }
 
 impl NodeLane {
@@ -186,7 +265,7 @@ impl NodeLane {
     /// jobs are built, so neither the simulated nor the measured sift clock
     /// ever includes it (the paper's protocol). `worker` is the executing
     /// pool lane, routed to per-worker scorer instances.
-    fn sift_round<L: Learner>(
+    pub(crate) fn sift_round<L: Learner>(
         &mut self,
         frozen: &L,
         scorer: &dyn SiftScorer<L>,
@@ -232,6 +311,18 @@ pub fn run_sync<L: Learner>(
     run_sync_on(learner, sifter, stream_cfg, test, cfg, scorer, backend.as_ref())
 }
 
+/// Shared entry guard: the strictly-sequenced loop below cannot honor
+/// `cfg.pipeline` (pipelining snapshots the model, which needs
+/// `Learner: Clone`), so reject the flag loudly instead of silently
+/// running unpipelined.
+fn reject_pipeline_flag(cfg: &SyncConfig) {
+    assert!(
+        !cfg.pipeline,
+        "SyncConfig::pipeline is set — use coordinator::pipeline::run_pipelined \
+         (requires Learner: Clone)"
+    );
+}
+
 /// [`run_sync`] with an explicitly injected backend (for custom
 /// [`SiftBackend`] implementations and the equivalence tests). The whole
 /// round loop executes inside the backend's session, so persistent
@@ -246,6 +337,7 @@ pub fn run_sync_on<L: Learner>(
     scorer: &dyn SiftScorer<L>,
     backend: &dyn SiftBackend,
 ) -> SyncReport {
+    reject_pipeline_flag(cfg);
     let name = backend.name();
     let mut report = None;
     backend.with_session(&mut |session| {
@@ -287,36 +379,22 @@ fn run_rounds<L: Learner>(
     let mut replay = ReplayExecutor::new(cfg.replay, DIM);
     let mut total_sw = Stopwatch::start();
 
-    let mut lanes: Vec<NodeLane> = (0..k)
-        .map(|node| NodeLane {
-            stream: ExampleStream::for_node(stream_cfg, node as u32),
-            sifter: sifter.build(node),
-            xs: vec![0.0f32; shard * DIM],
-            ys: vec![0.0f32; shard],
-            scores: vec![0.0f32; shard],
-        })
-        .collect();
+    let mut lanes = make_lanes(stream_cfg, sifter, k, shard);
 
     let mut curve = ErrorCurve::new(cfg.label.clone());
     let mut n_seen: u64 = 0;
     let mut n_queried: u64 = 0;
 
     // --- Warmstart: passive training on the head of node 0's stream. ---
-    {
-        let mut x = vec![0.0f32; DIM];
-        let mut sw = Stopwatch::start();
-        let mut warm_secs = 0.0;
-        for _ in 0..cfg.warmstart {
-            let y = lanes[0].stream.next_into(&mut x); // generation untimed
-            sw.lap();
-            learner.update(&x, y, 1.0);
-            warm_secs += sw.lap();
-            costs.update_ops += learner.update_ops();
-            n_seen += 1;
-        }
-        clock.charge_warmstart(warm_secs);
-        wall.warmstart = warm_secs;
-    }
+    warmstart_phase(
+        learner,
+        &mut lanes[0],
+        cfg.warmstart,
+        &mut clock,
+        &mut costs,
+        &mut wall,
+        &mut n_seen,
+    );
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
 
     // --- Rounds. ---
@@ -414,6 +492,7 @@ fn run_rounds<L: Learner>(
         comm_time: clock.comm_time,
         wall,
         backend: backend_name,
+        pipelined: false,
         pool: session.stats(),
         replay: replay.stats(),
         costs,
@@ -421,7 +500,7 @@ fn run_rounds<L: Learner>(
     }
 }
 
-fn record<L: Learner>(
+pub(crate) fn record<L: Learner>(
     curve: &mut ErrorCurve,
     clock: &RoundClock,
     learner: &L,

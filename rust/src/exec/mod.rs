@@ -25,9 +25,21 @@
 //!   scoring stays allocation-free under any pool width.
 //! * [`ReplayExecutor`] (`replay.rs`) — the broadcast update phase as an
 //!   explicit stage: deterministic minibatches ([`ReplayConfig::batch`])
-//!   that stay bit-identical to per-example replay, plus a
-//!   bounded-staleness knob ([`ReplayConfig::max_stale_rounds`]) mirroring
-//!   Theorem 1's delay tolerance.
+//!   that stay bit-identical to per-example replay, a bounded-staleness
+//!   knob ([`ReplayConfig::max_stale_rounds`]) mirroring Theorem 1's
+//!   delay tolerance, and **fused minibatch application**
+//!   ([`ReplayConfig::fused`]): learners with a fused optimizer step
+//!   ([`crate::learner::Learner::update_batch`], the MLP's
+//!   one-AdaGrad-apply-per-minibatch) absorb each minibatch in one call —
+//!   the data-parallel update phase of the pipelined coordinator.
+//!
+//! The pool also exposes
+//! [`WorkerPool::run_round_with`] — dispatch a round, run a caller
+//! closure on the coordinator thread *while* the workers execute, then
+//! meet at the barrier. That overlap primitive is what
+//! [`coordinator::pipeline`](crate::coordinator::pipeline) builds
+//! pipelined rounds on (sift round t+1 against a frozen snapshot while
+//! round t's updates replay).
 //!
 //! # Pool lifecycle
 //!

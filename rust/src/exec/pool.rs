@@ -230,9 +230,31 @@ impl<T: Send> WorkerPool<T> {
     /// order**. Blocks until every job has finished; a panicking job is
     /// re-raised here once all of its round's siblings completed.
     pub fn run_round<'env>(&self, jobs: Vec<Job<'env, T>>) -> Vec<T> {
+        self.run_round_with(jobs, || ()).0
+    }
+
+    /// [`WorkerPool::run_round`] with an **overlap closure**: `overlap`
+    /// runs on the calling thread *between dispatch and collection*, i.e.
+    /// concurrently with the round's jobs on the workers. This is the
+    /// primitive behind pipelined coordinator rounds (replay round t's
+    /// updates on the caller while the workers sift round t+1 against a
+    /// frozen snapshot). Caller contract: `overlap` must not touch state
+    /// the jobs borrow.
+    ///
+    /// The closure stays inside this call on purpose — no handle escapes —
+    /// so the lifetime-erasure soundness argument stays local: the
+    /// collection barrier below still completes before this function
+    /// returns or unwinds, whether `overlap` returns normally or panics
+    /// (a panicking overlap is caught, the barrier drained, then the
+    /// payload re-raised).
+    pub fn run_round_with<'env, R>(
+        &self,
+        jobs: Vec<Job<'env, T>>,
+        overlap: impl FnOnce() -> R,
+    ) -> (Vec<T>, R) {
         let k = jobs.len();
         if k == 0 {
-            return Vec::new();
+            return (Vec::new(), overlap());
         }
         // Taking the receiver first serializes whole rounds.
         let rx = self.results_rx.lock().expect("pool results poisoned");
@@ -246,6 +268,9 @@ impl<T: Send> WorkerPool<T> {
                 if self.pinned { &self.queues[idx % self.workers] } else { &self.queues[0] };
             queue.push(idx, erased);
         }
+        // The overlap region: the caller's work proceeds here while the
+        // workers chew on the dispatched jobs.
+        let overlapped = catch_unwind(AssertUnwindSafe(overlap));
         let mut out: Vec<Option<T>> = (0..k).map(|_| None).collect();
         let mut panic = None;
         for _ in 0..k {
@@ -264,10 +289,18 @@ impl<T: Send> WorkerPool<T> {
             }
         }
         drop(rx);
+        // Barrier complete: caller-side borrows are safe again, so the
+        // overlap's panic (if any) takes precedence, then a job's.
+        let overlapped = match overlapped {
+            Ok(r) => r,
+            Err(payload) => resume_unwind(payload),
+        };
         if let Some(payload) = panic {
             resume_unwind(payload);
         }
-        out.into_iter().map(|v| v.expect("worker delivered every job")).collect()
+        let results =
+            out.into_iter().map(|v| v.expect("worker delivered every job")).collect();
+        (results, overlapped)
     }
 
     /// Execution counters so far (workers, threads spawned, rounds run).
@@ -385,6 +418,82 @@ mod tests {
                 assert_eq!(out, (0..5).map(|i| i + round).collect::<Vec<_>>());
                 assert_eq!(bufs, out);
             }
+        });
+    }
+
+    #[test]
+    fn overlap_runs_concurrently_with_the_round() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Barrier;
+        // A job and the overlap closure rendezvous on a barrier: that can
+        // only succeed if both really run at the same time.
+        let met = AtomicBool::new(false);
+        let barrier = Barrier::new(2);
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let jobs: Vec<Job<'_, usize>> = vec![Box::new(|_w| {
+                barrier.wait();
+                7
+            })];
+            let (out, overlapped) = pool.run_round_with(jobs, || {
+                barrier.wait();
+                met.store(true, Ordering::SeqCst);
+                42
+            });
+            assert_eq!(out, vec![7]);
+            assert_eq!(overlapped, 42);
+        });
+        assert!(met.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    #[test]
+    fn overlap_mutates_caller_state_while_jobs_run() {
+        // The coordinator pattern: jobs read a frozen snapshot while the
+        // overlap mutates the live model on the calling thread.
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let snapshot = 10usize;
+            let mut live = 10usize;
+            let jobs: Vec<Job<'_, usize>> =
+                (0..4).map(|i| -> Job<'_, usize> { Box::new(move |_w| snapshot + i) }).collect();
+            let (out, ()) = pool.run_round_with(jobs, || {
+                live += 5;
+            });
+            assert_eq!(out, vec![10, 11, 12, 13]);
+            assert_eq!(live, 15);
+        });
+    }
+
+    #[test]
+    fn overlap_with_empty_round_still_runs() {
+        WorkerPool::<usize>::scope(PoolConfig::shared(1), |pool| {
+            let (out, r) = pool.run_round_with(Vec::new(), || 9);
+            assert!(out.is_empty());
+            assert_eq!(r, 9);
+        });
+    }
+
+    #[test]
+    fn overlap_panic_completes_the_barrier_first() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ran = AtomicUsize::new(0);
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let jobs: Vec<Job<'_, usize>> = (0..3)
+                .map(|i| -> Job<'_, usize> {
+                    let ran = &ran;
+                    Box::new(move |_w| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                        i
+                    })
+                })
+                .collect();
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_round_with(jobs, || panic!("overlap exploded"))
+            }));
+            assert!(err.is_err(), "overlap panic must propagate");
+            // Every job still completed before the unwind left the call.
+            assert_eq!(ran.load(Ordering::SeqCst), 3);
+            // And the pool keeps working.
+            let out = pool.run_round(tagged_jobs(2, false));
+            assert_eq!(out, vec![0, 1]);
         });
     }
 

@@ -20,6 +20,17 @@
 //!   default — is the fully synchronous seed behavior. Runs stay
 //!   deterministic for any `s`: deferral only shifts *when* the same
 //!   update sequence is applied.
+//! * **`fused`** — route each minibatch through [`Learner::update_batch`]
+//!   for learners whose optimizer admits a fused minibatch step
+//!   ([`Learner::fused_batch_updates`], e.g. the MLP's one-AdaGrad-apply
+//!   step). This is the data-parallel update phase: still deterministic,
+//!   still a pure function of the broadcast order, but a *minibatch-SGD*
+//!   trajectory — at batch sizes > 1 it legitimately differs from
+//!   per-example replay, exactly like staleness legitimately changes which
+//!   model sifts. Learners without a fused form (LASVM's ordered dual
+//!   steps) keep the per-example loop and its exact per-example cost
+//!   accounting even when `fused` is set, so for them the knob is a
+//!   bit-for-bit no-op (`tests/pipeline_equivalence.rs`).
 //!
 //! The executor accounts per-example `update_ops` exactly like the seed's
 //! inline loop (the op cost is sampled after every single update, which
@@ -43,24 +54,40 @@ pub struct ReplayConfig {
     /// Rounds of selections allowed to lag unapplied (Theorem 1's delay
     /// tolerance); 0 = fully synchronous.
     pub max_stale_rounds: usize,
+    /// Route minibatches through [`Learner::update_batch`] on learners
+    /// with a fused minibatch step; `false` (the default) keeps the
+    /// bit-exact per-example loop for everyone.
+    pub fused: bool,
 }
 
 impl ReplayConfig {
     /// Synchronous replay in minibatches of `batch`.
     pub fn synchronous(batch: usize) -> Self {
-        ReplayConfig { batch, max_stale_rounds: 0 }
+        ReplayConfig { batch, max_stale_rounds: 0, fused: false }
     }
 
     /// Bounded-staleness replay: minibatches of `batch`, up to
     /// `max_stale_rounds` rounds applied late.
     pub fn stale(batch: usize, max_stale_rounds: usize) -> Self {
-        ReplayConfig { batch, max_stale_rounds }
+        ReplayConfig { batch, max_stale_rounds, fused: false }
+    }
+
+    /// Synchronous fused replay: each minibatch of `batch` examples is one
+    /// `update_batch` call on learners that fuse.
+    pub fn fused_batches(batch: usize) -> Self {
+        ReplayConfig { batch, max_stale_rounds: 0, fused: true }
+    }
+
+    /// Toggle fused minibatch application, keeping everything else.
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
     }
 }
 
 impl Default for ReplayConfig {
     fn default() -> Self {
-        ReplayConfig { batch: 64, max_stale_rounds: 0 }
+        ReplayConfig { batch: 64, max_stale_rounds: 0, fused: false }
     }
 }
 
@@ -73,6 +100,9 @@ pub struct ReplayStats {
     pub applied: u64,
     /// Minibatches applied so far.
     pub minibatches: u64,
+    /// Minibatches that went through a fused `update_batch` call (0 unless
+    /// `ReplayConfig::fused` is set *and* the learner fuses).
+    pub fused_minibatches: u64,
     /// Largest backlog observed, in rounds, right after an `end_round`.
     pub max_pending_rounds: usize,
 }
@@ -206,8 +236,12 @@ impl ReplayExecutor {
     }
 
     /// Apply a node-major selection slice in order, chunked into
-    /// minibatches of `cfg.batch`. Per-example `update_ops` are sampled
-    /// after every single update, exactly like the seed's inline loop.
+    /// minibatches of `cfg.batch`. On the per-example path, `update_ops`
+    /// are sampled after every single update, exactly like the seed's
+    /// inline loop. On the fused path one `update_batch` call absorbs the
+    /// whole chunk, so per-example sampling is impossible; each example is
+    /// charged the post-step marginal cost instead (exact for learners
+    /// with size-independent `update_ops`, like the MLP).
     fn apply_slice<L: Learner>(
         &mut self,
         learner: &mut L,
@@ -216,14 +250,25 @@ impl ReplayExecutor {
         ws: &[f32],
     ) -> ReplayOutcome {
         let n = ys.len();
+        let fused = self.cfg.fused && learner.fused_batch_updates();
         let mut out = ReplayOutcome::default();
         let mut start = 0;
         while start < n {
             let end = (start + self.cfg.batch).min(n);
-            for i in start..end {
-                let x = &xs[i * self.dim..(i + 1) * self.dim];
-                learner.update(x, ys[i], ws[i]);
-                out.update_ops += learner.update_ops();
+            if fused {
+                learner.update_batch(
+                    &xs[start * self.dim..end * self.dim],
+                    &ys[start..end],
+                    &ws[start..end],
+                );
+                out.update_ops += (end - start) as u64 * learner.update_ops();
+                self.stats.fused_minibatches += 1;
+            } else {
+                for i in start..end {
+                    let x = &xs[i * self.dim..(i + 1) * self.dim];
+                    learner.update(x, ys[i], ws[i]);
+                    out.update_ops += learner.update_ops();
+                }
             }
             self.stats.minibatches += 1;
             start = end;
@@ -278,6 +323,85 @@ mod tests {
         let ys: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
         let ws: Vec<f32> = (0..n).map(|i| 1.0 + i as f32).collect();
         (xs, ys, ws)
+    }
+
+    /// A learner with a fused minibatch step that records the chunk sizes
+    /// it was handed, so routing (not just values) is observable.
+    struct FusedTally {
+        chunks: Vec<usize>,
+        seen: Vec<f32>, // x[0] per example, in application order
+    }
+
+    impl FusedTally {
+        fn new() -> Self {
+            FusedTally { chunks: Vec::new(), seen: Vec::new() }
+        }
+    }
+
+    impl Learner for FusedTally {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn score(&self, _x: &[f32]) -> f32 {
+            0.0
+        }
+        fn update(&mut self, x: &[f32], _y: f32, _w: f32) {
+            self.chunks.push(1);
+            self.seen.push(x[0]);
+        }
+        fn update_batch(&mut self, xs: &[f32], ys: &[f32], _ws: &[f32]) {
+            self.chunks.push(ys.len());
+            self.seen.extend(xs.chunks_exact(2).map(|r| r[0]));
+        }
+        fn fused_batch_updates(&self) -> bool {
+            true
+        }
+        fn eval_ops(&self) -> u64 {
+            1
+        }
+        fn update_ops(&self) -> u64 {
+            3
+        }
+        fn test_error(&self, _ts: &TestSet) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn fused_replay_hands_whole_minibatches_to_fusing_learners() {
+        let mut learner = FusedTally::new();
+        let mut exec = ReplayExecutor::new(ReplayConfig::fused_batches(4), 2);
+        let (xs, ys, ws) = round(0.0, 10);
+        let out = exec.apply_node_direct(&mut learner, &xs, &ys, &ws);
+        assert_eq!(learner.chunks, vec![4, 4, 2]);
+        let tags: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(learner.seen, tags, "fused chunks reordered the broadcast");
+        assert_eq!(out.examples, 10);
+        // Each example charged the post-step marginal cost.
+        assert_eq!(out.update_ops, 10 * 3);
+        assert_eq!(exec.stats().minibatches, 3);
+        assert_eq!(exec.stats().fused_minibatches, 3);
+    }
+
+    #[test]
+    fn fused_flag_is_inert_for_sequential_learners() {
+        // Tally does not fuse, so fused replay must stay bit-identical to
+        // sequential replay, per-example cost accounting included.
+        for batch in [1usize, 3, 64] {
+            let (xs, ys, ws) = round(4.0, 7);
+            let mut plain = Tally::new();
+            let mut exec_p = ReplayExecutor::new(ReplayConfig::synchronous(batch), 2);
+            let out_p = exec_p.apply_node_direct(&mut plain, &xs, &ys, &ws);
+
+            let mut fused = Tally::new();
+            let mut exec_f =
+                ReplayExecutor::new(ReplayConfig::synchronous(batch).with_fused(true), 2);
+            let out_f = exec_f.apply_node_direct(&mut fused, &xs, &ys, &ws);
+
+            assert_eq!(plain.seen, fused.seen, "batch {batch}");
+            assert_eq!(out_p.update_ops, out_f.update_ops, "batch {batch}");
+            assert_eq!(exec_f.stats().fused_minibatches, 0);
+        }
     }
 
     #[test]

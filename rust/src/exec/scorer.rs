@@ -19,6 +19,16 @@
 //! results stay bit-identical across backends as long as every slot
 //! computes the same function — which instances of the same AOT executable
 //! do by construction.
+//!
+//! One more clause since the pipelined coordinator landed: a scorer must
+//! be a **pure function of `(learner, xs)`** — any cached state keyed on
+//! the learner has to be refreshed when the learner changes. The
+//! pipelined loop scores every round against a *fresh snapshot clone* of
+//! the model (never the same `&L` twice), so a scorer that memoized
+//! weights across calls without checking would silently sift with the
+//! wrong epoch. The native scorers satisfy purity trivially (their only
+//! state is scratch buffers); AOT scorers re-upload parameters per round
+//! already.
 
 use crate::learner::{Learner, SiftScorer};
 use crate::simd::ScoreScratch;

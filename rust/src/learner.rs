@@ -62,6 +62,39 @@ pub trait Learner: Send + Sync {
     /// examples per IWAL; w = 1 for passive learning).
     fn update(&mut self, x: &[f32], y: f32, w: f32);
 
+    /// Absorb a whole minibatch (`xs` flat row-major, `xs.len() ==
+    /// ys.len() * dim()`, one importance weight per example).
+    ///
+    /// The default applies the examples one at a time in submission order —
+    /// exact sequential semantics for any learner, which is what
+    /// order-dependent solvers like LASVM (whose dual steps are inherently
+    /// sequential) keep. Learners whose optimizer admits a **fused**
+    /// minibatch step — gradients for every member computed against the
+    /// frozen pre-batch model, accumulated in submission order, then one
+    /// optimizer apply — override this *and* return `true` from
+    /// [`Learner::fused_batch_updates`]. A fused step collapses to the
+    /// sequential `update` bit-for-bit at batch size 1 but follows a
+    /// different (minibatch-SGD) trajectory for larger batches, so callers
+    /// route through it only when explicitly configured
+    /// ([`crate::exec::ReplayConfig::fused`]).
+    fn update_batch(&mut self, xs: &[f32], ys: &[f32], ws: &[f32]) {
+        let d = self.dim();
+        debug_assert_eq!(xs.len(), ys.len() * d);
+        debug_assert_eq!(ys.len(), ws.len());
+        for (i, (&y, &w)) in ys.iter().zip(ws).enumerate() {
+            self.update(&xs[i * d..(i + 1) * d], y, w);
+        }
+    }
+
+    /// Whether [`Learner::update_batch`] is a fused minibatch optimizer
+    /// step (different trajectory at batch > 1) rather than the sequential
+    /// default. The replay stage only routes minibatches through
+    /// `update_batch` when this is `true` — otherwise it keeps the
+    /// per-example loop and its exact per-example cost accounting.
+    fn fused_batch_updates(&self) -> bool {
+        false
+    }
+
     /// Abstract cost (flops-ish) of scoring one example: the paper's S(n).
     fn eval_ops(&self) -> u64;
 
@@ -258,6 +291,28 @@ mod tests {
             assert_eq!(out[r], c.score(&xs[r * 3..(r + 1) * 3]));
         }
         assert!(out[0] > 0.0 && out[1] < 0.0);
+    }
+
+    #[test]
+    fn default_update_batch_is_the_sequential_loop() {
+        // Two centroids fed the same examples — one via update, one via the
+        // default update_batch — must agree exactly, and the default must
+        // report itself as unfused.
+        let xs = [1.0f32, 0.0, 0.0, 1.0, 0.5, 0.5];
+        let ys = [1.0f32, -1.0, 1.0];
+        let ws = [1.0f32, 2.0, 0.5];
+        let mut seq = Centroid::new(2);
+        for i in 0..3 {
+            seq.update(&xs[i * 2..(i + 1) * 2], ys[i], ws[i]);
+        }
+        let mut batched = Centroid::new(2);
+        batched.update_batch(&xs, &ys, &ws);
+        assert!(!batched.fused_batch_updates());
+        let probe = [0.3f32, 0.7];
+        assert_eq!(seq.score(&probe).to_bits(), batched.score(&probe).to_bits());
+        // Empty minibatches are a no-op.
+        batched.update_batch(&[], &[], &[]);
+        assert_eq!(seq.score(&probe).to_bits(), batched.score(&probe).to_bits());
     }
 
     #[test]

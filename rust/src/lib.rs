@@ -56,6 +56,7 @@ pub mod prelude {
     pub use crate::coordinator::backend::{
         BackendChoice, SerialBackend, SiftBackend, SiftSession, ThreadedBackend,
     };
+    pub use crate::coordinator::pipeline::{run_pipelined, run_pipelined_on};
     pub use crate::coordinator::sync::{
         run_sync, run_sync_on, SyncConfig, SyncReport, WallTimes,
     };

@@ -27,9 +27,11 @@ USAGE: para-active <COMMAND> [OPTIONS]
 COMMANDS:
   quickstart                quick SVM parallel-active demo (small budgets)
   svm       [--nodes K] [--budget N] [--backend B] [--workers W]
-            [--batch M] [--stale S]               parallel-active kernel SVM
+            [--batch M] [--stale S] [--pipeline] [--update-batch]
+                                        parallel-active kernel SVM
   nn        [--nodes K] [--budget N] [--backend B] [--workers W]
-            [--batch M] [--stale S]               parallel-active neural net
+            [--batch M] [--stale S] [--pipeline] [--update-batch]
+                                        parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
   artifacts                 inspect the AOT manifest; verify PJRT loads it
@@ -45,7 +47,13 @@ wall-clock changes.
 REPLAY: the update phase applies the pooled broadcast in deterministic
 minibatches of `--batch M` examples (default 64; bit-identical for any M)
 and may lag up to `--stale S` rounds behind the sift phases (default 0 =
-fully synchronous; Theorem 1 tolerates the delay).
+fully synchronous; Theorem 1 tolerates the delay). `--update-batch`
+routes each minibatch through the learner's fused minibatch step (one
+AdaGrad apply per minibatch on the NN — a minibatch-SGD trajectory; the
+SVM's ordered dual steps keep the sequential loop). `--pipeline` overlaps
+each round's sift with the previous round's replay: the nodes sift an
+immutable model snapshot exactly one round stale (`--stale 1` semantics,
+bit-identical to it) while the coordinator thread applies the updates.
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -60,6 +68,11 @@ impl Args {
             Some(v) => Ok(v),
             None => Ok(default),
         }
+    }
+
+    /// Presence flag: `--name` with no value.
+    fn flag(&self, name: &str) -> bool {
+        self.0.iter().any(|a| a == name)
     }
 
     /// Like [`Args::get`] but distinguishes an absent flag from a value.
@@ -88,25 +101,38 @@ fn backend_arg(args: &Args) -> anyhow::Result<BackendChoice> {
 }
 
 /// Validate the execution flags shared by svm/nn: an optional `--workers`
-/// override, the replay minibatch and staleness. Rejects zeros outright
-/// and returns a warning when the worker count oversubscribes the machine.
+/// override, the replay minibatch, staleness, fused minibatch updates and
+/// pipelining. Rejects zeros and contradictory combinations outright and
+/// returns warnings for legal-but-useless ones (oversubscribed workers;
+/// staleness on the serial backend, where deferring updates overlaps
+/// nothing).
 fn resolve_exec_flags(
     backend: BackendChoice,
     workers: Option<usize>,
     batch: usize,
-    stale: usize,
+    stale: Option<usize>,
+    fused: bool,
+    pipeline: bool,
     cores: usize,
-) -> Result<(BackendChoice, ReplayConfig, Option<String>), String> {
+) -> Result<(BackendChoice, ReplayConfig, bool, Vec<String>), String> {
     if workers == Some(0) {
         return Err("--workers must be >= 1 (use --backend serial for the serial path)".into());
     }
     if batch == 0 {
         return Err("--batch must be >= 1".into());
     }
+    if pipeline && !matches!(stale, None | Some(1)) {
+        return Err(
+            "--pipeline realizes exactly one round of staleness; drop --stale or set it to 1"
+                .into(),
+        );
+    }
+    let max_stale_rounds = if pipeline { 1 } else { stale.unwrap_or(0) };
     let backend = match workers {
         Some(w) => backend.with_workers(w),
         None => backend,
     };
+    let mut warnings = Vec::new();
     // Warn on the *resolved* worker count, whichever spelling set it
     // (--workers W or --backend threaded:N / pinned:N). 0 means one
     // worker per core and can never oversubscribe.
@@ -114,24 +140,43 @@ fn resolve_exec_flags(
         BackendChoice::Serial => 0,
         BackendChoice::Threaded { threads } | BackendChoice::Pinned { threads } => threads,
     };
-    let warn = (threads > cores)
-        .then(|| format!("{threads} workers oversubscribes this machine ({cores} cores)"));
-    Ok((backend, ReplayConfig { batch, max_stale_rounds: stale }, warn))
+    if threads > cores {
+        warnings.push(format!("{threads} workers oversubscribes this machine ({cores} cores)"));
+    }
+    if max_stale_rounds > 0 && backend == BackendChoice::Serial {
+        // Covers --pipeline on the serial backend too: the serial session
+        // runs the overlap closure inline before the jobs, so deferring
+        // updates overlaps nothing either way.
+        let knob = if pipeline {
+            "--pipeline".to_string()
+        } else {
+            format!("--stale {max_stale_rounds}")
+        };
+        warnings.push(format!(
+            "{knob} with the serial backend defers updates without overlapping anything — \
+             it buys no wall-clock (use --backend threaded to overlap the deferred replay)"
+        ));
+    }
+    let replay = ReplayConfig { batch, max_stale_rounds, fused };
+    Ok((backend, replay, pipeline, warnings))
 }
 
 /// Gather, validate, and apply the shared execution flags.
-fn exec_args(args: &Args) -> anyhow::Result<(BackendChoice, ReplayConfig)> {
+fn exec_args(args: &Args) -> anyhow::Result<(BackendChoice, ReplayConfig, bool)> {
     let backend = backend_arg(args)?;
     let workers: Option<usize> = args.opt("--workers")?;
     let batch: usize = args.get("--batch", 64)?;
-    let stale: usize = args.get("--stale", 0)?;
+    let stale: Option<usize> = args.opt("--stale")?;
+    let fused = args.flag("--update-batch");
+    let pipeline = args.flag("--pipeline");
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let (backend, replay, warn) = resolve_exec_flags(backend, workers, batch, stale, cores)
-        .map_err(|e| anyhow::anyhow!(e))?;
-    if let Some(w) = warn {
+    let (backend, replay, pipeline, warnings) =
+        resolve_exec_flags(backend, workers, batch, stale, fused, pipeline, cores)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    for w in warnings {
         eprintln!("warning: {w}");
     }
-    Ok((backend, replay))
+    Ok((backend, replay, pipeline))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -162,7 +207,15 @@ fn main() -> anyhow::Result<()> {
             let nodes: usize = args.get("--nodes", 8)?;
             let budget: usize = args.get("--budget", 30_000)?;
             let mut cfg = SvmExperimentConfig::paper_defaults();
-            (cfg.backend, cfg.replay) = exec_args(&args)?;
+            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args)?;
+            if cfg.replay.fused {
+                // The SVM's dual steps are ordered; the fused request is
+                // honored by the replay stage but falls back per-example.
+                eprintln!(
+                    "note: --update-batch on the SVM applies the sequential fallback \
+                     (LASVM has no fused minibatch step)"
+                );
+            }
             let stream = StreamConfig::svm_task();
             let r = run_sync_svm(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
@@ -175,8 +228,12 @@ fn main() -> anyhow::Result<()> {
                 r.warmstart_time
             );
             println!(
-                "backend={} measured wall: sift={:.2}s update={:.2}s total={:.2}s",
-                r.backend, r.wall.sift, r.wall.update, r.wall.total
+                "backend={}{} measured wall: sift={:.2}s update={:.2}s total={:.2}s",
+                r.backend,
+                if r.pipelined { "+pipeline" } else { "" },
+                r.wall.sift,
+                r.wall.update,
+                r.wall.total
             );
             println!(
                 "pool: workers={} threads_spawned={} rounds={}; replay: minibatches={} max_lag={}",
@@ -191,20 +248,24 @@ fn main() -> anyhow::Result<()> {
             let nodes: usize = args.get("--nodes", 2)?;
             let budget: usize = args.get("--budget", 20_000)?;
             let mut cfg = NnExperimentConfig::paper_defaults();
-            (cfg.backend, cfg.replay) = exec_args(&args)?;
+            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args)?;
             let stream = StreamConfig::nn_task();
             let r = run_sync_nn(&cfg, &stream, nodes, budget);
             println!("{}", curves_to_markdown(&[&r.curve]));
             println!(
-                "rounds={} rate={:.2}% backend={} wall sift={:.2}s",
+                "rounds={} rate={:.2}% backend={}{} wall sift={:.2}s",
                 r.rounds,
                 100.0 * r.query_rate(),
                 r.backend,
+                if r.pipelined { "+pipeline" } else { "" },
                 r.wall.sift
             );
             println!(
-                "pool: workers={} threads_spawned={}; replay: minibatches={}",
-                r.pool.workers, r.pool.threads_spawned, r.replay.minibatches
+                "pool: workers={} threads_spawned={}; replay: minibatches={} fused={}",
+                r.pool.workers,
+                r.pool.threads_spawned,
+                r.replay.minibatches,
+                r.replay.fused_minibatches
             );
         }
         "passive" => {
@@ -272,54 +333,122 @@ mod tests {
 
     #[test]
     fn exec_flags_reject_zero_workers() {
-        let err = resolve_exec_flags(BackendChoice::Serial, Some(0), 64, 0, 8);
+        let err = resolve_exec_flags(BackendChoice::Serial, Some(0), 64, None, false, false, 8);
         assert!(err.is_err());
         assert!(err.unwrap_err().contains("--workers"));
     }
 
     #[test]
     fn exec_flags_reject_zero_batch() {
-        let err = resolve_exec_flags(BackendChoice::threaded(), None, 0, 0, 8);
+        let err = resolve_exec_flags(BackendChoice::threaded(), None, 0, None, false, false, 8);
         assert!(err.is_err());
         assert!(err.unwrap_err().contains("--batch"));
     }
 
     #[test]
     fn exec_flags_warn_on_oversubscription() {
-        let (backend, replay, warn) =
-            resolve_exec_flags(BackendChoice::Serial, Some(16), 32, 1, 2).expect("valid");
+        let (backend, replay, pipeline, warnings) =
+            resolve_exec_flags(BackendChoice::Serial, Some(16), 32, Some(1), false, false, 2)
+                .expect("valid");
         assert_eq!(backend, BackendChoice::Threaded { threads: 16 });
-        assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1 });
-        let warn = warn.expect("16 workers on 2 cores must warn");
-        assert!(warn.contains("oversubscribes"), "warning text: {warn}");
+        assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1, fused: false });
+        assert!(!pipeline);
+        assert!(
+            warnings.iter().any(|w| w.contains("oversubscribes")),
+            "16 workers on 2 cores must warn: {warnings:?}"
+        );
     }
 
     #[test]
     fn exec_flags_warn_on_oversubscribed_backend_spelling() {
         // --backend threaded:64 must warn just like --workers 64.
-        let (backend, _, warn) =
-            resolve_exec_flags(BackendChoice::Threaded { threads: 64 }, None, 64, 0, 2)
-                .expect("valid");
+        let (backend, _, _, warnings) = resolve_exec_flags(
+            BackendChoice::Threaded { threads: 64 },
+            None,
+            64,
+            None,
+            false,
+            false,
+            2,
+        )
+        .expect("valid");
         assert_eq!(backend, BackendChoice::Threaded { threads: 64 });
-        let warn = warn.expect("threaded:64 on 2 cores must warn");
-        assert!(warn.contains("oversubscribes"), "warning text: {warn}");
+        assert!(
+            warnings.iter().any(|w| w.contains("oversubscribes")),
+            "threaded:64 on 2 cores must warn: {warnings:?}"
+        );
+    }
+
+    #[test]
+    fn exec_flags_warn_on_stale_with_serial_backend() {
+        // Deferring updates on the serial backend overlaps nothing —
+        // whether the deferral comes from --stale or from --pipeline
+        // (the serial session runs the overlap closure inline).
+        for (stale, pipeline, knob) in
+            [(Some(2), false, "--stale 2"), (Some(1), true, "--pipeline"), (None, true, "--pipeline")]
+        {
+            let (_, _, _, warnings) =
+                resolve_exec_flags(BackendChoice::Serial, None, 64, stale, false, pipeline, 8)
+                    .expect("valid");
+            let warn = warnings
+                .iter()
+                .find(|w| w.contains("buys no wall-clock"))
+                .unwrap_or_else(|| panic!("serial deferral must warn: {warnings:?}"));
+            assert!(warn.contains(knob), "warning names the wrong knob: {warn}");
+            assert!(warn.contains("--backend threaded"), "warning suggests the fix: {warn}");
+        }
+        // Threaded backends or no deferral: no warning.
+        for (backend, stale, pipeline) in [
+            (BackendChoice::threaded(), Some(2), false),
+            (BackendChoice::threaded(), Some(1), true),
+            (BackendChoice::Serial, None, false),
+        ] {
+            let (_, _, _, warnings) =
+                resolve_exec_flags(backend, None, 64, stale, false, pipeline, 8)
+                    .expect("valid");
+            assert!(
+                !warnings.iter().any(|w| w.contains("buys no wall-clock")),
+                "spurious stale warning for {backend:?}: {warnings:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exec_flags_pipeline_implies_one_stale_round() {
+        let (_, replay, pipeline, _) =
+            resolve_exec_flags(BackendChoice::threaded(), None, 32, None, true, true, 8)
+                .expect("valid");
+        assert!(pipeline);
+        assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1, fused: true });
+        // Explicit --stale 1 is redundant but allowed.
+        let ok = resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(1), false, true, 8);
+        assert!(ok.is_ok());
+        // Any other explicit staleness contradicts the pipeline's lag.
+        let err = resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(2), false, true, 8);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("--pipeline"));
+        let err0 = resolve_exec_flags(BackendChoice::Serial, None, 32, Some(0), false, true, 8);
+        assert!(err0.is_err());
     }
 
     #[test]
     fn exec_flags_pass_through_when_sane() {
-        let (backend, replay, warn) =
-            resolve_exec_flags(BackendChoice::pinned(), Some(2), 64, 0, 8).expect("valid");
+        let (backend, replay, pipeline, warnings) =
+            resolve_exec_flags(BackendChoice::pinned(), Some(2), 64, None, false, false, 8)
+                .expect("valid");
         assert_eq!(backend, BackendChoice::Pinned { threads: 2 });
         assert_eq!(replay, ReplayConfig::default());
-        assert!(warn.is_none());
+        assert!(!pipeline);
+        assert!(warnings.is_empty());
     }
 
     #[test]
     fn exec_flags_keep_backend_without_workers() {
-        let (backend, _, warn) =
-            resolve_exec_flags(BackendChoice::Serial, None, 64, 0, 1).expect("valid");
+        let (backend, _, _, warnings) =
+            resolve_exec_flags(BackendChoice::Serial, None, 64, None, false, false, 1)
+                .expect("valid");
         assert_eq!(backend, BackendChoice::Serial);
-        assert!(warn.is_none(), "no --workers, no oversubscription warning");
+        assert!(warnings.is_empty(), "no --workers, no oversubscription warning");
     }
 
     #[test]
@@ -329,5 +458,13 @@ mod tests {
         assert_eq!(args.opt::<usize>("--batch").expect("absent ok"), None);
         let bad = Args(vec!["--workers".into(), "x".into()]);
         assert!(bad.opt::<usize>("--workers").is_err());
+    }
+
+    #[test]
+    fn args_flag_detects_presence() {
+        let args = Args(vec!["--pipeline".into(), "--batch".into(), "32".into()]);
+        assert!(args.flag("--pipeline"));
+        assert!(!args.flag("--update-batch"));
+        assert_eq!(args.get::<usize>("--batch", 64).expect("parses"), 32);
     }
 }

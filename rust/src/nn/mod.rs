@@ -11,6 +11,17 @@
 //! bit-for-bit identical at every batch size
 //! (`rust/tests/scoring_equivalence.rs`), and both are allocation-free —
 //! scratch comes from the caller or the thread-local pool.
+//!
+//! Training has a **fused minibatch path** ([`Learner::update_batch`]):
+//! the forward pass of a whole minibatch rides the same [`simd::gemm_nt`]
+//! tiles as scoring, per-example gradients are accumulated (in submission
+//! order) against the frozen pre-batch weights, and AdaGrad applies
+//! **once** per minibatch instead of once per example — which removes
+//! `(batch - 1)` full sqrt+divide passes over all `D·H` parameters per
+//! minibatch. At batch size 1 the fused step is bit-for-bit identical to
+//! the sequential [`Learner::update`]; at every batch size it is
+//! bit-for-bit identical to the untiled reference loop
+//! [`AdaGradMlp::update_batch_reference`] (`tests/pipeline_equivalence.rs`).
 
 use crate::learner::Learner;
 use crate::rng::Rng;
@@ -145,6 +156,159 @@ impl AdaGradMlp {
         }
         f
     }
+
+    /// Backprop one example's gradients into the accumulators, given its
+    /// hidden activations and output score. Shared by the fused tiled
+    /// minibatch step and the untiled reference loop, so the two cannot
+    /// drift: accumulation order is fixed here, per (example, unit).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_example_grads(
+        &self,
+        x: &[f32],
+        y: f32,
+        w: f32,
+        hidden: &[f32],
+        f: f32,
+        g_w1: &mut [f32],
+        g_b1: &mut [f32],
+        g_w2: &mut [f32],
+        g_b2: &mut f32,
+    ) {
+        let d = self.cfg.input_dim;
+        // d/df [w * log(1 + exp(-y f))] = -w * y * sigmoid(-y f)
+        let dl_df = -w * y * sigmoid(-y * f);
+        for j in 0..self.cfg.hidden {
+            let hj = hidden[j];
+            g_w2[j] += dl_df * hj;
+            // Hidden deltas use the frozen w2 — in the fused semantics every
+            // minibatch member differentiates the same pre-batch model.
+            let delta = dl_df * self.w2[j] * hj * (1.0 - hj);
+            if delta != 0.0 {
+                g_b1[j] += delta;
+                simd::axpy(delta, x, &mut g_w1[j * d..(j + 1) * d]);
+            }
+        }
+        *g_b2 += dl_df;
+    }
+
+    /// One AdaGrad apply of fully accumulated minibatch gradients. With a
+    /// single example's gradients this reproduces the per-parameter
+    /// arithmetic of [`Learner::update`] exactly (same `a += g²`,
+    /// `w -= lr·g/(√a + eps)` per parameter), which is what makes the
+    /// fused step bit-identical to the sequential path at batch size 1.
+    fn apply_adagrad(&mut self, g_w1: &[f32], g_b1: &[f32], g_w2: &[f32], g_b2: f32) {
+        let lr = self.cfg.lr;
+        let eps = self.cfg.eps;
+        for (i, &g) in g_w1.iter().enumerate() {
+            self.a_w1[i] += g * g;
+            self.w1[i] -= lr * g / (self.a_w1[i].sqrt() + eps);
+        }
+        for (j, &g) in g_b1.iter().enumerate() {
+            self.a_b1[j] += g * g;
+            self.b1[j] -= lr * g / (self.a_b1[j].sqrt() + eps);
+        }
+        for (j, &g) in g_w2.iter().enumerate() {
+            self.a_w2[j] += g * g;
+            self.w2[j] -= lr * g / (self.a_w2[j].sqrt() + eps);
+        }
+        self.a_b2 += g_b2 * g_b2;
+        self.b2 -= lr * g_b2 / (self.a_b2.sqrt() + eps);
+    }
+
+    /// Untiled reference implementation of the fused minibatch semantics:
+    /// per-example forward ([`AdaGradMlp::forward`]) and gradient
+    /// accumulation in submission order against the frozen pre-batch
+    /// weights, then one AdaGrad apply. The tiled
+    /// [`Learner::update_batch`] must reproduce this **bit-for-bit at
+    /// every batch size** (`tests/pipeline_equivalence.rs`); at batch
+    /// size 1 both collapse to the sequential [`Learner::update`].
+    pub fn update_batch_reference(&mut self, xs: &[f32], ys: &[f32], ws: &[f32]) {
+        let d = self.cfg.input_dim;
+        let h = self.cfg.hidden;
+        let n = ys.len();
+        debug_assert_eq!(xs.len(), n * d);
+        debug_assert_eq!(ws.len(), n);
+        if n == 0 {
+            return;
+        }
+        let mut g_w1 = vec![0.0f32; h * d];
+        let mut g_b1 = vec![0.0f32; h];
+        let mut g_w2 = vec![0.0f32; h];
+        let mut g_b2 = 0.0f32;
+        let mut hidden = vec![0.0f32; h];
+        for i in 0..n {
+            let x = &xs[i * d..(i + 1) * d];
+            let f = self.forward(x, &mut hidden);
+            self.accumulate_example_grads(
+                x, ys[i], ws[i], &hidden, f, &mut g_w1, &mut g_b1, &mut g_w2, &mut g_b2,
+            );
+        }
+        self.apply_adagrad(&g_w1, &g_b1, &g_w2, g_b2);
+        self.updates += n as u64;
+    }
+
+    /// The fused minibatch step on caller-provided scratch: tiled forward
+    /// (one [`simd::gemm_nt`] per [`simd::BLOCK_ROWS`]-example block, the
+    /// same tiles the scoring engine rides), gradient accumulation in
+    /// submission order, one AdaGrad apply.
+    fn update_batch_scratch(
+        &mut self,
+        xs: &[f32],
+        ys: &[f32],
+        ws: &[f32],
+        scratch: &mut ScoreScratch,
+    ) {
+        let d = self.cfg.input_dim;
+        let h = self.cfg.hidden;
+        let n = ys.len();
+        debug_assert_eq!(xs.len(), n * d);
+        debug_assert_eq!(ws.len(), n);
+        if n == 0 {
+            return;
+        }
+        let (z, g_w1, g_small) = scratch.trio(simd::BLOCK_ROWS * h, h * d, 2 * h);
+        let (g_b1, g_w2) = g_small.split_at_mut(h);
+        g_w1.fill(0.0);
+        g_b1.fill(0.0);
+        g_w2.fill(0.0);
+        let mut g_b2 = 0.0f32;
+
+        let mut i0 = 0;
+        while i0 < n {
+            let m = simd::BLOCK_ROWS.min(n - i0);
+            let xb = &xs[i0 * d..(i0 + m) * d];
+            simd::gemm_nt(m, h, d, xb, &self.w1, &mut z[..m * h]);
+            for i in 0..m {
+                let x = &xs[(i0 + i) * d..(i0 + i + 1) * d];
+                let zi = &mut z[i * h..(i + 1) * h];
+                // Fold pre-activations into activations in place, summing
+                // the output layer in the same unit order as `forward` —
+                // the gemm entry is dot(x, w1_row), bitwise equal to the
+                // per-example dot(w1_row, x), so `f` matches `forward`.
+                let mut f = self.b2;
+                for j in 0..h {
+                    let hj = sigmoid(zi[j] + self.b1[j]);
+                    zi[j] = hj;
+                    f += self.w2[j] * hj;
+                }
+                self.accumulate_example_grads(
+                    x,
+                    ys[i0 + i],
+                    ws[i0 + i],
+                    zi,
+                    f,
+                    g_w1,
+                    g_b1,
+                    g_w2,
+                    &mut g_b2,
+                );
+            }
+            i0 += m;
+        }
+        self.apply_adagrad(g_w1, g_b1, g_w2, g_b2);
+        self.updates += n as u64;
+    }
 }
 
 impl Learner for AdaGradMlp {
@@ -236,6 +400,19 @@ impl Learner for AdaGradMlp {
 
         self.hidden_buf = hidden;
         self.updates += 1;
+    }
+
+    /// Fused minibatch AdaGrad step on thread-local scratch (see the
+    /// module docs). Semantics: minibatch SGD — every member's gradient is
+    /// taken against the frozen pre-batch model and AdaGrad applies once.
+    /// Bit-for-bit identical to [`Learner::update`] at batch size 1 and to
+    /// [`AdaGradMlp::update_batch_reference`] at every batch size.
+    fn update_batch(&mut self, xs: &[f32], ys: &[f32], ws: &[f32]) {
+        simd::with_thread_scratch(|s| self.update_batch_scratch(xs, ys, ws, s));
+    }
+
+    fn fused_batch_updates(&self) -> bool {
+        true
     }
 
     fn eval_ops(&self) -> u64 {
@@ -409,6 +586,93 @@ mod tests {
                 assert_eq!(m.forward(r, &mut hidden).to_bits(), o.to_bits(), "n={n}");
             }
         }
+    }
+
+    fn batch_of(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let xs: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+        let ys: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ws: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        (xs, ys, ws)
+    }
+
+    fn trained(d: usize, h: usize) -> AdaGradMlp {
+        let mut cfg = MlpConfig::paper(d);
+        cfg.hidden = h;
+        let mut m = AdaGradMlp::new(cfg);
+        let mut rng = Rng::new(17);
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+            m.update(&x, if rng.coin(0.5) { 1.0 } else { -1.0 }, 1.0);
+        }
+        m
+    }
+
+    fn probe_bits(m: &AdaGradMlp, d: usize) -> Vec<u32> {
+        let mut rng = Rng::new(555);
+        (0..8)
+            .map(|_| {
+                let x: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+                m.score(&x).to_bits()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_batch_of_one_is_the_sequential_update() {
+        // Remainder input dim so the gemm path exercises partial lanes.
+        let (d, h) = (13usize, 5usize);
+        let mut seq = trained(d, h);
+        let mut fused = seq.clone();
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let (xs, ys, ws) = batch_of(&mut rng, 1, d);
+            seq.update(&xs, ys[0], ws[0]);
+            fused.update_batch(&xs, &ys, &ws);
+        }
+        assert_eq!(probe_bits(&seq, d), probe_bits(&fused, d));
+        assert_eq!(seq.updates(), fused.updates());
+    }
+
+    #[test]
+    fn fused_batch_matches_reference_loop_bit_for_bit() {
+        let (d, h) = (13usize, 5usize);
+        let mut rng = Rng::new(29);
+        for n in [1usize, 7, 8, 33] {
+            let mut tiled = trained(d, h);
+            let mut reference = tiled.clone();
+            let (xs, ys, ws) = batch_of(&mut rng, n, d);
+            tiled.update_batch(&xs, &ys, &ws);
+            reference.update_batch_reference(&xs, &ys, &ws);
+            assert_eq!(probe_bits(&tiled, d), probe_bits(&reference, d), "n={n}");
+            assert_eq!(tiled.updates(), reference.updates(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_batches_diverge_from_sequential_beyond_one() {
+        // Not a bug: minibatch SGD is a different trajectory. This pins the
+        // semantics so nobody "fixes" the equivalence tests the wrong way.
+        let d = 13;
+        let mut seq = trained(d, 5);
+        let mut fused = seq.clone();
+        assert!(fused.fused_batch_updates());
+        let mut rng = Rng::new(31);
+        let (xs, ys, ws) = batch_of(&mut rng, 8, d);
+        for i in 0..8 {
+            seq.update(&xs[i * d..(i + 1) * d], ys[i], ws[i]);
+        }
+        fused.update_batch(&xs, &ys, &ws);
+        assert_ne!(probe_bits(&seq, d), probe_bits(&fused, d));
+    }
+
+    #[test]
+    fn empty_fused_batch_is_a_noop() {
+        let mut m = trained(13, 5);
+        let before = probe_bits(&m, 13);
+        m.update_batch(&[], &[], &[]);
+        m.update_batch_reference(&[], &[], &[]);
+        assert_eq!(before, probe_bits(&m, 13));
+        assert_eq!(m.updates(), 40);
     }
 
     #[test]

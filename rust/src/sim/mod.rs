@@ -129,6 +129,50 @@ impl RoundClock {
         broadcast_count: usize,
         example_bytes: usize,
     ) {
+        self.charge_round_inner(
+            node_sift_seconds,
+            update_seconds,
+            broadcast_count,
+            example_bytes,
+            false,
+        );
+    }
+
+    /// Charge one **pipelined** round: the sift phase and the update
+    /// replay ran concurrently, so simulated time advances by the *max*
+    /// of the two instead of their sum. Phase accounting still records
+    /// both phases in full — for pipelined runs
+    /// `sift + update + comm + warmstart` therefore exceeds `elapsed`,
+    /// and the gap is exactly the modeled pipelining win.
+    pub fn charge_round_overlapped(
+        &mut self,
+        node_sift_seconds: &[f64],
+        update_seconds: f64,
+        broadcast_count: usize,
+        example_bytes: usize,
+    ) {
+        self.charge_round_inner(
+            node_sift_seconds,
+            update_seconds,
+            broadcast_count,
+            example_bytes,
+            true,
+        );
+    }
+
+    /// The shared round charge: profile-weighted max over node sift
+    /// times, comm cost, per-phase accumulation. `overlapped` selects how
+    /// sift and update combine into elapsed time (max vs sum) — the only
+    /// difference between the strict and pipelined clocks, kept in one
+    /// place so the two can never drift apart.
+    fn charge_round_inner(
+        &mut self,
+        node_sift_seconds: &[f64],
+        update_seconds: f64,
+        broadcast_count: usize,
+        example_bytes: usize,
+        overlapped: bool,
+    ) {
         assert_eq!(node_sift_seconds.len(), self.profile.k());
         let sift = node_sift_seconds
             .iter()
@@ -139,7 +183,8 @@ impl RoundClock {
         self.sift_time += sift;
         self.update_time += update_seconds;
         self.comm_time += comm;
-        self.elapsed += sift + update_seconds + comm;
+        let round = if overlapped { sift.max(update_seconds) } else { sift + update_seconds };
+        self.elapsed += round + comm;
         self.rounds += 1;
     }
 
@@ -198,6 +243,21 @@ mod tests {
             RoundClock::new(NodeProfile::with_straggler(4, 10.0), CommModel::free());
         clock.charge_round(&[1.0, 1.0, 1.0, 1.0], 0.0, 0, 0);
         assert!((clock.elapsed_seconds() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapped_round_takes_max_of_sift_and_update() {
+        let mut clock = RoundClock::new(NodeProfile::uniform(2), CommModel::free());
+        // Update longer than sift: the round costs the update time.
+        clock.charge_round_overlapped(&[1.0, 2.0], 3.0, 5, 3136);
+        assert!((clock.elapsed_seconds() - 3.0).abs() < 1e-12);
+        // Sift longer than update: the round costs the (max-node) sift.
+        clock.charge_round_overlapped(&[4.0, 1.0], 0.5, 5, 3136);
+        assert!((clock.elapsed_seconds() - 7.0).abs() < 1e-12);
+        assert_eq!(clock.rounds(), 2);
+        // Phase accounting still records both phases in full.
+        assert!((clock.sift_time - 6.0).abs() < 1e-12);
+        assert!((clock.update_time - 3.5).abs() < 1e-12);
     }
 
     #[test]

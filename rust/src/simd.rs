@@ -167,6 +167,7 @@ pub fn gemm_nt(m: usize, n: usize, d: usize, xs: &[f32], ws: &[f32], out: &mut [
 pub struct ScoreScratch {
     a: Vec<f32>,
     b: Vec<f32>,
+    c: Vec<f32>,
 }
 
 impl ScoreScratch {
@@ -182,6 +183,18 @@ impl ScoreScratch {
     /// Borrow two disjoint buffers (e.g. a kernel tile plus row norms).
     pub fn pair(&mut self, na: usize, nb: usize) -> (&mut [f32], &mut [f32]) {
         (grow(&mut self.a, na), grow(&mut self.b, nb))
+    }
+
+    /// Borrow three disjoint buffers — the fused minibatch update path
+    /// needs a pre-activation tile plus two gradient accumulators
+    /// (`AdaGradMlp::update_batch`).
+    pub fn trio(
+        &mut self,
+        na: usize,
+        nb: usize,
+        nc: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        (grow(&mut self.a, na), grow(&mut self.b, nb), grow(&mut self.c, nc))
     }
 }
 
@@ -294,6 +307,19 @@ mod tests {
         b[0] = 2.0; // disjoint buffers
         assert_eq!(s.pair(100, 50).0[0], 1.0);
         assert_eq!(s.pair(100, 50).1[0], 2.0);
+    }
+
+    #[test]
+    fn trio_buffers_are_disjoint_and_persistent() {
+        let mut s = ScoreScratch::new();
+        let (a, b, c) = s.trio(8, 4, 2);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        c[0] = 3.0;
+        let (a2, b2, c2) = s.trio(8, 4, 2);
+        assert_eq!((a2[0], b2[0], c2[0]), (1.0, 2.0, 3.0));
+        // The trio shares the pair's first two allocations.
+        assert_eq!(s.pair(8, 4).0[0], 1.0);
     }
 
     #[test]

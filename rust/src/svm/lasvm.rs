@@ -529,6 +529,14 @@ impl<K: Kernel> Learner for LaSvm<K> {
         }
     }
 
+    // `update_batch` keeps the trait's sequential default (and
+    // `fused_batch_updates` stays false): every PROCESS/REPROCESS step
+    // reads the gradients left by the previous one, so LASVM's dual
+    // updates are inherently ordered and admit no fused minibatch form.
+    // The replay stage therefore applies SVM minibatches example by
+    // example even when fused replay is requested
+    // (`crate::exec::ReplayConfig::fused`).
+
     fn eval_ops(&self) -> u64 {
         // One kernel eval per support vector, D mults each: S(n) ~ n_sv * D.
         self.n_support() as u64 * self.dim as u64
@@ -752,6 +760,33 @@ mod tests {
                 assert_eq!(svm.score(row).to_bits(), o.to_bits(), "n={n}");
             }
         }
+    }
+
+    #[test]
+    fn update_batch_is_the_sequential_loop() {
+        // LASVM has no fused minibatch form; the trait default must
+        // reproduce example-by-example updates exactly.
+        let mut seq = train_toy(60, 1.0);
+        let mut batched = seq.clone();
+        assert!(!batched.fused_batch_updates());
+        let mut rng = Rng::new(13);
+        let n = 9;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let (x, y) = toy_example(&mut rng);
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        let ws: Vec<f32> = (0..n).map(|i| 1.0 + (i % 2) as f32).collect();
+        for i in 0..n {
+            seq.update(&xs[i * 2..(i + 1) * 2], ys[i], ws[i]);
+        }
+        batched.update_batch(&xs, &ys, &ws);
+        let probe = [0.3f32, -0.4];
+        assert_eq!(seq.score(&probe).to_bits(), batched.score(&probe).to_bits());
+        assert_eq!(seq.n_support(), batched.n_support());
+        assert_eq!(seq.bias().to_bits(), batched.bias().to_bits());
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Shared helpers for the execution-equivalence suites
-//! (`backend_equivalence.rs`, `replay_equivalence.rs`): canonical SVM/MLP
-//! runs plus exact-bits comparison of reports and final models.
+//! (`backend_equivalence.rs`, `replay_equivalence.rs`,
+//! `pipeline_equivalence.rs`): canonical SVM/MLP runs — sequential or
+//! pipelined — plus exact-bits comparison of reports and final models.
 
 // Each suite compiles this module separately and uses its own subset.
 #![allow(dead_code)]
 
 use para_active::active::SifterSpec;
 use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::pipeline::run_pipelined;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use para_active::exec::ReplayConfig;
@@ -74,6 +76,29 @@ pub fn svm_run(
     (report, bits)
 }
 
+/// The pipelined twin of [`svm_run`]: identical seeds and tuning, the
+/// round loop from `coordinator::pipeline`. `replay.max_stale_rounds` is
+/// forced to 1 by `with_pipeline` — the lag the pipeline realizes.
+pub fn svm_run_pipelined(
+    k: usize,
+    batch: usize,
+    budget: usize,
+    choice: BackendChoice,
+    replay: ReplayConfig,
+) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(k, batch, 128, budget)
+        .with_backend(choice)
+        .with_replay(replay)
+        .with_pipeline();
+    let report = run_pipelined(&mut svm, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&svm, &stream);
+    (report, bits)
+}
+
 /// [`svm_run`] with the default (synchronous) replay configuration.
 pub fn svm_run_sync(
     k: usize,
@@ -98,6 +123,25 @@ pub fn mlp_run(k: usize, choice: BackendChoice, replay: ReplayConfig) -> (SyncRe
     let sifter = SifterSpec::margin(0.0005, 11);
     let cfg = SyncConfig::new(k, 128, 96, 900).with_backend(choice).with_replay(replay);
     let report = run_sync(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&mlp, &stream);
+    (report, bits)
+}
+
+/// The pipelined twin of [`mlp_run`].
+pub fn mlp_run_pipelined(
+    k: usize,
+    choice: BackendChoice,
+    replay: ReplayConfig,
+) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 60);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let sifter = SifterSpec::margin(0.0005, 11);
+    let cfg = SyncConfig::new(k, 128, 96, 900)
+        .with_backend(choice)
+        .with_replay(replay)
+        .with_pipeline();
+    let report = run_pipelined(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
     let bits = probe_bits(&mlp, &stream);
     (report, bits)
 }

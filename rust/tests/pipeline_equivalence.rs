@@ -1,0 +1,213 @@
+//! The pipelined-rounds contract, in two halves.
+//!
+//! **Fused minibatch updates.** The MLP's `update_batch` is a fused
+//! minibatch AdaGrad step (gradient accumulation against the frozen
+//! pre-batch weights, one optimizer apply) built on the tiled kernels of
+//! `crate::simd`. Its contract: **bit-identical to the untiled
+//! per-example reference loop** (`AdaGradMlp::update_batch_reference`) at
+//! every batch size {1, 7, 8, 33, 256}, and bit-identical to the plain
+//! sequential `update` at batch size 1 (where the two semantics
+//! coincide). For learners without a fused form (LASVM), requesting fused
+//! replay is a bit-for-bit no-op, cost counters included.
+//!
+//! **Pipeline ≡ stale(·, 1).** A pipelined run sifts round t+1 against a
+//! snapshot that lags the applied updates by exactly one round, which is
+//! the `ReplayConfig::stale(batch, 1)` policy of the sequential loop. The
+//! suite asserts the two are **bit-identical** — same selections in the
+//! same broadcast order, same curve, same cost counters, same final model
+//! bits — across every backend and at the pool width the CI workers
+//! matrix exports (`PARA_ACTIVE_TEST_WORKERS` ∈ {1, 2, 8}). Pipelining
+//! may only ever change wall-clock and the simulated round charge.
+
+mod common;
+
+use common::{
+    assert_reports_identical, matrix_workers, mlp_run, mlp_run_pipelined, probe_bits, svm_run,
+    svm_run_pipelined,
+};
+use para_active::coordinator::backend::BackendChoice;
+use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::exec::ReplayConfig;
+use para_active::learner::Learner;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+
+/// A fresh MLP warmed with `warm` sequential stream examples — the fused
+/// step must hold on a non-trivial model, not just at init.
+fn warmed_mlp(warm: usize) -> (AdaGradMlp, ExampleStream) {
+    let stream_cfg = StreamConfig::nn_task();
+    let mut stream = ExampleStream::for_node(&stream_cfg, 3);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let mut x = vec![0.0f32; DIM];
+    for _ in 0..warm {
+        let y = stream.next_into(&mut x);
+        mlp.update(&x, y, 1.0);
+    }
+    (mlp, stream)
+}
+
+fn draw_batch(stream: &mut ExampleStream, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut xs = vec![0.0f32; n * DIM];
+    let mut ys = vec![0.0f32; n];
+    stream.next_batch_into(&mut xs, &mut ys);
+    let ws: Vec<f32> = (0..n).map(|i| 1.0 + (i % 4) as f32).collect();
+    (xs, ys, ws)
+}
+
+#[test]
+fn update_batch_matches_the_per_example_loop_at_every_size() {
+    // ISSUE acceptance: batches {1, 7, 8, 33, 256} on the paper-size MLP.
+    let stream_cfg = StreamConfig::nn_task();
+    let (mlp, mut stream) = warmed_mlp(64);
+    for n in [1usize, 7, 8, 33, 256] {
+        let mut tiled = mlp.clone();
+        let mut reference = mlp.clone();
+        let (xs, ys, ws) = draw_batch(&mut stream, n);
+        tiled.update_batch(&xs, &ys, &ws);
+        reference.update_batch_reference(&xs, &ys, &ws);
+        assert_eq!(
+            probe_bits(&tiled, &stream_cfg),
+            probe_bits(&reference, &stream_cfg),
+            "fused tiled step diverged from the per-example reference loop at n={n}"
+        );
+        assert_eq!(tiled.updates(), reference.updates(), "n={n}");
+    }
+}
+
+#[test]
+fn update_batch_of_one_is_the_sequential_update() {
+    let stream_cfg = StreamConfig::nn_task();
+    let (mlp, mut stream) = warmed_mlp(32);
+    let mut seq = mlp.clone();
+    let mut fused = mlp;
+    // A run of single-example fused steps must trace the sequential path
+    // exactly — this is the semantics join point of the two paths.
+    for _ in 0..30 {
+        let (xs, ys, ws) = draw_batch(&mut stream, 1);
+        seq.update(&xs, ys[0], ws[0]);
+        fused.update_batch(&xs, &ys, &ws);
+    }
+    assert_eq!(probe_bits(&seq, &stream_cfg), probe_bits(&fused, &stream_cfg));
+}
+
+#[test]
+fn fused_replay_is_deterministic() {
+    // Fused minibatch replay is a different trajectory than per-example
+    // replay (minibatch SGD), but it must stay a pure function of the
+    // seeds and the minibatch quantum.
+    let fused = ReplayConfig::fused_batches(16);
+    let (a, a_bits) = mlp_run(4, BackendChoice::Serial, fused);
+    let (b, b_bits) = mlp_run(4, BackendChoice::threaded(), fused);
+    assert_reports_identical(&a, &b, "fused replay serial vs threaded");
+    assert_eq!(a_bits, b_bits, "fused replay: final model bits");
+    assert!(a.replay.fused_minibatches > 0, "no fused minibatches ran");
+}
+
+#[test]
+fn fused_request_is_a_noop_for_the_svm() {
+    // LASVM keeps the sequential fallback: fused replay must be
+    // bit-identical to plain replay, per-example cost accounting included.
+    for batch in [1usize, 7, 64] {
+        let plain = ReplayConfig::synchronous(batch);
+        let fused = ReplayConfig::synchronous(batch).with_fused(true);
+        let (a, a_bits) = svm_run(4, 256, 1500, BackendChoice::Serial, plain);
+        let (b, b_bits) = svm_run(4, 256, 1500, BackendChoice::Serial, fused);
+        assert_reports_identical(&a, &b, &format!("svm fused noop batch={batch}"));
+        assert_eq!(a_bits, b_bits, "svm fused noop batch={batch}: final model bits");
+        assert_eq!(b.replay.fused_minibatches, 0, "the svm cannot fuse");
+    }
+}
+
+#[test]
+fn pipelined_equals_stale_one_svm() {
+    for batch in [1usize, 7, 64] {
+        let (stale, stale_bits) =
+            svm_run(4, 256, 1500, BackendChoice::Serial, ReplayConfig::stale(batch, 1));
+        let (piped, piped_bits) = svm_run_pipelined(
+            4,
+            256,
+            1500,
+            BackendChoice::Serial,
+            ReplayConfig::synchronous(batch),
+        );
+        assert!(piped.pipelined && !stale.pipelined);
+        assert_reports_identical(&stale, &piped, &format!("svm pipeline≡stale batch={batch}"));
+        assert_eq!(stale_bits, piped_bits, "svm batch={batch}: final model bits");
+        // The pipeline really deferred: every selection still applied.
+        assert_eq!(piped.replay.applied, piped.replay.submitted);
+        assert_eq!(piped.replay.applied, piped.n_queried);
+    }
+}
+
+#[test]
+fn pipelined_equals_stale_one_mlp() {
+    let (stale, stale_bits) = mlp_run(4, BackendChoice::Serial, ReplayConfig::stale(7, 1));
+    let (piped, piped_bits) =
+        mlp_run_pipelined(4, BackendChoice::Serial, ReplayConfig::synchronous(7));
+    assert_reports_identical(&stale, &piped, "mlp pipeline≡stale");
+    assert_eq!(stale_bits, piped_bits, "mlp: final model bits");
+}
+
+#[test]
+fn pipelined_fused_equals_stale_fused_mlp() {
+    // The two tentpole halves compose: pipelined rounds with a fused
+    // update phase == stale(·, 1) sequential rounds with the same fusion.
+    let (stale, stale_bits) =
+        mlp_run(4, BackendChoice::Serial, ReplayConfig::stale(16, 1).with_fused(true));
+    let (piped, piped_bits) =
+        mlp_run_pipelined(4, BackendChoice::threaded(), ReplayConfig::fused_batches(16));
+    assert_reports_identical(&stale, &piped, "mlp pipeline+fused ≡ stale+fused");
+    assert_eq!(stale_bits, piped_bits, "mlp fused: final model bits");
+    assert!(piped.replay.fused_minibatches > 0);
+}
+
+#[test]
+fn pipelined_equivalence_holds_on_every_backend() {
+    let (reference, ref_bits) =
+        svm_run(6, 240, 1300, BackendChoice::Serial, ReplayConfig::stale(7, 1));
+    let backends = [
+        BackendChoice::Serial,
+        BackendChoice::Threaded { threads: 0 },
+        BackendChoice::Threaded { threads: 2 },
+        BackendChoice::Pinned { threads: 3 },
+    ];
+    for backend in backends {
+        let (run, bits) =
+            svm_run_pipelined(6, 240, 1300, backend, ReplayConfig::synchronous(7));
+        let what = format!("pipelined backend={backend}");
+        assert_reports_identical(&reference, &run, &what);
+        assert_eq!(ref_bits, bits, "{what}: final model scores");
+        assert!(run.pipelined);
+    }
+}
+
+#[test]
+fn worker_matrix_from_env() {
+    // CI smoke entry point: the workers-matrix job exports
+    // PARA_ACTIVE_TEST_WORKERS in {1, 2, 8}; pipeline ≡ stale(·, 1) must
+    // hold at exactly that pool width (local runs default to 2).
+    let workers = matrix_workers();
+    let (reference, ref_bits) =
+        svm_run(4, 256, 1500, BackendChoice::Serial, ReplayConfig::stale(7, 1));
+    let (run, bits) = svm_run_pipelined(
+        4,
+        256,
+        1500,
+        BackendChoice::Threaded { threads: workers },
+        ReplayConfig::synchronous(7),
+    );
+    assert_reports_identical(&reference, &run, &format!("matrix workers={workers}"));
+    assert_eq!(ref_bits, bits, "matrix workers={workers}: final model scores");
+    assert_eq!(run.pool.workers, workers);
+    assert_eq!(run.pool.threads_spawned, workers as u64, "pool must spawn once");
+
+    // And the fused MLP pipeline at the same width.
+    let (mlp_ref, mlp_ref_bits) =
+        mlp_run(4, BackendChoice::Serial, ReplayConfig::stale(16, 1).with_fused(true));
+    let (mlp_piped, mlp_piped_bits) = mlp_run_pipelined(
+        4,
+        BackendChoice::Threaded { threads: workers },
+        ReplayConfig::fused_batches(16),
+    );
+    assert_reports_identical(&mlp_ref, &mlp_piped, &format!("mlp matrix workers={workers}"));
+    assert_eq!(mlp_ref_bits, mlp_piped_bits, "mlp matrix workers={workers}: model bits");
+}
