@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Validate BENCH_sift.json against its schema (version 4).
+
+Gating in CI: the *shape* of the bench output is a contract — downstream
+tooling (and the eventual minimum-speedup gate) reads these fields, so a
+bench refactor that drops or renames one must fail the build. The actual
+speed numbers are explicitly NOT gated here; thresholds stay non-gating
+until runner core counts are pinned down (see ROADMAP.md).
+
+Stdlib only. Usage: python3 python/validate_bench.py [path/to/BENCH_sift.json]
+"""
+
+import json
+import sys
+
+SCHEMA = 4
+
+ERRORS = []
+
+
+def fail(msg):
+    ERRORS.append(msg)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_row(where, row, spec):
+    """spec: dict of field -> predicate."""
+    if not isinstance(row, dict):
+        fail(f"{where}: expected an object, got {type(row).__name__}")
+        return
+    for field, pred in spec.items():
+        if field not in row:
+            fail(f"{where}: missing field {field!r}")
+        elif not pred(row[field]):
+            fail(f"{where}: field {field!r} has invalid value {row[field]!r}")
+    for extra in set(row) - set(spec):
+        fail(f"{where}: unknown field {extra!r}")
+
+
+def check_array(doc, key, spec, min_len=1):
+    rows = doc.get(key)
+    if not isinstance(rows, list):
+        fail(f"{key!r}: expected an array")
+        return
+    if len(rows) < min_len:
+        fail(f"{key!r}: expected at least {min_len} row(s), got {len(rows)}")
+    for i, row in enumerate(rows):
+        check_row(f"{key}[{i}]", row, spec)
+
+
+def non_negative(v):
+    return is_num(v) and v >= 0
+
+
+def positive(v):
+    return is_num(v) and v > 0
+
+
+def count(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_sift.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {path} not found — did the bench run?")
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"FAIL: {path} is not valid JSON: {e}")
+        return 1
+
+    if not isinstance(doc, dict):
+        print(f"FAIL: {path}: top level must be an object")
+        return 1
+
+    if doc.get("bench") != "sift":
+        fail(f"'bench' must be \"sift\", got {doc.get('bench')!r}")
+    if doc.get("schema") != SCHEMA:
+        fail(f"'schema' must be {SCHEMA}, got {doc.get('schema')!r}")
+    for key in ("cores", "shard"):
+        if not (isinstance(doc.get(key), int) and doc.get(key, 0) > 0):
+            fail(f"{key!r} must be a positive integer, got {doc.get(key)!r}")
+
+    check_array(doc, "paths", {
+        "path": lambda v: isinstance(v, str) and v,
+        "scalar_rows_per_s": positive,
+        "blocked_rows_per_s": positive,
+        "speedup": positive,
+    })
+    check_array(doc, "sweep", {
+        "k": lambda v: isinstance(v, int) and v >= 1,
+        "serial_ms": positive,
+        "threaded_ms": positive,
+        "pooled_ms": positive,
+        "speedup_threaded": positive,
+        "speedup_pooled": positive,
+    })
+    check_array(doc, "update", {
+        "learner": lambda v: isinstance(v, str) and v,
+        "batch": lambda v: isinstance(v, int) and v >= 1,
+        "sequential_rows_per_s": positive,
+        "batched_rows_per_s": positive,
+        "speedup": positive,
+    })
+    check_row("pipeline", doc.get("pipeline", None), {
+        "rounds": count,
+        "serial_ms_per_round": positive,
+        "pipelined_ms_per_round": positive,
+        "speedup": positive,
+    })
+    check_array(doc, "net", {
+        "learner": lambda v: isinstance(v, str) and v,
+        "rounds": count,
+        "sync_messages": count,
+        "delta_syncs": count,
+        "full_syncs": count,
+        "sync_bytes": count,
+        "full_equiv_bytes": count,
+        "delta_ratio": lambda v: is_num(v) and 0.0 < v <= 1.5,
+    })
+
+    # Internal consistency of the wire telemetry (structure, not speed).
+    for i, row in enumerate(doc.get("net") or []):
+        if not isinstance(row, dict):
+            continue
+        d, f, m = row.get("delta_syncs"), row.get("full_syncs"), row.get("sync_messages")
+        if all(isinstance(v, int) for v in (d, f, m)) and d + f != m:
+            fail(f"net[{i}]: delta_syncs + full_syncs != sync_messages ({d}+{f} != {m})")
+
+    for extra in set(doc) - {"bench", "schema", "cores", "shard", "paths",
+                             "sweep", "update", "pipeline", "net"}:
+        fail(f"unknown top-level key {extra!r}")
+
+    if ERRORS:
+        print(f"FAIL: {path} violates bench schema {SCHEMA}:")
+        for e in ERRORS:
+            print(f"  - {e}")
+        return 1
+    print(f"OK: {path} conforms to bench schema {SCHEMA}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,6 +38,10 @@ use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use para_active::exec::{ReplayConfig, ReplayExecutor};
 use para_active::learner::{Learner, NativeScorer};
+use para_active::net::{
+    config_fingerprint, run_distributed, serve_sift_node, InProcTransport, MlpDenseCodec,
+    NetStats, SvmDeltaCodec, TaskKind,
+};
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::sim::Stopwatch;
 use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
@@ -192,6 +196,126 @@ struct PipelineRow {
     pipelined_run_s: f64,
 }
 
+/// Wire cost of one distributed run's model sync (delta vs full-state).
+struct NetRow {
+    learner: &'static str,
+    rounds: u64,
+    stats: NetStats,
+}
+
+/// One small distributed run over an in-proc wire, to measure what the
+/// model sync actually ships. The SVM's growing support set is the
+/// delta codec's favorable case; the MLP's dense AdaGrad state is its
+/// worst case (ratio ≈ 1) — both are reported honestly.
+fn measure_net(learner: &'static str) -> NetRow {
+    use para_active::coordinator::backend::SerialBackend;
+    let fp = config_fingerprint(&[0xbe9c4, learner.len() as u64]);
+    let report = match learner {
+        "svm" => {
+            let stream = StreamConfig::svm_task();
+            let test = TestSet::generate(&stream, 40);
+            let sifter = SifterSpec::margin(0.1, 7);
+            let cfg = {
+                let mut c = SyncConfig::new(2, 256, 128, 3000);
+                c.eval_every_rounds = 0;
+                c
+            };
+            let (mut hub, chans) = InProcTransport::pair(1);
+            let handles: Vec<_> = chans
+                .into_iter()
+                .map(|mut chan| {
+                    let node_stream = stream.clone();
+                    std::thread::spawn(move || {
+                        let mut replica =
+                            LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+                        let mut codec = SvmDeltaCodec::new(DIM);
+                        serve_sift_node(
+                            &mut chan,
+                            &mut replica,
+                            &mut codec,
+                            &NativeScorer,
+                            &SerialBackend,
+                            &node_stream,
+                            TaskKind::Svm,
+                            fp,
+                        )
+                        .expect("bench svm node");
+                    })
+                })
+                .collect();
+            let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+            let mut codec = SvmDeltaCodec::new(DIM);
+            let r = run_distributed(
+                &mut svm,
+                &mut codec,
+                &sifter,
+                &stream,
+                &test,
+                &cfg,
+                &mut hub,
+                TaskKind::Svm,
+                fp,
+            )
+            .expect("bench svm distributed run");
+            for h in handles {
+                h.join().expect("bench svm node thread");
+            }
+            r
+        }
+        _ => {
+            let stream = StreamConfig::nn_task();
+            let test = TestSet::generate(&stream, 40);
+            let sifter = SifterSpec::margin(0.0005, 11);
+            let cfg = {
+                let mut c = SyncConfig::new(2, 256, 128, 3000);
+                c.eval_every_rounds = 0;
+                c
+            };
+            let (mut hub, chans) = InProcTransport::pair(1);
+            let handles: Vec<_> = chans
+                .into_iter()
+                .map(|mut chan| {
+                    let node_stream = stream.clone();
+                    std::thread::spawn(move || {
+                        let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+                        let mut codec = MlpDenseCodec::new();
+                        serve_sift_node(
+                            &mut chan,
+                            &mut replica,
+                            &mut codec,
+                            &NativeScorer,
+                            &SerialBackend,
+                            &node_stream,
+                            TaskKind::Nn,
+                            fp,
+                        )
+                        .expect("bench mlp node");
+                    })
+                })
+                .collect();
+            let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+            let mut codec = MlpDenseCodec::new();
+            let r = run_distributed(
+                &mut mlp,
+                &mut codec,
+                &sifter,
+                &stream,
+                &test,
+                &cfg,
+                &mut hub,
+                TaskKind::Nn,
+                fp,
+            )
+            .expect("bench mlp distributed run");
+            for h in handles {
+                h.join().expect("bench mlp node thread");
+            }
+            r
+        }
+    };
+    NetRow { learner, rounds: report.rounds, stats: report.net }
+}
+
 fn write_json(
     cores: usize,
     shard: usize,
@@ -199,10 +323,11 @@ fn write_json(
     rows: &[SweepRow],
     updates: &[UpdateRow],
     pipe: &PipelineRow,
+    nets: &[NetRow],
 ) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 3,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 4,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -251,12 +376,31 @@ fn write_json(
     body.push_str("  ],\n");
     body.push_str(&format!(
         "  \"pipeline\": {{\"rounds\": {}, \"serial_ms_per_round\": {:.6}, \
-         \"pipelined_ms_per_round\": {:.6}, \"speedup\": {:.4}}}\n",
+         \"pipelined_ms_per_round\": {:.6}, \"speedup\": {:.4}}},\n",
         pipe.rounds,
         pipe.serial_run_s * 1e3 / pipe.rounds.max(1) as f64,
         pipe.pipelined_run_s * 1e3 / pipe.rounds.max(1) as f64,
         pipe.serial_run_s / pipe.pipelined_run_s.max(1e-12),
     ));
+    body.push_str("  \"net\": [\n");
+    for (i, n) in nets.iter().enumerate() {
+        let comma = if i + 1 < nets.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"learner\": \"{}\", \"rounds\": {}, \"sync_messages\": {}, \
+             \"delta_syncs\": {}, \"full_syncs\": {}, \"sync_bytes\": {}, \
+             \"full_equiv_bytes\": {}, \"delta_ratio\": {:.4}}}{}\n",
+            n.learner,
+            n.rounds,
+            n.stats.sync_messages,
+            n.stats.delta_syncs,
+            n.stats.full_syncs,
+            n.stats.sync_bytes,
+            n.stats.full_equiv_bytes,
+            n.stats.delta_ratio(),
+            comma
+        ));
+    }
+    body.push_str("  ]\n");
     body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
         Ok(()) => println!("\nwrote BENCH_sift.json"),
@@ -496,5 +640,23 @@ fn main() {
         pipe.rounds
     );
 
-    write_json(cores, shard, &paths, &rows, &updates, &pipe);
+    // --- Model-sync wire cost: delta encoding vs full-state sync. ---
+    println!("\n# model-sync wire cost (2 lanes over an in-proc wire)");
+    let nets = [measure_net("svm"), measure_net("mlp_h100")];
+    for n in &nets {
+        println!(
+            "      {:8} {} rounds: {} syncs ({} delta / {} full), {} B shipped vs \
+             {} B always-full — delta ratio {:.3}",
+            n.learner,
+            n.rounds,
+            n.stats.sync_messages,
+            n.stats.delta_syncs,
+            n.stats.full_syncs,
+            n.stats.sync_bytes,
+            n.stats.full_equiv_bytes,
+            n.stats.delta_ratio()
+        );
+    }
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets);
 }

@@ -220,6 +220,161 @@ pub fn run_sync_nn(
     }
 }
 
+/// Fingerprint of an SVM run's out-of-band configuration — everything a
+/// node process must agree on that is *not* carried by the init message
+/// (hyper-parameters, batch geometry, seeds, budget). Both the
+/// coordinator and every node fold their own CLI flags through this; a
+/// mismatch fails the handshake (see [`crate::net::config_fingerprint`]).
+pub fn svm_fingerprint(cfg: &SvmExperimentConfig, nodes: usize, budget: usize) -> u64 {
+    crate::net::config_fingerprint(&[
+        1, // task discriminant
+        cfg.c.to_bits() as u64,
+        cfg.gamma.to_bits() as u64,
+        cfg.eta_parallel.to_bits(),
+        cfg.eta_sequential.to_bits(),
+        cfg.global_batch as u64,
+        cfg.warmstart as u64,
+        cfg.seed,
+        nodes as u64,
+        budget as u64,
+    ])
+}
+
+/// NN counterpart of [`svm_fingerprint`].
+pub fn nn_fingerprint(cfg: &NnExperimentConfig, nodes: usize, budget: usize) -> u64 {
+    crate::net::config_fingerprint(&[
+        2, // task discriminant
+        cfg.mlp.input_dim as u64,
+        cfg.mlp.hidden as u64,
+        cfg.mlp.lr.to_bits() as u64,
+        cfg.mlp.eps.to_bits() as u64,
+        cfg.mlp.init_scale.to_bits() as u64,
+        cfg.mlp.seed,
+        cfg.eta.to_bits(),
+        cfg.global_batch as u64,
+        cfg.warmstart as u64,
+        cfg.seed,
+        nodes as u64,
+        budget as u64,
+    ])
+}
+
+/// [`run_sync_svm`] with the sift phase distributed over `transport`'s
+/// node processes ([`crate::net::run_distributed`]): same learner, same
+/// sifter seeds, same replay policy — bit-identical to the in-process
+/// wrappers under `stale ∈ {0, 1}`. Model state reaches the nodes as
+/// epoch-versioned LASVM deltas ([`crate::net::SvmDeltaCodec`]).
+pub fn run_distributed_svm(
+    cfg: &SvmExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+    transport: &mut dyn crate::net::Transport,
+) -> anyhow::Result<SyncReport> {
+    let mut learner = cfg.make_learner();
+    let eta = if nodes == 1 { cfg.eta_sequential } else { cfg.eta_parallel };
+    let sifter = SifterSpec::margin(eta, cfg.seed ^ nodes as u64);
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let mut sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_replay(cfg.replay)
+        .with_label(format!("svm distributed k={nodes}"));
+    if cfg.pipeline {
+        sc = sc.with_pipeline();
+    }
+    let mut codec = crate::net::SvmDeltaCodec::new(DIM);
+    crate::net::run_distributed(
+        &mut learner,
+        &mut codec,
+        &sifter,
+        stream_cfg,
+        &test,
+        &sc,
+        transport,
+        crate::net::TaskKind::Svm,
+        svm_fingerprint(cfg, nodes, budget),
+    )
+}
+
+/// NN counterpart of [`run_distributed_svm`]: dense weight-diff syncs via
+/// [`crate::net::MlpDenseCodec`].
+pub fn run_distributed_nn(
+    cfg: &NnExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+    transport: &mut dyn crate::net::Transport,
+) -> anyhow::Result<SyncReport> {
+    let mut learner = cfg.make_learner();
+    let sifter = SifterSpec::margin(cfg.eta, cfg.seed ^ nodes as u64);
+    let test = TestSet::generate(stream_cfg, cfg.test_size);
+    let mut sc = SyncConfig::new(nodes, cfg.global_batch, cfg.warmstart, budget)
+        .with_replay(cfg.replay)
+        .with_label(format!("nn distributed k={nodes}"));
+    if cfg.pipeline {
+        sc = sc.with_pipeline();
+    }
+    let mut codec = crate::net::MlpDenseCodec::new();
+    crate::net::run_distributed(
+        &mut learner,
+        &mut codec,
+        &sifter,
+        stream_cfg,
+        &test,
+        &sc,
+        transport,
+        crate::net::TaskKind::Nn,
+        nn_fingerprint(cfg, nodes, budget),
+    )
+}
+
+/// Serve one SVM sift-node process over `chan` — the node-side twin of
+/// [`run_distributed_svm`]. The experiment config and `nodes`/`budget`
+/// must equal the coordinator's (the fingerprint handshake enforces it).
+pub fn serve_node_svm(
+    cfg: &SvmExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+    chan: &mut dyn crate::net::Channel,
+) -> anyhow::Result<crate::net::SiftNodeReport> {
+    let mut replica = cfg.make_learner();
+    let mut codec = crate::net::SvmDeltaCodec::new(DIM);
+    let backend = cfg.backend.build();
+    crate::net::serve_sift_node(
+        chan,
+        &mut replica,
+        &mut codec,
+        &NativeScorer,
+        backend.as_ref(),
+        stream_cfg,
+        crate::net::TaskKind::Svm,
+        svm_fingerprint(cfg, nodes, budget),
+    )
+}
+
+/// NN counterpart of [`serve_node_svm`].
+pub fn serve_node_nn(
+    cfg: &NnExperimentConfig,
+    stream_cfg: &StreamConfig,
+    nodes: usize,
+    budget: usize,
+    chan: &mut dyn crate::net::Channel,
+) -> anyhow::Result<crate::net::SiftNodeReport> {
+    let mut replica = cfg.make_learner();
+    let mut codec = crate::net::MlpDenseCodec::new();
+    let backend = cfg.backend.build();
+    crate::net::serve_sift_node(
+        chan,
+        &mut replica,
+        &mut codec,
+        &NativeScorer,
+        backend.as_ref(),
+        stream_cfg,
+        crate::net::TaskKind::Nn,
+        nn_fingerprint(cfg, nodes, budget),
+    )
+}
+
 /// Run the passive NN baseline.
 pub fn run_passive_nn(
     cfg: &NnExperimentConfig,
@@ -289,6 +444,47 @@ mod tests {
         let r = run_sync_nn(&nn_cfg, &StreamConfig::nn_task(), 2, 700);
         assert!(r.pipelined);
         assert!(r.replay.fused_minibatches > 0);
+    }
+
+    #[test]
+    fn distributed_wrapper_matches_in_process() {
+        let mut cfg = SvmExperimentConfig::small();
+        cfg.test_size = 80;
+        let stream = StreamConfig::svm_task();
+        let want = run_sync_svm(&cfg, &stream, 2, 1600);
+
+        let (mut hub, chans) = crate::net::InProcTransport::pair(2);
+        let handles: Vec<_> = chans
+            .into_iter()
+            .map(|mut c| {
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    serve_node_svm(&cfg, &StreamConfig::svm_task(), 2, 1600, &mut c)
+                })
+            })
+            .collect();
+        let got = run_distributed_svm(&cfg, &stream, 2, 1600, &mut hub).unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(got.final_test_errors().to_bits(), want.final_test_errors().to_bits());
+        assert_eq!(got.n_queried, want.n_queried);
+        assert_eq!(got.rounds, want.rounds);
+        assert_eq!(got.backend, "inproc");
+    }
+
+    #[test]
+    fn fingerprints_separate_configs() {
+        let svm = SvmExperimentConfig::small();
+        let nn = NnExperimentConfig::small();
+        let a = svm_fingerprint(&svm, 2, 1000);
+        assert_eq!(a, svm_fingerprint(&svm, 2, 1000));
+        assert_ne!(a, svm_fingerprint(&svm, 4, 1000), "node count must move the digest");
+        assert_ne!(a, svm_fingerprint(&svm, 2, 2000), "budget must move the digest");
+        let mut tweaked = svm.clone();
+        tweaked.gamma = 0.013;
+        assert_ne!(a, svm_fingerprint(&tweaked, 2, 1000));
+        assert_ne!(a, nn_fingerprint(&nn, 2, 1000));
     }
 
     #[test]

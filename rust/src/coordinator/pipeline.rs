@@ -253,6 +253,7 @@ fn run_rounds_pipelined<L: Learner + Clone>(
         pipelined: true,
         pool: session.stats(),
         replay: replay.stats(),
+        net: crate::net::NetStats::default(),
         costs,
         curve,
     }

@@ -50,6 +50,7 @@ use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use crate::exec::{PoolStats, ReplayConfig, ReplayExecutor, ReplayOutcome, ReplayStats};
 use crate::learner::{Learner, SiftScorer};
 use crate::metrics::{CurvePoint, ErrorCurve};
+use crate::net::NetStats;
 use crate::sim::{CommModel, NodeProfile, RoundClock, Stopwatch};
 
 /// Parameters of a synchronous run.
@@ -186,6 +187,10 @@ pub struct SyncReport {
     pub pool: PoolStats,
     /// Replay-stage counters (minibatches, backlog high-water mark).
     pub replay: ReplayStats,
+    /// Wire telemetry of a distributed run ([`crate::net`]): frame bytes
+    /// each way, sync-message counts, delta-vs-full ratio. All zero
+    /// (`sync_messages == 0`) for in-process runs.
+    pub net: NetStats,
     pub costs: CostCounters,
 }
 
@@ -212,23 +217,33 @@ pub(crate) struct NodeLane {
     scores: Vec<f32>,
 }
 
-/// Build the k per-node lanes of a run (node-seeded streams and sifters,
-/// preallocated shard buffers).
+/// Build lane `node` of a run (node-seeded stream and sifter, preallocated
+/// shard buffers). Also the unit a remote sift node rebuilds from its init
+/// message (`crate::net::node`) — same constructor, same node id, so the
+/// lane is bit-identical wherever it is hosted.
+pub(crate) fn make_lane(
+    stream_cfg: &StreamConfig,
+    sifter: &SifterSpec,
+    node: usize,
+    shard: usize,
+) -> NodeLane {
+    NodeLane {
+        stream: ExampleStream::for_node(stream_cfg, node as u32),
+        sifter: sifter.build(node),
+        xs: vec![0.0f32; shard * DIM],
+        ys: vec![0.0f32; shard],
+        scores: vec![0.0f32; shard],
+    }
+}
+
+/// Build the k per-node lanes of a run.
 pub(crate) fn make_lanes(
     stream_cfg: &StreamConfig,
     sifter: &SifterSpec,
     k: usize,
     shard: usize,
 ) -> Vec<NodeLane> {
-    (0..k)
-        .map(|node| NodeLane {
-            stream: ExampleStream::for_node(stream_cfg, node as u32),
-            sifter: sifter.build(node),
-            xs: vec![0.0f32; shard * DIM],
-            ys: vec![0.0f32; shard],
-            scores: vec![0.0f32; shard],
-        })
-        .collect()
+    (0..k).map(|node| make_lane(stream_cfg, sifter, node, shard)).collect()
 }
 
 /// Warmstart phase shared by the synchronous and pipelined loops: passive
@@ -495,6 +510,7 @@ fn run_rounds<L: Learner>(
         pipelined: false,
         pool: session.stats(),
         replay: replay.stats(),
+        net: NetStats::default(),
         costs,
         curve,
     }

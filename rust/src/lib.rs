@@ -40,6 +40,7 @@ pub mod data;
 pub mod exec;
 pub mod learner;
 pub mod metrics;
+pub mod net;
 pub mod nn;
 pub mod rng;
 pub mod simd;
@@ -72,6 +73,10 @@ pub mod prelude {
         WorkerScorer,
     };
     pub use crate::learner::{Learner, LockedScorer, NativeScorer, SiftScorer};
+    pub use crate::net::{
+        config_fingerprint, run_distributed, serve_sift_node, InProcTransport, MlpDenseCodec,
+        ModelCodec, NetStats, SvmDeltaCodec, TaskKind, Transport, UdsTransport,
+    };
     pub use crate::simd::ScoreScratch;
     pub use crate::metrics::{ErrorCurve, SpeedupTable};
     pub use crate::nn::{AdaGradMlp, MlpConfig};

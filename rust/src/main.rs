@@ -8,15 +8,20 @@
 //! set, so argument parsing is hand-rolled (no clap).
 
 use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::sync::SyncReport;
 use para_active::coordinator::{
-    run_passive_nn, run_passive_svm, run_sync_nn, run_sync_svm, NnExperimentConfig,
-    SvmExperimentConfig,
+    nn_fingerprint, run_distributed_nn, run_distributed_svm, run_passive_nn, run_passive_svm,
+    run_sync_nn, run_sync_svm, serve_node_nn, serve_node_svm, svm_fingerprint,
+    NnExperimentConfig, SvmExperimentConfig,
 };
 use para_active::data::StreamConfig;
 use para_active::exec::ReplayConfig;
 use para_active::metrics::curves_to_markdown;
+use para_active::net::{Channel, SiftNodeReport, TcpTransport, Transport, UdsTransport};
 use para_active::runtime::{artifacts_available, XlaRuntime};
 use para_active::theory::{run_delayed_iwal, TheoryConfig};
+use std::path::Path;
+use std::time::Duration;
 
 const USAGE: &str = "\
 para-active — parallel learning via active-learning sifting
@@ -28,10 +33,12 @@ COMMANDS:
   quickstart                quick SVM parallel-active demo (small budgets)
   svm       [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
-                                        parallel-active kernel SVM
+            [--role R] [--listen A] [--connect A] [--remote-nodes P]
+            [--transport T]             parallel-active kernel SVM
   nn        [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
-                                        parallel-active neural net
+            [--role R] [--listen A] [--connect A] [--remote-nodes P]
+            [--transport T]             parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
   artifacts                 inspect the AOT manifest; verify PJRT loads it
@@ -54,6 +61,17 @@ SVM's ordered dual steps keep the sequential loop). `--pipeline` overlaps
 each round's sift with the previous round's replay: the nodes sift an
 immutable model snapshot exactly one round stale (`--stale 1` semantics,
 bit-identical to it) while the coordinator thread applies the updates.
+
+ROLES (--role, svm/nn only): `local` (default) runs everything in this
+process. `coordinator` binds `--listen <socket path | host:port>` on the
+`--transport` carrier (uds | tcp, default uds), waits for
+`--remote-nodes P` node processes (default 1), and drives them through
+the same round schedule, syncing model state as epoch-versioned deltas.
+`node` connects to a coordinator with `--connect <socket path |
+host:port>` and serves its lane slice on this machine's sift backend.
+Launch every process with identical experiment flags — a
+config-fingerprint handshake refuses mismatches. Distributed runs are
+bit-identical to --role local under --stale 0 or 1/--pipeline.
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -92,6 +110,162 @@ impl Args {
     }
 }
 
+/// Wire carrier named by --transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TransportKind {
+    Uds,
+    Tcp,
+}
+
+/// What this process is in the run topology, resolved from
+/// --role/--listen/--connect/--remote-nodes/--transport.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum NetRole {
+    Local,
+    Coordinator { listen: String, procs: usize, kind: TransportKind },
+    Node { connect: String, kind: TransportKind },
+}
+
+impl NetRole {
+    /// Remote node processes this role will drive (0 unless coordinator) —
+    /// feeds the oversubscription warning.
+    fn remote_procs(&self) -> usize {
+        match self {
+            NetRole::Coordinator { procs, .. } => *procs,
+            _ => 0,
+        }
+    }
+}
+
+/// Validate the distribution flags. Every illegal combination gets an
+/// error that names both the offending flag and the fix.
+fn resolve_net_flags(
+    role: &str,
+    listen: Option<String>,
+    connect: Option<String>,
+    remote_nodes: Option<usize>,
+    transport: &str,
+) -> Result<NetRole, String> {
+    let kind = match transport {
+        "uds" => TransportKind::Uds,
+        "tcp" => TransportKind::Tcp,
+        other => return Err(format!("bad --transport {other} (uds|tcp)")),
+    };
+    match role {
+        "local" => {
+            if listen.is_some() {
+                return Err("--listen is only meaningful with --role coordinator".into());
+            }
+            if connect.is_some() {
+                return Err("--connect is only meaningful with --role node".into());
+            }
+            if remote_nodes.is_some() {
+                return Err("--remote-nodes is only meaningful with --role coordinator".into());
+            }
+            Ok(NetRole::Local)
+        }
+        "coordinator" => {
+            if connect.is_some() {
+                return Err(
+                    "--role coordinator listens, it does not connect — use --listen \
+                     <socket path | host:port> (and --connect on the node processes)"
+                        .into(),
+                );
+            }
+            let listen = listen.ok_or(
+                "--role coordinator needs --listen <socket path | host:port> for the \
+                 node processes to reach",
+            )?;
+            let procs = remote_nodes.unwrap_or(1);
+            if procs == 0 {
+                return Err(
+                    "--remote-nodes must be >= 1 (use --role local for a single-process run)"
+                        .into(),
+                );
+            }
+            Ok(NetRole::Coordinator { listen, procs, kind })
+        }
+        "node" => {
+            if listen.is_some() {
+                return Err(
+                    "--role node connects, it does not listen — use --connect <socket \
+                     path | host:port> (and --listen on the coordinator)"
+                        .into(),
+                );
+            }
+            if remote_nodes.is_some() {
+                return Err(
+                    "--remote-nodes belongs on the coordinator; a node process serves \
+                     exactly one connection"
+                        .into(),
+                );
+            }
+            let connect = connect.ok_or(
+                "--role node needs --connect <socket path | host:port> of a running \
+                 coordinator",
+            )?;
+            Ok(NetRole::Node { connect, kind })
+        }
+        other => Err(format!("bad --role {other} (local|coordinator|node)")),
+    }
+}
+
+/// Gather and validate the distribution flags.
+fn net_args(args: &Args) -> anyhow::Result<NetRole> {
+    let role: String = args.get("--role", "local".to_string())?;
+    let listen: Option<String> = args.opt("--listen")?;
+    let connect: Option<String> = args.opt("--connect")?;
+    let remote_nodes: Option<usize> = args.opt("--remote-nodes")?;
+    let transport: String = args.get("--transport", "uds".to_string())?;
+    resolve_net_flags(&role, listen, connect, remote_nodes, &transport)
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// How long a node process keeps retrying the coordinator's endpoint.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn build_hub(kind: TransportKind, addr: &str, procs: usize) -> anyhow::Result<Box<dyn Transport>> {
+    eprintln!("listening on {addr} for {procs} node process(es) ...");
+    Ok(match kind {
+        TransportKind::Uds => Box::new(UdsTransport::listen(Path::new(addr), procs)?),
+        TransportKind::Tcp => Box::new(TcpTransport::listen(addr, procs)?),
+    })
+}
+
+fn connect_chan(kind: TransportKind, addr: &str) -> anyhow::Result<Box<dyn Channel>> {
+    eprintln!("connecting to coordinator at {addr} ...");
+    Ok(match kind {
+        TransportKind::Uds => Box::new(UdsTransport::connect(Path::new(addr), CONNECT_TIMEOUT)?),
+        TransportKind::Tcp => Box::new(TcpTransport::connect(addr, CONNECT_TIMEOUT)?),
+    })
+}
+
+fn print_node_report(rep: &SiftNodeReport) {
+    println!(
+        "node {} served {} lane(s) for {} rounds; pool: workers={} threads_spawned={}",
+        rep.node_index, rep.lanes, rep.rounds, rep.pool.workers, rep.pool.threads_spawned
+    );
+}
+
+/// Wire telemetry line for distributed reports (silent for local runs,
+/// which never sync).
+fn print_net_stats(r: &SyncReport) {
+    if r.net.sync_messages > 0 {
+        println!(
+            "net: sent={}B recv={}B syncs={} (delta={} full={}) sync_bytes={} \
+             full_equiv={} delta_ratio={:.3}",
+            r.net.bytes_sent,
+            r.net.bytes_received,
+            r.net.sync_messages,
+            r.net.delta_syncs,
+            r.net.full_syncs,
+            r.net.sync_bytes,
+            r.net.full_equiv_bytes,
+            r.net.delta_ratio()
+        );
+    }
+}
+
 /// Parse the --backend flag shared by the svm/nn subcommands.
 fn backend_arg(args: &Args) -> anyhow::Result<BackendChoice> {
     let spelled: String = args.get("--backend", "serial".to_string())?;
@@ -105,7 +279,12 @@ fn backend_arg(args: &Args) -> anyhow::Result<BackendChoice> {
 /// pipelining. Rejects zeros and contradictory combinations outright and
 /// returns warnings for legal-but-useless ones (oversubscribed workers;
 /// staleness on the serial backend, where deferring updates overlaps
-/// nothing).
+/// nothing). `remote_procs` is the number of remote node processes this
+/// run will drive (coordinator role; 0 otherwise): the documented
+/// recipes launch every node with these same flags on this same machine
+/// (uds/loopback), so the oversubscription check counts the whole
+/// fleet's sift workers, not just this process's.
+#[allow(clippy::too_many_arguments)]
 fn resolve_exec_flags(
     backend: BackendChoice,
     workers: Option<usize>,
@@ -113,6 +292,7 @@ fn resolve_exec_flags(
     stale: Option<usize>,
     fused: bool,
     pipeline: bool,
+    remote_procs: usize,
     cores: usize,
 ) -> Result<(BackendChoice, ReplayConfig, bool, Vec<String>), String> {
     if workers == Some(0) {
@@ -140,7 +320,30 @@ fn resolve_exec_flags(
         BackendChoice::Serial => 0,
         BackendChoice::Threaded { threads } | BackendChoice::Pinned { threads } => threads,
     };
-    if threads > cores {
+    if remote_procs > 0 {
+        // Coordinator role: the sift pools live in the remote node
+        // processes, one per process, each resolved from these same
+        // flags (serial = 1 inline worker; threaded/pinned auto = one
+        // per core).
+        let per_proc = match backend {
+            BackendChoice::Serial => 1,
+            BackendChoice::Threaded { threads } | BackendChoice::Pinned { threads } => {
+                if threads == 0 {
+                    cores
+                } else {
+                    threads
+                }
+            }
+        };
+        let fleet = per_proc * remote_procs;
+        if fleet > cores {
+            warnings.push(format!(
+                "{remote_procs} node process(es) x {per_proc} sift worker(s) each = {fleet} \
+                 workers oversubscribes this machine ({cores} cores) when the nodes run \
+                 locally (uds/loopback) — lower --workers or --remote-nodes"
+            ));
+        }
+    } else if threads > cores {
         warnings.push(format!("{threads} workers oversubscribes this machine ({cores} cores)"));
     }
     if max_stale_rounds > 0 && backend == BackendChoice::Serial {
@@ -162,7 +365,10 @@ fn resolve_exec_flags(
 }
 
 /// Gather, validate, and apply the shared execution flags.
-fn exec_args(args: &Args) -> anyhow::Result<(BackendChoice, ReplayConfig, bool)> {
+fn exec_args(
+    args: &Args,
+    remote_procs: usize,
+) -> anyhow::Result<(BackendChoice, ReplayConfig, bool)> {
     let backend = backend_arg(args)?;
     let workers: Option<usize> = args.opt("--workers")?;
     let batch: usize = args.get("--batch", 64)?;
@@ -171,7 +377,7 @@ fn exec_args(args: &Args) -> anyhow::Result<(BackendChoice, ReplayConfig, bool)>
     let pipeline = args.flag("--pipeline");
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let (backend, replay, pipeline, warnings) =
-        resolve_exec_flags(backend, workers, batch, stale, fused, pipeline, cores)
+        resolve_exec_flags(backend, workers, batch, stale, fused, pipeline, remote_procs, cores)
             .map_err(|e| anyhow::anyhow!(e))?;
     for w in warnings {
         eprintln!("warning: {w}");
@@ -206,8 +412,9 @@ fn main() -> anyhow::Result<()> {
         "svm" => {
             let nodes: usize = args.get("--nodes", 8)?;
             let budget: usize = args.get("--budget", 30_000)?;
+            let net = net_args(&args)?;
             let mut cfg = SvmExperimentConfig::paper_defaults();
-            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args)?;
+            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args, net.remote_procs())?;
             if cfg.replay.fused {
                 // The SVM's dual steps are ordered; the fused request is
                 // honored by the replay stage but falls back per-example.
@@ -217,7 +424,19 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             let stream = StreamConfig::svm_task();
-            let r = run_sync_svm(&cfg, &stream, nodes, budget);
+            let r = match net {
+                NetRole::Node { connect, kind } => {
+                    let mut chan = connect_chan(kind, &connect)?;
+                    let rep = serve_node_svm(&cfg, &stream, nodes, budget, chan.as_mut())?;
+                    print_node_report(&rep);
+                    return Ok(());
+                }
+                NetRole::Coordinator { listen, procs, kind } => {
+                    let mut hub = build_hub(kind, &listen, procs)?;
+                    run_distributed_svm(&cfg, &stream, nodes, budget, hub.as_mut())?
+                }
+                NetRole::Local => run_sync_svm(&cfg, &stream, nodes, budget),
+            };
             println!("{}", curves_to_markdown(&[&r.curve]));
             println!(
                 "rounds={} rate={:.2}% sift={:.2}s update={:.2}s warm={:.2}s",
@@ -243,14 +462,33 @@ fn main() -> anyhow::Result<()> {
                 r.replay.minibatches,
                 r.replay.max_pending_rounds
             );
+            print_net_stats(&r);
+            println!(
+                "fingerprint={:#018x} final_error={}",
+                svm_fingerprint(&cfg, nodes, budget),
+                r.final_test_errors()
+            );
         }
         "nn" => {
             let nodes: usize = args.get("--nodes", 2)?;
             let budget: usize = args.get("--budget", 20_000)?;
+            let net = net_args(&args)?;
             let mut cfg = NnExperimentConfig::paper_defaults();
-            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args)?;
+            (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args, net.remote_procs())?;
             let stream = StreamConfig::nn_task();
-            let r = run_sync_nn(&cfg, &stream, nodes, budget);
+            let r = match net {
+                NetRole::Node { connect, kind } => {
+                    let mut chan = connect_chan(kind, &connect)?;
+                    let rep = serve_node_nn(&cfg, &stream, nodes, budget, chan.as_mut())?;
+                    print_node_report(&rep);
+                    return Ok(());
+                }
+                NetRole::Coordinator { listen, procs, kind } => {
+                    let mut hub = build_hub(kind, &listen, procs)?;
+                    run_distributed_nn(&cfg, &stream, nodes, budget, hub.as_mut())?
+                }
+                NetRole::Local => run_sync_nn(&cfg, &stream, nodes, budget),
+            };
             println!("{}", curves_to_markdown(&[&r.curve]));
             println!(
                 "rounds={} rate={:.2}% backend={}{} wall sift={:.2}s",
@@ -266,6 +504,12 @@ fn main() -> anyhow::Result<()> {
                 r.pool.threads_spawned,
                 r.replay.minibatches,
                 r.replay.fused_minibatches
+            );
+            print_net_stats(&r);
+            println!(
+                "fingerprint={:#018x} final_error={}",
+                nn_fingerprint(&cfg, nodes, budget),
+                r.final_test_errors()
             );
         }
         "passive" => {
@@ -333,14 +577,14 @@ mod tests {
 
     #[test]
     fn exec_flags_reject_zero_workers() {
-        let err = resolve_exec_flags(BackendChoice::Serial, Some(0), 64, None, false, false, 8);
+        let err = resolve_exec_flags(BackendChoice::Serial, Some(0), 64, None, false, false, 0, 8);
         assert!(err.is_err());
         assert!(err.unwrap_err().contains("--workers"));
     }
 
     #[test]
     fn exec_flags_reject_zero_batch() {
-        let err = resolve_exec_flags(BackendChoice::threaded(), None, 0, None, false, false, 8);
+        let err = resolve_exec_flags(BackendChoice::threaded(), None, 0, None, false, false, 0, 8);
         assert!(err.is_err());
         assert!(err.unwrap_err().contains("--batch"));
     }
@@ -348,7 +592,7 @@ mod tests {
     #[test]
     fn exec_flags_warn_on_oversubscription() {
         let (backend, replay, pipeline, warnings) =
-            resolve_exec_flags(BackendChoice::Serial, Some(16), 32, Some(1), false, false, 2)
+            resolve_exec_flags(BackendChoice::Serial, Some(16), 32, Some(1), false, false, 0, 2)
                 .expect("valid");
         assert_eq!(backend, BackendChoice::Threaded { threads: 16 });
         assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1, fused: false });
@@ -369,6 +613,7 @@ mod tests {
             None,
             false,
             false,
+            0,
             2,
         )
         .expect("valid");
@@ -384,11 +629,13 @@ mod tests {
         // Deferring updates on the serial backend overlaps nothing —
         // whether the deferral comes from --stale or from --pipeline
         // (the serial session runs the overlap closure inline).
-        for (stale, pipeline, knob) in
-            [(Some(2), false, "--stale 2"), (Some(1), true, "--pipeline"), (None, true, "--pipeline")]
-        {
+        for (stale, pipeline, knob) in [
+            (Some(2), false, "--stale 2"),
+            (Some(1), true, "--pipeline"),
+            (None, true, "--pipeline"),
+        ] {
             let (_, _, _, warnings) =
-                resolve_exec_flags(BackendChoice::Serial, None, 64, stale, false, pipeline, 8)
+                resolve_exec_flags(BackendChoice::Serial, None, 64, stale, false, pipeline, 0, 8)
                     .expect("valid");
             let warn = warnings
                 .iter()
@@ -404,7 +651,7 @@ mod tests {
             (BackendChoice::Serial, None, false),
         ] {
             let (_, _, _, warnings) =
-                resolve_exec_flags(backend, None, 64, stale, false, pipeline, 8)
+                resolve_exec_flags(backend, None, 64, stale, false, pipeline, 0, 8)
                     .expect("valid");
             assert!(
                 !warnings.iter().any(|w| w.contains("buys no wall-clock")),
@@ -416,25 +663,27 @@ mod tests {
     #[test]
     fn exec_flags_pipeline_implies_one_stale_round() {
         let (_, replay, pipeline, _) =
-            resolve_exec_flags(BackendChoice::threaded(), None, 32, None, true, true, 8)
+            resolve_exec_flags(BackendChoice::threaded(), None, 32, None, true, true, 0, 8)
                 .expect("valid");
         assert!(pipeline);
         assert_eq!(replay, ReplayConfig { batch: 32, max_stale_rounds: 1, fused: true });
         // Explicit --stale 1 is redundant but allowed.
-        let ok = resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(1), false, true, 8);
+        let ok =
+            resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(1), false, true, 0, 8);
         assert!(ok.is_ok());
         // Any other explicit staleness contradicts the pipeline's lag.
-        let err = resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(2), false, true, 8);
+        let err =
+            resolve_exec_flags(BackendChoice::threaded(), None, 32, Some(2), false, true, 0, 8);
         assert!(err.is_err());
         assert!(err.unwrap_err().contains("--pipeline"));
-        let err0 = resolve_exec_flags(BackendChoice::Serial, None, 32, Some(0), false, true, 8);
+        let err0 = resolve_exec_flags(BackendChoice::Serial, None, 32, Some(0), false, true, 0, 8);
         assert!(err0.is_err());
     }
 
     #[test]
     fn exec_flags_pass_through_when_sane() {
         let (backend, replay, pipeline, warnings) =
-            resolve_exec_flags(BackendChoice::pinned(), Some(2), 64, None, false, false, 8)
+            resolve_exec_flags(BackendChoice::pinned(), Some(2), 64, None, false, false, 0, 8)
                 .expect("valid");
         assert_eq!(backend, BackendChoice::Pinned { threads: 2 });
         assert_eq!(replay, ReplayConfig::default());
@@ -445,10 +694,110 @@ mod tests {
     #[test]
     fn exec_flags_keep_backend_without_workers() {
         let (backend, _, _, warnings) =
-            resolve_exec_flags(BackendChoice::Serial, None, 64, None, false, false, 1)
+            resolve_exec_flags(BackendChoice::Serial, None, 64, None, false, false, 0, 1)
                 .expect("valid");
         assert_eq!(backend, BackendChoice::Serial);
         assert!(warnings.is_empty(), "no --workers, no oversubscription warning");
+    }
+
+    #[test]
+    fn exec_flags_count_remote_node_workers() {
+        // Coordinator role: 4 node processes x 2 workers = 8 on 4 cores.
+        let (_, _, _, warnings) = resolve_exec_flags(
+            BackendChoice::Threaded { threads: 2 },
+            None,
+            64,
+            None,
+            false,
+            false,
+            4,
+            4,
+        )
+        .expect("valid");
+        let warn = warnings
+            .iter()
+            .find(|w| w.contains("oversubscribes"))
+            .unwrap_or_else(|| panic!("fleet of 8 on 4 cores must warn: {warnings:?}"));
+        assert!(warn.contains("4 node process(es)"), "{warn}");
+        assert!(warn.contains("= 8"), "{warn}");
+        // Serial nodes count one worker each: 2 x 1 on 4 cores is fine...
+        let (_, _, _, warnings) =
+            resolve_exec_flags(BackendChoice::Serial, None, 64, None, false, false, 2, 4)
+                .expect("valid");
+        assert!(!warnings.iter().any(|w| w.contains("oversubscribes")), "{warnings:?}");
+        // ...and auto-threaded nodes (one worker per core each) always
+        // oversubscribe with two or more processes.
+        let (_, _, _, warnings) =
+            resolve_exec_flags(BackendChoice::threaded(), None, 64, None, false, false, 2, 4)
+                .expect("valid");
+        assert!(warnings.iter().any(|w| w.contains("oversubscribes")), "{warnings:?}");
+    }
+
+    #[test]
+    fn net_flags_resolve_the_three_roles() {
+        assert_eq!(resolve_net_flags("local", None, None, None, "uds"), Ok(NetRole::Local));
+        assert_eq!(
+            resolve_net_flags("coordinator", Some("/tmp/pa.sock".into()), None, Some(2), "uds"),
+            Ok(NetRole::Coordinator {
+                listen: "/tmp/pa.sock".into(),
+                procs: 2,
+                kind: TransportKind::Uds,
+            })
+        );
+        // --remote-nodes defaults to one process.
+        assert_eq!(
+            resolve_net_flags("coordinator", Some("127.0.0.1:7171".into()), None, None, "tcp"),
+            Ok(NetRole::Coordinator {
+                listen: "127.0.0.1:7171".into(),
+                procs: 1,
+                kind: TransportKind::Tcp,
+            })
+        );
+        assert_eq!(
+            resolve_net_flags("node", None, Some("/tmp/pa.sock".into()), None, "uds"),
+            Ok(NetRole::Node { connect: "/tmp/pa.sock".into(), kind: TransportKind::Uds })
+        );
+    }
+
+    #[test]
+    fn net_flags_reject_contradictions_with_actionable_errors() {
+        let err = resolve_net_flags("local", Some("/tmp/x".into()), None, None, "uds")
+            .unwrap_err();
+        assert!(err.contains("--role coordinator"), "{err}");
+        let err = resolve_net_flags("local", None, Some("/tmp/x".into()), None, "uds")
+            .unwrap_err();
+        assert!(err.contains("--role node"), "{err}");
+        let err = resolve_net_flags("local", None, None, Some(2), "uds").unwrap_err();
+        assert!(err.contains("--remote-nodes"), "{err}");
+
+        let err = resolve_net_flags("coordinator", None, None, None, "uds").unwrap_err();
+        assert!(err.contains("--listen"), "{err}");
+        let err = resolve_net_flags(
+            "coordinator",
+            Some("/tmp/x".into()),
+            Some("/tmp/y".into()),
+            None,
+            "uds",
+        )
+        .unwrap_err();
+        assert!(err.contains("does not connect"), "{err}");
+        let err = resolve_net_flags("coordinator", Some("/tmp/x".into()), None, Some(0), "uds")
+            .unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+
+        let err = resolve_net_flags("node", None, None, None, "uds").unwrap_err();
+        assert!(err.contains("--connect"), "{err}");
+        let err = resolve_net_flags("node", Some("/tmp/x".into()), None, None, "uds")
+            .unwrap_err();
+        assert!(err.contains("does not listen"), "{err}");
+        let err = resolve_net_flags("node", None, Some("/tmp/x".into()), Some(2), "uds")
+            .unwrap_err();
+        assert!(err.contains("coordinator"), "{err}");
+
+        let err = resolve_net_flags("server", None, None, None, "uds").unwrap_err();
+        assert!(err.contains("--role"), "{err}");
+        let err = resolve_net_flags("local", None, None, None, "carrier-pigeon").unwrap_err();
+        assert!(err.contains("--transport"), "{err}");
     }
 
     #[test]

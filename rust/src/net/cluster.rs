@@ -1,0 +1,491 @@
+//! The distributed coordinator — Algorithm 1's round loop over a wire.
+//!
+//! [`run_distributed`] drives `p` remote node processes (each hosting a
+//! contiguous slice of the k lanes) through the same round schedule as
+//! the in-process loops, and is **bit-identical** to them by
+//! construction:
+//!
+//! * `stale = 0` mirrors [`sync::run_rounds`]'s direct path: every
+//!   round's selections are applied before the next round's sync is
+//!   encoded, so nodes sift with last round's fully-updated model;
+//! * `stale = 1` mirrors the pipelined loop
+//!   ([`crate::coordinator::pipeline`]): the sync is encoded from the
+//!   live model **before** the pending replay flushes — the wire
+//!   snapshot plays the role of the pipelined `learner.clone()` — and
+//!   the flush overlaps the remote sift in real time. Nodes therefore
+//!   sift round t with the model of round t−2, exactly the
+//!   `ReplayConfig::stale(·, 1)` trajectory.
+//!
+//! Budgets ≥ 2 would stack wire lag on top of replay lag and leave the
+//! equivalence contract unverifiable, so they are rejected loudly.
+//!
+//! Wall-clock caveat: `wall.sift` covers broadcast → last reply, which
+//! includes wire time; the simulated [`RoundClock`] still charges only
+//! the nodes' self-reported sift seconds plus the [`CommModel`], so the
+//! simulated numbers stay comparable with in-process runs.
+//!
+//! [`sync::run_rounds`]: crate::coordinator::sync
+
+use super::delta::ModelCodec;
+use super::proto::{InitMsg, Msg, RoundMsg, TaskKind, PROTO_VERSION};
+use super::transport::{Transport, FRAME_OVERHEAD};
+use super::NetStats;
+use crate::active::SifterSpec;
+use crate::coordinator::backend::NodeSift;
+use crate::coordinator::sync::{
+    make_lane, record, warmstart_phase, CostCounters, SyncConfig, SyncReport, WallTimes,
+};
+use crate::data::{StreamConfig, TestSet, DIM};
+use crate::exec::{PoolStats, ReplayExecutor, ReplayOutcome};
+use crate::learner::Learner;
+use crate::metrics::ErrorCurve;
+use crate::sim::{NodeProfile, RoundClock, Stopwatch};
+use anyhow::Result;
+
+/// FNV-1a digest over the little-endian bytes of `parts` — the run-config
+/// fingerprint carried in [`InitMsg`]. Both processes fold the same
+/// out-of-band configuration (learner hyper-parameters as f64 bits,
+/// batch/warmstart/budget, seeds) so a node launched with different flags
+/// fails the handshake instead of silently diverging.
+pub fn config_fingerprint(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for b in part.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Contiguous lane slice owned by node process `j` of `p`: lanes are
+/// spread as evenly as integer arithmetic allows, every process gets at
+/// least one when `k >= p`.
+pub(crate) fn lane_range(k: usize, p: usize, j: usize) -> (usize, usize) {
+    (j * k / p, (j + 1) * k / p)
+}
+
+/// A transport wrapper charging every frame (payload + length prefix) to
+/// the [`NetStats`] byte counters.
+struct Wire<'a> {
+    t: &'a mut dyn Transport,
+    stats: NetStats,
+}
+
+impl Wire<'_> {
+    fn send(&mut self, node: usize, msg: &Msg) -> Result<()> {
+        let bytes = msg.encode();
+        self.stats.bytes_sent += bytes.len() as u64 + FRAME_OVERHEAD;
+        self.t.send_to(node, &bytes)
+    }
+
+    fn broadcast(&mut self, msg: &Msg) -> Result<()> {
+        let bytes = msg.encode();
+        self.stats.bytes_sent += (bytes.len() as u64 + FRAME_OVERHEAD) * self.t.nodes() as u64;
+        self.t.broadcast(&bytes)
+    }
+
+    fn recv(&mut self, node: usize) -> Result<Msg> {
+        let bytes = self.t.recv_from(node)?;
+        self.stats.bytes_received += bytes.len() as u64 + FRAME_OVERHEAD;
+        Msg::decode(&bytes)
+    }
+}
+
+/// Run Algorithm 1 with the sift phase distributed over `transport`'s
+/// node processes. The learner and its update replay stay on this
+/// (coordinator) side; nodes hold scoring replicas refreshed through
+/// `codec` each round. `fingerprint` must equal what the node processes
+/// were launched with ([`config_fingerprint`]).
+///
+/// `cfg.backend` is ignored — each node picks its own execution backend —
+/// and `cfg.replay.max_stale_rounds` must be 0 or 1 (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed<L: Learner>(
+    learner: &mut L,
+    codec: &mut dyn ModelCodec<L>,
+    sifter: &SifterSpec,
+    stream_cfg: &StreamConfig,
+    test: &TestSet,
+    cfg: &SyncConfig,
+    transport: &mut dyn Transport,
+    task: TaskKind,
+    fingerprint: u64,
+) -> Result<SyncReport> {
+    anyhow::ensure!(cfg.nodes >= 1, "need at least one lane");
+    anyhow::ensure!(
+        cfg.global_batch >= cfg.nodes,
+        "global batch {} smaller than the lane count {} — every lane needs at \
+         least one example per round",
+        cfg.global_batch,
+        cfg.nodes
+    );
+    let stale = cfg.replay.max_stale_rounds;
+    anyhow::ensure!(
+        stale <= 1,
+        "distributed runs support max_stale_rounds 0 (strict) or 1 (overlapped); \
+         {stale} would stack wire lag on top of replay lag"
+    );
+    let k = cfg.nodes;
+    let p = transport.nodes();
+    anyhow::ensure!(
+        p >= 1 && k >= p,
+        "{p} node processes but only {k} lanes — launch at most one process per lane"
+    );
+    let shard = cfg.global_batch / k;
+    let overlapped = stale == 1;
+
+    let profile = cfg.profile.clone().unwrap_or_else(|| NodeProfile::uniform(k));
+    assert_eq!(profile.k(), k);
+    let mut clock = RoundClock::new(profile, cfg.comm);
+    let mut costs = CostCounters::default();
+    let mut wall = WallTimes::default();
+    let mut replay = ReplayExecutor::new(cfg.replay, DIM);
+    let mut total_sw = Stopwatch::start();
+    let mut wire = Wire { t: transport, stats: NetStats::default() };
+
+    // --- Handshake: hand every process its lane slice. ---
+    for j in 0..p {
+        let (lo, hi) = lane_range(k, p, j);
+        wire.send(
+            j,
+            &Msg::Init(InitMsg {
+                version: PROTO_VERSION,
+                task,
+                fingerprint,
+                node_index: j as u32,
+                lane_lo: lo as u32,
+                lane_hi: hi as u32,
+                k: k as u32,
+                shard: shard as u32,
+                skip: if lo == 0 { cfg.warmstart as u64 } else { 0 },
+                stream_seed: stream_cfg.seed,
+                sifter: sifter.clone(),
+            }),
+        )?;
+    }
+    for j in 0..p {
+        match wire.recv(j)? {
+            Msg::Ready(r) => {
+                let (lo, hi) = lane_range(k, p, j);
+                anyhow::ensure!(
+                    r.node_index == j as u32 && r.lanes as usize == hi - lo,
+                    "node {j} acked as index {} with {} lanes (expected {})",
+                    r.node_index,
+                    r.lanes,
+                    hi - lo
+                );
+            }
+            other => anyhow::bail!("expected ready from node {j}, got {other:?}"),
+        }
+    }
+
+    let mut curve = ErrorCurve::new(cfg.label.clone());
+    let mut n_seen: u64 = 0;
+    let mut n_queried: u64 = 0;
+
+    // --- Warmstart: passive training on the head of node 0's stream,
+    // consumed locally; lane 0's remote stream skips the same head. ---
+    let mut lane0 = make_lane(stream_cfg, sifter, 0, 1);
+    warmstart_phase(
+        learner,
+        &mut lane0,
+        cfg.warmstart,
+        &mut clock,
+        &mut costs,
+        &mut wall,
+        &mut n_seen,
+    );
+    record(&mut curve, &clock, learner, test, n_seen, n_queried);
+
+    // --- Rounds. Epoch = round index; the guard on the node side holds
+    // the codecs to strictly consecutive delta application. ---
+    let mut round: u64 = 0;
+    while (n_seen as usize) < cfg.budget {
+        round += 1;
+        let n_phase = n_seen;
+
+        // Encode the sync before the overlapped flush (stale=1): the wire
+        // snapshot is the pipelined loop's `learner.clone()` — nodes sift
+        // round t with the model of round t-2. Under stale=0 the previous
+        // round was already applied, so this is the fully-updated model.
+        let sync = codec.encode(round, learner);
+        wire.stats.sync_messages += p as u64;
+        wire.stats.sync_bytes += sync.payload.len() as u64 * p as u64;
+        wire.stats.full_equiv_bytes += codec.last_full_bytes() * p as u64;
+        if sync.full {
+            wire.stats.full_syncs += p as u64;
+        } else {
+            wire.stats.delta_syncs += p as u64;
+        }
+
+        let mut sw = Stopwatch::start();
+        wire.broadcast(&Msg::Round(RoundMsg { round, n_phase, sync }))?;
+
+        // Replay of round t-1 overlaps the remote sift in real time.
+        let mut update_secs = 0.0;
+        let mut applied = ReplayOutcome::default();
+        if overlapped {
+            let mut usw = Stopwatch::start();
+            applied.absorb(replay.flush(learner));
+            update_secs += usw.lap();
+        }
+
+        // Collect replies in process order; lanes arrive in lane order
+        // within each, so the pool is node-major — the ordered-broadcast
+        // guarantee, same as the in-process sessions.
+        let mut results: Vec<NodeSift> = Vec::with_capacity(k);
+        for j in 0..p {
+            match wire.recv(j)? {
+                Msg::Sift(s) => {
+                    let (lo, hi) = lane_range(k, p, j);
+                    anyhow::ensure!(
+                        s.round == round && s.lanes.len() == hi - lo,
+                        "node {j} answered round {} with {} lanes (expected round \
+                         {round} with {})",
+                        s.round,
+                        s.lanes.len(),
+                        hi - lo
+                    );
+                    results.extend(s.lanes);
+                }
+                other => anyhow::bail!("expected sift results from node {j}, got {other:?}"),
+            }
+        }
+        wall.sift += sw.lap();
+        n_seen += (k * shard) as u64;
+
+        // Passive updating, pooled node-major — identical to the
+        // in-process loops' handling of `results`.
+        let mut ssw = Stopwatch::start();
+        let mut selected = 0usize;
+        for node in &results {
+            if overlapped {
+                replay.submit_node(&node.sel_x, &node.sel_y, &node.sel_w);
+            } else {
+                let out = replay.apply_node_direct(learner, &node.sel_x, &node.sel_y, &node.sel_w);
+                applied.absorb(out);
+            }
+            selected += node.sel_y.len();
+            costs.sift_ops += node.sift_ops;
+        }
+        if overlapped {
+            replay.end_round();
+        }
+        update_secs += ssw.lap();
+        costs.update_ops += applied.update_ops;
+        wall.update += update_secs;
+        n_queried += selected as u64;
+        costs.broadcasts += selected as u64;
+
+        let node_sift: Vec<f64> = results.iter().map(|r| r.seconds).collect();
+        if overlapped {
+            clock.charge_round_overlapped(&node_sift, update_secs, selected, DIM * 4);
+        } else {
+            clock.charge_round(&node_sift, update_secs, selected, DIM * 4);
+        }
+
+        let do_eval =
+            cfg.eval_every_rounds > 0 && clock.rounds() % cfg.eval_every_rounds as u64 == 0;
+        if do_eval {
+            record(&mut curve, &clock, learner, test, n_seen, n_queried);
+        }
+    }
+
+    // Drain the round still in flight (stale=1) so the final model has
+    // absorbed every broadcast selection.
+    if replay.pending_examples() > 0 {
+        let mut sw = Stopwatch::start();
+        let tail = replay.flush(learner);
+        let tail_secs = sw.lap();
+        costs.update_ops += tail.update_ops;
+        wall.update += tail_secs;
+        clock.charge_update(tail_secs);
+    }
+    record(&mut curve, &clock, learner, test, n_seen, n_queried);
+
+    // --- Shutdown: collect each process's pool counters. ---
+    wire.broadcast(&Msg::Shutdown)?;
+    let mut pool = PoolStats::default();
+    for j in 0..p {
+        match wire.recv(j)? {
+            Msg::Bye(b) => {
+                pool.workers += b.pool.workers;
+                pool.threads_spawned += b.pool.threads_spawned;
+                pool.rounds = pool.rounds.max(b.pool.rounds);
+            }
+            other => anyhow::bail!("expected bye from node {j}, got {other:?}"),
+        }
+    }
+    wall.total = total_sw.lap();
+
+    Ok(SyncReport {
+        rounds: clock.rounds(),
+        n_seen,
+        n_queried,
+        elapsed: clock.elapsed_seconds(),
+        sift_time: clock.sift_time,
+        update_time: clock.update_time,
+        warmstart_time: clock.warmstart_time,
+        comm_time: clock.comm_time,
+        wall,
+        backend: wire.t.name(),
+        pipelined: overlapped,
+        pool,
+        replay: replay.stats(),
+        net: wire.stats,
+        costs,
+        curve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SerialBackend;
+    use crate::coordinator::sync::run_sync;
+    use crate::exec::ReplayConfig;
+    use crate::learner::NativeScorer;
+    use crate::net::delta::SvmDeltaCodec;
+    use crate::net::node::serve_sift_node;
+    use crate::net::transport::{InProcChannel, InProcTransport};
+    use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = config_fingerprint(&[1, 2, 3]);
+        assert_eq!(a, config_fingerprint(&[1, 2, 3]));
+        assert_ne!(a, config_fingerprint(&[1, 2, 4]));
+        assert_ne!(a, config_fingerprint(&[1, 2]));
+        assert_ne!(config_fingerprint(&[]), 0);
+    }
+
+    #[test]
+    fn lane_ranges_partition_contiguously() {
+        for k in 1..=9 {
+            for p in 1..=k {
+                let mut next = 0;
+                for j in 0..p {
+                    let (lo, hi) = lane_range(k, p, j);
+                    assert_eq!(lo, next, "gap at process {j} (k={k}, p={p})");
+                    assert!(hi > lo, "empty slice at process {j} (k={k}, p={p})");
+                    next = hi;
+                }
+                assert_eq!(next, k);
+            }
+        }
+    }
+
+    fn spawn_svm_node(
+        mut chan: InProcChannel,
+        fingerprint: u64,
+    ) -> std::thread::JoinHandle<Result<crate::net::SiftNodeReport>> {
+        std::thread::spawn(move || {
+            let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+            let mut codec = SvmDeltaCodec::new(DIM);
+            serve_sift_node(
+                &mut chan,
+                &mut replica,
+                &mut codec,
+                &NativeScorer,
+                &SerialBackend,
+                &StreamConfig::svm_task(),
+                TaskKind::Svm,
+                fingerprint,
+            )
+        })
+    }
+
+    #[test]
+    fn distributed_inproc_matches_run_sync_strict() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 100);
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(2, 200, 100, 900);
+
+        let mut reference = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let want = run_sync(&mut reference, &sifter, &stream_cfg, &test, &cfg, &NativeScorer);
+
+        let fp = config_fingerprint(&[0x51, 2, 200]);
+        let (mut hub, chans) = InProcTransport::pair(1);
+        let handles: Vec<_> = chans.into_iter().map(|c| spawn_svm_node(c, fp)).collect();
+        let mut learner = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+        let got = run_distributed(
+            &mut learner,
+            &mut codec,
+            &sifter,
+            &stream_cfg,
+            &test,
+            &cfg,
+            &mut hub,
+            TaskKind::Svm,
+            fp,
+        )
+        .unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        assert_eq!(got.backend, "inproc");
+        assert!(!got.pipelined);
+        assert_eq!(got.rounds, want.rounds);
+        assert_eq!(got.n_seen, want.n_seen);
+        assert_eq!(got.n_queried, want.n_queried);
+        assert_eq!(got.costs.sift_ops, want.costs.sift_ops);
+        assert_eq!(got.costs.update_ops, want.costs.update_ops);
+        assert_eq!(
+            got.final_test_errors().to_bits(),
+            want.final_test_errors().to_bits(),
+            "distributed trajectory drifted from the in-process loop"
+        );
+        // Wire telemetry is live: every round synced every process, the
+        // first sync was full, and later syncs were deltas that beat it.
+        assert_eq!(got.net.sync_messages, got.rounds);
+        assert_eq!(got.net.full_syncs + got.net.delta_syncs, got.net.sync_messages);
+        assert!(got.net.delta_syncs > 0);
+        assert!(got.net.delta_ratio() < 1.0, "ratio {}", got.net.delta_ratio());
+        assert!(got.net.bytes_sent > 0 && got.net.bytes_received > 0);
+    }
+
+    #[test]
+    fn distributed_rejects_deep_staleness_and_too_many_processes() {
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let sifter = SifterSpec::margin(0.1, 7);
+        let mut learner = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+
+        let cfg = SyncConfig::new(2, 100, 50, 400).with_replay(ReplayConfig::stale(16, 2));
+        let (mut hub, _chans) = InProcTransport::pair(1);
+        let err = run_distributed(
+            &mut learner,
+            &mut codec,
+            &sifter,
+            &stream_cfg,
+            &test,
+            &cfg,
+            &mut hub,
+            TaskKind::Svm,
+            0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_stale_rounds"), "{err}");
+
+        let cfg = SyncConfig::new(2, 100, 50, 400);
+        let (mut hub, _chans) = InProcTransport::pair(3);
+        let err = run_distributed(
+            &mut learner,
+            &mut codec,
+            &sifter,
+            &stream_cfg,
+            &test,
+            &cfg,
+            &mut hub,
+            TaskKind::Svm,
+            0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("lanes"), "{err}");
+    }
+}

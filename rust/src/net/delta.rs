@@ -1,0 +1,547 @@
+//! Epoch-versioned model-sync codecs.
+//!
+//! A distributed sift node never updates — it only needs the *scoring
+//! view* of the coordinator's model, refreshed once per round. Shipping
+//! the whole view every round is wasteful for LASVM: the support set
+//! accrues (mostly) monotonically while alphas move in place, so once a
+//! replica has seen an SV's row bytes it only ever needs that SV's new
+//! alpha again. [`SvmDeltaCodec`] exploits exactly that:
+//!
+//! * the encoder keeps a **slot table** of every SV row it has ever
+//!   shipped (hash of the row's exact f32 bits → slot id);
+//! * each epoch's delta message is the full active list *by reference*:
+//!   bias, then one entry per live SV in snapshot order — a 9-byte
+//!   `(slot, alpha)` pair for known rows, or the full row for new ones;
+//! * whenever the delta would not beat the full snapshot (first sync,
+//!   or a support set that churned wholesale), the codec **falls back to
+//!   full state** and resets the slot table to match — the decoder's
+//!   table is rebuilt identically, so slot ids never drift.
+//!
+//! Because every message carries the complete active list (not a diff of
+//! positions), apply handles alpha→0 removals, resurrected SVs and the
+//! solver's `compact()` reorderings for free, and the replica's snapshot
+//! ends up in exactly the source's order with exactly the source's bits
+//! — the precondition for bit-identical tiled scoring on the node.
+//!
+//! [`MlpDenseCodec`] gives the MLP the same surface: dense weight state
+//! diffed index-by-index with the identical full-state fallback. AdaGrad
+//! touches every parameter on every update, so in practice the fallback
+//! fires and MLP sync ships full dense state — the [`NetStats`]
+//! delta-vs-full ratio reports that honestly instead of pretending.
+//!
+//! Messages are versioned by epoch: apply is idempotent per epoch
+//! (re-applying an already-applied epoch is a no-op) and rejects gaps,
+//! so a replica can never silently score with a half-applied model.
+//!
+//! [`NetStats`]: super::NetStats
+
+use super::wire::{put_f32, put_u32, put_u8, Reader};
+use crate::learner::Learner;
+use crate::nn::AdaGradMlp;
+use crate::svm::{lasvm::LaSvm, Kernel};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// One epoch's model sync, as shipped inside a round message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncMessage {
+    /// Monotonically increasing model version (one per round).
+    pub epoch: u64,
+    /// True when the payload is full state (fallback), false for a delta.
+    pub full: bool,
+    pub payload: Vec<u8>,
+}
+
+/// Encoder/decoder pair for one learner type. One instance per *role*:
+/// the coordinator owns an encoding instance, each node a decoding one —
+/// the codec's internal table tracks the peer's state, and mixing roles
+/// on one instance would corrupt it.
+pub trait ModelCodec<L: ?Sized>: Send {
+    /// Coordinator side: encode the model's scoring view at `epoch`.
+    /// Epochs must be passed in strictly increasing, gap-free order.
+    fn encode(&mut self, epoch: u64, model: &L) -> SyncMessage;
+
+    /// Bytes the last [`ModelCodec::encode`] would have cost as full
+    /// state — the denominator of the delta-vs-full telemetry.
+    fn last_full_bytes(&self) -> u64;
+
+    /// Node side: install `msg` into the replica. Idempotent per epoch;
+    /// rejects epoch gaps and deltas with no prior full state.
+    fn apply(&mut self, replica: &mut L, msg: &SyncMessage) -> Result<()>;
+}
+
+/// FNV-1a over the exact f32 bit patterns of a row.
+fn hash_row(row: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in row {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+fn rows_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Shared epoch bookkeeping for the decoder side of both codecs.
+#[derive(Debug, Clone, Copy, Default)]
+struct EpochGuard {
+    applied: Option<u64>,
+}
+
+enum EpochAction {
+    Skip,
+    Apply,
+}
+
+impl EpochGuard {
+    /// Idempotency and ordering: already-applied epochs are skipped,
+    /// gapped deltas and deltas-before-full are errors, full state is
+    /// accepted at any forward epoch.
+    fn check(&self, msg: &SyncMessage) -> Result<EpochAction> {
+        if let Some(prev) = self.applied {
+            if msg.epoch <= prev {
+                return Ok(EpochAction::Skip);
+            }
+            if !msg.full && msg.epoch != prev + 1 {
+                anyhow::bail!(
+                    "delta sync epoch gap: have epoch {prev}, got delta for {}",
+                    msg.epoch
+                );
+            }
+        } else if !msg.full {
+            anyhow::bail!("delta sync before any full state (epoch {})", msg.epoch);
+        }
+        Ok(EpochAction::Apply)
+    }
+}
+
+const ENTRY_REF: u8 = 0;
+const ENTRY_NEW: u8 = 1;
+
+/// Slot-table delta codec for [`LaSvm`] scoring views; see the module
+/// docs for the scheme.
+pub struct SvmDeltaCodec {
+    dim: usize,
+    /// Every row ever shipped, slot-major (`slot * dim ..`). Grows with
+    /// the distinct-SV set — the monotone accrual the paper relies on.
+    rows: Vec<f32>,
+    /// Row-bits hash → candidate slots (encoder lookup; collisions are
+    /// resolved by exact bit comparison).
+    index: HashMap<u64, Vec<u32>>,
+    guard: EpochGuard,
+    last_full: u64,
+}
+
+impl SvmDeltaCodec {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1);
+        SvmDeltaCodec {
+            dim,
+            rows: Vec::new(),
+            index: HashMap::new(),
+            guard: EpochGuard::default(),
+            last_full: 0,
+        }
+    }
+
+    fn n_slots(&self) -> usize {
+        self.rows.len() / self.dim
+    }
+
+    fn slot_row(&self, slot: u32) -> &[f32] {
+        let s = slot as usize * self.dim;
+        &self.rows[s..s + self.dim]
+    }
+
+    /// Find the slot holding exactly `row`'s bits, if any.
+    fn lookup(&self, h: u64, row: &[f32]) -> Option<u32> {
+        self.index
+            .get(&h)?
+            .iter()
+            .copied()
+            .find(|&s| rows_equal(self.slot_row(s), row))
+    }
+
+    /// Append `row` as a fresh slot.
+    fn alloc(&mut self, h: u64, row: &[f32]) -> u32 {
+        let slot = self.n_slots() as u32;
+        self.rows.extend_from_slice(row);
+        self.index.entry(h).or_default().push(slot);
+        slot
+    }
+
+    /// Reset the slot table to exactly the given view (what a decoder
+    /// does on receiving full state — both sides must stay in lockstep).
+    fn reset_to_view(&mut self, pts: &[f32]) {
+        self.rows.clear();
+        self.index.clear();
+        for row in pts.chunks_exact(self.dim) {
+            self.alloc(hash_row(row), row);
+        }
+    }
+
+    fn full_payload(n: usize, bias: f32, pts: &[f32], alpha: &[f32]) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(8 + (pts.len() + alpha.len()) * 4);
+        put_u32(&mut payload, n as u32);
+        put_f32(&mut payload, bias);
+        for &v in pts {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in alpha {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        payload
+    }
+}
+
+impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
+    fn encode(&mut self, epoch: u64, model: &LaSvm<K>) -> SyncMessage {
+        assert_eq!(model.dim(), self.dim, "codec dim mismatch");
+        let (pts, alpha) = model.export_support();
+        let bias = model.bias();
+        let n = alpha.len();
+        let full_bytes = 8 + n * (self.dim + 1) * 4;
+        self.last_full = full_bytes as u64;
+
+        // Build the delta tentatively; roll the slot table back (via
+        // reset) if full state wins, so encoder and decoder tables can
+        // never diverge.
+        let mut delta = Vec::with_capacity(8 + n * 9);
+        put_u32(&mut delta, n as u32);
+        put_f32(&mut delta, bias);
+        for i in 0..n {
+            let row = &pts[i * self.dim..(i + 1) * self.dim];
+            let h = hash_row(row);
+            match self.lookup(h, row) {
+                Some(slot) => {
+                    put_u8(&mut delta, ENTRY_REF);
+                    put_u32(&mut delta, slot);
+                }
+                None => {
+                    // Allocated now, in entry order — the decoder
+                    // allocates in the same order, so ids agree.
+                    self.alloc(h, row);
+                    put_u8(&mut delta, ENTRY_NEW);
+                    for &v in row {
+                        delta.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            put_f32(&mut delta, alpha[i]);
+        }
+
+        if delta.len() >= full_bytes {
+            self.reset_to_view(&pts);
+            SyncMessage { epoch, full: true, payload: Self::full_payload(n, bias, &pts, &alpha) }
+        } else {
+            SyncMessage { epoch, full: false, payload: delta }
+        }
+    }
+
+    fn last_full_bytes(&self) -> u64 {
+        self.last_full
+    }
+
+    fn apply(&mut self, replica: &mut LaSvm<K>, msg: &SyncMessage) -> Result<()> {
+        assert_eq!(replica.dim(), self.dim, "codec dim mismatch");
+        if matches!(self.guard.check(msg)?, EpochAction::Skip) {
+            return Ok(());
+        }
+        let mut r = Reader::new(&msg.payload);
+        let n = r.u32()? as usize;
+        let bias = r.f32()?;
+        let (pts, alpha) = if msg.full {
+            let pts = r.f32s_exact(n * self.dim)?;
+            let alpha = r.f32s_exact(n)?;
+            self.reset_to_view(&pts);
+            (pts, alpha)
+        } else {
+            let mut pts = Vec::with_capacity(n * self.dim);
+            let mut alpha = Vec::with_capacity(n);
+            for _ in 0..n {
+                match r.u8()? {
+                    ENTRY_REF => {
+                        let slot = r.u32()?;
+                        anyhow::ensure!(
+                            (slot as usize) < self.n_slots(),
+                            "delta references unknown slot {slot} (have {})",
+                            self.n_slots()
+                        );
+                        pts.extend_from_slice(self.slot_row(slot));
+                    }
+                    ENTRY_NEW => {
+                        let row = r.f32s_exact(self.dim)?;
+                        self.alloc(hash_row(&row), &row);
+                        pts.extend_from_slice(&row);
+                    }
+                    other => anyhow::bail!("unknown delta entry tag {other}"),
+                }
+                alpha.push(r.f32()?);
+            }
+            (pts, alpha)
+        };
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes in sync payload");
+        replica.install_scoring_view(&pts, &alpha, bias);
+        self.guard.applied = Some(msg.epoch);
+        Ok(())
+    }
+}
+
+/// Dense weight-state codec for [`AdaGradMlp`]: per-epoch sparse
+/// index/value diffs over the flat `(w1, b1, w2, b2)` state, with the
+/// same full-state fallback as the SVM codec. AdaGrad moves every
+/// parameter every update, so the fallback fires on real runs — kept as
+/// a codec (rather than always-full) so the threshold machinery and the
+/// telemetry treat both learners uniformly.
+pub struct MlpDenseCodec {
+    /// Mirror of the peer's flat state; empty until the first sync.
+    state: Vec<f32>,
+    /// (w1 len, b1 len, w2 len); the final element of `state` is b2.
+    dims: Option<(usize, usize, usize)>,
+    guard: EpochGuard,
+    last_full: u64,
+}
+
+impl MlpDenseCodec {
+    pub fn new() -> Self {
+        MlpDenseCodec { state: Vec::new(), dims: None, guard: EpochGuard::default(), last_full: 0 }
+    }
+
+    fn flat_state(model: &AdaGradMlp) -> (Vec<f32>, (usize, usize, usize)) {
+        let (w1, b1, w2, b2) = model.sync_weights();
+        let mut flat = Vec::with_capacity(w1.len() + b1.len() + w2.len() + 1);
+        flat.extend_from_slice(w1);
+        flat.extend_from_slice(b1);
+        flat.extend_from_slice(w2);
+        flat.push(b2);
+        (flat, (w1.len(), b1.len(), w2.len()))
+    }
+
+    fn put_dims(payload: &mut Vec<u8>, dims: (usize, usize, usize)) {
+        put_u32(payload, dims.0 as u32);
+        put_u32(payload, dims.1 as u32);
+        put_u32(payload, dims.2 as u32);
+    }
+
+    fn install(&self, replica: &mut AdaGradMlp) -> Result<()> {
+        let (l1, l2, l3) = self.dims.expect("install without dims");
+        anyhow::ensure!(self.state.len() == l1 + l2 + l3 + 1, "mlp sync state length mismatch");
+        let (w1, rest) = self.state.split_at(l1);
+        let (b1, rest) = rest.split_at(l2);
+        let (w2, b2) = rest.split_at(l3);
+        replica.install_sync_weights(w1, b1, w2, b2[0]);
+        Ok(())
+    }
+}
+
+impl Default for MlpDenseCodec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelCodec<AdaGradMlp> for MlpDenseCodec {
+    fn encode(&mut self, epoch: u64, model: &AdaGradMlp) -> SyncMessage {
+        let (flat, dims) = Self::flat_state(model);
+        let full_bytes = 12 + flat.len() * 4;
+        self.last_full = full_bytes as u64;
+
+        let make_full = |flat: &[f32]| {
+            let mut payload = Vec::with_capacity(full_bytes);
+            Self::put_dims(&mut payload, dims);
+            for &v in flat {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            payload
+        };
+
+        if self.dims != Some(dims) || self.state.len() != flat.len() {
+            let payload = make_full(&flat);
+            self.state = flat;
+            self.dims = Some(dims);
+            return SyncMessage { epoch, full: true, payload };
+        }
+
+        let changed: Vec<u32> = flat
+            .iter()
+            .zip(&self.state)
+            .enumerate()
+            .filter(|(_, (a, b))| a.to_bits() != b.to_bits())
+            .map(|(i, _)| i as u32)
+            .collect();
+        let delta_bytes = 16 + changed.len() * 8;
+        if delta_bytes >= full_bytes {
+            let payload = make_full(&flat);
+            self.state = flat;
+            return SyncMessage { epoch, full: true, payload };
+        }
+        let mut payload = Vec::with_capacity(delta_bytes);
+        Self::put_dims(&mut payload, dims);
+        put_u32(&mut payload, changed.len() as u32);
+        for &i in &changed {
+            put_u32(&mut payload, i);
+            put_f32(&mut payload, flat[i as usize]);
+        }
+        self.state = flat;
+        SyncMessage { epoch, full: false, payload }
+    }
+
+    fn last_full_bytes(&self) -> u64 {
+        self.last_full
+    }
+
+    fn apply(&mut self, replica: &mut AdaGradMlp, msg: &SyncMessage) -> Result<()> {
+        if matches!(self.guard.check(msg)?, EpochAction::Skip) {
+            return Ok(());
+        }
+        let mut r = Reader::new(&msg.payload);
+        let dims = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+        let total = dims.0 + dims.1 + dims.2 + 1;
+        if msg.full {
+            self.state = r.f32s_exact(total)?;
+            self.dims = Some(dims);
+        } else {
+            anyhow::ensure!(
+                self.dims == Some(dims) && self.state.len() == total,
+                "mlp delta against mismatched state"
+            );
+            let n = r.u32()? as usize;
+            for _ in 0..n {
+                let i = r.u32()? as usize;
+                let v = r.f32()?;
+                anyhow::ensure!(i < total, "mlp delta index {i} out of range {total}");
+                self.state[i] = v;
+            }
+        }
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes in sync payload");
+        self.install(replica)?;
+        self.guard.applied = Some(msg.epoch);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ExampleStream, StreamConfig, DIM};
+    use crate::nn::MlpConfig;
+    use crate::svm::{LaSvmConfig, RbfKernel};
+
+    fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
+        let cfg = StreamConfig::svm_task();
+        let mut stream = ExampleStream::for_node(&cfg, 0);
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..n {
+            let y = stream.next_into(&mut x);
+            svm.update(&x, y, 1.0);
+        }
+        svm
+    }
+
+    fn probe_scores<L: Learner>(l: &L) -> Vec<u32> {
+        let mut probe = ExampleStream::for_node(&StreamConfig::svm_task(), 77);
+        let mut x = vec![0.0f32; DIM];
+        (0..8)
+            .map(|_| {
+                probe.next_into(&mut x);
+                l.score(&x).to_bits()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn svm_first_sync_is_full_then_deltas_shrink() {
+        let mut enc = SvmDeltaCodec::new(DIM);
+        let mut dec = SvmDeltaCodec::new(DIM);
+        let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+
+        let svm = trained_svm(120);
+        let m1 = enc.encode(1, &svm);
+        assert!(m1.full, "an all-new support set cannot win as a delta");
+        dec.apply(&mut replica, &m1).unwrap();
+        assert_eq!(probe_scores(&replica), probe_scores(&svm), "replica scores bit-identical");
+        assert_eq!(replica.n_support(), svm.n_support());
+
+        // Grow the model a little: most SVs are now known rows.
+        let mut svm2 = svm;
+        let mut stream = ExampleStream::for_node(&StreamConfig::svm_task(), 1);
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..30 {
+            let y = stream.next_into(&mut x);
+            svm2.update(&x, y, 1.0);
+        }
+        let m2 = enc.encode(2, &svm2);
+        assert!(!m2.full, "incremental growth must delta-encode");
+        assert!(
+            (m2.payload.len() as u64) < enc.last_full_bytes() / 4,
+            "delta {} vs full {}",
+            m2.payload.len(),
+            enc.last_full_bytes()
+        );
+        dec.apply(&mut replica, &m2).unwrap();
+        assert_eq!(probe_scores(&replica), probe_scores(&svm2));
+    }
+
+    #[test]
+    fn svm_apply_is_idempotent_and_rejects_gaps() {
+        let mut enc = SvmDeltaCodec::new(DIM);
+        let mut dec = SvmDeltaCodec::new(DIM);
+        let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let svm = trained_svm(60);
+        let m1 = enc.encode(1, &svm);
+        dec.apply(&mut replica, &m1).unwrap();
+        let before = probe_scores(&replica);
+        dec.apply(&mut replica, &m1).unwrap(); // idempotent re-apply
+        assert_eq!(probe_scores(&replica), before);
+
+        let mut svm2 = trained_svm(90);
+        svm2.update(&vec![0.5; DIM], 1.0, 1.0);
+        let _m2 = enc.encode(2, &svm2);
+        let m3 = enc.encode(3, &svm2);
+        if !m3.full {
+            // Skipping epoch 2 then applying 3 as a delta must fail.
+            assert!(dec.apply(&mut replica, &m3).is_err());
+        }
+        // A fresh decoder refuses a delta with no prior full state.
+        let mut fresh = SvmDeltaCodec::new(DIM);
+        let delta = SyncMessage { epoch: 5, full: false, payload: vec![0, 0, 0, 0, 0, 0, 0, 0] };
+        assert!(fresh.apply(&mut replica, &delta).is_err());
+    }
+
+    #[test]
+    fn mlp_roundtrip_and_fallback() {
+        let mut enc = MlpDenseCodec::new();
+        let mut dec = MlpDenseCodec::new();
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let mut replica = AdaGradMlp::new(MlpConfig { seed: 999, ..MlpConfig::paper(DIM) });
+
+        let m1 = enc.encode(1, &mlp);
+        assert!(m1.full);
+        dec.apply(&mut replica, &m1).unwrap();
+        assert_eq!(probe_scores(&replica), probe_scores(&mlp));
+
+        // An AdaGrad update touches ~everything: the fallback must fire.
+        let mut stream = ExampleStream::for_node(&StreamConfig::nn_task(), 0);
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..4 {
+            let y = stream.next_into(&mut x);
+            mlp.update(&x, y, 1.0);
+        }
+        let m2 = enc.encode(2, &mlp);
+        assert!(m2.full, "dense AdaGrad churn must fall back to full state");
+        dec.apply(&mut replica, &m2).unwrap();
+        assert_eq!(probe_scores(&replica), probe_scores(&mlp));
+
+        // Unchanged model → empty delta beats full easily.
+        let m3 = enc.encode(3, &mlp);
+        assert!(!m3.full);
+        assert_eq!(m3.payload.len(), 16);
+        dec.apply(&mut replica, &m3).unwrap();
+        assert_eq!(probe_scores(&replica), probe_scores(&mlp));
+    }
+}

@@ -1,0 +1,110 @@
+//! L4 distribution — sift nodes beyond the coordinator's process.
+//!
+//! The paper's core claim is that the *search* for informative examples
+//! parallelizes trivially and tolerates a slightly outdated model
+//! (Theorem 1) — which means sift nodes never need shared memory, only a
+//! periodic model sync. This module turns the in-process coordinator of
+//! [`crate::coordinator`] into a topology:
+//!
+//! * [`transport`] — a [`Transport`](transport::Transport) hub over
+//!   length-prefix-framed byte messages, with three interchangeable
+//!   carriers: [`InProcTransport`](transport::InProcTransport) (mpsc
+//!   channels, the single-process path as just another impl),
+//!   [`UdsTransport`](transport::UdsTransport) (Unix-domain sockets) and
+//!   loopback TCP ([`TcpTransport`](transport::TcpTransport));
+//! * [`proto`] — the coordinator ↔ node message set (init/round/sift/
+//!   shutdown) and its hand-rolled little-endian encoding (the vendor set
+//!   is fixed, so no serde);
+//! * [`delta`] — epoch-versioned **model-delta** codecs. The LASVM
+//!   support set accrues mostly monotonically and alphas move in place,
+//!   so [`delta::SvmDeltaCodec`] ships per-epoch deltas (new SVs in full,
+//!   known SVs as slot references plus their alphas, plus the bias) with
+//!   a full-state fallback whenever the delta would not beat the full
+//!   snapshot; [`delta::MlpDenseCodec`] ships the MLP's dense weight
+//!   state the same way (sparse index/value diffs with the identical
+//!   fallback — AdaGrad touches every parameter, so full-state usually
+//!   wins there, and the telemetry says so honestly);
+//! * [`node`] — the remote sift-node serve loop
+//!   ([`node::serve_sift_node`]): rebuilds its lanes (node-seeded streams
+//!   and sifter RNGs) locally from the init message — example data never
+//!   crosses the wire, only model state and selections — and runs them on
+//!   the PR 3 execution pool via any [`SiftBackend`];
+//! * [`cluster`] — the distributed coordinator round loop
+//!   ([`cluster::run_distributed`]), bit-identical to the in-process
+//!   loops under `stale ∈ {0, 1}` (`tests/transport_equivalence.rs`).
+//!
+//! [`SiftBackend`]: crate::coordinator::backend::SiftBackend
+//!
+//! **The equivalence contract, extended.** Every layer so far (threads,
+//! pools, replay, pipelining) reproduced the serial reference bit for
+//! bit; distribution is held to the same bar. A remote node regenerates
+//! exactly the lanes the in-process coordinator would have built
+//! (identical streams, identical sifter coins), scores them against a
+//! replica whose scoring view was installed from the sync message with
+//! the source model's exact bits, and returns selections in lane order —
+//! so the coordinator pools the identical broadcast and the trajectory
+//! cannot move. The `stale=1` wire schedule mirrors the pipelined loop
+//! (sync encodes the live model *before* the overlapped replay flush);
+//! `stale=0` mirrors the strict loop (replay applies before the next
+//! encode). Higher staleness budgets would compound wire lag on top of
+//! replay lag, so the distributed runner rejects them loudly.
+
+pub mod cluster;
+pub mod delta;
+pub mod node;
+pub mod proto;
+pub mod transport;
+pub(crate) mod wire;
+
+pub use cluster::{config_fingerprint, run_distributed};
+pub use delta::{MlpDenseCodec, ModelCodec, SvmDeltaCodec, SyncMessage};
+pub use node::{serve_sift_node, SiftNodeReport};
+pub use proto::TaskKind;
+pub use transport::{Channel, InProcTransport, TcpTransport, Transport, UdsTransport};
+
+/// Wire telemetry of a distributed run, reported beside
+/// [`WallTimes`](crate::coordinator::sync::WallTimes) on the
+/// [`SyncReport`](crate::coordinator::sync::SyncReport). In-process runs
+/// leave it zeroed (`sync_messages == 0` marks "no wire").
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetStats {
+    /// Total frame bytes coordinator → nodes (sync payloads + control).
+    pub bytes_sent: u64,
+    /// Total frame bytes nodes → coordinator (selections + acks).
+    pub bytes_received: u64,
+    /// Model-sync messages sent (one per node per round).
+    pub sync_messages: u64,
+    /// Sync messages that were delta-encoded.
+    pub delta_syncs: u64,
+    /// Sync messages that fell back to full state.
+    pub full_syncs: u64,
+    /// Actual sync payload bytes shipped (delta or full, as sent).
+    pub sync_bytes: u64,
+    /// What the same syncs would have cost shipped as full state every
+    /// round — the denominator of [`NetStats::delta_ratio`].
+    pub full_equiv_bytes: u64,
+}
+
+impl NetStats {
+    /// Shipped sync bytes over always-full-state bytes: < 1.0 means delta
+    /// encoding saved wire traffic.
+    pub fn delta_ratio(&self) -> f64 {
+        if self.full_equiv_bytes == 0 {
+            1.0
+        } else {
+            self.sync_bytes as f64 / self.full_equiv_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_ratio_handles_empty_and_savings() {
+        assert_eq!(NetStats::default().delta_ratio(), 1.0);
+        let s = NetStats { sync_bytes: 250, full_equiv_bytes: 1000, ..Default::default() };
+        assert!((s.delta_ratio() - 0.25).abs() < 1e-12);
+    }
+}

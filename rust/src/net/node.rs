@@ -1,0 +1,254 @@
+//! The sift-node serve loop — one process's worth of remote lanes.
+//!
+//! A node process receives [`InitMsg`], rebuilds its lane range
+//! `[lane_lo, lane_hi)` with the **same** constructor the in-process
+//! coordinator uses ([`make_lane`]: node-seeded stream, node-seeded
+//! sifter RNG, preallocated shard buffers), and then serves rounds: apply
+//! the model sync, draw each lane's shard locally, sift on the PR 3
+//! execution pool, reply with the per-lane selections in lane order.
+//! Example data never crosses the wire — determinism regenerates it.
+//!
+//! The node owning lane 0 additionally skips the warmstart head of lane
+//! 0's stream (`InitMsg::skip`): the coordinator consumed those examples
+//! locally during its warmstart phase, so the remote stream must resume
+//! exactly where the in-process one would have.
+//!
+//! The replica learner only ever *scores* — its update machinery is never
+//! touched; [`ModelCodec::apply`] installs the coordinator's scoring view
+//! with the source model's exact bits each round.
+
+use super::delta::ModelCodec;
+use super::proto::{ByeMsg, Msg, ReadyMsg, SiftMsg, TaskKind, PROTO_VERSION};
+use super::transport::Channel;
+use crate::coordinator::backend::{NodeJob, SiftBackend};
+use crate::coordinator::sync::make_lane;
+use crate::data::{StreamConfig, DIM};
+use crate::exec::PoolStats;
+use crate::learner::{Learner, SiftScorer};
+use anyhow::{Context, Result};
+
+pub(crate) fn send_msg(chan: &mut dyn Channel, msg: &Msg) -> Result<()> {
+    chan.send(&msg.encode())
+}
+
+pub(crate) fn recv_msg(chan: &mut dyn Channel) -> Result<Msg> {
+    Msg::decode(&chan.recv()?)
+}
+
+/// What one node process did over its lifetime, for logging on the node
+/// side (the coordinator gets the same pool counters via [`Msg::Bye`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SiftNodeReport {
+    pub node_index: u32,
+    /// Lanes this process hosted.
+    pub lanes: usize,
+    pub rounds: u64,
+    pub pool: PoolStats,
+}
+
+/// Serve one sift node over `chan` until the coordinator says shutdown.
+///
+/// `replica` is a freshly constructed learner of the run's type — its
+/// scoring view is overwritten by the first (full) sync before any shard
+/// is scored. `task` and `fingerprint` are this process's own idea of the
+/// run configuration; the init handshake cross-checks them against the
+/// coordinator's so a mis-launched node fails fast with an actionable
+/// error instead of silently diverging.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_sift_node<L: Learner>(
+    chan: &mut dyn Channel,
+    replica: &mut L,
+    codec: &mut dyn ModelCodec<L>,
+    scorer: &dyn SiftScorer<L>,
+    backend: &dyn SiftBackend,
+    stream_cfg: &StreamConfig,
+    task: TaskKind,
+    fingerprint: u64,
+) -> Result<SiftNodeReport> {
+    let init = match recv_msg(chan).context("waiting for init")? {
+        Msg::Init(m) => m,
+        other => anyhow::bail!("expected init message, got {other:?}"),
+    };
+    anyhow::ensure!(
+        init.version == PROTO_VERSION,
+        "protocol version mismatch: coordinator speaks v{}, this node v{PROTO_VERSION} \
+         — rebuild both sides from the same source",
+        init.version
+    );
+    anyhow::ensure!(
+        init.task == task,
+        "task mismatch: coordinator is running {} but this node was launched for {} \
+         — restart the node with the matching subcommand",
+        init.task.name(),
+        task.name()
+    );
+    anyhow::ensure!(
+        init.fingerprint == fingerprint,
+        "config fingerprint mismatch (coordinator {:#x}, node {:#x}) — both processes \
+         must be launched with identical experiment flags",
+        init.fingerprint,
+        fingerprint
+    );
+    anyhow::ensure!(
+        init.lane_lo < init.lane_hi && init.lane_hi <= init.k,
+        "bad lane range [{}, {}) for k={}",
+        init.lane_lo,
+        init.lane_hi,
+        init.k
+    );
+    anyhow::ensure!(init.shard >= 1, "shard size must be >= 1");
+
+    let cfg = stream_cfg.clone().with_seed(init.stream_seed);
+    let shard = init.shard as usize;
+    let mut lanes: Vec<_> = (init.lane_lo..init.lane_hi)
+        .map(|n| make_lane(&cfg, &init.sifter, n as usize, shard))
+        .collect();
+    // Lane 0's stream resumes after the coordinator's warmstart head.
+    if init.lane_lo == 0 && init.skip > 0 {
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..init.skip {
+            lanes[0].stream.next_into(&mut x);
+        }
+    }
+    let needs_scores = init.sifter.needs_scores();
+    send_msg(
+        chan,
+        &Msg::Ready(ReadyMsg { node_index: init.node_index, lanes: lanes.len() as u32 }),
+    )?;
+
+    let mut rounds = 0u64;
+    let mut outcome: Option<Result<PoolStats>> = None;
+    backend.with_session(&mut |session| {
+        outcome = Some((|| loop {
+            match recv_msg(chan)? {
+                Msg::Round(rm) => {
+                    codec.apply(replica, &rm.sync).context("applying model sync")?;
+                    // Draw shards locally — generation is off every clock,
+                    // identical to the in-process loops.
+                    for lane in lanes.iter_mut() {
+                        lane.stream.next_batch_into(&mut lane.xs, &mut lane.ys);
+                    }
+                    let round = rm.round;
+                    let n_phase = rm.n_phase;
+                    let frozen: &L = replica;
+                    let jobs: Vec<NodeJob<'_>> = lanes
+                        .iter_mut()
+                        .map(|lane| {
+                            let job: NodeJob<'_> = Box::new(move |worker| {
+                                lane.sift_round(
+                                    frozen,
+                                    scorer,
+                                    shard,
+                                    n_phase,
+                                    needs_scores,
+                                    worker,
+                                )
+                            });
+                            job
+                        })
+                        .collect();
+                    let results = session.run_round(jobs);
+                    rounds += 1;
+                    send_msg(chan, &Msg::Sift(SiftMsg { round, lanes: results }))?;
+                }
+                Msg::Shutdown => {
+                    let stats = session.stats();
+                    send_msg(chan, &Msg::Bye(ByeMsg { pool: stats }))?;
+                    return Ok(stats);
+                }
+                other => anyhow::bail!("unexpected message in round loop: {other:?}"),
+            }
+        })());
+    });
+    let pool = outcome.expect("backend never ran the session body")?;
+    Ok(SiftNodeReport { node_index: init.node_index, lanes: lanes.len(), rounds, pool })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::active::SifterSpec;
+    use crate::coordinator::backend::SerialBackend;
+    use crate::data::DIM;
+    use crate::learner::NativeScorer;
+    use crate::net::delta::MlpDenseCodec;
+    use crate::net::proto::InitMsg;
+    use crate::net::transport::InProcTransport;
+    use crate::net::Transport;
+    use crate::nn::{AdaGradMlp, MlpConfig};
+
+    fn test_init() -> InitMsg {
+        InitMsg {
+            version: PROTO_VERSION,
+            task: TaskKind::Nn,
+            fingerprint: 0xABCD,
+            node_index: 0,
+            lane_lo: 0,
+            lane_hi: 1,
+            k: 1,
+            shard: 4,
+            skip: 0,
+            stream_seed: StreamConfig::nn_task().seed,
+            sifter: SifterSpec::Passive,
+        }
+    }
+
+    fn serve_with(init: InitMsg, fingerprint: u64, task: TaskKind) -> Result<SiftNodeReport> {
+        let (mut hub, mut chans) = InProcTransport::pair(1);
+        let handle = std::thread::spawn(move || {
+            let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+            let mut codec = MlpDenseCodec::new();
+            let mut chan = chans.remove(0);
+            serve_sift_node(
+                &mut chan,
+                &mut replica,
+                &mut codec,
+                &NativeScorer,
+                &SerialBackend,
+                &StreamConfig::nn_task(),
+                task,
+                fingerprint,
+            )
+        });
+        hub.send_to(0, &Msg::Init(init).encode()).unwrap();
+        // On success the node acks with Ready and waits for rounds; close
+        // the hub (drop) to let a successful server error out of recv —
+        // but first give mismatch cases their immediate error. Send a
+        // shutdown so the happy path terminates cleanly.
+        if let Ok(bytes) = hub.recv_from(0) {
+            if matches!(Msg::decode(&bytes), Ok(Msg::Ready(_))) {
+                hub.send_to(0, &Msg::Shutdown.encode()).unwrap();
+                let _ = hub.recv_from(0); // Bye
+            }
+        }
+        drop(hub);
+        handle.join().expect("node thread panicked")
+    }
+
+    #[test]
+    fn node_serves_handshake_and_shutdown() {
+        let report = serve_with(test_init(), 0xABCD, TaskKind::Nn).unwrap();
+        assert_eq!(report.node_index, 0);
+        assert_eq!(report.lanes, 1);
+        assert_eq!(report.rounds, 0);
+    }
+
+    #[test]
+    fn node_rejects_version_task_and_fingerprint_mismatches() {
+        let mut bad_version = test_init();
+        bad_version.version = PROTO_VERSION + 1;
+        let err = serve_with(bad_version, 0xABCD, TaskKind::Nn).unwrap_err();
+        assert!(err.to_string().contains("protocol version"), "{err}");
+
+        let err = serve_with(test_init(), 0xABCD, TaskKind::Svm).unwrap_err();
+        assert!(err.to_string().contains("task mismatch"), "{err}");
+
+        let err = serve_with(test_init(), 0xBEEF, TaskKind::Nn).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+
+        let mut bad_range = test_init();
+        bad_range.lane_hi = 0;
+        let err = serve_with(bad_range, 0xABCD, TaskKind::Nn).unwrap_err();
+        assert!(err.to_string().contains("lane range"), "{err}");
+    }
+}

@@ -1,0 +1,348 @@
+//! The coordinator ↔ sift-node message set.
+//!
+//! One round trip per round: the coordinator broadcasts [`Msg::Round`]
+//! (phase counter + model sync) and collects one [`Msg::Sift`] per node
+//! process (per-lane selections, in lane order). Example data never
+//! crosses the wire — [`Msg::Init`] carries just enough for a node to
+//! regenerate its lanes deterministically (stream seed, sifter spec,
+//! lane range), which is what keeps the wire cost `O(model delta +
+//! selections)` instead of `O(shard)`.
+//!
+//! Encoding is the little-endian packing of [`super::wire`]; every
+//! message starts with a one-byte tag. [`Msg::decode`] turns truncation
+//! or unknown tags into errors, never panics — a transport delivers
+//! whatever the peer sent.
+
+use super::delta::SyncMessage;
+use super::wire::{put_f32s, put_f64, put_u32, put_u64, put_u8, Reader};
+use crate::active::SifterSpec;
+use crate::coordinator::backend::NodeSift;
+use crate::exec::PoolStats;
+use anyhow::Result;
+
+/// Bump on any wire-format change; [`Msg::Init`] carries it and
+/// [`super::node::serve_sift_node`] refuses mismatches.
+pub const PROTO_VERSION: u32 = 1;
+
+const TAG_INIT: u8 = 1;
+const TAG_READY: u8 = 2;
+const TAG_ROUND: u8 = 3;
+const TAG_SIFT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_BYE: u8 = 6;
+
+/// Which experiment family a run belongs to. Carried in [`Msg::Init`] so
+/// a node launched with the wrong subcommand fails fast instead of
+/// silently scoring with the wrong learner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Svm,
+    Nn,
+}
+
+impl TaskKind {
+    fn as_u8(self) -> u8 {
+        match self {
+            TaskKind::Svm => 0,
+            TaskKind::Nn => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(TaskKind::Svm),
+            1 => Ok(TaskKind::Nn),
+            other => anyhow::bail!("unknown task kind {other}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Svm => "svm",
+            TaskKind::Nn => "nn",
+        }
+    }
+}
+
+/// Round-zero handshake: everything a node needs to rebuild its slice of
+/// the coordinator's lane array bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitMsg {
+    pub version: u32,
+    pub task: TaskKind,
+    /// Caller-computed digest of the out-of-band run configuration
+    /// (learner hyper-parameters, stream task). Both sides must agree;
+    /// see [`super::cluster::config_fingerprint`].
+    pub fingerprint: u64,
+    /// Index of this node process on the transport.
+    pub node_index: u32,
+    /// Lane range [lane_lo, lane_hi) this process sifts.
+    pub lane_lo: u32,
+    pub lane_hi: u32,
+    /// Total lane count k of the run (for context in errors).
+    pub k: u32,
+    /// Per-lane shard size B/k.
+    pub shard: u32,
+    /// Examples to skip on lane 0 before the first round (the warmstart
+    /// head the coordinator consumed locally). Zero for lanes > 0.
+    pub skip: u64,
+    /// Seed of the example stream config (lanes salt it by lane id).
+    pub stream_seed: u64,
+    pub sifter: SifterSpec,
+}
+
+/// Node acknowledgment of [`InitMsg`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReadyMsg {
+    pub node_index: u32,
+    pub lanes: u32,
+}
+
+/// One round's work order: the phase counter and the model sync.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundMsg {
+    pub round: u64,
+    /// Cumulative examples seen by the cluster before this phase (the
+    /// paper's n in Eq 5).
+    pub n_phase: u64,
+    pub sync: SyncMessage,
+}
+
+/// One node process's sift results: one [`NodeSift`] per owned lane, in
+/// lane order.
+#[derive(Debug, Clone)]
+pub struct SiftMsg {
+    pub round: u64,
+    pub lanes: Vec<NodeSift>,
+}
+
+/// Node's parting stats, sent in reply to [`Msg::Shutdown`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ByeMsg {
+    pub pool: PoolStats,
+}
+
+/// Every message that crosses a [`super::transport::Channel`].
+#[derive(Debug, Clone)]
+pub enum Msg {
+    Init(InitMsg),
+    Ready(ReadyMsg),
+    Round(RoundMsg),
+    Sift(SiftMsg),
+    Shutdown,
+    Bye(ByeMsg),
+}
+
+fn put_sifter(buf: &mut Vec<u8>, s: &SifterSpec) {
+    match *s {
+        SifterSpec::Passive => put_u8(buf, 0),
+        SifterSpec::Margin { eta, seed } => {
+            put_u8(buf, 1);
+            put_f64(buf, eta);
+            put_u64(buf, seed);
+        }
+        SifterSpec::FixedRate { rate, seed } => {
+            put_u8(buf, 2);
+            put_f64(buf, rate);
+            put_u64(buf, seed);
+        }
+    }
+}
+
+fn read_sifter(r: &mut Reader<'_>) -> Result<SifterSpec> {
+    match r.u8()? {
+        0 => Ok(SifterSpec::Passive),
+        1 => Ok(SifterSpec::Margin { eta: r.f64()?, seed: r.u64()? }),
+        2 => Ok(SifterSpec::FixedRate { rate: r.f64()?, seed: r.u64()? }),
+        other => anyhow::bail!("unknown sifter variant {other}"),
+    }
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Msg::Init(m) => {
+                put_u8(&mut buf, TAG_INIT);
+                put_u32(&mut buf, m.version);
+                put_u8(&mut buf, m.task.as_u8());
+                put_u64(&mut buf, m.fingerprint);
+                put_u32(&mut buf, m.node_index);
+                put_u32(&mut buf, m.lane_lo);
+                put_u32(&mut buf, m.lane_hi);
+                put_u32(&mut buf, m.k);
+                put_u32(&mut buf, m.shard);
+                put_u64(&mut buf, m.skip);
+                put_u64(&mut buf, m.stream_seed);
+                put_sifter(&mut buf, &m.sifter);
+            }
+            Msg::Ready(m) => {
+                put_u8(&mut buf, TAG_READY);
+                put_u32(&mut buf, m.node_index);
+                put_u32(&mut buf, m.lanes);
+            }
+            Msg::Round(m) => {
+                put_u8(&mut buf, TAG_ROUND);
+                put_u64(&mut buf, m.round);
+                put_u64(&mut buf, m.n_phase);
+                put_u64(&mut buf, m.sync.epoch);
+                put_u8(&mut buf, m.sync.full as u8);
+                put_u32(&mut buf, m.sync.payload.len() as u32);
+                buf.extend_from_slice(&m.sync.payload);
+            }
+            Msg::Sift(m) => {
+                put_u8(&mut buf, TAG_SIFT);
+                put_u64(&mut buf, m.round);
+                put_u32(&mut buf, m.lanes.len() as u32);
+                for lane in &m.lanes {
+                    put_f32s(&mut buf, &lane.sel_x);
+                    put_f32s(&mut buf, &lane.sel_y);
+                    put_f32s(&mut buf, &lane.sel_w);
+                    put_f64(&mut buf, lane.seconds);
+                    put_u64(&mut buf, lane.sift_ops);
+                }
+            }
+            Msg::Shutdown => put_u8(&mut buf, TAG_SHUTDOWN),
+            Msg::Bye(m) => {
+                put_u8(&mut buf, TAG_BYE);
+                put_u32(&mut buf, m.pool.workers as u32);
+                put_u64(&mut buf, m.pool.threads_spawned);
+                put_u64(&mut buf, m.pool.rounds);
+            }
+        }
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(bytes);
+        let msg = match r.u8()? {
+            TAG_INIT => Msg::Init(InitMsg {
+                version: r.u32()?,
+                task: TaskKind::from_u8(r.u8()?)?,
+                fingerprint: r.u64()?,
+                node_index: r.u32()?,
+                lane_lo: r.u32()?,
+                lane_hi: r.u32()?,
+                k: r.u32()?,
+                shard: r.u32()?,
+                skip: r.u64()?,
+                stream_seed: r.u64()?,
+                sifter: read_sifter(&mut r)?,
+            }),
+            TAG_READY => Msg::Ready(ReadyMsg { node_index: r.u32()?, lanes: r.u32()? }),
+            TAG_ROUND => {
+                let round = r.u64()?;
+                let n_phase = r.u64()?;
+                let epoch = r.u64()?;
+                let full = r.u8()? != 0;
+                let len = r.u32()? as usize;
+                let payload = r.bytes(len)?;
+                Msg::Round(RoundMsg { round, n_phase, sync: SyncMessage { epoch, full, payload } })
+            }
+            TAG_SIFT => {
+                let round = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut lanes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let sel_x = r.f32s()?;
+                    let sel_y = r.f32s()?;
+                    let sel_w = r.f32s()?;
+                    let seconds = r.f64()?;
+                    let sift_ops = r.u64()?;
+                    lanes.push(NodeSift { sel_x, sel_y, sel_w, seconds, sift_ops });
+                }
+                Msg::Sift(SiftMsg { round, lanes })
+            }
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_BYE => Msg::Bye(ByeMsg {
+                pool: PoolStats {
+                    workers: r.u32()? as usize,
+                    threads_spawned: r.u64()?,
+                    rounds: r.u64()?,
+                },
+            }),
+            other => anyhow::bail!("unknown message tag {other}"),
+        };
+        anyhow::ensure!(r.remaining() == 0, "{} trailing bytes after message", r.remaining());
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_roundtrip_preserves_every_field() {
+        let m = InitMsg {
+            version: PROTO_VERSION,
+            task: TaskKind::Nn,
+            fingerprint: 0xFEED_F00D,
+            node_index: 1,
+            lane_lo: 2,
+            lane_hi: 4,
+            k: 4,
+            shard: 500,
+            skip: 4000,
+            stream_seed: 0x5EED_5EED,
+            sifter: SifterSpec::Margin { eta: 0.1, seed: 7 },
+        };
+        match Msg::decode(&Msg::Init(m.clone()).encode()).unwrap() {
+            Msg::Init(got) => assert_eq!(got, m),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sift_roundtrip_is_bit_exact() {
+        let lane = NodeSift {
+            sel_x: vec![1.5, -0.0, f32::MIN_POSITIVE],
+            sel_y: vec![1.0],
+            sel_w: vec![3.25],
+            seconds: 0.75,
+            sift_ops: 99,
+        };
+        let m = SiftMsg { round: 3, lanes: vec![lane.clone(), NodeSift::default()] };
+        match Msg::decode(&Msg::Sift(m).encode()).unwrap() {
+            Msg::Sift(got) => {
+                assert_eq!(got.round, 3);
+                assert_eq!(got.lanes.len(), 2);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got.lanes[0].sel_x), bits(&lane.sel_x));
+                assert_eq!(got.lanes[0].sift_ops, 99);
+                assert!(got.lanes[1].sel_y.is_empty());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_carries_sync_payload_and_rejects_trailing_bytes() {
+        let m = Msg::Round(RoundMsg {
+            round: 9,
+            n_phase: 8000,
+            sync: SyncMessage { epoch: 9, full: false, payload: vec![1, 2, 3] },
+        });
+        let mut bytes = m.encode();
+        match Msg::decode(&bytes).unwrap() {
+            Msg::Round(got) => {
+                assert!(!got.sync.full);
+                assert_eq!(got.sync.payload, vec![1, 2, 3]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        bytes.push(0);
+        assert!(Msg::decode(&bytes).is_err(), "trailing garbage must not parse");
+        assert!(Msg::decode(&[250]).is_err(), "unknown tag must not parse");
+    }
+
+    #[test]
+    fn shutdown_and_bye_roundtrip() {
+        assert!(matches!(Msg::decode(&Msg::Shutdown.encode()).unwrap(), Msg::Shutdown));
+        let bye = ByeMsg { pool: PoolStats { workers: 3, threads_spawned: 3, rounds: 17 } };
+        match Msg::decode(&Msg::Bye(bye).encode()).unwrap() {
+            Msg::Bye(got) => assert_eq!(got, bye),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! Message transports: framing, channels, and the coordinator-side hub.
+//!
+//! Everything above this module speaks in whole byte messages. A
+//! [`Channel`] is one side of a reliable, ordered message pipe; a
+//! [`Transport`] is the coordinator's hub over one channel per remote
+//! node process, with node-indexed request/reply and broadcast. Three
+//! carriers implement the same framing:
+//!
+//! * [`InProcTransport`] — mpsc byte channels, the in-process sequencer
+//!   path (`coordinator::broadcast`'s ordered-delivery role, carried by
+//!   `std::sync::mpsc`'s FIFO guarantee). This is the carrier the
+//!   bit-identity tests drive, and it makes the single-process
+//!   coordinator just one [`Transport`] impl among equals;
+//! * [`UdsTransport`] — Unix-domain stream sockets, the real two-process
+//!   carrier on one machine;
+//! * [`TcpTransport`] — loopback/LAN TCP, same framing over
+//!   `TcpStream`.
+//!
+//! Stream carriers frame each message as a little-endian u32 length
+//! prefix followed by the payload. The prefix is counted in the
+//! [`NetStats`](super::NetStats) byte totals for every carrier —
+//! including in-proc, where no bytes actually move — so wire telemetry
+//! is comparable across carriers.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Refuse frames above 1 GiB — anything bigger is a corrupted length
+/// prefix, not a real message.
+const MAX_FRAME: u32 = 1 << 30;
+
+/// Per-frame overhead charged to the byte counters (the length prefix).
+pub const FRAME_OVERHEAD: u64 = 4;
+
+/// One side of a reliable, ordered byte-message pipe.
+pub trait Channel: Send {
+    /// Send one whole message.
+    fn send(&mut self, msg: &[u8]) -> Result<()>;
+    /// Block until the next whole message arrives.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// The coordinator's hub: one [`Channel`] per connected node process,
+/// indexed 0..nodes in accept/creation order.
+pub trait Transport: Send {
+    /// Carrier name for reports ("inproc", "uds", "tcp").
+    fn name(&self) -> &'static str;
+    /// Number of connected node processes.
+    fn nodes(&self) -> usize;
+    /// Send one message to node `node`.
+    fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()>;
+    /// Block until node `node`'s next message arrives.
+    fn recv_from(&mut self, node: usize) -> Result<Vec<u8>>;
+    /// Send the same message to every node, in node order.
+    fn broadcast(&mut self, msg: &[u8]) -> Result<()> {
+        for node in 0..self.nodes() {
+            self.send_to(node, msg)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-process carrier.
+// ---------------------------------------------------------------------
+
+/// One endpoint of an in-process byte pipe (a pair of mpsc queues).
+pub struct InProcChannel {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl Channel for InProcChannel {
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        self.tx
+            .send(msg.to_vec())
+            .map_err(|_| anyhow::anyhow!("in-proc peer disconnected"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("in-proc peer disconnected"))
+    }
+}
+
+/// The in-process hub: node endpoints live on other threads of the same
+/// process, connected by FIFO mpsc queues.
+pub struct InProcTransport {
+    chans: Vec<InProcChannel>,
+}
+
+impl InProcTransport {
+    /// Create a hub plus `n` node endpoints. Endpoint `i` talks to hub
+    /// slot `i`; hand each endpoint to one node thread.
+    pub fn pair(n: usize) -> (InProcTransport, Vec<InProcChannel>) {
+        assert!(n >= 1, "a transport needs at least one node");
+        let mut hub = Vec::with_capacity(n);
+        let mut ends = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (to_node, node_rx) = channel();
+            let (to_hub, hub_rx) = channel();
+            hub.push(InProcChannel { tx: to_node, rx: hub_rx });
+            ends.push(InProcChannel { tx: to_hub, rx: node_rx });
+        }
+        (InProcTransport { chans: hub }, ends)
+    }
+}
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn nodes(&self) -> usize {
+        self.chans.len()
+    }
+
+    fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()> {
+        self.chans[node].send(msg)
+    }
+
+    fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
+        self.chans[node].recv()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stream carriers (UDS, TCP): length-prefix framing over Read + Write.
+// ---------------------------------------------------------------------
+
+/// Length-prefix framing over any byte stream.
+pub struct StreamChannel<S: Read + Write + Send> {
+    stream: S,
+}
+
+impl<S: Read + Write + Send> StreamChannel<S> {
+    pub fn new(stream: S) -> Self {
+        StreamChannel { stream }
+    }
+}
+
+impl<S: Read + Write + Send> Channel for StreamChannel<S> {
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        let len = u32::try_from(msg.len())
+            .ok()
+            .filter(|&l| l <= MAX_FRAME)
+            .with_context(|| format!("frame too large: {} bytes", msg.len()))?;
+        self.stream.write_all(&len.to_le_bytes()).context("writing frame length")?;
+        self.stream.write_all(msg).context("writing frame payload")?;
+        self.stream.flush().context("flushing frame")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).context("reading frame length")?;
+        let len = u32::from_le_bytes(len);
+        anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len} bytes");
+        let mut buf = vec![0u8; len as usize];
+        self.stream.read_exact(&mut buf).context("reading frame payload")?;
+        Ok(buf)
+    }
+}
+
+/// Unix-domain-socket hub: binds a path and accepts `n` node
+/// connections; node index = accept order (the init handshake tells each
+/// process which index it got).
+pub struct UdsTransport {
+    chans: Vec<StreamChannel<UnixStream>>,
+    path: PathBuf,
+}
+
+impl UdsTransport {
+    /// Coordinator side: bind `path` (replacing any stale socket file)
+    /// and accept exactly `n` node connections.
+    pub fn listen(path: &Path, n: usize) -> Result<UdsTransport> {
+        assert!(n >= 1, "a transport needs at least one node");
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {}", path.display()))?;
+        let mut chans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (stream, _) = listener.accept().context("accepting node connection")?;
+            chans.push(StreamChannel::new(stream));
+        }
+        Ok(UdsTransport { chans, path: path.to_path_buf() })
+    }
+
+    /// Node side: connect to the coordinator's socket, retrying while
+    /// the coordinator is still coming up (it may bind after the node
+    /// process launches).
+    pub fn connect(path: &Path, timeout: Duration) -> Result<StreamChannel<UnixStream>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match UnixStream::connect(path) {
+                Ok(stream) => return Ok(StreamChannel::new(stream)),
+                Err(e) => {
+                    let retryable = matches!(
+                        e.kind(),
+                        std::io::ErrorKind::NotFound | std::io::ErrorKind::ConnectionRefused
+                    );
+                    if !retryable || Instant::now() >= deadline {
+                        return Err(anyhow::Error::new(e)
+                            .context(format!("connecting to {}", path.display())));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for UdsTransport {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Transport for UdsTransport {
+    fn name(&self) -> &'static str {
+        "uds"
+    }
+
+    fn nodes(&self) -> usize {
+        self.chans.len()
+    }
+
+    fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()> {
+        self.chans[node].send(msg)
+    }
+
+    fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
+        self.chans[node].recv()
+    }
+}
+
+/// TCP hub (loopback or LAN): same framing as [`UdsTransport`] over
+/// `TcpStream`.
+pub struct TcpTransport {
+    chans: Vec<StreamChannel<TcpStream>>,
+}
+
+impl TcpTransport {
+    /// Coordinator side: bind `addr` (e.g. `127.0.0.1:7171`) and accept
+    /// exactly `n` node connections.
+    pub fn listen(addr: &str, n: usize) -> Result<TcpTransport> {
+        assert!(n >= 1, "a transport needs at least one node");
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
+        let mut chans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (stream, _) = listener.accept().context("accepting node connection")?;
+            stream.set_nodelay(true).ok(); // round-trips are latency-bound
+            chans.push(StreamChannel::new(stream));
+        }
+        Ok(TcpTransport { chans })
+    }
+
+    /// Node side: connect with the same startup-race retry as UDS.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<StreamChannel<TcpStream>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(StreamChannel::new(stream));
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow::Error::new(e).context(format!("connecting to {addr}")));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn nodes(&self) -> usize {
+        self.chans.len()
+    }
+
+    fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()> {
+        self.chans[node].send(msg)
+    }
+
+    fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
+        self.chans[node].recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_request_reply_and_broadcast() {
+        let (mut hub, ends) = InProcTransport::pair(3);
+        assert_eq!(hub.nodes(), 3);
+        let handles: Vec<_> = ends
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut chan)| {
+                std::thread::spawn(move || {
+                    let hello = chan.recv().unwrap();
+                    assert_eq!(hello, b"ping");
+                    chan.send(format!("pong {i}").as_bytes()).unwrap();
+                })
+            })
+            .collect();
+        hub.broadcast(b"ping").unwrap();
+        for i in 0..3 {
+            assert_eq!(hub.recv_from(i).unwrap(), format!("pong {i}").as_bytes());
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn inproc_disconnect_is_an_error() {
+        let (mut hub, ends) = InProcTransport::pair(1);
+        drop(ends);
+        assert!(hub.recv_from(0).is_err());
+        assert!(hub.send_to(0, b"x").is_err());
+    }
+
+    #[test]
+    fn uds_frames_survive_the_socket() {
+        let path = std::env::temp_dir()
+            .join(format!("para-active-test-{}.sock", std::process::id()));
+        let path2 = path.clone();
+        let node = std::thread::spawn(move || {
+            let mut chan = UdsTransport::connect(&path2, Duration::from_secs(5)).unwrap();
+            let msg = chan.recv().unwrap();
+            chan.send(&msg).unwrap(); // echo
+            let empty = chan.recv().unwrap();
+            assert!(empty.is_empty(), "zero-length frames are legal");
+            chan.send(b"done").unwrap();
+        });
+        let mut hub = UdsTransport::listen(&path, 1).unwrap();
+        let payload: Vec<u8> = (0..10_000u32).flat_map(|v| v.to_le_bytes()).collect();
+        hub.send_to(0, &payload).unwrap();
+        assert_eq!(hub.recv_from(0).unwrap(), payload);
+        hub.send_to(0, b"").unwrap();
+        assert_eq!(hub.recv_from(0).unwrap(), b"done");
+        node.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_loopback_round_trip() {
+        // Port 0 lets the OS pick; grab the real addr from the listener.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let node = std::thread::spawn(move || {
+            let mut chan = TcpTransport::connect(&addr, Duration::from_secs(5)).unwrap();
+            let msg = chan.recv().unwrap();
+            chan.send(&msg).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut hub = TcpTransport { chans: vec![StreamChannel::new(stream)] };
+        hub.send_to(0, b"over tcp").unwrap();
+        assert_eq!(hub.recv_from(0).unwrap(), b"over tcp");
+        node.join().unwrap();
+    }
+}

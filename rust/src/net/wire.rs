@@ -1,0 +1,144 @@
+//! Little-endian byte packing shared by the protocol and the delta
+//! codecs. The vendor set is fixed (no serde), so encoding is explicit:
+//! writers append to a `Vec<u8>`, [`Reader`] walks a received payload
+//! with bounds checks that turn truncation into errors instead of
+//! panics.
+
+use anyhow::Result;
+
+pub(crate) fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed f32 slice (u32 count, then raw values).
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    buf.reserve(vs.len() * 4);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a received payload.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let end = end.ok_or_else(|| {
+            anyhow::anyhow!(
+                "truncated message: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            )
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed f32 slice written by [`put_f32s`].
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        self.f32s_exact(n)
+    }
+
+    /// Read exactly `n` raw f32 values (no length prefix).
+    pub(crate) fn f32s_exact(&mut self, n: usize) -> Result<Vec<f32>> {
+        let len = n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("f32 run overflow"))?;
+        let bytes = self.take(len)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read exactly `n` raw bytes.
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Remaining unread bytes (0 once a message is fully consumed).
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_scalar_kinds() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f32(&mut buf, -0.125);
+        put_f64(&mut buf, 2.5e-300);
+        put_f32s(&mut buf, &[1.0, f32::MIN_POSITIVE, -0.0]);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.125f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), (2.5e-300f64).to_bits());
+        let vs = r.f32s().unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[2].to_bits(), (-0.0f32).to_bits(), "bit-exact: -0.0 survives");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 10); // claims 10 f32s, delivers none
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s().is_err());
+        let mut r2 = Reader::new(&[1, 2]);
+        assert!(r2.u32().is_err());
+    }
+}

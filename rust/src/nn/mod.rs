@@ -139,6 +139,27 @@ impl AdaGradMlp {
         (w1, b1, w2, self.b2)
     }
 
+    /// Borrow the scoring parameters for wire sync (`crate::net`): `w1`
+    /// (hidden × input_dim, row-major), `b1`, `w2`, `b2`.
+    pub fn sync_weights(&self) -> (&[f32], &[f32], &[f32], f32) {
+        (&self.w1, &self.b1, &self.w2, self.b2)
+    }
+
+    /// Install scoring parameters received over the wire. Scoring touches
+    /// only these four tensors, so a replica synced this way scores
+    /// bit-identically to the source; the AdaGrad accumulators are left
+    /// untouched — a synced replica is a *scoring* replica and must not
+    /// be updated.
+    pub fn install_sync_weights(&mut self, w1: &[f32], b1: &[f32], w2: &[f32], b2: f32) {
+        assert_eq!(w1.len(), self.w1.len(), "w1 shape mismatch");
+        assert_eq!(b1.len(), self.b1.len(), "b1 shape mismatch");
+        assert_eq!(w2.len(), self.w2.len(), "w2 shape mismatch");
+        self.w1.copy_from_slice(w1);
+        self.b1.copy_from_slice(b1);
+        self.w2.copy_from_slice(w2);
+        self.b2 = b2;
+    }
+
     /// Per-example forward pass that also exposes the hidden activations —
     /// the update path needs them for backprop. Accumulation order matches
     /// the blocked kernel exactly (same [`simd::dot`] per unit, `f` summed

@@ -228,6 +228,28 @@ impl<K: Kernel> LaSvm<K> {
         self.with_snapshot(|snap| (snap.pts.clone(), snap.alpha.clone()))
     }
 
+    /// Install a scoring view received over the wire (`crate::net`):
+    /// replaces the live-SV snapshot with the given compacted points and
+    /// signed alphas — squared norms recomputed by the same
+    /// [`simd::sqnorm`] over the same bits the source's snapshot held, so
+    /// the blocked engine scores bit-identically to the source model —
+    /// and installs the bias. `n_support` (and with it `eval_ops`) track
+    /// the view, keeping the replica's cost accounting equal to the
+    /// source's. The expansion set is left untouched: a synced replica is
+    /// a *scoring* replica, and calling [`Learner::update`] on one would
+    /// rebuild the snapshot from the (stale) expansion set.
+    pub fn install_scoring_view(&mut self, pts: &[f32], alpha: &[f32], bias: f32) {
+        assert_eq!(pts.len(), alpha.len() * self.dim, "scoring view shape mismatch");
+        let snap = SvSnapshot {
+            pts: pts.to_vec(),
+            alpha: alpha.to_vec(),
+            sqnorms: pts.chunks_exact(self.dim).map(simd::sqnorm).collect(),
+        };
+        *self.snapshot.get_mut().expect("snapshot lock poisoned") = Some(snap);
+        self.bias = bias;
+        self.n_live_sv = alpha.len();
+    }
+
     /// Dual objective value (for invariant tests): W(a) = sum a_s y_s - 1/2 aᵀKa
     /// with signed alphas: sum_s alpha_s y_s ... using signed form
     /// W = sum_s alpha_s y_s - 1/2 sum_{s,t} alpha_s alpha_t K(s,t).

@@ -18,12 +18,15 @@
 
 mod common;
 
-use common::{assert_reports_identical, matrix_workers, mlp_run_sync, probe_bits, svm_run_sync};
+use common::{
+    assert_reports_identical, matrix_workers, mlp_run_sync, probe_bits, svm_run_distributed,
+    svm_run_sync,
+};
 use para_active::active::SifterSpec;
 use para_active::coordinator::backend::BackendChoice;
 use para_active::coordinator::sync::{run_sync, SyncConfig};
 use para_active::data::{StreamConfig, TestSet, DIM};
-use para_active::exec::ScorerPool;
+use para_active::exec::{ReplayConfig, ScorerPool};
 use para_active::learner::NativeScorer;
 use para_active::sim::NodeProfile;
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
@@ -148,6 +151,22 @@ fn scorer_pool_matches_shared_scorer_bit_for_bit() {
         let what = format!("scorer pool threads={threads} slots={slots}");
         assert_reports_identical(&reference, &run, &what);
         assert_eq!(ref_bits, bits, "{what}: final model scores");
+    }
+}
+
+#[test]
+fn distributed_inproc_joins_the_backend_cross() {
+    // The wire is just another backend: the same run dispatched to two
+    // node threads behind an InProcTransport (scoring replicas refreshed
+    // by delta sync) must sit in the exact equivalence class the serial,
+    // threaded, and pinned backends already share.
+    for k in [2usize, 8] {
+        let (serial, serial_bits) = svm_run_sync(k, 256, 1500, BackendChoice::Serial);
+        let (dist, dist_bits) = svm_run_distributed(k, 2, 256, 1500, ReplayConfig::default());
+        assert_eq!(dist.backend, "inproc");
+        assert_reports_identical(&serial, &dist, &format!("distributed svm k={k}"));
+        assert_eq!(serial_bits, dist_bits, "distributed svm k={k}: final model scores");
+        assert!(dist.net.sync_messages > 0, "k={k}: the wire must have been exercised");
     }
 }
 

@@ -7,12 +7,16 @@
 #![allow(dead_code)]
 
 use para_active::active::SifterSpec;
-use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::backend::{BackendChoice, SerialBackend};
 use para_active::coordinator::pipeline::run_pipelined;
 use para_active::coordinator::sync::{run_sync, SyncConfig, SyncReport};
 use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use para_active::exec::ReplayConfig;
 use para_active::learner::{Learner, NativeScorer};
+use para_active::net::{
+    config_fingerprint, run_distributed, serve_sift_node, Channel, InProcTransport,
+    MlpDenseCodec, SvmDeltaCodec, TaskKind,
+};
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
 
@@ -123,6 +127,121 @@ pub fn mlp_run(k: usize, choice: BackendChoice, replay: ReplayConfig) -> (SyncRe
     let sifter = SifterSpec::margin(0.0005, 11);
     let cfg = SyncConfig::new(k, 128, 96, 900).with_backend(choice).with_replay(replay);
     let report = run_sync(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer);
+    let bits = probe_bits(&mlp, &stream);
+    (report, bits)
+}
+
+/// Serve one remote SVM sift node on its own thread: a fresh scoring
+/// replica plus delta codec over any [`Channel`] (in-proc mpsc, unix
+/// socket, loopback tcp — the carrier is the test's choice).
+pub fn spawn_svm_node<C>(mut chan: C, fingerprint: u64) -> std::thread::JoinHandle<()>
+where
+    C: Channel + 'static,
+{
+    std::thread::spawn(move || {
+        let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+        serve_sift_node(
+            &mut chan,
+            &mut replica,
+            &mut codec,
+            &NativeScorer,
+            &SerialBackend,
+            &StreamConfig::svm_task(),
+            TaskKind::Svm,
+            fingerprint,
+        )
+        .expect("svm node serve loop");
+    })
+}
+
+/// The MLP twin of [`spawn_svm_node`].
+pub fn spawn_mlp_node<C>(mut chan: C, fingerprint: u64) -> std::thread::JoinHandle<()>
+where
+    C: Channel + 'static,
+{
+    std::thread::spawn(move || {
+        let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let mut codec = MlpDenseCodec::new();
+        serve_sift_node(
+            &mut chan,
+            &mut replica,
+            &mut codec,
+            &NativeScorer,
+            &SerialBackend,
+            &StreamConfig::nn_task(),
+            TaskKind::Nn,
+            fingerprint,
+        )
+        .expect("mlp node serve loop");
+    })
+}
+
+/// The distributed twin of [`svm_run`]: identical seeds and tuning, the
+/// k lanes spread over `procs` node threads behind an
+/// [`InProcTransport`]. Returns the coordinator's report plus the final
+/// model's probe bits.
+pub fn svm_run_distributed(
+    k: usize,
+    procs: usize,
+    batch: usize,
+    budget: usize,
+    replay: ReplayConfig,
+) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let mut codec = SvmDeltaCodec::new(DIM);
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(k, batch, 128, budget).with_replay(replay);
+    let fp = config_fingerprint(&[k as u64, batch as u64, budget as u64]);
+    let (mut hub, chans) = InProcTransport::pair(procs);
+    let handles: Vec<_> = chans.into_iter().map(|c| spawn_svm_node(c, fp)).collect();
+    let report = run_distributed(
+        &mut svm,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Svm,
+        fp,
+    )
+    .expect("distributed svm run");
+    for h in handles {
+        h.join().expect("svm node thread");
+    }
+    let bits = probe_bits(&svm, &stream);
+    (report, bits)
+}
+
+/// The distributed twin of [`mlp_run`].
+pub fn mlp_run_distributed(k: usize, procs: usize, replay: ReplayConfig) -> (SyncReport, Vec<u32>) {
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 60);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let mut codec = MlpDenseCodec::new();
+    let sifter = SifterSpec::margin(0.0005, 11);
+    let cfg = SyncConfig::new(k, 128, 96, 900).with_replay(replay);
+    let fp = config_fingerprint(&[2, k as u64, procs as u64]);
+    let (mut hub, chans) = InProcTransport::pair(procs);
+    let handles: Vec<_> = chans.into_iter().map(|c| spawn_mlp_node(c, fp)).collect();
+    let report = run_distributed(
+        &mut mlp,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Nn,
+        fp,
+    )
+    .expect("distributed mlp run");
+    for h in handles {
+        h.join().expect("mlp node thread");
+    }
     let bits = probe_bits(&mlp, &stream);
     (report, bits)
 }

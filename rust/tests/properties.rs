@@ -6,6 +6,7 @@ use para_active::active::iwal::{DelayedIwal, Hypotheses, C1, C2};
 use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter, SifterSpec};
 use para_active::data::{ExampleStream, StreamConfig, DIM};
 use para_active::learner::Learner;
+use para_active::net::{MlpDenseCodec, ModelCodec, SvmDeltaCodec, SyncMessage};
 use para_active::rng::Rng;
 use para_active::svm::{kernel::Kernel, lasvm::LaSvm, LaSvmConfig, RbfKernel};
 use para_active::theory::ThresholdClass;
@@ -256,6 +257,145 @@ fn prop_streams_are_valid_distributions() {
             }
             assert!(pos > 5 && pos < 35, "class balance off: {pos}/40");
         }
+    }
+}
+
+#[test]
+fn prop_svm_delta_codec_roundtrip_chain_and_fallback() {
+    // For random training trajectories, the SVM sync codec must satisfy,
+    // at every epoch: (a) apply installs the source's scoring view
+    // bit-for-bit; (b) re-applying an already-applied epoch is a no-op;
+    // (c) whenever a delta is chosen it is strictly cheaper than full
+    // state, and a full message costs exactly `last_full_bytes`;
+    // (d) the whole delta chain ends at the same state one fresh full
+    // snapshot would install.
+    for &seed in &SEEDS[..4] {
+        let mut rng = Rng::new(seed);
+        let dim = 6;
+        let mut model = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
+        let mut replica = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
+        let mut enc = SvmDeltaCodec::new(dim);
+        let mut dec = SvmDeltaCodec::new(dim);
+        let probes: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..dim).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect();
+        let bits = |l: &LaSvm<RbfKernel>| -> Vec<u32> {
+            probes.iter().map(|p| l.score(p).to_bits()).collect()
+        };
+
+        let mut deltas_seen = 0;
+        let mut fulls_seen = 0;
+        for epoch in 1..=25u64 {
+            // A random burst of updates — sometimes none, so the codec
+            // also faces a completely unchanged model.
+            for _ in 0..rng.below(8) {
+                let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
+                let x: Vec<f32> = (0..dim)
+                    .map(|i| (y as f64 * ((i == 0) as i32 as f64) + 0.5 * rng.normal()) as f32)
+                    .collect();
+                model.update(&x, y, (0.5 + rng.next_f64()) as f32);
+            }
+            let msg = enc.encode(epoch, &model);
+            if msg.full {
+                fulls_seen += 1;
+                assert_eq!(
+                    msg.payload.len() as u64,
+                    enc.last_full_bytes(),
+                    "seed {seed} epoch {epoch}: full payload size"
+                );
+            } else {
+                deltas_seen += 1;
+                assert!(
+                    (msg.payload.len() as u64) < enc.last_full_bytes(),
+                    "seed {seed} epoch {epoch}: a chosen delta must beat full state \
+                     ({} >= {})",
+                    msg.payload.len(),
+                    enc.last_full_bytes()
+                );
+            }
+            dec.apply(&mut replica, &msg).unwrap();
+            assert_eq!(bits(&model), bits(&replica), "seed {seed} epoch {epoch}: round trip");
+            assert_eq!(model.bias().to_bits(), replica.bias().to_bits());
+            // Idempotency: the same epoch again changes nothing.
+            dec.apply(&mut replica, &msg).unwrap();
+            assert_eq!(bits(&model), bits(&replica), "seed {seed} epoch {epoch}: re-apply");
+        }
+        assert!(fulls_seen >= 1, "seed {seed}: the first sync must be full");
+        assert!(deltas_seen > 0, "seed {seed}: no delta was ever chosen");
+
+        // (d) the delta chain converged to exactly what a single fresh
+        // full snapshot of the final model installs.
+        let mut enc2 = SvmDeltaCodec::new(dim);
+        let mut dec2 = SvmDeltaCodec::new(dim);
+        let mut fresh = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
+        let snap = enc2.encode(1, &model);
+        assert!(snap.full, "a fresh encoder has no slot table to delta against");
+        dec2.apply(&mut fresh, &snap).unwrap();
+        assert_eq!(bits(&fresh), bits(&replica), "seed {seed}: delta chain vs full snapshot");
+
+        // Epoch safety: a gapped delta is rejected, a gapped full message
+        // is accepted (full state is self-contained).
+        let last = enc.encode(26, &model);
+        let mut gapped = last.clone();
+        gapped.epoch = 40;
+        if !gapped.full {
+            assert!(dec.apply(&mut replica, &gapped).is_err(), "seed {seed}: gap accepted");
+        }
+        let full_snap = SyncMessage { epoch: 50, ..snap };
+        dec.apply(&mut replica, &full_snap).unwrap();
+        assert_eq!(bits(&model), bits(&replica), "seed {seed}: forward full accepted");
+    }
+}
+
+#[test]
+fn prop_mlp_codec_roundtrip_and_fallback() {
+    // The MLP codec under random update bursts: full fallback whenever
+    // AdaGrad churns the dense state, cheap deltas when nothing (or
+    // little) changed, bit-exact installs either way — even onto a
+    // replica that started from a different random init.
+    use para_active::nn::{AdaGradMlp, MlpConfig};
+    for &seed in &SEEDS[..3] {
+        let mut rng = Rng::new(seed ^ 0x3117);
+        let mut cfg = MlpConfig::paper(8);
+        cfg.hidden = 5;
+        cfg.seed = seed;
+        let mut model = AdaGradMlp::new(cfg.clone());
+        cfg.seed = seed ^ 0xFFFF; // deliberately different init
+        let mut replica = AdaGradMlp::new(cfg);
+        let mut enc = MlpDenseCodec::new();
+        let mut dec = MlpDenseCodec::new();
+        let probes: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..8).map(|_| rng.next_f32()).collect())
+            .collect();
+        let bits = |l: &AdaGradMlp| -> Vec<u32> {
+            probes.iter().map(|p| l.score(p).to_bits()).collect()
+        };
+
+        let mut deltas_seen = 0;
+        let mut fulls_seen = 0;
+        for epoch in 1..=12u64 {
+            for _ in 0..rng.below(3) {
+                let x: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
+                let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
+                model.update(&x, y, 1.0);
+            }
+            let msg = enc.encode(epoch, &model);
+            if msg.full {
+                fulls_seen += 1;
+                assert_eq!(msg.payload.len() as u64, enc.last_full_bytes());
+            } else {
+                deltas_seen += 1;
+                assert!((msg.payload.len() as u64) < enc.last_full_bytes());
+            }
+            dec.apply(&mut replica, &msg).unwrap();
+            assert_eq!(bits(&model), bits(&replica), "seed {seed} epoch {epoch}: round trip");
+            dec.apply(&mut replica, &msg).unwrap();
+            assert_eq!(bits(&model), bits(&replica), "seed {seed} epoch {epoch}: re-apply");
+        }
+        // The first sync is always full, and the zero-update epochs must
+        // have produced at least one (empty) delta.
+        assert!(fulls_seen >= 1, "seed {seed}: no full sync");
+        assert!(deltas_seen >= 1, "seed {seed}: no delta sync");
     }
 }
 

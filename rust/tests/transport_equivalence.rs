@@ -1,0 +1,272 @@
+//! The distribution contract: moving the sift phase onto remote node
+//! processes behind a [`Transport`] is **bit-identical** to the
+//! in-process coordinator loops — same queries, same broadcast order,
+//! same curve, same final model bits — for any lane count, any process
+//! count, and both supported staleness schedules:
+//!
+//! * `stale = 0` (strict): nodes sift with last round's fully-updated
+//!   model, mirroring `coordinator::sync::run_rounds`'s direct path;
+//! * `stale = 1` (overlapped): the wire snapshot is encoded before the
+//!   pending replay flushes, so nodes sift round t with the model of
+//!   round t−2 — exactly `ReplayConfig::stale(·, 1)`, and therefore
+//!   exactly the pipelined loop too (`pipeline ≡ stale(·, 1)` is already
+//!   proven by `pipeline_equivalence.rs`; here the wire joins that
+//!   equivalence class).
+//!
+//! The carrier must not matter either: a unix-domain-socket run
+//! reproduces the in-proc mpsc run bit for bit. Only wall-clock and wire
+//! telemetry may differ between carriers.
+//!
+//! [`Transport`]: para_active::net::Transport
+
+mod common;
+
+use std::time::Duration;
+
+use common::{
+    assert_reports_identical, mlp_run, mlp_run_distributed, probe_bits, svm_run,
+    svm_run_distributed, svm_run_pipelined,
+};
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::{BackendChoice, SerialBackend};
+use para_active::coordinator::sync::SyncConfig;
+use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::exec::ReplayConfig;
+use para_active::learner::NativeScorer;
+use para_active::net::{
+    config_fingerprint, run_distributed, serve_sift_node, InProcTransport, SvmDeltaCodec,
+    TaskKind, UdsTransport,
+};
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+
+#[test]
+fn two_node_inproc_is_bit_identical_strict() {
+    // stale = 0: the wire schedule mirrors the strict in-process loop.
+    let (reference, ref_bits) =
+        svm_run(2, 256, 1500, BackendChoice::Serial, ReplayConfig::default());
+    for procs in [1usize, 2] {
+        let (run, bits) = svm_run_distributed(2, procs, 256, 1500, ReplayConfig::default());
+        let what = format!("distributed strict procs={procs}");
+        assert_eq!(run.backend, "inproc");
+        assert!(!run.pipelined);
+        assert_reports_identical(&reference, &run, &what);
+        assert_eq!(ref_bits, bits, "{what}: final model bits");
+    }
+}
+
+#[test]
+fn two_node_inproc_is_bit_identical_under_stale_one() {
+    // The ISSUE acceptance row: a 2-node distributed run under
+    // ReplayConfig::stale(·, 1) equals both the sequential stale run and
+    // the pipelined run on the same seeds.
+    let serial = BackendChoice::Serial;
+    let (stale_ref, stale_bits) = svm_run(2, 256, 1500, serial, ReplayConfig::stale(7, 1));
+    let (piped_ref, piped_bits) =
+        svm_run_pipelined(2, 256, 1500, serial, ReplayConfig::synchronous(7));
+    let (dist, dist_bits) = svm_run_distributed(2, 2, 256, 1500, ReplayConfig::stale(7, 1));
+
+    assert!(dist.pipelined, "stale=1 distributed runs overlap the replay");
+    assert_reports_identical(&stale_ref, &dist, "distributed ≡ stale(·,1)");
+    assert_reports_identical(&piped_ref, &dist, "distributed ≡ pipelined");
+    assert_eq!(stale_bits, dist_bits, "final model bits vs stale reference");
+    assert_eq!(piped_bits, dist_bits, "final model bits vs pipelined reference");
+}
+
+#[test]
+fn four_node_runs_match_on_both_schedules() {
+    let serial = BackendChoice::Serial;
+    let (strict_ref, strict_bits) = svm_run(4, 256, 1400, serial, ReplayConfig::default());
+    let (run, bits) = svm_run_distributed(4, 4, 256, 1400, ReplayConfig::default());
+    assert_reports_identical(&strict_ref, &run, "4-node strict");
+    assert_eq!(strict_bits, bits, "4-node strict: final model bits");
+
+    let (stale_ref, stale_bits) = svm_run(4, 256, 1400, serial, ReplayConfig::stale(16, 1));
+    let (run, bits) = svm_run_distributed(4, 4, 256, 1400, ReplayConfig::stale(16, 1));
+    assert_reports_identical(&stale_ref, &run, "4-node stale=1");
+    assert_eq!(stale_bits, bits, "4-node stale=1: final model bits");
+}
+
+#[test]
+fn process_count_never_changes_results() {
+    // k = 4 lanes over 1, 2, or 4 node processes: the lane → process
+    // placement is pure scheduling, so statistics cannot move. Only the
+    // wire telemetry scales with the process count (every sync is sent
+    // to every process).
+    let (reference, ref_bits) = svm_run_distributed(4, 1, 240, 1200, ReplayConfig::default());
+    let mut prev_sync_bytes = reference.net.sync_bytes;
+    for procs in [2usize, 4] {
+        let (run, bits) = svm_run_distributed(4, procs, 240, 1200, ReplayConfig::default());
+        let what = format!("procs={procs}");
+        assert_reports_identical(&reference, &run, &what);
+        assert_eq!(ref_bits, bits, "{what}: final model bits");
+        assert!(
+            run.net.sync_bytes > prev_sync_bytes,
+            "{what}: more processes must cost more sync bytes \
+             ({} !> {prev_sync_bytes})",
+            run.net.sync_bytes
+        );
+        prev_sync_bytes = run.net.sync_bytes;
+    }
+}
+
+#[test]
+fn mlp_distributed_matches_in_process() {
+    // The MLP twin: dense weight sync through MlpDenseCodec, both
+    // schedules. AdaGrad is order-sensitive, so any replay or broadcast
+    // reordering shows up immediately in the probe bits.
+    let serial = BackendChoice::Serial;
+    let (strict_ref, strict_bits) = mlp_run(4, serial, ReplayConfig::default());
+    let (run, bits) = mlp_run_distributed(4, 2, ReplayConfig::default());
+    assert_reports_identical(&strict_ref, &run, "mlp strict");
+    assert_eq!(strict_bits, bits, "mlp strict: final model bits");
+
+    let (stale_ref, stale_bits) = mlp_run(4, serial, ReplayConfig::stale(7, 1));
+    let (run, bits) = mlp_run_distributed(4, 2, ReplayConfig::stale(7, 1));
+    assert_reports_identical(&stale_ref, &run, "mlp stale=1");
+    assert_eq!(stale_bits, bits, "mlp stale=1: final model bits");
+}
+
+#[test]
+fn delta_sync_beats_full_state_on_the_growing_svm() {
+    // The codec's reason to exist: LASVM's support set accrues mostly
+    // monotonically, so per-round deltas (new SVs + changed alphas) must
+    // ship far fewer bytes than re-sending the full support set every
+    // round. The first sync is necessarily full.
+    let (run, _) = svm_run_distributed(2, 2, 256, 1500, ReplayConfig::default());
+    assert!(run.net.sync_messages > 0, "no syncs recorded");
+    assert_eq!(run.net.full_syncs + run.net.delta_syncs, run.net.sync_messages);
+    assert!(run.net.full_syncs >= 2, "the first sync to each process is full");
+    assert!(run.net.delta_syncs > run.net.full_syncs, "deltas must dominate");
+    assert!(
+        run.net.sync_bytes < run.net.full_equiv_bytes,
+        "delta sync shipped {} bytes but full state every round would be {}",
+        run.net.sync_bytes,
+        run.net.full_equiv_bytes
+    );
+    assert!(
+        run.net.delta_ratio() < 0.9,
+        "expected a clear wire saving, got ratio {}",
+        run.net.delta_ratio()
+    );
+}
+
+#[test]
+fn uds_transport_reproduces_the_inproc_run() {
+    // Same run, different carrier: two node threads behind real unix
+    // sockets must reproduce the in-proc mpsc run bit for bit; only the
+    // carrier name and the measured wall-clock may differ.
+    let (inproc, inproc_bits) = svm_run_distributed(2, 2, 200, 900, ReplayConfig::default());
+
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(2, 200, 128, 900);
+    let fp = config_fingerprint(&[0xad5, 2, 200, 900]);
+    let sock = std::env::temp_dir()
+        .join(format!("para_active_transport_eq_{}.sock", std::process::id()));
+
+    // Node threads connect first — UdsTransport::connect retries until
+    // the coordinator binds — so the accept loop below cannot deadlock.
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let path = sock.clone();
+            std::thread::spawn(move || {
+                let mut chan =
+                    UdsTransport::connect(&path, Duration::from_secs(20)).expect("node connect");
+                let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+                let mut codec = SvmDeltaCodec::new(DIM);
+                serve_sift_node(
+                    &mut chan,
+                    &mut replica,
+                    &mut codec,
+                    &NativeScorer,
+                    &SerialBackend,
+                    &StreamConfig::svm_task(),
+                    TaskKind::Svm,
+                    fp,
+                )
+                .expect("uds node serve loop");
+            })
+        })
+        .collect();
+    let mut hub = UdsTransport::listen(&sock, 2).expect("coordinator listen");
+
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let mut codec = SvmDeltaCodec::new(DIM);
+    let run = run_distributed(
+        &mut svm,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Svm,
+        fp,
+    )
+    .expect("uds distributed run");
+    for h in handles {
+        h.join().expect("uds node thread");
+    }
+
+    assert_eq!(run.backend, "uds");
+    assert_reports_identical(&inproc, &run, "uds vs inproc");
+    assert_eq!(inproc_bits, probe_bits(&svm, &stream), "uds: final model bits");
+    // Identical syncs were shipped — the byte accounting cannot depend
+    // on the carrier.
+    assert_eq!(inproc.net, run.net, "wire telemetry must match across carriers");
+}
+
+#[test]
+fn handshake_rejects_a_mismatched_node_config() {
+    // A node launched with different flags must fail the fingerprint
+    // handshake instead of silently diverging; the coordinator then sees
+    // the connection drop.
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 20);
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(2, 100, 50, 400);
+    let (mut hub, chans) = InProcTransport::pair(1);
+
+    let handles: Vec<_> = chans
+        .into_iter()
+        .map(|mut chan| {
+            let stream_cfg = stream.clone();
+            std::thread::spawn(move || {
+                let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+                let mut codec = SvmDeltaCodec::new(DIM);
+                let err = serve_sift_node(
+                    &mut chan,
+                    &mut replica,
+                    &mut codec,
+                    &NativeScorer,
+                    &SerialBackend,
+                    &stream_cfg,
+                    TaskKind::Svm,
+                    0xdead, // launched with the wrong config
+                )
+                .expect_err("mismatched fingerprint must be rejected");
+                assert!(err.to_string().contains("fingerprint"), "{err}");
+            })
+        })
+        .collect();
+
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let mut codec = SvmDeltaCodec::new(DIM);
+    let err = run_distributed(
+        &mut svm,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Svm,
+        0xbeef,
+    )
+    .expect_err("coordinator must notice the dead node");
+    let _ = err; // exact wording depends on which side closes first
+    for h in handles {
+        h.join().expect("node thread");
+    }
+}
