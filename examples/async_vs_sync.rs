@@ -87,7 +87,8 @@ fn main() {
         &stream,
         &test,
         &lc,
-    );
+    )
+    .expect("live run failed");
     println!(
         "nodes={k} seen={} queried={} wall={:.2}s err={:.4} replicas_agree={}",
         live.n_seen, live.n_queried, live.wall_seconds, live.test_error, live.replicas_agree

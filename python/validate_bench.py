@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate BENCH_sift.json against its schema (version 4).
+"""Validate BENCH_sift.json against its schema (version 5).
 
 Gating in CI: the *shape* of the bench output is a contract — downstream
 tooling (and the eventual minimum-speedup gate) reads these fields, so a
@@ -13,7 +13,7 @@ Stdlib only. Usage: python3 python/validate_bench.py [path/to/BENCH_sift.json]
 import json
 import sys
 
-SCHEMA = 4
+SCHEMA = 5
 
 ERRORS = []
 
@@ -125,6 +125,21 @@ def main():
         "delta_ratio": lambda v: is_num(v) and 0.0 < v <= 1.5,
     })
 
+    # Serving-layer telemetry from a short LearnSession run: p50/p99
+    # per-chunk sift latency and sustained throughput (schema 5).
+    check_row("live", doc.get("live", None), {
+        "p50_ms": positive,
+        "p99_ms": positive,
+        "rows_per_s": positive,
+        "chunks": lambda v: isinstance(v, int) and v >= 1,
+        "rows_sifted": count,
+    })
+    live = doc.get("live")
+    if isinstance(live, dict):
+        p50, p99 = live.get("p50_ms"), live.get("p99_ms")
+        if is_num(p50) and is_num(p99) and p99 < p50:
+            fail(f"live: p99_ms ({p99}) must be >= p50_ms ({p50})")
+
     # Internal consistency of the wire telemetry (structure, not speed).
     for i, row in enumerate(doc.get("net") or []):
         if not isinstance(row, dict):
@@ -134,7 +149,7 @@ def main():
             fail(f"net[{i}]: delta_syncs + full_syncs != sync_messages ({d}+{f} != {m})")
 
     for extra in set(doc) - {"bench", "schema", "cores", "shard", "paths",
-                             "sweep", "update", "pipeline", "net"}:
+                             "sweep", "update", "pipeline", "net", "live"}:
         fail(f"unknown top-level key {extra!r}")
 
     if ERRORS:

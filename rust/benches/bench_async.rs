@@ -60,7 +60,8 @@ fn main() {
         &stream,
         &test,
         &lc,
-    );
+    )
+    .expect("live run failed");
     println!(
         "live: {} examples in {:.2}s wall ({:.0} ex/s), queried {}, agree={}",
         live.n_seen,

@@ -25,8 +25,14 @@
 //! and the end-to-end round time of a full threaded-backend NN run,
 //! strictly-sequenced loop vs the pipelined coordinator
 //! (`coordinator::pipeline`, sift overlapped with replay). Results are
-//! written to `BENCH_sift.json` (schema 3) so the perf trajectory is
+//! written to `BENCH_sift.json` (schema 5) so the perf trajectory is
 //! machine-readable across PRs.
+//!
+//! The **live** section runs a short serving-layer session
+//! ([`para_active::serve::LearnSession`], the daemon's core loop) and
+//! reports its built-in telemetry: p50/p99 per-chunk sift latency and
+//! sustained rows/s — the numbers an operator would watch on a running
+//! daemon.
 
 use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::benchlib::{bench, bench_throughput, black_box};
@@ -43,6 +49,7 @@ use para_active::net::{
     NetStats, SvmDeltaCodec, TaskKind,
 };
 use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::serve::{svm_session_learner, LearnSession, SessionConfig};
 use para_active::sim::Stopwatch;
 use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
 
@@ -203,6 +210,39 @@ struct NetRow {
     stats: NetStats,
 }
 
+/// Serving-layer live telemetry from a short [`LearnSession`] run.
+struct LiveRow {
+    p50_ms: f64,
+    p99_ms: f64,
+    rows_per_s: f64,
+    chunks: usize,
+    rows_sifted: u64,
+}
+
+/// Run the daemon's core loop for a few segments and read back the same
+/// telemetry a `learn` / `serve` operator sees (and that a checkpoint
+/// preserves across restarts).
+fn measure_live() -> LiveRow {
+    let mut cfg = SessionConfig::new(TaskKind::Svm);
+    cfg.nodes = 4;
+    cfg.chunk = 256;
+    cfg.warmstart = 200;
+    cfg.segments = 6;
+    cfg.test_size = 40;
+    let mut session = LearnSession::create(cfg, &svm_session_learner());
+    while !session.is_complete() {
+        black_box(session.run_segment());
+    }
+    let t = session.telemetry();
+    LiveRow {
+        p50_ms: t.p50_ms(),
+        p99_ms: t.p99_ms(),
+        rows_per_s: t.rows_per_sec(),
+        chunks: t.samples(),
+        rows_sifted: t.rows_sifted(),
+    }
+}
+
 /// One small distributed run over an in-proc wire, to measure what the
 /// model sync actually ships. The SVM's growing support set is the
 /// delta codec's favorable case; the MLP's dense AdaGrad state is its
@@ -324,10 +364,11 @@ fn write_json(
     updates: &[UpdateRow],
     pipe: &PipelineRow,
     nets: &[NetRow],
+    live: &LiveRow,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 4,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 5,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -400,7 +441,12 @@ fn write_json(
             comma
         ));
     }
-    body.push_str("  ]\n");
+    body.push_str("  ],\n");
+    body.push_str(&format!(
+        "  \"live\": {{\"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"rows_per_s\": {:.1}, \
+         \"chunks\": {}, \"rows_sifted\": {}}}\n",
+        live.p50_ms, live.p99_ms, live.rows_per_s, live.chunks, live.rows_sifted,
+    ));
     body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
         Ok(()) => println!("\nwrote BENCH_sift.json"),
@@ -658,5 +704,14 @@ fn main() {
         );
     }
 
-    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets);
+    // --- Live serving telemetry: the daemon's own latency/throughput. ---
+    println!("\n# live serving telemetry (LearnSession, 4 nodes x 6 segments, chunk 256)");
+    let live = measure_live();
+    println!(
+        "      sift latency p50 {:.3} ms, p99 {:.3} ms; sustained {:.0} rows/s \
+         over {} chunks ({} rows)",
+        live.p50_ms, live.p99_ms, live.rows_per_s, live.chunks, live.rows_sifted
+    );
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live);
 }

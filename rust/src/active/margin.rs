@@ -32,6 +32,18 @@ impl MarginSifter {
         let z = self.eta * score.abs() as f64 * (n_seen as f64).sqrt();
         2.0 / (1.0 + z.exp())
     }
+
+    /// Raw coin-flip RNG state, for checkpointing a live sifter.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rebuild a sifter mid-sequence from a checkpointed
+    /// [`MarginSifter::rng_state`].
+    pub fn from_state(eta: f64, state: [u64; 4]) -> Self {
+        assert!(eta >= 0.0);
+        MarginSifter { eta, rng: Rng::from_state(state) }
+    }
 }
 
 impl Sifter for MarginSifter {

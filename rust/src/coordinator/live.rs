@@ -3,11 +3,32 @@
 //! Each node owns its model replica, its local stream (Q_F), and an mpsc
 //! receiver (Q_S). A dedicated **sequencer** thread implements the ordered
 //! broadcast of Figure 1: it receives selected examples from all nodes
-//! over a single mpsc channel (which serializes them into one global
-//! order) and forwards each to every node's Q_S in that order. The node
-//! loop follows the paper's priority rule: drain Q_S completely, then sift
-//! one fresh example and publish it (with its query probability) if
-//! selected.
+//! over a single channel (which serializes them into one global order) and
+//! forwards each to every node's Q_S in that order. The node loop follows
+//! the paper's priority rule: drain Q_S completely, then sift one fresh
+//! example and publish it (with its query probability) if selected.
+//!
+//! **Bounded queues.** The uplink and every per-node downlink are
+//! [`std::sync::mpsc::sync_channel`]s of capacity [`LiveConfig::queue_cap`]
+//! — a run's memory footprint no longer grows with how far the fastest
+//! node outpaces the slowest. The ring stays deadlock-free by
+//! construction: nodes never block on a send. A publisher that finds the
+//! uplink full falls back to draining its *own* Q_S (which is exactly what
+//! un-wedges a sequencer blocked on that node's downlink) and retries;
+//! each such backpressure event is counted in
+//! [`LiveReport::uplink_stalls`]. The sequencer is the only blocking
+//! sender, and every node it can block on is guaranteed to drain. The
+//! serve daemon ([`crate::serve`]) layers *admission control* on the same
+//! primitive: work arriving at a full daemon queue is shed with a typed
+//! error instead of queued unboundedly.
+//!
+//! **Teardown.** Node jobs run under `catch_unwind`, with their channel
+//! endpoints owned by the unwind scope: a panicking node drops its uplink
+//! sender and downlink receiver, so the sequencer still terminates (all
+//! senders gone), surviving nodes still finish their drain loop (the
+//! sequencer eventually drops their downlink senders), and [`run_live`]
+//! returns a clean error naming the dead node instead of propagating the
+//! panic through the pool barrier.
 //!
 //! Since the execution pool landed, node loops are hosted on the same
 //! [`WorkerPool`](crate::exec::WorkerPool) abstraction the synchronous
@@ -15,9 +36,7 @@
 //! node i lives on worker i for the whole run (`i % workers` with
 //! `workers == k`). That gives live runs deterministic thread placement —
 //! the property the straggler experiments rely on — plus the pool's
-//! [`PoolStats`] accounting for free. The pool's completion barrier
-//! replaces the seed's hand-rolled join loop, and results come back in
-//! node order.
+//! [`PoolStats`] accounting for free.
 //!
 //! The deterministic event-driven variant lives in [`super::async_sim`];
 //! this module is the "it actually runs" counterpart used by the
@@ -37,7 +56,8 @@ use crate::active::Sifter;
 use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use crate::exec::{Job, PoolConfig, PoolStats, WorkerPool};
 use crate::learner::Learner;
-use std::sync::mpsc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -47,7 +67,7 @@ pub struct LiveMsg {
     pub x: Arc<Vec<f32>>,
     pub y: f32,
     pub p: f64,
-    /// Publishing node (diagnostics).
+    /// Publishing node (diagnostics, and the Eq-5 evidence counter).
     pub from: usize,
 }
 
@@ -59,12 +79,39 @@ pub struct LiveConfig {
     pub per_node: usize,
     /// Warmstart examples (trained once, replica cloned to every node).
     pub warmstart: usize,
+    /// Capacity of the bounded uplink and each per-node downlink.
+    pub queue_cap: usize,
 }
 
 impl LiveConfig {
+    /// Default bounded-queue capacity. Large enough that backpressure is
+    /// rare in balanced runs, small enough that a straggler cannot make
+    /// the broadcast backlog grow without bound.
+    pub const DEFAULT_QUEUE_CAP: usize = 64;
+
     pub fn new(nodes: usize, per_node: usize, warmstart: usize) -> Self {
-        LiveConfig { nodes, per_node, warmstart }
+        LiveConfig { nodes, per_node, warmstart, queue_cap: Self::DEFAULT_QUEUE_CAP }
     }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// First replica disagreement found by the probe sweep: which node, on
+/// which probe point, by how much, against what tolerance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveDivergence {
+    /// Disagreeing node (node 0 is the reference replica).
+    pub node: usize,
+    /// Probe index (0..8) within the dedicated probe stream.
+    pub probe: usize,
+    /// `score_node - score_node0` on that probe.
+    pub delta: f32,
+    /// The scale-aware tolerance the delta exceeded.
+    pub tolerance: f32,
 }
 
 /// Result of a live run.
@@ -74,19 +121,59 @@ pub struct LiveReport {
     pub n_queried: u64,
     pub wall_seconds: f64,
     pub replicas_agree: bool,
+    /// First probe disagreement, if any (`replicas_agree` is false iff
+    /// this is `Some` or the applied-update counts differ).
+    pub divergence: Option<LiveDivergence>,
+    /// Backpressure events: times a publisher found the bounded uplink
+    /// full and fell back to draining its own Q_S. Messages are never
+    /// lost — this counts stalls, not sheds.
+    pub uplink_stalls: u64,
     pub test_error: f64,
     /// Counters of the pinned node pool (workers == nodes).
     pub pool: PoolStats,
 }
 
-/// Run Algorithm 2 on a pinned `nodes`-worker pool plus a sequencer thread.
+/// The paper's Eq-5 count `n` as observed by a live node: warmstart
+/// examples, plus the node's own stream position (including the example
+/// being sifted), plus broadcast updates applied from *other* nodes.
+///
+/// The synchronous coordinator uses the exact cluster-wide count — its
+/// phases are barriered, so `n_seen` is global truth. An asynchronous
+/// node cannot know that count: unqueried examples on other nodes produce
+/// no message at all. So a live node counts every example it has direct
+/// evidence of. This is a lower bound on the true cluster count; it
+/// reduces exactly to the historical local count (`warm + i + 1`) when
+/// `k == 1`, and for `k > 1` it grows with incoming broadcasts instead of
+/// ignoring them — the seed's purely local counter made a 10-node cluster
+/// sift as aggressively as a single node, over-querying relative to
+/// Algorithm 1's shared counter.
+#[inline]
+pub(crate) fn eq5_live_count(warm_n: u64, local_pos: u64, applied_other: u64) -> u64 {
+    warm_n + local_pos + applied_other
+}
+
+/// Render a `catch_unwind` payload as a message (panics carry `&str` or
+/// `String` in practice).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run Algorithm 2 on a pinned `nodes`-worker pool plus a sequencer
+/// thread. Returns an error (after clean teardown of the sequencer and
+/// the surviving nodes) if any node job panics.
 pub fn run_live<L, S, F>(
     proto: &L,
     mut make_sifter: F,
     stream_cfg: &StreamConfig,
     test: &TestSet,
     cfg: &LiveConfig,
-) -> LiveReport
+) -> anyhow::Result<LiveReport>
 where
     L: Learner + Clone + Send + 'static,
     S: Sifter + Send + 'static,
@@ -108,24 +195,28 @@ where
 
     let started = Instant::now();
 
-    // Node -> sequencer uplink (mpsc serializes the global order).
-    let (up_tx, up_rx) = mpsc::channel::<LiveMsg>();
-    // Sequencer -> node downlinks (per-node Q_S).
+    // Node -> sequencer uplink (bounded; serializes the global order).
+    let (up_tx, up_rx) = mpsc::sync_channel::<LiveMsg>(cfg.queue_cap);
+    // Sequencer -> node downlinks (bounded per-node Q_S).
     let mut down_txs = Vec::with_capacity(k);
     let mut down_rxs = Vec::with_capacity(k);
     for _ in 0..k {
-        let (tx, rx) = mpsc::channel::<LiveMsg>();
+        let (tx, rx) = mpsc::sync_channel::<LiveMsg>(cfg.queue_cap);
         down_txs.push(tx);
         down_rxs.push(rx);
     }
 
     // Sequencer: forward every uplink message to every node, in one order.
+    // The blocking `send` is the backpressure point of the whole ring; it
+    // cannot deadlock because a node whose downlink is full is always
+    // draining it — either in its priority-1 loop or inside its own
+    // publish retry loop.
     let sequencer = std::thread::spawn(move || {
         let mut total: u64 = 0;
         while let Ok(msg) = up_rx.recv() {
             total += 1;
             for tx in &down_txs {
-                // A node that already finished may have dropped its rx.
+                // A node that died or finished may have dropped its rx.
                 let _ = tx.send(msg.clone());
             }
         }
@@ -134,45 +225,91 @@ where
 
     // One long-running job per node; pinned dispatch puts node i on worker
     // i, so the pool is exactly the paper's one-thread-per-node layout.
-    let mut jobs: Vec<Job<'static, (L, u64)>> = Vec::with_capacity(k);
+    // Each job catches its own panics, with every channel endpoint moved
+    // into the unwind scope so a dying node releases the ring.
+    type NodeOutcome<L> = Result<(L, u64, u64), String>;
+    let mut jobs: Vec<Job<'static, NodeOutcome<L>>> = Vec::with_capacity(k);
     for (node, down_rx) in down_rxs.into_iter().enumerate() {
         let up = up_tx.clone();
-        let mut learner = warm.clone();
-        let mut sifter = make_sifter(node);
-        let mut stream = ExampleStream::for_node(stream_cfg, node as u32);
+        let learner = warm.clone();
+        let sifter = make_sifter(node);
+        let stream = ExampleStream::for_node(stream_cfg, node as u32);
         let per_node = cfg.per_node;
         let warm_n = cfg.warmstart as u64;
         jobs.push(Box::new(move |_worker| {
-            let mut x = vec![0.0f32; DIM];
-            let mut applied: u64 = 0;
-            for i in 0..per_node {
-                // Priority 1: drain Q_S.
-                while let Ok(msg) = down_rx.try_recv() {
+            catch_unwind(AssertUnwindSafe(move || {
+                let (mut learner, mut sifter, mut stream) = (learner, sifter, stream);
+                let mut x = vec![0.0f32; DIM];
+                let mut applied: u64 = 0;
+                // Broadcasts applied from *other* nodes — the cluster
+                // evidence term of `eq5_live_count`.
+                let mut applied_other: u64 = 0;
+                let mut stalls: u64 = 0;
+                for i in 0..per_node {
+                    // Priority 1: drain Q_S.
+                    while let Ok(msg) = down_rx.try_recv() {
+                        if msg.from != node {
+                            applied_other += 1;
+                        }
+                        learner.update(&msg.x, msg.y, (1.0 / msg.p) as f32);
+                        applied += 1;
+                    }
+                    // Priority 2: sift one fresh example from Q_F.
+                    let y = stream.next_into(&mut x);
+                    let score = learner.score(&x);
+                    let n = eq5_live_count(warm_n, i as u64 + 1, applied_other);
+                    let d = sifter.decide(score, n);
+                    if d.queried {
+                        let mut msg =
+                            LiveMsg { x: Arc::new(x.clone()), y, p: d.p, from: node };
+                        let mut stalled = false;
+                        loop {
+                            match up.try_send(msg) {
+                                Ok(()) => break,
+                                Err(TrySendError::Full(m)) => {
+                                    if !stalled {
+                                        stalled = true;
+                                        stalls += 1;
+                                    }
+                                    // Backpressure: make progress on our
+                                    // own Q_S instead of blocking — the
+                                    // sequencer may be waiting on *our*
+                                    // downlink right now.
+                                    match down_rx.try_recv() {
+                                        Ok(m2) => {
+                                            if m2.from != node {
+                                                applied_other += 1;
+                                            }
+                                            learner.update(
+                                                &m2.x,
+                                                m2.y,
+                                                (1.0 / m2.p) as f32,
+                                            );
+                                            applied += 1;
+                                        }
+                                        Err(_) => std::thread::yield_now(),
+                                    }
+                                    msg = m;
+                                }
+                                // Sequencer gone: only happens on teardown
+                                // after a fault; drop the message and let
+                                // the error surface from the dead node.
+                                Err(TrySendError::Disconnected(_)) => break,
+                            }
+                        }
+                    }
+                }
+                // Done sifting: close our uplink, then drain Q_S to
+                // completion (the sequencer exits once every uplink
+                // sender is dropped, then drops the downlink senders).
+                drop(up);
+                while let Ok(msg) = down_rx.recv() {
                     learner.update(&msg.x, msg.y, (1.0 / msg.p) as f32);
                     applied += 1;
                 }
-                // Priority 2: sift one fresh example from Q_F.
-                let y = stream.next_into(&mut x);
-                let score = learner.score(&x);
-                // n for Eq (5): warmstart + this node's local stream position.
-                let d = sifter.decide(score, warm_n + i as u64 + 1);
-                if d.queried {
-                    let _ = up.send(LiveMsg {
-                        x: Arc::new(x.clone()),
-                        y,
-                        p: d.p,
-                        from: node,
-                    });
-                }
-            }
-            // Done sifting: close our uplink, then drain Q_S to completion
-            // (the sequencer exits once every uplink sender is dropped).
-            drop(up);
-            while let Ok(msg) = down_rx.recv() {
-                learner.update(&msg.x, msg.y, (1.0 / msg.p) as f32);
-                applied += 1;
-            }
-            (learner, applied)
+                (learner, applied, stalls)
+            }))
+            .map_err(|payload| panic_message(payload.as_ref()))
         }));
     }
     drop(up_tx);
@@ -183,41 +320,66 @@ where
         let results = pool.run_round(jobs);
         (results, pool.stats())
     });
-    let n_broadcast = sequencer.join().expect("sequencer panicked");
+    let n_broadcast = sequencer
+        .join()
+        .map_err(|p| anyhow::anyhow!("sequencer thread panicked: {}", panic_message(p.as_ref())))?;
     let wall_seconds = started.elapsed().as_secs_f64();
 
-    // Every node applied the same (identically ordered) update sequence.
-    let counts_agree = results.iter().all(|(_, a)| *a == n_broadcast);
+    let mut nodes = Vec::with_capacity(k);
+    for (node, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(r) => nodes.push(r),
+            Err(e) => anyhow::bail!(
+                "live node {node} died mid-run: {e} \
+                 (sequencer and surviving nodes torn down cleanly)"
+            ),
+        }
+    }
 
-    // Replica agreement on probe points.
+    // Every node applied the same (identically ordered) update sequence.
+    let counts_agree = nodes.iter().all(|(_, a, _)| *a == n_broadcast);
+    let uplink_stalls: u64 = nodes.iter().map(|(_, _, s)| *s).sum();
+
+    // Replica agreement on probe points. The tolerance is scale-aware:
+    // replicas apply identical updates in identical order, but f32
+    // accumulation differences grow with the score magnitude, so a fixed
+    // absolute 1e-4 would false-positive on large-margin models and
+    // false-negative near zero. Report the first offender precisely.
     let mut probe = ExampleStream::for_node(stream_cfg, u32::MAX - 2);
-    let mut scores_agree = true;
-    for _ in 0..8 {
+    let mut divergence = None;
+    'probes: for pi in 0..8 {
         let ex = probe.next_example();
-        let s0 = results[0].0.score(&ex.x);
-        for (l, _) in &results[1..] {
-            if (l.score(&ex.x) - s0).abs() > 1e-4 {
-                scores_agree = false;
+        let s0 = nodes[0].0.score(&ex.x);
+        let tolerance = 1e-4 * s0.abs().max(1.0);
+        for (node, (l, _, _)) in nodes.iter().enumerate().skip(1) {
+            let delta = l.score(&ex.x) - s0;
+            if delta.abs() > tolerance {
+                divergence = Some(LiveDivergence { node, probe: pi, delta, tolerance });
+                break 'probes;
             }
         }
     }
 
-    LiveReport {
+    Ok(LiveReport {
         n_seen: (cfg.warmstart + k * cfg.per_node) as u64,
         n_queried: n_broadcast,
         wall_seconds,
-        replicas_agree: counts_agree && scores_agree,
-        test_error: results[0].0.test_error(test),
+        replicas_agree: counts_agree && divergence.is_none(),
+        divergence,
+        uplink_stalls,
+        test_error: nodes[0].0.test_error(test),
         pool,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::active::margin::MarginSifter;
+    use crate::active::QueryDecision;
     use crate::nn::{AdaGradMlp, MlpConfig};
     use crate::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+    use std::sync::Mutex;
 
     #[test]
     fn live_svm_replicas_agree() {
@@ -231,8 +393,9 @@ mod tests {
             &stream_cfg,
             &test,
             &cfg,
-        );
-        assert!(r.replicas_agree, "live replicas diverged");
+        )
+        .expect("live run failed");
+        assert!(r.replicas_agree, "live replicas diverged: {:?}", r.divergence);
         assert!(r.n_queried > 0);
         assert!(r.test_error < 0.45, "err {}", r.test_error);
         // One pinned pool worker per node, spawned once.
@@ -252,8 +415,10 @@ mod tests {
             &stream_cfg,
             &test,
             &cfg,
-        );
+        )
+        .expect("live run failed");
         assert!(r.replicas_agree);
+        assert!(r.divergence.is_none());
         assert_eq!(r.n_seen, 300);
         assert_eq!(r.pool.workers, 1);
     }
@@ -270,9 +435,162 @@ mod tests {
             &stream_cfg,
             &test,
             &cfg,
-        );
+        )
+        .expect("live run failed");
         assert!(r.replicas_agree);
         assert_eq!(r.n_seen, 60 + 6 * 40);
         assert_eq!(r.pool.workers, 6);
+    }
+
+    #[test]
+    fn tiny_queues_backpressure_without_deadlock_or_loss() {
+        // Capacity 1 everywhere + aggressive querying: the ring runs on
+        // pure backpressure. The run must still terminate with every
+        // broadcast applied by every replica (stalls are counted, never
+        // shed).
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 20);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let cfg = LiveConfig::new(3, 60, 40).with_queue_cap(1);
+        let r = run_live(
+            &proto,
+            |i| MarginSifter::new(0.001, 9 + i as u64),
+            &stream_cfg,
+            &test,
+            &cfg,
+        )
+        .expect("bounded-queue run failed");
+        assert!(r.replicas_agree, "backpressure lost or reordered a broadcast");
+        assert!(r.n_queried > 0);
+    }
+
+    /// Sifter that records every `n` it is shown, for pinning the Eq-5
+    /// counter semantics.
+    struct RecordingSifter {
+        node: usize,
+        ns: Arc<Mutex<Vec<Vec<u64>>>>,
+        inner: MarginSifter,
+    }
+
+    impl Sifter for RecordingSifter {
+        fn decide(&mut self, score: f32, n_seen: u64) -> QueryDecision {
+            self.ns.lock().unwrap()[self.node].push(n_seen);
+            self.inner.decide(score, n_seen)
+        }
+        fn name(&self) -> &'static str {
+            "recording"
+        }
+    }
+
+    #[test]
+    fn eq5_counter_reduces_to_local_count_for_one_node() {
+        // k = 1: every broadcast is the node's own, so the evidence term
+        // stays 0 and the counter is exactly the historical local one.
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let ns = Arc::new(Mutex::new(vec![Vec::new(); 1]));
+        let cfg = LiveConfig::new(1, 50, 30);
+        let rec = Arc::clone(&ns);
+        run_live(
+            &proto,
+            move |i| RecordingSifter {
+                node: i,
+                ns: Arc::clone(&rec),
+                inner: MarginSifter::new(0.1, 7),
+            },
+            &stream_cfg,
+            &test,
+            &cfg,
+        )
+        .expect("live run failed");
+        let got = ns.lock().unwrap()[0].clone();
+        let want: Vec<u64> = (31..=80).collect();
+        assert_eq!(got, want, "k=1 must reproduce warm + i + 1 exactly");
+    }
+
+    #[test]
+    fn eq5_counter_includes_cluster_evidence_for_many_nodes() {
+        // k = 3: each node's counter must advance by at least 1 per local
+        // example, and never exceed local position + total broadcasts —
+        // the only timing-independent bounds of the evidence counter.
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let (k, per_node, warm) = (3usize, 60usize, 30u64);
+        let ns = Arc::new(Mutex::new(vec![Vec::new(); k]));
+        let cfg = LiveConfig::new(k, per_node, warm as usize);
+        let rec = Arc::clone(&ns);
+        let r = run_live(
+            &proto,
+            move |i| RecordingSifter {
+                node: i,
+                ns: Arc::clone(&rec),
+                inner: MarginSifter::new(0.005, 11 + i as u64),
+            },
+            &stream_cfg,
+            &test,
+            &cfg,
+        )
+        .expect("live run failed");
+        for (node, seq) in ns.lock().unwrap().iter().enumerate() {
+            assert_eq!(seq.len(), per_node, "node {node} sifted every local example");
+            for (i, &n) in seq.iter().enumerate() {
+                let local = warm + i as u64 + 1;
+                assert!(n >= local, "node {node} step {i}: n={n} below local floor {local}");
+                assert!(
+                    n <= local + r.n_queried,
+                    "node {node} step {i}: n={n} exceeds evidence ceiling"
+                );
+            }
+            for w in seq.windows(2) {
+                assert!(w[1] > w[0], "node {node}: counter must strictly increase");
+            }
+        }
+    }
+
+    /// Sifter that panics after a fixed number of decisions on one node —
+    /// the fault-injection vehicle for the teardown audit.
+    struct FaultySifter {
+        decisions_left: u64,
+        inner: MarginSifter,
+    }
+
+    impl Sifter for FaultySifter {
+        fn decide(&mut self, score: f32, n_seen: u64) -> QueryDecision {
+            if self.decisions_left == 0 {
+                panic!("injected node fault");
+            }
+            self.decisions_left -= 1;
+            self.inner.decide(score, n_seen)
+        }
+        fn name(&self) -> &'static str {
+            "faulty"
+        }
+    }
+
+    #[test]
+    fn dead_node_surfaces_clean_error_without_wedging() {
+        // Node 1 panics partway through its sift loop. The run must
+        // neither hang (sequencer join, survivor drain loops) nor
+        // propagate the panic — it returns an error naming the node.
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let proto = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let cfg = LiveConfig::new(3, 80, 30).with_queue_cap(2);
+        let err = run_live(
+            &proto,
+            |i| FaultySifter {
+                decisions_left: if i == 1 { 10 } else { u64::MAX },
+                inner: MarginSifter::new(0.05, 21 + i as u64),
+            },
+            &stream_cfg,
+            &test,
+            &cfg,
+        )
+        .expect_err("a dead node must fail the run");
+        let msg = err.to_string();
+        assert!(msg.contains("node 1"), "error must name the dead node: {msg}");
+        assert!(msg.contains("injected node fault"), "error must carry the cause: {msg}");
     }
 }

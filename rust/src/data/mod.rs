@@ -19,7 +19,7 @@ pub mod idx;
 pub mod elastic;
 pub mod stream;
 
-pub use stream::{Example, ExampleStream, PixelRange, StreamConfig};
+pub use stream::{Example, ExampleStream, PixelRange, StreamConfig, StreamCursor};
 
 /// Image side length; all images are SIDE × SIDE = 784 pixels like MNIST.
 pub const SIDE: usize = 28;

@@ -77,6 +77,16 @@ impl StreamConfig {
     }
 }
 
+/// Checkpoint cursor for an [`ExampleStream`]: the stream's output is a
+/// pure function of its RNG state (every scratch buffer is fully
+/// rewritten per example), so the RNG state plus the produced count is
+/// everything a resume needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamCursor {
+    pub rng: [u64; 4],
+    pub produced: u64,
+}
+
 /// An unbounded deterministic stream of labeled examples.
 pub struct ExampleStream {
     cfg: StreamConfig,
@@ -113,6 +123,19 @@ impl ExampleStream {
     /// Number of examples produced so far.
     pub fn produced(&self) -> u64 {
         self.produced
+    }
+
+    /// Snapshot the resume point (see [`StreamCursor`]).
+    pub fn cursor(&self) -> StreamCursor {
+        StreamCursor { rng: self.rng.state(), produced: self.produced }
+    }
+
+    /// Jump this stream to a checkpointed [`StreamCursor`]. The stream
+    /// must have been built from the same config; the next example drawn
+    /// is exactly the one the checkpointed stream would have drawn.
+    pub fn restore(&mut self, cur: StreamCursor) {
+        self.rng = Rng::from_state(cur.rng);
+        self.produced = cur.produced;
     }
 
     /// Produce the next example into caller-provided storage
@@ -230,6 +253,26 @@ mod tests {
         let clean_pos = (0..n).filter(|_| s0.next_example().y > 0.0).count();
         // Both near 50% by class balance; flipping keeps balance.
         assert!((noisy_pos as i64 - clean_pos as i64).abs() < 30);
+    }
+
+    #[test]
+    fn cursor_restore_resumes_bit_identically() {
+        let cfg = StreamConfig::svm_task();
+        let mut a = ExampleStream::for_node(&cfg, 5);
+        for _ in 0..13 {
+            a.next_example();
+        }
+        let cur = a.cursor();
+        assert_eq!(cur.produced, 13);
+        let mut b = ExampleStream::for_node(&cfg, 5);
+        b.restore(cur);
+        for _ in 0..20 {
+            let ea = a.next_example();
+            let eb = b.next_example();
+            assert_eq!(ea.x, eb.x);
+            assert_eq!(ea.y, eb.y);
+        }
+        assert_eq!(a.produced(), b.produced());
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod metrics;
 pub mod net;
 pub mod nn;
 pub mod rng;
+pub mod serve;
 pub mod simd;
 pub mod runtime;
 pub mod sim;
@@ -76,6 +77,9 @@ pub mod prelude {
     pub use crate::net::{
         config_fingerprint, run_distributed, serve_sift_node, InProcTransport, MlpDenseCodec,
         ModelCodec, NetStats, SvmDeltaCodec, TaskKind, Transport, UdsTransport,
+    };
+    pub use crate::serve::{
+        DaemonConfig, LearnSession, SessionCheckpoint, SessionConfig,
     };
     pub use crate::simd::ScoreScratch;
     pub use crate::metrics::{ErrorCurve, SpeedupTable};

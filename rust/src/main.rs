@@ -17,8 +17,13 @@ use para_active::coordinator::{
 use para_active::data::StreamConfig;
 use para_active::exec::ReplayConfig;
 use para_active::metrics::curves_to_markdown;
-use para_active::net::{Channel, SiftNodeReport, TcpTransport, Transport, UdsTransport};
+use para_active::net::{Channel, SiftNodeReport, TaskKind, TcpTransport, Transport, UdsTransport};
 use para_active::runtime::{artifacts_available, XlaRuntime};
+use para_active::serve::{
+    accept_clients_tcp, accept_clients_uds, nn_session_learner, serve as serve_daemon,
+    svm_session_learner, Checkpointable, DaemonConfig, LearnSession, SessionCheckpoint,
+    SessionConfig,
+};
 use para_active::theory::{run_delayed_iwal, TheoryConfig};
 use std::path::Path;
 use std::time::Duration;
@@ -40,6 +45,12 @@ COMMANDS:
             [--role R] [--listen A] [--connect A] [--remote-nodes P]
             [--transport T]             parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
+  learn     --session FILE [--task svm|nn] [--nodes K] [--chunk N]
+            [--warmstart N] [--segments N] [--eta F] [--seed N]
+            [--test-size N] [--workers W] [--fresh] [--status]
+                            resumable para-active session (kill-safe)
+  serve     --session FILE [--listen A] [--transport T] [--clients N]
+            [--queue-cap Q] [+ learn flags]  host a session daemon
   theory    [--delay B] [--t-max T] [--noise P]   IWAL-with-delays run (Thm 1-2)
   artifacts                 inspect the AOT manifest; verify PJRT loads it
 
@@ -72,6 +83,21 @@ host:port>` and serves its lane slice on this machine's sift backend.
 Launch every process with identical experiment flags — a
 config-fingerprint handshake refuses mismatches. Distributed runs are
 bit-identical to --role local under --stale 0 or 1/--pipeline.
+
+SERVING: `learn` drives a resumable session against --session FILE,
+checkpointing learner state, Eq-5 coin-flip RNGs, and stream cursors
+after every segment (atomic temp-file + rename), so a run killed at any
+point and relaunched with the same flags resumes bit-identically from
+the last segment boundary. --status inspects a checkpoint without
+running; --fresh discards one and starts over. --workers is elastic: it
+never changes results (segments sift a frozen model view), only
+wall-clock, so a resume may use a different count. `serve` hosts the
+same session as a persistent daemon: it accepts --clients connections
+on --listen (--transport uds | tcp), serves score/status/train/
+reconfigure requests through a bounded admission queue of capacity
+--queue-cap — overload is refused immediately with a typed busy reply,
+never buffered unboundedly — and checkpoints every trained segment plus
+on shutdown.
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -385,6 +411,193 @@ fn exec_args(
     Ok((backend, replay, pipeline))
 }
 
+/// Validate the `learn`/`serve` session flags onto the task's default
+/// [`SessionConfig`]. Pure, like [`resolve_net_flags`], so the error
+/// surface is unit-testable without a filesystem.
+#[allow(clippy::too_many_arguments)]
+fn resolve_learn_flags(
+    session: Option<String>,
+    task: &str,
+    nodes: Option<usize>,
+    chunk: Option<usize>,
+    warmstart: Option<usize>,
+    segments: Option<usize>,
+    eta: Option<f64>,
+    seed: Option<u64>,
+    test_size: Option<usize>,
+    workers: Option<usize>,
+    queue_cap: Option<usize>,
+) -> Result<(String, SessionConfig), String> {
+    let session = session
+        .ok_or("--session <file> is required (the checkpoint the run resumes from)")?;
+    let task = match task {
+        "svm" => TaskKind::Svm,
+        "nn" => TaskKind::Nn,
+        other => return Err(format!("bad --task {other} (svm|nn)")),
+    };
+    let mut cfg = SessionConfig::new(task);
+    if let Some(n) = nodes {
+        if n == 0 {
+            return Err("--nodes must be >= 1".into());
+        }
+        cfg.nodes = n;
+    }
+    if let Some(c) = chunk {
+        if c == 0 {
+            return Err("--chunk must be >= 1".into());
+        }
+        cfg.chunk = c;
+    }
+    if let Some(w) = warmstart {
+        cfg.warmstart = w;
+    }
+    if let Some(s) = segments {
+        if s == 0 {
+            return Err("--segments must be >= 1".into());
+        }
+        cfg.segments = s;
+    }
+    if let Some(e) = eta {
+        if e.is_nan() || e < 0.0 {
+            return Err("--eta must be >= 0 (0 is passive)".into());
+        }
+        cfg.eta = e;
+    }
+    if let Some(s) = seed {
+        cfg.seed = s;
+    }
+    if let Some(t) = test_size {
+        if t == 0 {
+            return Err("--test-size must be >= 1 (final_error needs a held-out split)".into());
+        }
+        cfg.test_size = t;
+    }
+    if let Some(w) = workers {
+        // 0 is legal here: it means one worker per node, the default.
+        cfg.workers = w;
+    }
+    if let Some(q) = queue_cap {
+        if q == 0 {
+            return Err("--queue-cap must be >= 1".into());
+        }
+        cfg.queue_cap = q;
+    }
+    Ok((session, cfg))
+}
+
+/// Gather and validate the session flags shared by `learn` and `serve`.
+fn learn_args(args: &Args) -> anyhow::Result<(String, SessionConfig)> {
+    let session: Option<String> = args.opt("--session")?;
+    let task: String = args.get("--task", "svm".to_string())?;
+    resolve_learn_flags(
+        session,
+        &task,
+        args.opt("--nodes")?,
+        args.opt("--chunk")?,
+        args.opt("--warmstart")?,
+        args.opt("--segments")?,
+        args.opt("--eta")?,
+        args.opt("--seed")?,
+        args.opt("--test-size")?,
+        args.opt("--workers")?,
+        args.opt("--queue-cap")?,
+    )
+    .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Open-or-create the checkpointed session behind `learn` and `serve`.
+fn open_session<L: Checkpointable>(
+    path: &Path,
+    cfg: SessionConfig,
+    proto: &L,
+    fresh: bool,
+) -> anyhow::Result<LearnSession<L>> {
+    if !fresh && path.exists() {
+        let ck = SessionCheckpoint::load(path)?;
+        eprintln!(
+            "resuming session {} at segment {} of {}",
+            path.display(),
+            ck.segments_done,
+            cfg.segments
+        );
+        Ok(LearnSession::resume(cfg, proto, &ck)?)
+    } else {
+        eprintln!(
+            "initializing session {} ({} warmstart examples) ...",
+            path.display(),
+            cfg.warmstart
+        );
+        let session = LearnSession::create(cfg, proto);
+        session.checkpoint()?.save(path)?;
+        Ok(session)
+    }
+}
+
+/// Telemetry + result footer shared by `learn` and `serve`.
+fn print_session_summary<L: Checkpointable>(session: &LearnSession<L>) {
+    let t = session.telemetry();
+    println!(
+        "live: sift p50={:.3}ms p99={:.3}ms sustained {:.0} rows/s over {} chunks",
+        t.p50_ms(),
+        t.p99_ms(),
+        t.rows_per_sec(),
+        t.samples()
+    );
+    let test = session.test_set();
+    println!(
+        "fingerprint={:#018x} final_error={}",
+        session.fingerprint(),
+        session.final_error(&test)
+    );
+}
+
+/// `learn` body, monomorphized per task learner.
+fn run_learn<L: Checkpointable>(
+    path: &Path,
+    cfg: SessionConfig,
+    proto: &L,
+    fresh: bool,
+) -> anyhow::Result<()> {
+    let target = cfg.segments;
+    let mut session = open_session(path, cfg, proto, fresh)?;
+    while !session.is_complete() {
+        let r = session.run_segment();
+        // Checkpoint at every boundary: kill -9 here loses at most the
+        // next (uncommitted) segment, and the committed prefix resumes
+        // bit-identically.
+        session.checkpoint()?.save(path)?;
+        eprintln!(
+            "segment {}/{}: selected {} in {:.3}s (n_seen={} n_queried={})",
+            r.segment,
+            target,
+            r.selected,
+            r.sift_seconds,
+            session.n_seen(),
+            session.n_queried()
+        );
+    }
+    print_session_summary(&session);
+    Ok(())
+}
+
+/// `serve` body, monomorphized per task learner.
+fn run_serve<L: Checkpointable>(
+    path: &Path,
+    cfg: SessionConfig,
+    proto: &L,
+    chans: Vec<Box<dyn Channel>>,
+) -> anyhow::Result<()> {
+    let dcfg = DaemonConfig { queue_cap: cfg.queue_cap, checkpoint: Some(path.to_path_buf()) };
+    let session = open_session(path, cfg, proto, false)?;
+    let (report, session) = serve_daemon(session, chans, dcfg)?;
+    println!(
+        "daemon: served {} request(s), shed {}, segments_done={}",
+        report.requests_served, report.shed, report.segments_done
+    );
+    print_session_summary(&session);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().map(String::as_str) else {
@@ -527,6 +740,48 @@ fn main() -> anyhow::Result<()> {
                 other => anyhow::bail!("unknown learner {other} (svm|nn)"),
             };
             println!("{}", curves_to_markdown(&[&r.curve]));
+        }
+        "learn" => {
+            let (session_path, cfg) = learn_args(&args)?;
+            let path = Path::new(&session_path);
+            if args.flag("--status") {
+                let ck = SessionCheckpoint::load(path)?;
+                println!(
+                    "session {}: task={} segments_done={} n_seen={} n_queried={} \
+                     fingerprint={:#018x}",
+                    path.display(),
+                    ck.task.name(),
+                    ck.segments_done,
+                    ck.n_seen,
+                    ck.n_queried,
+                    ck.fingerprint
+                );
+                return Ok(());
+            }
+            let fresh = args.flag("--fresh");
+            match cfg.task {
+                TaskKind::Svm => run_learn(path, cfg, &svm_session_learner(), fresh)?,
+                TaskKind::Nn => run_learn(path, cfg, &nn_session_learner(), fresh)?,
+            }
+        }
+        "serve" => {
+            let (session_path, cfg) = learn_args(&args)?;
+            let listen: String =
+                args.get("--listen", "/tmp/para-active-serve.sock".to_string())?;
+            let transport: String = args.get("--transport", "uds".to_string())?;
+            let clients: usize = args.get("--clients", 1)?;
+            anyhow::ensure!(clients >= 1, "--clients must be >= 1");
+            eprintln!("accepting {clients} client(s) on {listen} ({transport}) ...");
+            let chans = match transport.as_str() {
+                "uds" => accept_clients_uds(Path::new(&listen), clients)?,
+                "tcp" => accept_clients_tcp(&listen, clients)?,
+                other => anyhow::bail!("bad --transport {other} (uds|tcp)"),
+            };
+            let path = Path::new(&session_path);
+            match cfg.task {
+                TaskKind::Svm => run_serve(path, cfg, &svm_session_learner(), chans)?,
+                TaskKind::Nn => run_serve(path, cfg, &nn_session_learner(), chans)?,
+            }
         }
         "theory" => {
             let delay: u64 = args.get("--delay", 64)?;
@@ -798,6 +1053,123 @@ mod tests {
         assert!(err.contains("--role"), "{err}");
         let err = resolve_net_flags("local", None, None, None, "carrier-pigeon").unwrap_err();
         assert!(err.contains("--transport"), "{err}");
+    }
+
+    #[test]
+    fn learn_flags_require_a_session_and_a_known_task() {
+        let err = resolve_learn_flags(
+            None, "svm", None, None, None, None, None, None, None, None, None,
+        )
+        .unwrap_err();
+        assert!(err.contains("--session"), "{err}");
+        let err = resolve_learn_flags(
+            Some("s.ckpt".into()),
+            "forest",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.contains("--task"), "{err}");
+    }
+
+    #[test]
+    fn learn_flags_apply_task_defaults_then_overrides() {
+        let (path, svm) = resolve_learn_flags(
+            Some("s.ckpt".into()),
+            "svm",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .expect("valid");
+        assert_eq!(path, "s.ckpt");
+        assert_eq!(svm.task, TaskKind::Svm);
+        assert_eq!(svm.eta, 0.1, "paper's parallel-SVM eta is the default");
+        let (_, nn) = resolve_learn_flags(
+            Some("s.ckpt".into()),
+            "nn",
+            Some(3),
+            Some(128),
+            Some(50),
+            Some(4),
+            None,
+            Some(99),
+            Some(200),
+            Some(2),
+            Some(8),
+        )
+        .expect("valid");
+        assert_eq!(nn.task, TaskKind::Nn);
+        assert_eq!(nn.eta, 0.0005, "paper's NN eta is the default");
+        assert_eq!(
+            (nn.nodes, nn.chunk, nn.warmstart, nn.segments, nn.seed),
+            (3, 128, 50, 4, 99)
+        );
+        assert_eq!((nn.test_size, nn.workers, nn.queue_cap), (200, 2, 8));
+    }
+
+    #[test]
+    fn learn_flags_reject_degenerate_values() {
+        let base = |nodes: Option<usize>,
+                    chunk: Option<usize>,
+                    segments: Option<usize>,
+                    eta: Option<f64>,
+                    test_size: Option<usize>,
+                    queue_cap: Option<usize>| {
+            resolve_learn_flags(
+                Some("s.ckpt".into()),
+                "svm",
+                nodes,
+                chunk,
+                None,
+                segments,
+                eta,
+                None,
+                test_size,
+                None,
+                queue_cap,
+            )
+        };
+        assert!(base(Some(0), None, None, None, None, None).unwrap_err().contains("--nodes"));
+        assert!(base(None, Some(0), None, None, None, None).unwrap_err().contains("--chunk"));
+        assert!(base(None, None, Some(0), None, None, None)
+            .unwrap_err()
+            .contains("--segments"));
+        assert!(base(None, None, None, Some(-0.1), None, None).unwrap_err().contains("--eta"));
+        assert!(base(None, None, None, None, Some(0), None)
+            .unwrap_err()
+            .contains("--test-size"));
+        assert!(base(None, None, None, None, None, Some(0))
+            .unwrap_err()
+            .contains("--queue-cap"));
+        // Elastic workers may be 0 (one per node) — not an error.
+        assert!(resolve_learn_flags(
+            Some("s.ckpt".into()),
+            "svm",
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            Some(0),
+            None,
+        )
+        .is_ok());
     }
 
     #[test]

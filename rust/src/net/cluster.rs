@@ -74,13 +74,13 @@ struct Wire<'a> {
 
 impl Wire<'_> {
     fn send(&mut self, node: usize, msg: &Msg) -> Result<()> {
-        let bytes = msg.encode();
+        let bytes = msg.encode()?;
         self.stats.bytes_sent += bytes.len() as u64 + FRAME_OVERHEAD;
         self.t.send_to(node, &bytes)
     }
 
     fn broadcast(&mut self, msg: &Msg) -> Result<()> {
-        let bytes = msg.encode();
+        let bytes = msg.encode()?;
         self.stats.bytes_sent += (bytes.len() as u64 + FRAME_OVERHEAD) * self.t.nodes() as u64;
         self.t.broadcast(&bytes)
     }
@@ -209,7 +209,7 @@ pub fn run_distributed<L: Learner>(
         // snapshot is the pipelined loop's `learner.clone()` — nodes sift
         // round t with the model of round t-2. Under stale=0 the previous
         // round was already applied, so this is the fully-updated model.
-        let sync = codec.encode(round, learner);
+        let sync = codec.encode(round, learner)?;
         wire.stats.sync_messages += p as u64;
         wire.stats.sync_bytes += sync.payload.len() as u64 * p as u64;
         wire.stats.full_equiv_bytes += codec.last_full_bytes() * p as u64;

@@ -35,7 +35,7 @@
 //!
 //! [`NetStats`]: super::NetStats
 
-use super::wire::{put_f32, put_u32, put_u8, Reader};
+use super::wire::{put_f32, put_len, put_u32, put_u8, Reader};
 use crate::learner::Learner;
 use crate::nn::AdaGradMlp;
 use crate::svm::{lasvm::LaSvm, Kernel};
@@ -59,7 +59,8 @@ pub struct SyncMessage {
 pub trait ModelCodec<L: ?Sized>: Send {
     /// Coordinator side: encode the model's scoring view at `epoch`.
     /// Epochs must be passed in strictly increasing, gap-free order.
-    fn encode(&mut self, epoch: u64, model: &L) -> SyncMessage;
+    /// Errors if a length prefix in the payload would overflow u32.
+    fn encode(&mut self, epoch: u64, model: &L) -> Result<SyncMessage>;
 
     /// Bytes the last [`ModelCodec::encode`] would have cost as full
     /// state — the denominator of the delta-vs-full telemetry.
@@ -184,9 +185,9 @@ impl SvmDeltaCodec {
         }
     }
 
-    fn full_payload(n: usize, bias: f32, pts: &[f32], alpha: &[f32]) -> Vec<u8> {
+    fn full_payload(n: usize, bias: f32, pts: &[f32], alpha: &[f32]) -> Result<Vec<u8>> {
         let mut payload = Vec::with_capacity(8 + (pts.len() + alpha.len()) * 4);
-        put_u32(&mut payload, n as u32);
+        put_len(&mut payload, n)?;
         put_f32(&mut payload, bias);
         for &v in pts {
             payload.extend_from_slice(&v.to_le_bytes());
@@ -194,12 +195,12 @@ impl SvmDeltaCodec {
         for &v in alpha {
             payload.extend_from_slice(&v.to_le_bytes());
         }
-        payload
+        Ok(payload)
     }
 }
 
 impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
-    fn encode(&mut self, epoch: u64, model: &LaSvm<K>) -> SyncMessage {
+    fn encode(&mut self, epoch: u64, model: &LaSvm<K>) -> Result<SyncMessage> {
         assert_eq!(model.dim(), self.dim, "codec dim mismatch");
         let (pts, alpha) = model.export_support();
         let bias = model.bias();
@@ -211,7 +212,7 @@ impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
         // reset) if full state wins, so encoder and decoder tables can
         // never diverge.
         let mut delta = Vec::with_capacity(8 + n * 9);
-        put_u32(&mut delta, n as u32);
+        put_len(&mut delta, n)?;
         put_f32(&mut delta, bias);
         for i in 0..n {
             let row = &pts[i * self.dim..(i + 1) * self.dim];
@@ -236,9 +237,9 @@ impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
 
         if delta.len() >= full_bytes {
             self.reset_to_view(&pts);
-            SyncMessage { epoch, full: true, payload: Self::full_payload(n, bias, &pts, &alpha) }
+            Ok(SyncMessage { epoch, full: true, payload: Self::full_payload(n, bias, &pts, &alpha)? })
         } else {
-            SyncMessage { epoch, full: false, payload: delta }
+            Ok(SyncMessage { epoch, full: false, payload: delta })
         }
     }
 
@@ -321,10 +322,10 @@ impl MlpDenseCodec {
         (flat, (w1.len(), b1.len(), w2.len()))
     }
 
-    fn put_dims(payload: &mut Vec<u8>, dims: (usize, usize, usize)) {
-        put_u32(payload, dims.0 as u32);
-        put_u32(payload, dims.1 as u32);
-        put_u32(payload, dims.2 as u32);
+    fn put_dims(payload: &mut Vec<u8>, dims: (usize, usize, usize)) -> Result<()> {
+        put_len(payload, dims.0)?;
+        put_len(payload, dims.1)?;
+        put_len(payload, dims.2)
     }
 
     fn install(&self, replica: &mut AdaGradMlp) -> Result<()> {
@@ -345,25 +346,25 @@ impl Default for MlpDenseCodec {
 }
 
 impl ModelCodec<AdaGradMlp> for MlpDenseCodec {
-    fn encode(&mut self, epoch: u64, model: &AdaGradMlp) -> SyncMessage {
+    fn encode(&mut self, epoch: u64, model: &AdaGradMlp) -> Result<SyncMessage> {
         let (flat, dims) = Self::flat_state(model);
         let full_bytes = 12 + flat.len() * 4;
         self.last_full = full_bytes as u64;
 
-        let make_full = |flat: &[f32]| {
+        let make_full = |flat: &[f32]| -> Result<Vec<u8>> {
             let mut payload = Vec::with_capacity(full_bytes);
-            Self::put_dims(&mut payload, dims);
+            Self::put_dims(&mut payload, dims)?;
             for &v in flat {
                 payload.extend_from_slice(&v.to_le_bytes());
             }
-            payload
+            Ok(payload)
         };
 
         if self.dims != Some(dims) || self.state.len() != flat.len() {
-            let payload = make_full(&flat);
+            let payload = make_full(&flat)?;
             self.state = flat;
             self.dims = Some(dims);
-            return SyncMessage { epoch, full: true, payload };
+            return Ok(SyncMessage { epoch, full: true, payload });
         }
 
         let changed: Vec<u32> = flat
@@ -375,19 +376,19 @@ impl ModelCodec<AdaGradMlp> for MlpDenseCodec {
             .collect();
         let delta_bytes = 16 + changed.len() * 8;
         if delta_bytes >= full_bytes {
-            let payload = make_full(&flat);
+            let payload = make_full(&flat)?;
             self.state = flat;
-            return SyncMessage { epoch, full: true, payload };
+            return Ok(SyncMessage { epoch, full: true, payload });
         }
         let mut payload = Vec::with_capacity(delta_bytes);
-        Self::put_dims(&mut payload, dims);
-        put_u32(&mut payload, changed.len() as u32);
+        Self::put_dims(&mut payload, dims)?;
+        put_len(&mut payload, changed.len())?;
         for &i in &changed {
             put_u32(&mut payload, i);
             put_f32(&mut payload, flat[i as usize]);
         }
         self.state = flat;
-        SyncMessage { epoch, full: false, payload }
+        Ok(SyncMessage { epoch, full: false, payload })
     }
 
     fn last_full_bytes(&self) -> u64 {
@@ -461,7 +462,7 @@ mod tests {
         let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
 
         let svm = trained_svm(120);
-        let m1 = enc.encode(1, &svm);
+        let m1 = enc.encode(1, &svm).unwrap();
         assert!(m1.full, "an all-new support set cannot win as a delta");
         dec.apply(&mut replica, &m1).unwrap();
         assert_eq!(probe_scores(&replica), probe_scores(&svm), "replica scores bit-identical");
@@ -475,7 +476,7 @@ mod tests {
             let y = stream.next_into(&mut x);
             svm2.update(&x, y, 1.0);
         }
-        let m2 = enc.encode(2, &svm2);
+        let m2 = enc.encode(2, &svm2).unwrap();
         assert!(!m2.full, "incremental growth must delta-encode");
         assert!(
             (m2.payload.len() as u64) < enc.last_full_bytes() / 4,
@@ -493,7 +494,7 @@ mod tests {
         let mut dec = SvmDeltaCodec::new(DIM);
         let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
         let svm = trained_svm(60);
-        let m1 = enc.encode(1, &svm);
+        let m1 = enc.encode(1, &svm).unwrap();
         dec.apply(&mut replica, &m1).unwrap();
         let before = probe_scores(&replica);
         dec.apply(&mut replica, &m1).unwrap(); // idempotent re-apply
@@ -501,8 +502,8 @@ mod tests {
 
         let mut svm2 = trained_svm(90);
         svm2.update(&vec![0.5; DIM], 1.0, 1.0);
-        let _m2 = enc.encode(2, &svm2);
-        let m3 = enc.encode(3, &svm2);
+        let _m2 = enc.encode(2, &svm2).unwrap();
+        let m3 = enc.encode(3, &svm2).unwrap();
         if !m3.full {
             // Skipping epoch 2 then applying 3 as a delta must fail.
             assert!(dec.apply(&mut replica, &m3).is_err());
@@ -520,7 +521,7 @@ mod tests {
         let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
         let mut replica = AdaGradMlp::new(MlpConfig { seed: 999, ..MlpConfig::paper(DIM) });
 
-        let m1 = enc.encode(1, &mlp);
+        let m1 = enc.encode(1, &mlp).unwrap();
         assert!(m1.full);
         dec.apply(&mut replica, &m1).unwrap();
         assert_eq!(probe_scores(&replica), probe_scores(&mlp));
@@ -532,13 +533,13 @@ mod tests {
             let y = stream.next_into(&mut x);
             mlp.update(&x, y, 1.0);
         }
-        let m2 = enc.encode(2, &mlp);
+        let m2 = enc.encode(2, &mlp).unwrap();
         assert!(m2.full, "dense AdaGrad churn must fall back to full state");
         dec.apply(&mut replica, &m2).unwrap();
         assert_eq!(probe_scores(&replica), probe_scores(&mlp));
 
         // Unchanged model → empty delta beats full easily.
-        let m3 = enc.encode(3, &mlp);
+        let m3 = enc.encode(3, &mlp).unwrap();
         assert!(!m3.full);
         assert_eq!(m3.payload.len(), 16);
         dec.apply(&mut replica, &m3).unwrap();

@@ -28,7 +28,7 @@ use crate::learner::{Learner, SiftScorer};
 use anyhow::{Context, Result};
 
 pub(crate) fn send_msg(chan: &mut dyn Channel, msg: &Msg) -> Result<()> {
-    chan.send(&msg.encode())
+    chan.send(&msg.encode()?)
 }
 
 pub(crate) fn recv_msg(chan: &mut dyn Channel) -> Result<Msg> {
@@ -210,14 +210,14 @@ mod tests {
                 fingerprint,
             )
         });
-        hub.send_to(0, &Msg::Init(init).encode()).unwrap();
+        hub.send_to(0, &Msg::Init(init).encode().unwrap()).unwrap();
         // On success the node acks with Ready and waits for rounds; close
         // the hub (drop) to let a successful server error out of recv —
         // but first give mismatch cases their immediate error. Send a
         // shutdown so the happy path terminates cleanly.
         if let Ok(bytes) = hub.recv_from(0) {
             if matches!(Msg::decode(&bytes), Ok(Msg::Ready(_))) {
-                hub.send_to(0, &Msg::Shutdown.encode()).unwrap();
+                hub.send_to(0, &Msg::Shutdown.encode().unwrap()).unwrap();
                 let _ = hub.recv_from(0); // Bye
             }
         }

@@ -14,7 +14,7 @@
 //! whatever the peer sent.
 
 use super::delta::SyncMessage;
-use super::wire::{put_f32s, put_f64, put_u32, put_u64, put_u8, Reader};
+use super::wire::{put_f32s, put_f64, put_len, put_u32, put_u64, put_u8, Reader};
 use crate::active::SifterSpec;
 use crate::coordinator::backend::NodeSift;
 use crate::exec::PoolStats;
@@ -159,7 +159,9 @@ fn read_sifter(r: &mut Reader<'_>) -> Result<SifterSpec> {
 }
 
 impl Msg {
-    pub fn encode(&self) -> Vec<u8> {
+    /// Errors when a length prefix would overflow its u32 slot — the
+    /// encode-side mirror of [`Msg::decode`]'s truncation errors.
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let mut buf = Vec::new();
         match self {
             Msg::Init(m) => {
@@ -187,17 +189,17 @@ impl Msg {
                 put_u64(&mut buf, m.n_phase);
                 put_u64(&mut buf, m.sync.epoch);
                 put_u8(&mut buf, m.sync.full as u8);
-                put_u32(&mut buf, m.sync.payload.len() as u32);
+                put_len(&mut buf, m.sync.payload.len())?;
                 buf.extend_from_slice(&m.sync.payload);
             }
             Msg::Sift(m) => {
                 put_u8(&mut buf, TAG_SIFT);
                 put_u64(&mut buf, m.round);
-                put_u32(&mut buf, m.lanes.len() as u32);
+                put_len(&mut buf, m.lanes.len())?;
                 for lane in &m.lanes {
-                    put_f32s(&mut buf, &lane.sel_x);
-                    put_f32s(&mut buf, &lane.sel_y);
-                    put_f32s(&mut buf, &lane.sel_w);
+                    put_f32s(&mut buf, &lane.sel_x)?;
+                    put_f32s(&mut buf, &lane.sel_y)?;
+                    put_f32s(&mut buf, &lane.sel_w)?;
                     put_f64(&mut buf, lane.seconds);
                     put_u64(&mut buf, lane.sift_ops);
                 }
@@ -205,12 +207,12 @@ impl Msg {
             Msg::Shutdown => put_u8(&mut buf, TAG_SHUTDOWN),
             Msg::Bye(m) => {
                 put_u8(&mut buf, TAG_BYE);
-                put_u32(&mut buf, m.pool.workers as u32);
+                put_len(&mut buf, m.pool.workers)?;
                 put_u64(&mut buf, m.pool.threads_spawned);
                 put_u64(&mut buf, m.pool.rounds);
             }
         }
-        buf
+        Ok(buf)
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Msg> {
@@ -287,7 +289,7 @@ mod tests {
             stream_seed: 0x5EED_5EED,
             sifter: SifterSpec::Margin { eta: 0.1, seed: 7 },
         };
-        match Msg::decode(&Msg::Init(m.clone()).encode()).unwrap() {
+        match Msg::decode(&Msg::Init(m.clone()).encode().unwrap()).unwrap() {
             Msg::Init(got) => assert_eq!(got, m),
             other => panic!("wrong variant: {other:?}"),
         }
@@ -303,7 +305,7 @@ mod tests {
             sift_ops: 99,
         };
         let m = SiftMsg { round: 3, lanes: vec![lane.clone(), NodeSift::default()] };
-        match Msg::decode(&Msg::Sift(m).encode()).unwrap() {
+        match Msg::decode(&Msg::Sift(m).encode().unwrap()).unwrap() {
             Msg::Sift(got) => {
                 assert_eq!(got.round, 3);
                 assert_eq!(got.lanes.len(), 2);
@@ -323,7 +325,7 @@ mod tests {
             n_phase: 8000,
             sync: SyncMessage { epoch: 9, full: false, payload: vec![1, 2, 3] },
         });
-        let mut bytes = m.encode();
+        let mut bytes = m.encode().unwrap();
         match Msg::decode(&bytes).unwrap() {
             Msg::Round(got) => {
                 assert!(!got.sync.full);
@@ -338,9 +340,9 @@ mod tests {
 
     #[test]
     fn shutdown_and_bye_roundtrip() {
-        assert!(matches!(Msg::decode(&Msg::Shutdown.encode()).unwrap(), Msg::Shutdown));
+        assert!(matches!(Msg::decode(&Msg::Shutdown.encode().unwrap()).unwrap(), Msg::Shutdown));
         let bye = ByeMsg { pool: PoolStats { workers: 3, threads_spawned: 3, rounds: 17 } };
-        match Msg::decode(&Msg::Bye(bye).encode()).unwrap() {
+        match Msg::decode(&Msg::Bye(bye).encode().unwrap()).unwrap() {
             Msg::Bye(got) => assert_eq!(got, bye),
             other => panic!("wrong variant: {other:?}"),
         }

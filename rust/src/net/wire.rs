@@ -26,13 +26,27 @@ pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Length-prefixed f32 slice (u32 count, then raw values).
-pub(crate) fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
-    put_u32(buf, vs.len() as u32);
+/// Overflow-checked u32 length prefix. Every count that crosses the wire
+/// goes through here: a length that does not fit the prefix is an error
+/// on the *encode* side, mirroring how [`Reader`] turns truncation into
+/// errors on the decode side — never a silent `as u32` wraparound that
+/// the peer would misparse.
+pub(crate) fn put_len(buf: &mut Vec<u8>, n: usize) -> Result<()> {
+    let v = u32::try_from(n)
+        .map_err(|_| anyhow::anyhow!("length {n} overflows the u32 wire prefix"))?;
+    put_u32(buf, v);
+    Ok(())
+}
+
+/// Length-prefixed f32 slice (u32 count, then raw values). Errors if the
+/// count overflows the prefix.
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) -> Result<()> {
+    put_len(buf, vs.len())?;
     buf.reserve(vs.len() * 4);
     for &v in vs {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+    Ok(())
 }
 
 /// Bounds-checked cursor over a received payload.
@@ -119,7 +133,7 @@ mod tests {
         put_u64(&mut buf, u64::MAX - 3);
         put_f32(&mut buf, -0.125);
         put_f64(&mut buf, 2.5e-300);
-        put_f32s(&mut buf, &[1.0, f32::MIN_POSITIVE, -0.0]);
+        put_f32s(&mut buf, &[1.0, f32::MIN_POSITIVE, -0.0]).unwrap();
         let mut r = Reader::new(&buf);
         assert_eq!(r.u8().unwrap(), 7);
         assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
@@ -140,5 +154,21 @@ mod tests {
         assert!(r.f32s().is_err());
         let mut r2 = Reader::new(&[1, 2]);
         assert!(r2.u32().is_err());
+    }
+
+    // Mirror of `truncation_is_an_error_not_a_panic` for the encode side:
+    // a count too large for the u32 prefix must refuse to encode instead
+    // of silently wrapping to a small number the peer would misparse.
+    #[test]
+    fn length_overflow_is_an_error_not_a_silent_cast() {
+        let mut buf = Vec::new();
+        assert!(put_len(&mut buf, u32::MAX as usize).is_ok(), "the max prefix still fits");
+        let over = u32::MAX as u64 + 1;
+        if let Ok(n) = usize::try_from(over) {
+            let before = buf.len();
+            let err = put_len(&mut buf, n).unwrap_err();
+            assert!(err.to_string().contains("overflows"), "{err}");
+            assert_eq!(buf.len(), before, "a failed prefix must not leave partial bytes");
+        }
     }
 }

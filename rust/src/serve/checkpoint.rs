@@ -1,0 +1,253 @@
+//! Durable session checkpoints.
+//!
+//! A serving session's whole resumable state — learner parameters,
+//! per-node sifter coin-flip RNGs, per-node stream cursors, and the
+//! cluster counters — serialized through the same explicit
+//! little-endian codecs the network protocol uses
+//! ([`crate::net::wire`]): no serde, every length prefix
+//! overflow-checked on encode and bounds-checked on decode. Saving is
+//! atomic (temp file + rename), so a daemon killed mid-write leaves the
+//! previous checkpoint intact and `learn` resumes from the last
+//! completed segment boundary.
+
+use crate::data::stream::StreamCursor;
+use crate::net::wire::{put_f64, put_len, put_u32, put_u64, put_u8, Reader};
+use crate::net::TaskKind;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// File magic: "PALC" (para-active learn checkpoint).
+const MAGIC: u32 = 0x50_41_4C_43;
+/// Bump on any layout change; decode refuses other versions.
+const VERSION: u32 = 1;
+
+/// Resume state for one logical sift node: the Eq-5 coin-flip RNG and
+/// the position in the node's deterministic example stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeCursor {
+    /// Sifter aggressiveness (Eq 5 `eta`); stored so a resumed sifter
+    /// is rebuilt with the exact rule, not just the exact RNG.
+    pub eta: f64,
+    /// [`crate::active::margin::MarginSifter::rng_state`] at checkpoint.
+    pub sifter_rng: [u64; 4],
+    /// [`crate::data::ExampleStream::cursor`] at checkpoint.
+    pub stream: StreamCursor,
+}
+
+/// Everything a killed session needs to restart where it left off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionCheckpoint {
+    pub task: TaskKind,
+    /// Fingerprint of the session's *learning-relevant* configuration
+    /// (excludes elastic knobs like worker count); resume refuses a
+    /// checkpoint whose fingerprint disagrees with the CLI flags.
+    pub fingerprint: u64,
+    pub segments_done: u64,
+    /// Examples seen cluster-wide, warmstart included.
+    pub n_seen: u64,
+    pub n_queried: u64,
+    /// Opaque learner blob from `save_state` (LASVM expansion or MLP
+    /// weights + AdaGrad accumulators).
+    pub learner: Vec<u8>,
+    /// One cursor per logical node, node order.
+    pub nodes: Vec<NodeCursor>,
+    /// Per-node-chunk sift latencies (seconds), for p50/p99 telemetry
+    /// that survives a restart.
+    pub chunk_latencies: Vec<f64>,
+    /// Total wall seconds spent in parallel sift phases.
+    pub sift_wall: f64,
+    /// Total rows pushed through the sifters.
+    pub rows_sifted: u64,
+}
+
+impl SessionCheckpoint {
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, MAGIC);
+        put_u32(&mut buf, VERSION);
+        put_u8(
+            &mut buf,
+            match self.task {
+                TaskKind::Svm => 0,
+                TaskKind::Nn => 1,
+            },
+        );
+        put_u64(&mut buf, self.fingerprint);
+        put_u64(&mut buf, self.segments_done);
+        put_u64(&mut buf, self.n_seen);
+        put_u64(&mut buf, self.n_queried);
+        put_len(&mut buf, self.learner.len())?;
+        buf.extend_from_slice(&self.learner);
+        put_len(&mut buf, self.nodes.len())?;
+        for node in &self.nodes {
+            put_f64(&mut buf, node.eta);
+            for w in node.sifter_rng {
+                put_u64(&mut buf, w);
+            }
+            for w in node.stream.rng {
+                put_u64(&mut buf, w);
+            }
+            put_u64(&mut buf, node.stream.produced);
+        }
+        put_len(&mut buf, self.chunk_latencies.len())?;
+        for &l in &self.chunk_latencies {
+            put_f64(&mut buf, l);
+        }
+        put_f64(&mut buf, self.sift_wall);
+        put_u64(&mut buf, self.rows_sifted);
+        Ok(buf)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        let magic = r.u32()?;
+        anyhow::ensure!(magic == MAGIC, "not a session checkpoint (magic {magic:#010x})");
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let task = match r.u8()? {
+            0 => TaskKind::Svm,
+            1 => TaskKind::Nn,
+            other => anyhow::bail!("unknown checkpoint task kind {other}"),
+        };
+        let fingerprint = r.u64()?;
+        let segments_done = r.u64()?;
+        let n_seen = r.u64()?;
+        let n_queried = r.u64()?;
+        let learner_len = r.u32()? as usize;
+        let learner = r.bytes(learner_len)?;
+        let k = r.u32()? as usize;
+        let mut nodes = Vec::with_capacity(k);
+        for _ in 0..k {
+            let eta = r.f64()?;
+            let mut sifter_rng = [0u64; 4];
+            for w in sifter_rng.iter_mut() {
+                *w = r.u64()?;
+            }
+            let mut stream_rng = [0u64; 4];
+            for w in stream_rng.iter_mut() {
+                *w = r.u64()?;
+            }
+            let produced = r.u64()?;
+            nodes.push(NodeCursor {
+                eta,
+                sifter_rng,
+                stream: StreamCursor { rng: stream_rng, produced },
+            });
+        }
+        let n_lat = r.u32()? as usize;
+        let mut chunk_latencies = Vec::with_capacity(n_lat);
+        for _ in 0..n_lat {
+            chunk_latencies.push(r.f64()?);
+        }
+        let sift_wall = r.f64()?;
+        let rows_sifted = r.u64()?;
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "trailing garbage after checkpoint ({} bytes)",
+            r.remaining()
+        );
+        Ok(SessionCheckpoint {
+            task,
+            fingerprint,
+            segments_done,
+            n_seen,
+            n_queried,
+            learner,
+            nodes,
+            chunk_latencies,
+            sift_wall,
+            rows_sifted,
+        })
+    }
+
+    /// Write atomically: encode to `<path>.tmp`, fsync, rename over
+    /// `path`. A crash mid-save never corrupts the resumable file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode()?;
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SessionCheckpoint {
+        SessionCheckpoint {
+            task: TaskKind::Svm,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            segments_done: 3,
+            n_seen: 700,
+            n_queried: 212,
+            learner: vec![1, 2, 3, 250, 0],
+            nodes: vec![
+                NodeCursor {
+                    eta: 0.1,
+                    sifter_rng: [1, 2, 3, 4],
+                    stream: StreamCursor { rng: [5, 6, 7, 8], produced: 300 },
+                },
+                NodeCursor {
+                    eta: 0.1,
+                    sifter_rng: [9, 10, 11, 12],
+                    stream: StreamCursor { rng: [13, 14, 15, 16], produced: 300 },
+                },
+            ],
+            chunk_latencies: vec![0.002, 0.0035, 0.0019],
+            sift_wall: 0.0105,
+            rows_sifted: 600,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_every_field() {
+        let ck = sample();
+        let back = SessionCheckpoint::decode(&ck.encode().unwrap()).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_blobs_error() {
+        let bytes = sample().encode().unwrap();
+        assert!(SessionCheckpoint::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] ^= 0xFF;
+        let err = SessionCheckpoint::decode(&wrong_magic).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        let mut trailing = bytes;
+        trailing.push(0);
+        assert!(SessionCheckpoint::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrips_through_a_file() {
+        let ck = sample();
+        let path = std::env::temp_dir()
+            .join(format!("para-active-ckpt-test-{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        // Overwrite is atomic: a second save lands cleanly.
+        let mut ck2 = back;
+        ck2.segments_done = 4;
+        ck2.save(&path).unwrap();
+        assert_eq!(SessionCheckpoint::load(&path).unwrap().segments_done, 4);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,584 @@
+//! The serving daemon: a persistent process hosting a
+//! [`LearnSession`] behind the [`crate::net`] transport layer.
+//!
+//! Each connected client gets a reader thread that decodes framed
+//! requests and offers them to one shared [`BoundedQueue`]. Admission
+//! is strict: a full queue refuses the request *immediately* with a
+//! typed [`Response::Busy`] — one slow or chatty client can delay its
+//! own replies but can never wedge the daemon or starve other
+//! connections, and nothing in the daemon blocks on an unbounded
+//! buffer. A single dispatcher thread owns the session and serves
+//! requests in admission order; request handlers run under
+//! `catch_unwind` (the same containment discipline as the live ring's
+//! node jobs), so a panicking handler produces a clean
+//! [`Response::Error`] instead of killing the daemon.
+//!
+//! Training requests checkpoint after every segment when the daemon is
+//! configured with a checkpoint path, so `kill -9` at any point loses
+//! at most the segment in flight; rerunning `learn`/`serve` with the
+//! same flags resumes bit-identically from the last boundary.
+
+use crate::coordinator::live::panic_message;
+use crate::net::wire::{put_f32s, put_len, put_u32, put_u64, put_u8, Reader};
+use crate::net::Channel;
+use crate::serve::queue::{bounded, AdmissionError, BoundedQueue};
+use crate::serve::session::{Checkpointable, LearnSession};
+use anyhow::{Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// A client request, decoded off the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Score flat row-major rows against the current model.
+    Score { xs: Vec<f32> },
+    /// Report session progress and daemon health.
+    Status,
+    /// Advance the session by up to `segments` segments (stops early at
+    /// the session's configured target).
+    Train { segments: u32 },
+    /// Elastic reconfiguration: change the sift worker count for
+    /// subsequent segments without restarting the daemon.
+    Reconfigure { workers: u32 },
+    /// Hold the dispatcher for `millis` — a maintenance/drain hook
+    /// (also how the tests make "daemon busy" deterministic).
+    Pause { millis: u32 },
+    /// Checkpoint (if configured) and stop serving.
+    Shutdown,
+}
+
+/// The daemon's reply to one [`Request`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Scores(Vec<f32>),
+    Status {
+        fingerprint: u64,
+        segments_done: u64,
+        n_seen: u64,
+        n_queried: u64,
+        workers: u32,
+        /// Requests shed by admission control since startup.
+        shed: u64,
+    },
+    Done { segments_done: u64 },
+    /// Admission control refused the request: the work queue already
+    /// holds `capacity` pending requests. Retry later.
+    Busy { capacity: u32 },
+    Error(String),
+    Bye,
+}
+
+const REQ_SCORE: u8 = 1;
+const REQ_STATUS: u8 = 2;
+const REQ_TRAIN: u8 = 3;
+const REQ_RECONFIGURE: u8 = 4;
+const REQ_PAUSE: u8 = 5;
+const REQ_SHUTDOWN: u8 = 6;
+
+const RESP_SCORES: u8 = 1;
+const RESP_STATUS: u8 = 2;
+const RESP_DONE: u8 = 3;
+const RESP_BUSY: u8 = 4;
+const RESP_ERROR: u8 = 5;
+const RESP_BYE: u8 = 6;
+
+impl Request {
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        match self {
+            Request::Score { xs } => {
+                put_u8(&mut buf, REQ_SCORE);
+                put_f32s(&mut buf, xs)?;
+            }
+            Request::Status => put_u8(&mut buf, REQ_STATUS),
+            Request::Train { segments } => {
+                put_u8(&mut buf, REQ_TRAIN);
+                put_u32(&mut buf, *segments);
+            }
+            Request::Reconfigure { workers } => {
+                put_u8(&mut buf, REQ_RECONFIGURE);
+                put_u32(&mut buf, *workers);
+            }
+            Request::Pause { millis } => {
+                put_u8(&mut buf, REQ_PAUSE);
+                put_u32(&mut buf, *millis);
+            }
+            Request::Shutdown => put_u8(&mut buf, REQ_SHUTDOWN),
+        }
+        Ok(buf)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        let req = match r.u8()? {
+            REQ_SCORE => Request::Score { xs: r.f32s()? },
+            REQ_STATUS => Request::Status,
+            REQ_TRAIN => Request::Train { segments: r.u32()? },
+            REQ_RECONFIGURE => Request::Reconfigure { workers: r.u32()? },
+            REQ_PAUSE => Request::Pause { millis: r.u32()? },
+            REQ_SHUTDOWN => Request::Shutdown,
+            other => anyhow::bail!("unknown request tag {other}"),
+        };
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after request");
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        match self {
+            Response::Scores(vs) => {
+                put_u8(&mut buf, RESP_SCORES);
+                put_f32s(&mut buf, vs)?;
+            }
+            Response::Status { fingerprint, segments_done, n_seen, n_queried, workers, shed } => {
+                put_u8(&mut buf, RESP_STATUS);
+                put_u64(&mut buf, *fingerprint);
+                put_u64(&mut buf, *segments_done);
+                put_u64(&mut buf, *n_seen);
+                put_u64(&mut buf, *n_queried);
+                put_u32(&mut buf, *workers);
+                put_u64(&mut buf, *shed);
+            }
+            Response::Done { segments_done } => {
+                put_u8(&mut buf, RESP_DONE);
+                put_u64(&mut buf, *segments_done);
+            }
+            Response::Busy { capacity } => {
+                put_u8(&mut buf, RESP_BUSY);
+                put_u32(&mut buf, *capacity);
+            }
+            Response::Error(msg) => {
+                put_u8(&mut buf, RESP_ERROR);
+                put_len(&mut buf, msg.len())?;
+                buf.extend_from_slice(msg.as_bytes());
+            }
+            Response::Bye => put_u8(&mut buf, RESP_BYE),
+        }
+        Ok(buf)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        let resp = match r.u8()? {
+            RESP_SCORES => Response::Scores(r.f32s()?),
+            RESP_STATUS => Response::Status {
+                fingerprint: r.u64()?,
+                segments_done: r.u64()?,
+                n_seen: r.u64()?,
+                n_queried: r.u64()?,
+                workers: r.u32()?,
+                shed: r.u64()?,
+            },
+            RESP_DONE => Response::Done { segments_done: r.u64()? },
+            RESP_BUSY => Response::Busy { capacity: r.u32()? },
+            RESP_ERROR => {
+                let n = r.u32()? as usize;
+                let msg = String::from_utf8(r.bytes(n)?)
+                    .map_err(|_| anyhow::anyhow!("error message is not valid utf-8"))?;
+                Response::Error(msg)
+            }
+            RESP_BYE => Response::Bye,
+            other => anyhow::bail!("unknown response tag {other}"),
+        };
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after response");
+        Ok(resp)
+    }
+}
+
+/// Daemon runtime knobs (both elastic; neither affects learning).
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Admission-queue capacity shared by every client.
+    pub queue_cap: usize,
+    /// Checkpoint path; when set, training checkpoints every segment
+    /// and shutdown saves a final snapshot.
+    pub checkpoint: Option<PathBuf>,
+}
+
+/// What the daemon did over its lifetime.
+#[derive(Debug, Clone, Copy)]
+pub struct DaemonReport {
+    /// Requests admitted and served (shed requests excluded).
+    pub requests_served: u64,
+    /// Requests refused by admission control.
+    pub shed: u64,
+    pub segments_done: u64,
+}
+
+/// One admitted unit of work: the request plus the reply slot of the
+/// client thread that admitted it.
+struct ClientJob {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+}
+
+/// Serve `clients` until a [`Request::Shutdown`] arrives or every
+/// client disconnects. Consumes the session and hands it back with the
+/// report so callers can inspect (or keep training) the final model.
+pub fn serve<L: Checkpointable>(
+    mut session: LearnSession<L>,
+    clients: Vec<Box<dyn Channel>>,
+    cfg: DaemonConfig,
+) -> Result<(DaemonReport, LearnSession<L>)> {
+    anyhow::ensure!(!clients.is_empty(), "daemon needs at least one client channel");
+    let (queue, rx) = bounded::<ClientJob>(cfg.queue_cap);
+    let shed_counter = queue.shed_counter();
+
+    let report = std::thread::scope(|s| {
+        for chan in clients {
+            let q = queue.clone();
+            s.spawn(move || client_loop(chan, q));
+        }
+        // Only client threads hold producer handles now: when the last
+        // client disconnects, `rx.recv()` returns `None` and the
+        // dispatcher stops instead of hanging.
+        drop(queue);
+
+        let mut served = 0u64;
+        while let Some(job) = rx.recv() {
+            served += 1;
+            let resp = match catch_unwind(AssertUnwindSafe(|| {
+                handle_request(&mut session, job.req, &cfg, &shed_counter)
+            })) {
+                Ok(resp) => resp,
+                Err(payload) => Response::Error(format!(
+                    "request handler panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+            };
+            let bye = matches!(resp, Response::Bye);
+            let _ = job.reply.send(resp);
+            if bye {
+                break;
+            }
+        }
+        DaemonReport {
+            requests_served: served,
+            shed: shed_counter.load(Ordering::Relaxed),
+            segments_done: session.segments_done(),
+        }
+    });
+    Ok((report, session))
+}
+
+/// Per-client reader: decode a request, offer it to the shared queue,
+/// relay the reply. A fresh reply channel per request means a job
+/// dropped unserved (daemon shut down first) surfaces as a recv error
+/// here — never a hang.
+fn client_loop(mut chan: Box<dyn Channel>, q: BoundedQueue<ClientJob>) {
+    loop {
+        let frame = match chan.recv() {
+            Ok(f) => f,
+            Err(_) => return, // client disconnected
+        };
+        let req = match Request::decode(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                if send_response(chan.as_mut(), &Response::Error(format!("bad request: {e}")))
+                    .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+        };
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        match q.try_push(ClientJob { req, reply: reply_tx }) {
+            Ok(()) => match reply_rx.recv() {
+                Ok(resp) => {
+                    let bye = matches!(resp, Response::Bye);
+                    if send_response(chan.as_mut(), &resp).is_err() || bye {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    let _ = send_response(
+                        chan.as_mut(),
+                        &Response::Error("daemon stopped before serving this request".into()),
+                    );
+                    return;
+                }
+            },
+            Err(AdmissionError::Full { capacity }) => {
+                if send_response(chan.as_mut(), &Response::Busy { capacity: capacity as u32 })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Err(AdmissionError::Closed) => {
+                let _ = send_response(
+                    chan.as_mut(),
+                    &Response::Error("daemon is shutting down".into()),
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn send_response(chan: &mut dyn Channel, resp: &Response) -> Result<()> {
+    chan.send(&resp.encode()?)
+}
+
+fn handle_request<L: Checkpointable>(
+    session: &mut LearnSession<L>,
+    req: Request,
+    cfg: &DaemonConfig,
+    shed: &AtomicU64,
+) -> Response {
+    match req {
+        Request::Score { xs } => match session.score_rows(&xs) {
+            Ok(scores) => Response::Scores(scores),
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::Status => Response::Status {
+            fingerprint: session.fingerprint(),
+            segments_done: session.segments_done(),
+            n_seen: session.n_seen(),
+            n_queried: session.n_queried(),
+            workers: session.config().workers as u32,
+            shed: shed.load(Ordering::Relaxed),
+        },
+        Request::Train { segments } => {
+            for _ in 0..segments {
+                if session.is_complete() {
+                    break;
+                }
+                session.run_segment();
+                if let Some(path) = &cfg.checkpoint {
+                    if let Err(e) = session.checkpoint().and_then(|ck| ck.save(path)) {
+                        return Response::Error(format!("checkpoint failed: {e}"));
+                    }
+                }
+            }
+            Response::Done { segments_done: session.segments_done() }
+        }
+        Request::Reconfigure { workers } => {
+            session.set_workers(workers as usize);
+            Response::Done { segments_done: session.segments_done() }
+        }
+        Request::Pause { millis } => {
+            std::thread::sleep(Duration::from_millis(millis as u64));
+            Response::Done { segments_done: session.segments_done() }
+        }
+        Request::Shutdown => {
+            if let Some(path) = &cfg.checkpoint {
+                if let Err(e) = session.checkpoint().and_then(|ck| ck.save(path)) {
+                    return Response::Error(format!("checkpoint on shutdown failed: {e}"));
+                }
+            }
+            Response::Bye
+        }
+    }
+}
+
+/// Bind a Unix socket and accept exactly `n` client connections,
+/// handing each back as an owned [`Channel`] (same framing as
+/// [`crate::net::UdsTransport`]).
+pub fn accept_clients_uds(path: &Path, n: usize) -> Result<Vec<Box<dyn Channel>>> {
+    use crate::net::transport::StreamChannel;
+    anyhow::ensure!(n >= 1, "daemon needs at least one client");
+    let _ = std::fs::remove_file(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .with_context(|| format!("binding unix socket {}", path.display()))?;
+    let mut out: Vec<Box<dyn Channel>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (stream, _) = listener.accept().context("accepting daemon client")?;
+        out.push(Box::new(StreamChannel::new(stream)));
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(out)
+}
+
+/// TCP flavor of [`accept_clients_uds`].
+pub fn accept_clients_tcp(addr: &str, n: usize) -> Result<Vec<Box<dyn Channel>>> {
+    use crate::net::transport::StreamChannel;
+    anyhow::ensure!(n >= 1, "daemon needs at least one client");
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding tcp listener on {addr}"))?;
+    let mut out: Vec<Box<dyn Channel>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (stream, _) = listener.accept().context("accepting daemon client")?;
+        let _ = stream.set_nodelay(true);
+        out.push(Box::new(StreamChannel::new(stream)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DIM;
+    use crate::net::{InProcTransport, TaskKind, Transport};
+    use crate::serve::session::{svm_session_learner, SessionConfig};
+
+    fn small_cfg() -> SessionConfig {
+        let mut cfg = SessionConfig::new(TaskKind::Svm);
+        cfg.nodes = 2;
+        cfg.chunk = 40;
+        cfg.warmstart = 60;
+        cfg.segments = 2;
+        cfg.test_size = 50;
+        cfg
+    }
+
+    fn roundtrip(hub: &mut InProcTransport, i: usize, req: &Request) -> Response {
+        hub.send_to(i, &req.encode().unwrap()).unwrap();
+        Response::decode(&hub.recv_from(i).unwrap()).unwrap()
+    }
+
+    fn boxed(ends: Vec<crate::net::transport::InProcChannel>) -> Vec<Box<dyn Channel>> {
+        ends.into_iter().map(|c| Box::new(c) as Box<dyn Channel>).collect()
+    }
+
+    #[test]
+    fn protocol_roundtrips_every_variant() {
+        let reqs = [
+            Request::Score { xs: vec![0.5, -1.0, 2.25] },
+            Request::Status,
+            Request::Train { segments: 3 },
+            Request::Reconfigure { workers: 8 },
+            Request::Pause { millis: 10 },
+            Request::Shutdown,
+        ];
+        for req in &reqs {
+            assert_eq!(&Request::decode(&req.encode().unwrap()).unwrap(), req);
+        }
+        let resps = [
+            Response::Scores(vec![1.0, -0.0]),
+            Response::Status {
+                fingerprint: 7,
+                segments_done: 1,
+                n_seen: 2,
+                n_queried: 3,
+                workers: 4,
+                shed: 5,
+            },
+            Response::Done { segments_done: 9 },
+            Response::Busy { capacity: 64 },
+            Response::Error("nope".into()),
+            Response::Bye,
+        ];
+        for resp in &resps {
+            assert_eq!(&Response::decode(&resp.encode().unwrap()).unwrap(), resp);
+        }
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn daemon_serves_status_train_score_shutdown() {
+        let session = LearnSession::create(small_cfg(), &svm_session_learner());
+        let fp = session.fingerprint();
+        let (mut hub, ends) = InProcTransport::pair(1);
+        let clients = boxed(ends);
+        let handle = std::thread::spawn(move || {
+            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+        });
+
+        match roundtrip(&mut hub, 0, &Request::Status) {
+            Response::Status { fingerprint, segments_done: 0, .. } => {
+                assert_eq!(fingerprint, fp)
+            }
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+        assert_eq!(
+            roundtrip(&mut hub, 0, &Request::Train { segments: 5 }),
+            Response::Done { segments_done: 2 },
+            "training stops at the session target"
+        );
+        match roundtrip(&mut hub, 0, &Request::Score { xs: vec![0.0; 2 * DIM] }) {
+            Response::Scores(s) => assert_eq!(s.len(), 2),
+            other => panic!("unexpected score reply: {other:?}"),
+        }
+        match roundtrip(&mut hub, 0, &Request::Score { xs: vec![0.0; DIM + 3] }) {
+            Response::Error(msg) => assert!(msg.contains("multiple"), "{msg}"),
+            other => panic!("bad-shape request must error, got {other:?}"),
+        }
+        assert_eq!(roundtrip(&mut hub, 0, &Request::Shutdown), Response::Bye);
+
+        let (report, session) = handle.join().unwrap();
+        assert_eq!(report.requests_served, 5);
+        assert_eq!(report.shed, 0);
+        assert_eq!(session.segments_done(), 2);
+        assert!(session.telemetry().rows_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_busy_while_other_clients_stay_live() {
+        let session = LearnSession::create(small_cfg(), &svm_session_learner());
+        let (mut hub, ends) = InProcTransport::pair(3);
+        let clients = boxed(ends);
+        let handle = std::thread::spawn(move || {
+            serve(session, clients, DaemonConfig { queue_cap: 1, checkpoint: None }).unwrap()
+        });
+
+        // Occupy the dispatcher deterministically, then fill the
+        // one-slot queue from a second client; a third client's request
+        // must shed as Busy without waiting for the dispatcher.
+        hub.send_to(0, &Request::Pause { millis: 500 }.encode().unwrap()).unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        hub.send_to(1, &Request::Status.encode().unwrap()).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        hub.send_to(2, &Request::Status.encode().unwrap()).unwrap();
+        assert_eq!(
+            Response::decode(&hub.recv_from(2).unwrap()).unwrap(),
+            Response::Busy { capacity: 1 },
+            "third client must be shed immediately"
+        );
+
+        // The paused and queued requests both complete normally.
+        match Response::decode(&hub.recv_from(0).unwrap()).unwrap() {
+            Response::Done { .. } => {}
+            other => panic!("pause should complete: {other:?}"),
+        }
+        match Response::decode(&hub.recv_from(1).unwrap()).unwrap() {
+            Response::Status { .. } => {}
+            other => panic!("queued status should complete: {other:?}"),
+        }
+        assert_eq!(roundtrip(&mut hub, 0, &Request::Shutdown), Response::Bye);
+        drop(hub); // release the still-connected clients 1 and 2
+        let (report, _session) = handle.join().unwrap();
+        assert!(report.shed >= 1, "Busy replies must be counted as shed");
+        assert_eq!(report.requests_served, 4, "shed requests are not served");
+    }
+
+    #[test]
+    fn elastic_reconfigure_between_trains_keeps_results_identical() {
+        // Direct session, fixed single worker throughout.
+        let mut direct = LearnSession::create(small_cfg(), &svm_session_learner());
+        direct.set_workers(1);
+        while !direct.is_complete() {
+            direct.run_segment();
+        }
+
+        // Daemon session: one segment on 1 worker, reconfigure to 3,
+        // finish — the model must come out bit-identical.
+        let session = LearnSession::create(small_cfg(), &svm_session_learner());
+        let (mut hub, ends) = InProcTransport::pair(1);
+        let clients = boxed(ends);
+        let handle = std::thread::spawn(move || {
+            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+        });
+        roundtrip(&mut hub, 0, &Request::Reconfigure { workers: 1 });
+        roundtrip(&mut hub, 0, &Request::Train { segments: 1 });
+        roundtrip(&mut hub, 0, &Request::Reconfigure { workers: 3 });
+        roundtrip(&mut hub, 0, &Request::Train { segments: 1 });
+        assert_eq!(roundtrip(&mut hub, 0, &Request::Shutdown), Response::Bye);
+        let (_report, served) = handle.join().unwrap();
+
+        let test = direct.test_set();
+        assert_eq!(
+            direct.final_error(&test).to_bits(),
+            served.final_error(&test).to_bits(),
+            "daemon reconfiguration changed the learned model"
+        );
+        assert_eq!(direct.n_queried(), served.n_queried());
+    }
+}

@@ -1,0 +1,39 @@
+//! Serving layer: persistent, resumable para-active sessions.
+//!
+//! Where [`crate::coordinator::live`] is a single bounded-queue run
+//! from warmstart to budget, this module makes that machinery
+//! *operable*:
+//!
+//! * [`session`] — [`session::LearnSession`], the segment-granular
+//!   sift → merge → update loop whose entire state (learner, Eq-5
+//!   coin-flip RNGs, stream cursors, counters, latency telemetry)
+//!   round-trips through a checkpoint with bit identity;
+//! * [`checkpoint`] — the atomic on-disk snapshot format, built on the
+//!   overflow-checked [`crate::net::wire`] codecs;
+//! * [`queue`] — the bounded admission queue with typed shed errors
+//!   ([`queue::AdmissionError`]);
+//! * [`daemon`] — the client-facing daemon: multiple concurrent
+//!   connections over any [`crate::net::Channel`], strict admission
+//!   control ([`daemon::Response::Busy`]), elastic worker
+//!   reconfiguration between segments, panic-contained request
+//!   handling, and checkpoint-on-shutdown.
+//!
+//! CLI entry points: `para-active learn` (init / run / resume / status
+//! against a checkpoint file — `kill -9` loses at most the in-flight
+//! segment) and `para-active serve` (host a session for remote
+//! clients).
+
+pub mod checkpoint;
+pub mod daemon;
+pub mod queue;
+pub mod session;
+
+pub use checkpoint::{NodeCursor, SessionCheckpoint};
+pub use daemon::{
+    accept_clients_tcp, accept_clients_uds, serve, DaemonConfig, DaemonReport, Request, Response,
+};
+pub use queue::{bounded, AdmissionError, BoundedQueue, QueueReceiver};
+pub use session::{
+    nn_session_learner, svm_session_learner, Checkpointable, LearnSession, SegmentReport,
+    SessionConfig, SiftTelemetry,
+};

@@ -1,0 +1,168 @@
+//! Bounded admission queue for the serving daemon.
+//!
+//! The live ring ([`crate::coordinator::live`]) replaced its unbounded
+//! uplinks with `sync_channel` backpressure but never *sheds* work —
+//! inside one coordinated run every sifted example must eventually be
+//! broadcast. A daemon serving outside clients has the opposite
+//! contract: when the work queue is full the right move is to refuse
+//! the request immediately with a typed error the client can retry on,
+//! not to let one slow client stall every other connection. This module
+//! is that admission layer: a `sync_channel` of fixed capacity whose
+//! producer side never blocks and counts every rejection.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Why an enqueue was refused. `Full` is the admission-control signal
+/// (shed: the queue is at capacity, retry later); `Closed` means the
+/// consumer is gone and the daemon is shutting down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The queue already holds `capacity` pending items.
+    Full { capacity: usize },
+    /// The consumer dropped its receiver; no more work will be served.
+    Closed,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Full { capacity } => {
+                write!(f, "work queue full ({capacity} pending requests); request shed")
+            }
+            AdmissionError::Closed => write!(f, "work queue closed; daemon is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Producer handle: cloneable, never blocks. Every client connection
+/// holds one; all clones share the shed counter so the daemon can
+/// report total rejections.
+pub struct BoundedQueue<T> {
+    tx: SyncSender<T>,
+    capacity: usize,
+    shed: Arc<AtomicU64>,
+}
+
+// Manual impl: `T` need not be `Clone` for the *handle* to be.
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue {
+            tx: self.tx.clone(),
+            capacity: self.capacity,
+            shed: Arc::clone(&self.shed),
+        }
+    }
+}
+
+/// Consumer handle (the daemon's dispatcher loop).
+pub struct QueueReceiver<T> {
+    rx: Receiver<T>,
+}
+
+/// Build a queue admitting at most `capacity` pending items.
+pub fn bounded<T>(capacity: usize) -> (BoundedQueue<T>, QueueReceiver<T>) {
+    assert!(capacity >= 1, "admission queue needs capacity >= 1");
+    let (tx, rx) = sync_channel(capacity);
+    (
+        BoundedQueue { tx, capacity, shed: Arc::new(AtomicU64::new(0)) },
+        QueueReceiver { rx },
+    )
+}
+
+impl<T> BoundedQueue<T> {
+    /// Admit `item` if the queue has room, else reject *now* — this
+    /// never blocks the caller. `Full` rejections bump the shared shed
+    /// counter.
+    pub fn try_push(&self, item: T) -> Result<(), AdmissionError> {
+        match self.tx.try_send(item) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(AdmissionError::Full { capacity: self.capacity })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(AdmissionError::Closed),
+        }
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total `Full` rejections across every clone of this handle.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// The shared shed counter itself — lets a consumer keep reading
+    /// rejections after dropping its producer handles (dropping them is
+    /// how the dispatcher learns that every client is gone).
+    pub fn shed_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.shed)
+    }
+}
+
+impl<T> QueueReceiver<T> {
+    /// Block for the next item; `None` once every producer is gone.
+    pub fn recv(&self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking pop.
+    pub fn try_recv(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_capacity_then_sheds_with_typed_error() {
+        let (q, rx) = bounded::<u32>(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        let err = q.try_push(3).unwrap_err();
+        assert_eq!(err, AdmissionError::Full { capacity: 2 });
+        assert_eq!(q.shed_count(), 1);
+        // Draining one slot re-admits.
+        assert_eq!(rx.recv(), Some(1));
+        q.try_push(4).unwrap();
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(4));
+        assert_eq!(q.shed_count(), 1, "successful pushes never count as shed");
+    }
+
+    #[test]
+    fn closed_queue_reports_shutdown_not_full() {
+        let (q, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert_eq!(q.try_push(1).unwrap_err(), AdmissionError::Closed);
+        assert_eq!(q.shed_count(), 0, "shutdown rejections are not shed");
+    }
+
+    #[test]
+    fn shed_counter_is_shared_across_clones() {
+        let (q, _rx) = bounded::<u32>(1);
+        let q2 = q.clone();
+        q.try_push(1).unwrap();
+        assert!(q2.try_push(2).is_err());
+        assert!(q.try_push(3).is_err());
+        assert_eq!(q.shed_count(), 2);
+        assert_eq!(q2.shed_count(), 2);
+    }
+
+    #[test]
+    fn errors_render_actionable_messages() {
+        let full = AdmissionError::Full { capacity: 8 }.to_string();
+        assert!(full.contains("shed"), "{full}");
+        assert!(full.contains('8'), "{full}");
+        let closed = AdmissionError::Closed.to_string();
+        assert!(closed.contains("shutting down"), "{closed}");
+    }
+}

@@ -1,0 +1,582 @@
+//! Resumable, segment-granular learning sessions.
+//!
+//! [`LearnSession`] packages the para-active loop (warmstart, then
+//! repeated sift-against-a-frozen-view → merge → update phases) into a
+//! unit that can stop and restart at any segment boundary with **bit
+//! identity**: the learner state, every node's Eq-5 coin-flip RNG, and
+//! every node's stream cursor round-trip through
+//! [`SessionCheckpoint`], so a killed process rerun with the same flags
+//! produces exactly the model an uninterrupted run would have.
+//!
+//! Within a segment each logical node sifts a fixed chunk of its own
+//! stream against a *frozen clone* of the learner (cheap since
+//! [`crate::svm::lasvm::LaSvm`]'s clone drops the triangular kernel
+//! cache) with the phase-start example count in Eq 5 — the synchronous
+//! coordinator's counting discipline. Selections merge node-major.
+//! Because no node reads another node's progress inside a segment, the
+//! result is independent of the worker-thread count: workers are an
+//! *elastic* execution knob, reconfigurable between segments (and
+//! deliberately excluded from the session fingerprint), while `nodes`
+//! is part of the learning problem.
+
+use crate::active::margin::MarginSifter;
+use crate::active::Sifter;
+use crate::data::{ExampleStream, StreamConfig, TestSet, DIM};
+use crate::exec::{Job, PoolConfig, WorkerPool};
+use crate::learner::Learner;
+use crate::net::{config_fingerprint, TaskKind};
+use crate::nn::{AdaGradMlp, MlpConfig};
+use crate::serve::checkpoint::{NodeCursor, SessionCheckpoint};
+use crate::svm::lasvm::LaSvm;
+use crate::svm::{LaSvmConfig, RbfKernel};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Learners a session can freeze, clone, and checkpoint.
+pub trait Checkpointable: Learner + Clone + Send {
+    /// Serialize the full resumable state (see the learner's inherent
+    /// `save_state`).
+    fn save_state(&self) -> Result<Vec<u8>>;
+    /// Restore state saved by [`Checkpointable::save_state`] into a
+    /// model built from the same configuration.
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()>;
+}
+
+impl Checkpointable for LaSvm<RbfKernel> {
+    fn save_state(&self) -> Result<Vec<u8>> {
+        LaSvm::save_state(self)
+    }
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        LaSvm::load_state(self, bytes)
+    }
+}
+
+impl Checkpointable for AdaGradMlp {
+    fn save_state(&self) -> Result<Vec<u8>> {
+        AdaGradMlp::save_state(self)
+    }
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        AdaGradMlp::load_state(self, bytes)
+    }
+}
+
+/// The paper-default learner for an SVM serving session.
+pub fn svm_session_learner() -> LaSvm<RbfKernel> {
+    LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default())
+}
+
+/// The paper-default learner for an NN serving session.
+pub fn nn_session_learner() -> AdaGradMlp {
+    AdaGradMlp::new(MlpConfig::paper(DIM))
+}
+
+/// Session shape. Everything except `workers` and `queue_cap` defines
+/// the learning problem and is folded into [`SessionConfig::fingerprint`];
+/// those two are elastic runtime knobs a resume may change freely.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub task: TaskKind,
+    /// Logical sift nodes (fixed for the session's lifetime).
+    pub nodes: usize,
+    /// Examples each node sifts per segment.
+    pub chunk: usize,
+    /// Passive warmstart examples before the first segment.
+    pub warmstart: usize,
+    /// Target segment count for `learn run`.
+    pub segments: usize,
+    /// Eq-5 aggressiveness.
+    pub eta: f64,
+    pub seed: u64,
+    pub test_size: usize,
+    /// Worker threads for the sift pool; 0 = one per node. Elastic.
+    pub workers: usize,
+    /// Daemon admission-queue capacity. Elastic.
+    pub queue_cap: usize,
+}
+
+impl SessionConfig {
+    pub fn new(task: TaskKind) -> Self {
+        SessionConfig {
+            task,
+            nodes: 4,
+            chunk: 200,
+            warmstart: 200,
+            segments: 8,
+            // Paper etas: 0.1 for the parallel SVM runs, 0.0005 for NN.
+            eta: match task {
+                TaskKind::Svm => 0.1,
+                TaskKind::Nn => 0.0005,
+            },
+            seed: 17,
+            test_size: 400,
+            workers: 0,
+            queue_cap: 64,
+        }
+    }
+
+    /// Fingerprint of the learning-relevant fields only.
+    pub fn fingerprint(&self) -> u64 {
+        let task = match self.task {
+            TaskKind::Svm => 0u64,
+            TaskKind::Nn => 1,
+        };
+        config_fingerprint(&[
+            task,
+            self.nodes as u64,
+            self.chunk as u64,
+            self.warmstart as u64,
+            self.segments as u64,
+            self.eta.to_bits(),
+            self.seed,
+            self.test_size as u64,
+        ])
+    }
+
+    /// The task's data distribution, keyed by the session seed.
+    pub fn stream_config(&self) -> StreamConfig {
+        match self.task {
+            TaskKind::Svm => StreamConfig::svm_task(),
+            TaskKind::Nn => StreamConfig::nn_task(),
+        }
+        .with_seed(self.seed)
+    }
+}
+
+/// Live sift telemetry: per-node-chunk latencies plus sustained
+/// throughput, preserved across restarts via the checkpoint.
+#[derive(Debug, Clone, Default)]
+pub struct SiftTelemetry {
+    /// Wall seconds for each (node, segment) sift chunk, merge order.
+    chunk_latencies: Vec<f64>,
+    /// Total wall seconds across parallel sift phases.
+    sift_wall: f64,
+    /// Rows pushed through the sifters (excludes warmstart).
+    rows_sifted: u64,
+}
+
+impl SiftTelemetry {
+    pub fn samples(&self) -> usize {
+        self.chunk_latencies.len()
+    }
+
+    fn percentile_ms(&self, q: f64) -> f64 {
+        if self.chunk_latencies.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.chunk_latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)] * 1e3
+    }
+
+    /// Median per-chunk sift latency, milliseconds.
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(0.50)
+    }
+
+    /// Tail per-chunk sift latency, milliseconds.
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(0.99)
+    }
+
+    /// Sustained sift throughput over the session's lifetime.
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.sift_wall <= 0.0 {
+            return 0.0;
+        }
+        self.rows_sifted as f64 / self.sift_wall
+    }
+
+    pub fn rows_sifted(&self) -> u64 {
+        self.rows_sifted
+    }
+}
+
+/// What one [`LearnSession::run_segment`] call did.
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentReport {
+    /// 1-based index of the segment just completed.
+    pub segment: u64,
+    /// Examples selected and merged this segment.
+    pub selected: usize,
+    /// Wall seconds of the parallel sift phase.
+    pub sift_seconds: f64,
+}
+
+/// One selected example: features, label, query probability.
+type Selected = (Vec<f32>, f32, f64);
+/// A node's segment output: its sifter and stream (moved back after the
+/// round), selections in lane order, and the chunk's sift latency.
+type NodeSift = (MarginSifter, ExampleStream, Vec<Selected>, f64);
+
+/// A resumable para-active session over `nodes` logical sift nodes.
+pub struct LearnSession<L: Checkpointable> {
+    cfg: SessionConfig,
+    stream_cfg: StreamConfig,
+    fingerprint: u64,
+    learner: L,
+    sifters: Vec<MarginSifter>,
+    streams: Vec<ExampleStream>,
+    segments_done: u64,
+    /// Cluster-wide examples seen, warmstart included (the Eq-5 `n`).
+    n_seen: u64,
+    n_queried: u64,
+    telemetry: SiftTelemetry,
+}
+
+/// Per-node sifter seed: decorrelate node coin-flips from the shared
+/// experiment seed (same construction as `SifterSpec`-style salting).
+fn sifter_seed(seed: u64, node: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(node as u64 + 1)
+}
+
+impl<L: Checkpointable> LearnSession<L> {
+    /// Start a fresh session: warmstart `proto` passively on a
+    /// dedicated stream, then stand up per-node sifters and streams.
+    pub fn create(cfg: SessionConfig, proto: &L) -> Self {
+        assert!(cfg.nodes >= 1, "a session needs at least one node");
+        assert!(cfg.chunk >= 1, "segment chunk must be positive");
+        let stream_cfg = cfg.stream_config();
+        let fingerprint = cfg.fingerprint();
+        let mut learner = proto.clone();
+        let mut warm = ExampleStream::for_node(&stream_cfg, u32::MAX - 1);
+        let mut x = vec![0.0f32; learner.dim()];
+        for _ in 0..cfg.warmstart {
+            let y = warm.next_into(&mut x);
+            learner.update(&x, y, 1.0);
+        }
+        let sifters = (0..cfg.nodes)
+            .map(|i| MarginSifter::new(cfg.eta, sifter_seed(cfg.seed, i)))
+            .collect();
+        let streams =
+            (0..cfg.nodes).map(|i| ExampleStream::for_node(&stream_cfg, i as u32)).collect();
+        let n_seen = cfg.warmstart as u64;
+        LearnSession {
+            cfg,
+            stream_cfg,
+            fingerprint,
+            learner,
+            sifters,
+            streams,
+            segments_done: 0,
+            n_seen,
+            n_queried: 0,
+            telemetry: SiftTelemetry::default(),
+        }
+    }
+
+    /// Rebuild a session from a checkpoint. `proto` must be configured
+    /// exactly as the original (the learner blob carries state, not
+    /// hyper-parameters); the fingerprint check refuses mismatched
+    /// flags before any state is touched.
+    pub fn resume(cfg: SessionConfig, proto: &L, ck: &SessionCheckpoint) -> Result<Self> {
+        anyhow::ensure!(
+            ck.task == cfg.task,
+            "checkpoint is a {} session, flags say {}",
+            ck.task.name(),
+            cfg.task.name()
+        );
+        anyhow::ensure!(
+            ck.fingerprint == cfg.fingerprint(),
+            "checkpoint fingerprint {:#018x} does not match the configured session \
+             {:#018x}; refusing to resume with different learning parameters",
+            ck.fingerprint,
+            cfg.fingerprint()
+        );
+        anyhow::ensure!(
+            ck.nodes.len() == cfg.nodes,
+            "checkpoint has {} node cursors, config wants {}",
+            ck.nodes.len(),
+            cfg.nodes
+        );
+        let stream_cfg = cfg.stream_config();
+        let mut learner = proto.clone();
+        learner.load_state(&ck.learner)?;
+        let sifters = ck
+            .nodes
+            .iter()
+            .map(|n| MarginSifter::from_state(n.eta, n.sifter_rng))
+            .collect();
+        let streams = ck
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let mut s = ExampleStream::for_node(&stream_cfg, i as u32);
+                s.restore(n.stream);
+                s
+            })
+            .collect();
+        Ok(LearnSession {
+            fingerprint: ck.fingerprint,
+            learner,
+            sifters,
+            streams,
+            segments_done: ck.segments_done,
+            n_seen: ck.n_seen,
+            n_queried: ck.n_queried,
+            telemetry: SiftTelemetry {
+                chunk_latencies: ck.chunk_latencies.clone(),
+                sift_wall: ck.sift_wall,
+                rows_sifted: ck.rows_sifted,
+            },
+            cfg,
+            stream_cfg,
+        })
+    }
+
+    /// Snapshot everything a resume needs (segment-boundary state).
+    pub fn checkpoint(&self) -> Result<SessionCheckpoint> {
+        let nodes = self
+            .sifters
+            .iter()
+            .zip(&self.streams)
+            .map(|(sifter, stream)| NodeCursor {
+                eta: sifter.eta,
+                sifter_rng: sifter.rng_state(),
+                stream: stream.cursor(),
+            })
+            .collect();
+        Ok(SessionCheckpoint {
+            task: self.cfg.task,
+            fingerprint: self.fingerprint,
+            segments_done: self.segments_done,
+            n_seen: self.n_seen,
+            n_queried: self.n_queried,
+            learner: self.learner.save_state()?,
+            nodes,
+            chunk_latencies: self.telemetry.chunk_latencies.clone(),
+            sift_wall: self.telemetry.sift_wall,
+            rows_sifted: self.telemetry.rows_sifted,
+        })
+    }
+
+    /// One sift → merge → update phase over every node.
+    pub fn run_segment(&mut self) -> SegmentReport {
+        let k = self.cfg.nodes;
+        let chunk = self.cfg.chunk;
+        let workers = if self.cfg.workers == 0 { k } else { self.cfg.workers };
+        // The synchronous counting discipline: every decision in this
+        // segment uses the phase-start cluster count.
+        let n_phase = self.n_seen;
+        let frozen = self.learner.clone();
+        let d = frozen.dim();
+        let sifters = std::mem::take(&mut self.sifters);
+        let streams = std::mem::take(&mut self.streams);
+
+        let t0 = Instant::now();
+        let outs: Vec<NodeSift> = WorkerPool::scope(PoolConfig::pinned(workers), |pool| {
+            let jobs: Vec<Job<'_, NodeSift>> = sifters
+                .into_iter()
+                .zip(streams)
+                .map(|(mut sifter, mut stream)| {
+                    let frozen = &frozen;
+                    Box::new(move |_w: usize| {
+                        let start = Instant::now();
+                        let mut xs = vec![0.0f32; chunk * d];
+                        let mut ys = vec![0.0f32; chunk];
+                        let mut scores = vec![0.0f32; chunk];
+                        stream.next_batch_into(&mut xs, &mut ys);
+                        frozen.score_batch(&xs, &mut scores);
+                        let mut sel: Vec<Selected> = Vec::new();
+                        for (j, &score) in scores.iter().enumerate() {
+                            let decision = sifter.decide(score, n_phase);
+                            if decision.queried {
+                                sel.push((
+                                    xs[j * d..(j + 1) * d].to_vec(),
+                                    ys[j],
+                                    decision.p,
+                                ));
+                            }
+                        }
+                        let latency = start.elapsed().as_secs_f64();
+                        (sifter, stream, sel, latency)
+                    }) as Job<'_, NodeSift>
+                })
+                .collect();
+            pool.run_round(jobs)
+        });
+        let sift_seconds = t0.elapsed().as_secs_f64();
+
+        // Node-major merge (run_round preserves submission order), then
+        // importance-weighted replay into the authoritative learner.
+        let mut selected = 0usize;
+        for (sifter, stream, sel, latency) in outs {
+            self.telemetry.chunk_latencies.push(latency);
+            for (x, y, p) in sel {
+                self.learner.update(&x, y, (1.0 / p) as f32);
+                selected += 1;
+            }
+            self.sifters.push(sifter);
+            self.streams.push(stream);
+        }
+        self.telemetry.sift_wall += sift_seconds;
+        self.telemetry.rows_sifted += (k * chunk) as u64;
+        self.n_seen += (k * chunk) as u64;
+        self.n_queried += selected as u64;
+        self.segments_done += 1;
+        SegmentReport { segment: self.segments_done, selected, sift_seconds }
+    }
+
+    /// Run to the configured segment target, checkpointing after every
+    /// segment when `checkpoint_path` is given — the property the
+    /// kill-and-resume smoke test exercises.
+    pub fn run_to_target(&mut self, checkpoint_path: Option<&std::path::Path>) -> Result<()> {
+        while !self.is_complete() {
+            self.run_segment();
+            if let Some(path) = checkpoint_path {
+                self.checkpoint()?.save(path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Score client-supplied rows (flat row-major, `DIM` columns)
+    /// against the current model.
+    pub fn score_rows(&self, xs: &[f32]) -> Result<Vec<f32>> {
+        let d = self.learner.dim();
+        anyhow::ensure!(!xs.is_empty(), "empty scoring request");
+        anyhow::ensure!(
+            xs.len() % d == 0,
+            "scoring payload length {} is not a multiple of the feature dim {d}",
+            xs.len()
+        );
+        let mut out = vec![0.0f32; xs.len() / d];
+        self.learner.score_batch(xs, &mut out);
+        Ok(out)
+    }
+
+    /// Change the sift worker count for subsequent segments. By the
+    /// frozen-view construction this cannot change any result — only
+    /// wall-clock — so it is safe between any two segments.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.cfg.workers = workers;
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.segments_done >= self.cfg.segments as u64
+    }
+
+    pub fn segments_done(&self) -> u64 {
+        self.segments_done
+    }
+
+    pub fn n_seen(&self) -> u64 {
+        self.n_seen
+    }
+
+    pub fn n_queried(&self) -> u64 {
+        self.n_queried
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    pub fn telemetry(&self) -> &SiftTelemetry {
+        &self.telemetry
+    }
+
+    pub fn learner(&self) -> &L {
+        &self.learner
+    }
+
+    /// Held-out test split for this session's task and seed.
+    pub fn test_set(&self) -> TestSet {
+        TestSet::generate(&self.stream_cfg, self.cfg.test_size)
+    }
+
+    /// Test error of the current model on this session's held-out split.
+    pub fn final_error(&self, test: &TestSet) -> f64 {
+        self.learner.test_error(test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(task: TaskKind) -> SessionConfig {
+        let mut cfg = SessionConfig::new(task);
+        cfg.nodes = 2;
+        cfg.chunk = 60;
+        cfg.warmstart = 80;
+        cfg.segments = 3;
+        cfg.test_size = 80;
+        cfg
+    }
+
+    #[test]
+    fn segments_advance_counters_and_telemetry() {
+        let cfg = small_cfg(TaskKind::Svm);
+        let mut s = LearnSession::create(cfg, &svm_session_learner());
+        assert_eq!(s.n_seen(), 80);
+        let r1 = s.run_segment();
+        assert_eq!(r1.segment, 1);
+        assert_eq!(s.n_seen(), 80 + 120);
+        assert!(s.n_queried() >= r1.selected as u64);
+        let _ = s.run_segment();
+        let _ = s.run_segment();
+        assert!(s.is_complete());
+        assert_eq!(s.telemetry().samples(), 6, "one latency sample per (node, segment)");
+        assert_eq!(s.telemetry().rows_sifted(), 360);
+        assert!(s.telemetry().p99_ms() >= s.telemetry().p50_ms());
+        assert!(s.telemetry().rows_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn worker_count_is_elastic_without_changing_results() {
+        let mut one = LearnSession::create(small_cfg(TaskKind::Svm), &svm_session_learner());
+        one.set_workers(1);
+        let mut many = LearnSession::create(small_cfg(TaskKind::Svm), &svm_session_learner());
+        many.set_workers(3);
+        while !one.is_complete() {
+            one.run_segment();
+            many.run_segment();
+        }
+        assert_eq!(one.n_seen(), many.n_seen());
+        assert_eq!(one.n_queried(), many.n_queried());
+        let test = one.test_set();
+        let (ea, eb) = (one.final_error(&test), many.final_error(&test));
+        assert_eq!(ea.to_bits(), eb.to_bits(), "elastic workers changed the model");
+    }
+
+    #[test]
+    fn fingerprint_tracks_learning_knobs_but_not_elastic_ones() {
+        let base = small_cfg(TaskKind::Svm);
+        let mut elastic = base.clone();
+        elastic.workers = 7;
+        elastic.queue_cap = 3;
+        assert_eq!(base.fingerprint(), elastic.fingerprint());
+        let mut different = base.clone();
+        different.eta = 0.2;
+        assert_ne!(base.fingerprint(), different.fingerprint());
+        let nn = small_cfg(TaskKind::Nn);
+        assert_ne!(base.fingerprint(), nn.fingerprint());
+    }
+
+    #[test]
+    fn resume_refuses_mismatched_fingerprint() {
+        let cfg = small_cfg(TaskKind::Svm);
+        let proto = svm_session_learner();
+        let mut s = LearnSession::create(cfg.clone(), &proto);
+        s.run_segment();
+        let ck = s.checkpoint().unwrap();
+        let mut other = cfg;
+        other.chunk += 1;
+        let err = LearnSession::resume(other, &proto, &ck).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn score_rows_validates_shape() {
+        let s = LearnSession::create(small_cfg(TaskKind::Svm), &svm_session_learner());
+        assert!(s.score_rows(&[]).is_err());
+        assert!(s.score_rows(&vec![0.0; DIM + 1]).is_err());
+        assert_eq!(s.score_rows(&vec![0.0; 2 * DIM]).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving-layer equivalence gates: a checkpointed session must resume
+//! with **bit identity** — learner parameters, Eq-5 coin-flip RNGs, and
+//! stream cursors all included — and elastic worker reconfiguration
+//! (including across restarts) must never change results, only
+//! wall-clock. These are the in-process versions of the CI
+//! kill-and-resume smoke.
+
+use para_active::learner::Learner;
+use para_active::net::TaskKind;
+use para_active::serve::{
+    nn_session_learner, svm_session_learner, Checkpointable, LearnSession, SessionCheckpoint,
+    SessionConfig,
+};
+
+fn small_cfg(task: TaskKind) -> SessionConfig {
+    let mut cfg = SessionConfig::new(task);
+    cfg.nodes = 3;
+    cfg.chunk = 50;
+    cfg.warmstart = 80;
+    cfg.segments = 4;
+    cfg.test_size = 60;
+    cfg
+}
+
+/// Bit-level agreement: counters, held-out error, and raw model scores.
+fn assert_sessions_bit_identical<L: Checkpointable>(a: &LearnSession<L>, b: &LearnSession<L>) {
+    assert_eq!(a.segments_done(), b.segments_done());
+    assert_eq!(a.n_seen(), b.n_seen(), "stream cursors drifted");
+    assert_eq!(a.n_queried(), b.n_queried(), "sifter coin-flips drifted");
+    let test = a.test_set();
+    assert_eq!(
+        a.final_error(&test).to_bits(),
+        b.final_error(&test).to_bits(),
+        "final_error differs: {} vs {}",
+        a.final_error(&test),
+        b.final_error(&test)
+    );
+    for (x, _) in test.iter().take(16) {
+        assert_eq!(
+            a.learner().score(x).to_bits(),
+            b.learner().score(x).to_bits(),
+            "model scores differ bit-for-bit"
+        );
+    }
+}
+
+/// Save after two segments, round-trip the checkpoint through its byte
+/// encoding (as a killed daemon would read it back), resume into a
+/// fresh session, finish both — every downstream decision must match.
+fn split_resume_matches_straight<L: Checkpointable>(cfg: SessionConfig, proto: &L) {
+    let mut straight = LearnSession::create(cfg.clone(), proto);
+    while !straight.is_complete() {
+        straight.run_segment();
+    }
+
+    let mut first = LearnSession::create(cfg.clone(), proto);
+    first.run_segment();
+    first.run_segment();
+    let ck = first.checkpoint().unwrap();
+    let ck = SessionCheckpoint::decode(&ck.encode().unwrap()).unwrap();
+    drop(first);
+
+    let mut resumed = LearnSession::resume(cfg, proto, &ck).unwrap();
+    assert_eq!(resumed.segments_done(), 2);
+    while !resumed.is_complete() {
+        resumed.run_segment();
+    }
+    assert_sessions_bit_identical(&straight, &resumed);
+}
+
+#[test]
+fn svm_checkpoint_resume_is_bit_identical() {
+    split_resume_matches_straight(small_cfg(TaskKind::Svm), &svm_session_learner());
+}
+
+#[test]
+fn nn_checkpoint_resume_is_bit_identical() {
+    split_resume_matches_straight(small_cfg(TaskKind::Nn), &nn_session_learner());
+}
+
+#[test]
+fn killed_and_rerun_file_session_matches_uninterrupted() {
+    // Simulate `kill -9` at *every* segment boundary: each loop
+    // iteration is a fresh "process image" that loads the checkpoint
+    // file, runs exactly one segment, saves, and dies — with a
+    // different elastic worker count each restart for good measure.
+    let cfg0 = small_cfg(TaskKind::Svm);
+    let proto = svm_session_learner();
+    let mut straight = LearnSession::create(cfg0.clone(), &proto);
+    while !straight.is_complete() {
+        straight.run_segment();
+    }
+
+    let path = std::env::temp_dir()
+        .join(format!("para-active-kill-resume-{}.ckpt", std::process::id()));
+    let init = LearnSession::create(cfg0.clone(), &proto);
+    init.checkpoint().unwrap().save(&path).unwrap();
+    drop(init); // killed right after init
+
+    loop {
+        let ck = SessionCheckpoint::load(&path).unwrap();
+        let mut cfg = cfg0.clone();
+        cfg.workers = 1 + (ck.segments_done as usize % 3);
+        let mut session = LearnSession::resume(cfg, &proto, &ck).unwrap();
+        if session.is_complete() {
+            assert_sessions_bit_identical(&straight, &session);
+            assert_eq!(
+                session.telemetry().samples(),
+                cfg0.nodes * cfg0.segments,
+                "latency telemetry must survive restarts"
+            );
+            break;
+        }
+        session.run_segment();
+        session.checkpoint().unwrap().save(&path).unwrap();
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn nn_file_roundtrip_resumes_where_it_left_off() {
+    // File-level (not just byte-level) resume for the NN task too.
+    let cfg = small_cfg(TaskKind::Nn);
+    let proto = nn_session_learner();
+    let mut straight = LearnSession::create(cfg.clone(), &proto);
+    while !straight.is_complete() {
+        straight.run_segment();
+    }
+
+    let path = std::env::temp_dir()
+        .join(format!("para-active-nn-resume-{}.ckpt", std::process::id()));
+    let mut first = LearnSession::create(cfg.clone(), &proto);
+    first.run_segment();
+    first.checkpoint().unwrap().save(&path).unwrap();
+    drop(first);
+
+    let ck = SessionCheckpoint::load(&path).unwrap();
+    let mut resumed = LearnSession::resume(cfg, &proto, &ck).unwrap();
+    while !resumed.is_complete() {
+        resumed.run_segment();
+    }
+    assert_sessions_bit_identical(&straight, &resumed);
+    let _ = std::fs::remove_file(&path);
+}

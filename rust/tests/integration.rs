@@ -215,7 +215,8 @@ fn live_threads_match_ordered_broadcast_semantics() {
         &stream,
         &test,
         &lc,
-    );
+    )
+    .expect("live run failed");
     assert!(r.replicas_agree);
     assert!(r.n_queried > 0);
 }

@@ -295,7 +295,7 @@ fn prop_svm_delta_codec_roundtrip_chain_and_fallback() {
                     .collect();
                 model.update(&x, y, (0.5 + rng.next_f64()) as f32);
             }
-            let msg = enc.encode(epoch, &model);
+            let msg = enc.encode(epoch, &model).unwrap();
             if msg.full {
                 fulls_seen += 1;
                 assert_eq!(
@@ -328,14 +328,14 @@ fn prop_svm_delta_codec_roundtrip_chain_and_fallback() {
         let mut enc2 = SvmDeltaCodec::new(dim);
         let mut dec2 = SvmDeltaCodec::new(dim);
         let mut fresh = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
-        let snap = enc2.encode(1, &model);
+        let snap = enc2.encode(1, &model).unwrap();
         assert!(snap.full, "a fresh encoder has no slot table to delta against");
         dec2.apply(&mut fresh, &snap).unwrap();
         assert_eq!(bits(&fresh), bits(&replica), "seed {seed}: delta chain vs full snapshot");
 
         // Epoch safety: a gapped delta is rejected, a gapped full message
         // is accepted (full state is self-contained).
-        let last = enc.encode(26, &model);
+        let last = enc.encode(26, &model).unwrap();
         let mut gapped = last.clone();
         gapped.epoch = 40;
         if !gapped.full {
@@ -379,7 +379,7 @@ fn prop_mlp_codec_roundtrip_and_fallback() {
                 let y = if rng.coin(0.5) { 1.0 } else { -1.0 };
                 model.update(&x, y, 1.0);
             }
-            let msg = enc.encode(epoch, &model);
+            let msg = enc.encode(epoch, &model).unwrap();
             if msg.full {
                 fulls_seen += 1;
                 assert_eq!(msg.payload.len() as u64, enc.last_full_bytes());
