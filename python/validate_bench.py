@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate BENCH_sift.json against its schema (version 5).
+"""Validate BENCH_sift.json against its schema (version 6).
 
 Gating in CI: the *shape* of the bench output is a contract — downstream
 tooling (and the eventual minimum-speedup gate) reads these fields, so a
@@ -13,7 +13,7 @@ Stdlib only. Usage: python3 python/validate_bench.py [path/to/BENCH_sift.json]
 import json
 import sys
 
-SCHEMA = 5
+SCHEMA = 6
 
 ERRORS = []
 
@@ -140,6 +140,25 @@ def main():
         if is_num(p50) and is_num(p99) and p99 < p50:
             fail(f"live: p99_ms ({p99}) must be >= p50_ms ({p50})")
 
+    # Observability totals from one traced pipelined run (schema 6): span
+    # counts plus the ObsReport fields that mirror WallTimes/NetStats.
+    check_row("obs", doc.get("obs", None), {
+        "report_version": lambda v: isinstance(v, int) and v >= 1,
+        "spans": lambda v: isinstance(v, int) and v >= 1,
+        "spans_dropped": count,
+        "wall_sift_s": positive,
+        "wall_update_s": non_negative,
+        "wall_total_s": positive,
+        "pool_rounds": count,
+        "net_sync_bytes": count,
+        "net_sync_messages": count,
+    })
+    obs = doc.get("obs")
+    if isinstance(obs, dict):
+        sift, total = obs.get("wall_sift_s"), obs.get("wall_total_s")
+        if is_num(sift) and is_num(total) and total < sift:
+            fail(f"obs: wall_total_s ({total}) must be >= wall_sift_s ({sift})")
+
     # Internal consistency of the wire telemetry (structure, not speed).
     for i, row in enumerate(doc.get("net") or []):
         if not isinstance(row, dict):
@@ -149,7 +168,8 @@ def main():
             fail(f"net[{i}]: delta_syncs + full_syncs != sync_messages ({d}+{f} != {m})")
 
     for extra in set(doc) - {"bench", "schema", "cores", "shard", "paths",
-                             "sweep", "update", "pipeline", "net", "live"}:
+                             "sweep", "update", "pipeline", "net", "live",
+                             "obs"}:
         fail(f"unknown top-level key {extra!r}")
 
     if ERRORS:

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Validate a `--trace-out` Perfetto trace (trace_event JSON).
+
+Gating in CI: a short traced run must emit a structurally valid trace —
+complete events only, the obs category, monotone timestamps, the span
+ids in `args`, and every sift span nested inside a round span. The
+*durations* are not gated (they are machine wall-clock); only the shape
+is, so an exporter refactor that breaks the Perfetto contract fails the
+build instead of producing a file the UI silently rejects.
+
+Stdlib only. Usage: python3 python/validate_trace.py trace.json
+"""
+
+import json
+import sys
+
+ERRORS = []
+
+
+def fail(msg):
+    ERRORS.append(msg)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_event(i, ev):
+    if not isinstance(ev, dict):
+        fail(f"traceEvents[{i}]: expected an object, got {type(ev).__name__}")
+        return False
+    ok = True
+    if not (isinstance(ev.get("name"), str) and ev.get("name")):
+        fail(f"traceEvents[{i}]: 'name' must be a non-empty string")
+        ok = False
+    if ev.get("cat") != "obs":
+        fail(f"traceEvents[{i}]: 'cat' must be \"obs\", got {ev.get('cat')!r}")
+        ok = False
+    if ev.get("ph") != "X":
+        # The exporter only writes complete events (begin+duration in one).
+        fail(f"traceEvents[{i}]: 'ph' must be \"X\", got {ev.get('ph')!r}")
+        ok = False
+    for key in ("ts", "dur"):
+        if not (is_num(ev.get(key)) and ev.get(key) >= 0):
+            fail(f"traceEvents[{i}]: {key!r} must be a number >= 0")
+            ok = False
+    if ev.get("pid") != 1:
+        fail(f"traceEvents[{i}]: 'pid' must be 1, got {ev.get('pid')!r}")
+        ok = False
+    if not (isinstance(ev.get("tid"), int) and not isinstance(ev.get("tid"), bool)):
+        fail(f"traceEvents[{i}]: 'tid' must be an integer")
+        ok = False
+    args = ev.get("args")
+    if not isinstance(args, dict):
+        fail(f"traceEvents[{i}]: 'args' must be an object")
+        ok = False
+    else:
+        for key in ("node", "round", "worker"):
+            if not (isinstance(args.get(key), int) and not isinstance(args.get(key), bool)):
+                fail(f"traceEvents[{i}]: args.{key!r} must be an integer")
+                ok = False
+    return ok
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: validate_trace.py trace.json")
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {path} not found — did the traced run write it?")
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"FAIL: {path} is not valid JSON: {e}")
+        return 1
+
+    if not isinstance(doc, dict):
+        print(f"FAIL: {path}: top level must be an object")
+        return 1
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"'displayTimeUnit' must be \"ms\", got {doc.get('displayTimeUnit')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("'traceEvents' must be a non-empty array")
+        events = []
+
+    well_formed = [ev for i, ev in enumerate(events) if check_event(i, ev)]
+
+    # drain_spans() sorts by (start, tid); the exporter must preserve that.
+    ts = [ev["ts"] for ev in well_formed]
+    if any(b < a for a, b in zip(ts, ts[1:])):
+        fail("timestamps must be non-decreasing across traceEvents")
+
+    # The traced run always executes rounds that sift; their absence means
+    # the instrumentation sites were compiled out or never enabled.
+    rounds = [ev for ev in well_formed if ev["name"] == "round"]
+    sifts = [ev for ev in well_formed if ev["name"] == "sift"]
+    if not rounds:
+        fail("no 'round' spans — was recording enabled for the run?")
+    if not sifts:
+        fail("no 'sift' spans — was recording enabled for the run?")
+
+    # Nesting: every sift happens inside some round span (the round span
+    # opens before the jobs are submitted and closes after they drain, on
+    # the same monotonic timebase, so containment is exact).
+    for ev in sifts:
+        contained = any(
+            r["ts"] <= ev["ts"] and ev["ts"] + ev["dur"] <= r["ts"] + r["dur"]
+            for r in rounds
+        )
+        if not contained:
+            fail(
+                f"sift span at ts={ev['ts']} (round {ev['args']['round']}) "
+                "is not nested inside any round span"
+            )
+
+    if ERRORS:
+        print(f"FAIL: {path} violates the trace contract:")
+        for e in ERRORS:
+            print(f"  - {e}")
+        return 1
+    print(
+        f"OK: {path} conforms — {len(events)} event(s), "
+        f"{len(rounds)} round(s), {len(sifts)} sift(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,7 +25,7 @@
 //! and the end-to-end round time of a full threaded-backend NN run,
 //! strictly-sequenced loop vs the pipelined coordinator
 //! (`coordinator::pipeline`, sift overlapped with replay). Results are
-//! written to `BENCH_sift.json` (schema 5) so the perf trajectory is
+//! written to `BENCH_sift.json` (schema 6) so the perf trajectory is
 //! machine-readable across PRs.
 //!
 //! The **live** section runs a short serving-layer session
@@ -33,6 +33,12 @@
 //! reports its built-in telemetry: p50/p99 per-chunk sift latency and
 //! sustained rows/s — the numbers an operator would watch on a running
 //! daemon.
+//!
+//! The **obs** section re-runs the pipelined NN configuration with span
+//! recording on (`para_active::obs`) and reports the trace totals plus
+//! the run's folded [`ObsReport`](para_active::obs::ObsReport) — the
+//! same numbers `--trace-out` / `--obs-summary` expose on the CLI —
+//! cross-checked against the legacy `WallTimes` fields.
 
 use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::benchlib::{bench, bench_throughput, black_box};
@@ -210,6 +216,18 @@ struct NetRow {
     stats: NetStats,
 }
 
+/// Span totals + folded report from one traced pipelined run.
+struct ObsRow {
+    spans: usize,
+    spans_dropped: u64,
+    wall_sift_s: f64,
+    wall_update_s: f64,
+    wall_total_s: f64,
+    pool_rounds: u64,
+    net_sync_bytes: u64,
+    net_sync_messages: u64,
+}
+
 /// Serving-layer live telemetry from a short [`LearnSession`] run.
 struct LiveRow {
     p50_ms: f64,
@@ -356,6 +374,7 @@ fn measure_net(learner: &'static str) -> NetRow {
     NetRow { learner, rounds: report.rounds, stats: report.net }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     cores: usize,
     shard: usize,
@@ -365,10 +384,11 @@ fn write_json(
     pipe: &PipelineRow,
     nets: &[NetRow],
     live: &LiveRow,
+    obs: &ObsRow,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 5,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 6,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -444,8 +464,22 @@ fn write_json(
     body.push_str("  ],\n");
     body.push_str(&format!(
         "  \"live\": {{\"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"rows_per_s\": {:.1}, \
-         \"chunks\": {}, \"rows_sifted\": {}}}\n",
+         \"chunks\": {}, \"rows_sifted\": {}}},\n",
         live.p50_ms, live.p99_ms, live.rows_per_s, live.chunks, live.rows_sifted,
+    ));
+    body.push_str(&format!(
+        "  \"obs\": {{\"report_version\": {}, \"spans\": {}, \"spans_dropped\": {}, \
+         \"wall_sift_s\": {:.6}, \"wall_update_s\": {:.6}, \"wall_total_s\": {:.6}, \
+         \"pool_rounds\": {}, \"net_sync_bytes\": {}, \"net_sync_messages\": {}}}\n",
+        para_active::obs::OBS_REPORT_VERSION,
+        obs.spans,
+        obs.spans_dropped,
+        obs.wall_sift_s,
+        obs.wall_update_s,
+        obs.wall_total_s,
+        obs.pool_rounds,
+        obs.net_sync_bytes,
+        obs.net_sync_messages,
     ));
     body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
@@ -713,5 +747,39 @@ fn main() {
         live.p50_ms, live.p99_ms, live.rows_per_s, live.chunks, live.rows_sifted
     );
 
-    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live);
+    // --- Observability: one traced pipelined run, spans + folded report. ---
+    println!("\n# observability (traced pipelined NN run)");
+    para_active::obs::set_enabled(true);
+    let traced = {
+        let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+        let sifter = SifterSpec::margin(0.0005, 5);
+        let cfg = base_cfg().with_pipeline();
+        run_pipelined(&mut mlp, &sifter, &nn_stream_cfg, &nn_test, &cfg, &NativeScorer)
+    };
+    para_active::obs::set_enabled(false);
+    let spans = para_active::obs::drain_spans();
+    let obs = ObsRow {
+        spans: spans.len(),
+        spans_dropped: para_active::obs::spans_dropped(),
+        wall_sift_s: traced.obs.gauge("wall.sift_s").unwrap_or(0.0),
+        wall_update_s: traced.obs.gauge("wall.update_s").unwrap_or(0.0),
+        wall_total_s: traced.obs.gauge("wall.total_s").unwrap_or(0.0),
+        pool_rounds: traced.obs.counter("pool.rounds").unwrap_or(0),
+        net_sync_bytes: traced.obs.counter("net.sync_bytes").unwrap_or(0),
+        net_sync_messages: traced.obs.counter("net.sync_messages").unwrap_or(0),
+    };
+    assert_eq!(obs.wall_sift_s, traced.wall.sift, "ObsReport must mirror WallTimes");
+    assert_eq!(obs.wall_total_s, traced.wall.total, "ObsReport must mirror WallTimes");
+    println!(
+        "      {} span(s) recorded ({} dropped); wall sift {:.3}s update {:.3}s \
+         total {:.3}s over {} pool rounds",
+        obs.spans,
+        obs.spans_dropped,
+        obs.wall_sift_s,
+        obs.wall_update_s,
+        obs.wall_total_s,
+        obs.pool_rounds
+    );
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live, &obs);
 }

@@ -6,15 +6,19 @@
 //! optional throughput figure. Output is stable, grep-friendly, and used by
 //! EXPERIMENTS.md §Perf.
 
+use crate::obs::Histogram;
 use std::time::Instant;
 
-/// Timing summary of one benchmark.
+/// Timing summary of one benchmark. Mean/min/max are exact (the
+/// [`Histogram`] tracks them alongside its buckets); the median is
+/// bucket-quantized, within a factor of 2^(1/4) of exact.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
     pub iters: usize,
     pub mean_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+    pub p50_s: f64,
 }
 
 impl BenchStats {
@@ -24,26 +28,32 @@ impl BenchStats {
 }
 
 /// Run `f` `iters` times (after `warmup` unmeasured runs) and report.
+/// Per-iteration times land in an `obs::hist` [`Histogram`] — the same
+/// summary-stat machinery the serve session and coordinator use.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     assert!(iters > 0);
     for _ in 0..warmup {
         f();
     }
-    let mut times = Vec::with_capacity(iters);
+    let mut hist = Histogram::new();
     for _ in 0..iters {
         let t = Instant::now();
         f();
-        times.push(t.elapsed().as_secs_f64());
+        hist.record(t.elapsed().as_secs_f64());
     }
-    let mean_s = times.iter().sum::<f64>() / iters as f64;
-    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    let max_s = times.iter().cloned().fold(0.0f64, f64::max);
-    let stats = BenchStats { iters, mean_s, min_s, max_s };
+    let stats = BenchStats {
+        iters,
+        mean_s: hist.mean(),
+        min_s: hist.min(),
+        max_s: hist.max(),
+        p50_s: hist.quantile(0.5),
+    };
     println!(
-        "bench {name:48} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={iters})",
+        "bench {name:48} {:>10.3} ms/iter  (p50 {:.3}, min {:.3}, max {:.3}, n={iters})",
         stats.mean_ms(),
-        min_s * 1e3,
-        max_s * 1e3
+        stats.p50_s * 1e3,
+        stats.min_s * 1e3,
+        stats.max_s * 1e3
     );
     stats
 }
@@ -86,6 +96,7 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
         assert!(s.mean_s >= 0.0);
+        assert!(s.p50_s >= s.min_s && s.p50_s <= s.max_s);
     }
 
     #[test]

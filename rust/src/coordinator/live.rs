@@ -185,6 +185,7 @@ where
     // Warmstart once; every node starts from the same replica.
     let mut warm = proto.clone();
     {
+        let _sp = crate::obs_span!("warmstart");
         let mut ws = ExampleStream::for_node(stream_cfg, u32::MAX - 1);
         let mut x = vec![0.0f32; DIM];
         for _ in 0..cfg.warmstart {
@@ -236,8 +237,10 @@ where
         let stream = ExampleStream::for_node(stream_cfg, node as u32);
         let per_node = cfg.per_node;
         let warm_n = cfg.warmstart as u64;
-        jobs.push(Box::new(move |_worker| {
+        jobs.push(Box::new(move |worker| {
             catch_unwind(AssertUnwindSafe(move || {
+                let _sp =
+                    crate::obs_span!("sift", node = node as i64, worker = worker as i64);
                 let (mut learner, mut sifter, mut stream) = (learner, sifter, stream);
                 let mut x = vec![0.0f32; DIM];
                 let mut applied: u64 = 0;

@@ -158,6 +158,8 @@ fn run_rounds_pipelined<L: Learner + Clone>(
     while (n_seen as usize) < cfg.budget {
         // n in Eq (5): cumulative examples seen before this sift phase.
         let n_phase = n_seen;
+        let round_no = clock.rounds() as i64;
+        let _sp_round = crate::obs_span!("round", round = round_no);
 
         // Draw every node's shard up front — generation untimed, off both
         // clocks, exactly like the sequential loop.
@@ -170,9 +172,16 @@ fn run_rounds_pipelined<L: Learner + Clone>(
         let frozen: L = learner.clone();
         let jobs: Vec<NodeJob<'_>> = lanes
             .iter_mut()
-            .map(|lane| {
+            .enumerate()
+            .map(|(node, lane)| {
                 let frozen = &frozen;
                 let job: NodeJob<'_> = Box::new(move |worker| {
+                    let _sp = crate::obs_span!(
+                        "sift",
+                        node = node as i64,
+                        round = round_no,
+                        worker = worker as i64
+                    );
                     lane.sift_round(frozen, scorer, shard, n_phase, needs_scores, worker)
                 });
                 job
@@ -180,11 +189,14 @@ fn run_rounds_pipelined<L: Learner + Clone>(
             .collect();
 
         // Stage overlap: the backend sifts round t against the snapshot
-        // while this thread replays round t-1 into the live model.
+        // while this thread replays round t-1 into the live model. The
+        // `update` span carries round t-1's index, so a trace shows it
+        // running under round t's `sift` spans — Theorem 1 on screen.
         let mut update_secs = 0.0;
         let mut applied = ReplayOutcome::default();
         let mut sw = Stopwatch::start();
         let results = session.run_round_overlapping(jobs, &mut || {
+            let _sp = crate::obs_span!("update", round = round_no - 1);
             let mut usw = Stopwatch::start();
             applied.absorb(replay.flush(learner));
             update_secs += usw.lap();
@@ -201,11 +213,13 @@ fn run_rounds_pipelined<L: Learner + Clone>(
         // stay queued until the next round's overlap (the one-round lag).
         let mut selected = 0usize;
         let mut ssw = Stopwatch::start();
+        let sp_merge = crate::obs_span!("merge", round = round_no);
         for node in &results {
             replay.submit_node(&node.sel_x, &node.sel_y, &node.sel_w);
             selected += node.sel_y.len();
             costs.sift_ops += node.sift_ops;
         }
+        drop(sp_merge);
         replay.end_round();
         update_secs += ssw.lap();
         costs.update_ops += applied.update_ops;
@@ -229,6 +243,7 @@ fn run_rounds_pipelined<L: Learner + Clone>(
     // Drain the one round still in flight so the final model has absorbed
     // every broadcast selection (identical to the stale(·, 1) drain).
     if replay.pending_examples() > 0 {
+        let _sp = crate::obs_span!("update");
         let mut sw = Stopwatch::start();
         let tail = replay.flush(learner);
         let tail_secs = sw.lap();
@@ -239,6 +254,8 @@ fn run_rounds_pipelined<L: Learner + Clone>(
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
     wall.total = total_sw.lap();
 
+    let pool = session.stats();
+    let net = crate::net::NetStats::default();
     SyncReport {
         rounds: clock.rounds(),
         n_seen,
@@ -248,12 +265,13 @@ fn run_rounds_pipelined<L: Learner + Clone>(
         update_time: clock.update_time,
         warmstart_time: clock.warmstart_time,
         comm_time: clock.comm_time,
+        obs: crate::obs::ObsReport::fold_sync(&wall, &pool, &net),
         wall,
         backend: backend_name,
         pipelined: true,
-        pool: session.stats(),
+        pool,
         replay: replay.stats(),
-        net: crate::net::NetStats::default(),
+        net,
         costs,
         curve,
     }

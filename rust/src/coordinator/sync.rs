@@ -192,6 +192,12 @@ pub struct SyncReport {
     /// (`sync_messages == 0`) for in-process runs.
     pub net: NetStats,
     pub costs: CostCounters,
+    /// The unified observability snapshot ([`crate::obs`]): the
+    /// `wall`/`pool`/`net` fields above folded into one versioned set of
+    /// named metrics (each equal to its legacy field exactly), plus span
+    /// counts. The single source of truth for `BENCH_sift.json`'s `obs`
+    /// section and the `--obs-summary` table.
+    pub obs: crate::obs::ObsReport,
 }
 
 impl SyncReport {
@@ -258,6 +264,7 @@ pub(crate) fn warmstart_phase<L: Learner>(
     wall: &mut WallTimes,
     n_seen: &mut u64,
 ) {
+    let _sp = crate::obs_span!("warmstart");
     let mut x = vec![0.0f32; DIM];
     let mut sw = Stopwatch::start();
     let mut warm_secs = 0.0;
@@ -419,6 +426,8 @@ fn run_rounds<L: Learner>(
         // n in Eq (5): cumulative examples seen by the cluster before this
         // sift phase begins.
         let n_phase = n_seen;
+        let round_no = clock.rounds() as i64;
+        let _sp_round = crate::obs_span!("round", round = round_no);
 
         // Draw every node's shard up front — generation is untimed and off
         // both clocks, exactly like the seed protocol.
@@ -431,8 +440,15 @@ fn run_rounds<L: Learner>(
         let frozen: &L = learner;
         let jobs: Vec<NodeJob<'_>> = lanes
             .iter_mut()
-            .map(|lane| {
+            .enumerate()
+            .map(|(node, lane)| {
                 let job: NodeJob<'_> = Box::new(move |worker| {
+                    let _sp = crate::obs_span!(
+                        "sift",
+                        node = node as i64,
+                        round = round_no,
+                        worker = worker as i64
+                    );
                     lane.sift_round(frozen, scorer, shard, n_phase, needs_scores, worker)
                 });
                 job
@@ -450,9 +466,11 @@ fn run_rounds<L: Learner>(
         // each node's selections apply straight from the broadcast slices
         // (zero-copy); buffering only happens when deferral needs it.
         let direct = cfg.replay.max_stale_rounds == 0;
+        let sp_update = crate::obs_span!("update", round = round_no);
         let mut sw = Stopwatch::start();
         let mut selected = 0usize;
         let mut applied = ReplayOutcome::default();
+        let sp_merge = crate::obs_span!("merge", round = round_no);
         for node in &results {
             if direct {
                 let out = replay.apply_node_direct(learner, &node.sel_x, &node.sel_y, &node.sel_w);
@@ -463,12 +481,14 @@ fn run_rounds<L: Learner>(
             selected += node.sel_y.len();
             costs.sift_ops += node.sift_ops;
         }
+        drop(sp_merge);
         if !direct {
             replay.end_round();
             applied.absorb(replay.replay_due(learner));
         }
         costs.update_ops += applied.update_ops;
         let update_secs = sw.lap();
+        drop(sp_update);
         wall.update += update_secs;
         n_queried += selected as u64;
         costs.broadcasts += selected as u64;
@@ -486,6 +506,7 @@ fn run_rounds<L: Learner>(
     // Drain the staleness backlog (a no-op for synchronous replay) so the
     // final model has absorbed every broadcast selection.
     if replay.pending_examples() > 0 {
+        let _sp = crate::obs_span!("update");
         let mut sw = Stopwatch::start();
         let tail = replay.flush(learner);
         let tail_secs = sw.lap();
@@ -496,6 +517,8 @@ fn run_rounds<L: Learner>(
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
     wall.total = total_sw.lap();
 
+    let pool = session.stats();
+    let net = NetStats::default();
     SyncReport {
         rounds: clock.rounds(),
         n_seen,
@@ -505,12 +528,13 @@ fn run_rounds<L: Learner>(
         update_time: clock.update_time,
         warmstart_time: clock.warmstart_time,
         comm_time: clock.comm_time,
+        obs: crate::obs::ObsReport::fold_sync(&wall, &pool, &net),
         wall,
         backend: backend_name,
         pipelined: false,
-        pool: session.stats(),
+        pool,
         replay: replay.stats(),
-        net: NetStats::default(),
+        net,
         costs,
         curve,
     }
@@ -524,6 +548,7 @@ pub(crate) fn record<L: Learner>(
     n_seen: u64,
     n_queried: u64,
 ) {
+    let _sp = crate::obs_span!("eval");
     let err = learner.test_error(test);
     curve.push(CurvePoint {
         time: clock.elapsed_seconds(),
@@ -568,6 +593,12 @@ mod tests {
         assert_eq!(report.pool.rounds, report.rounds);
         assert_eq!(report.replay.applied, report.replay.submitted);
         assert_eq!(report.replay.applied, report.n_queried);
+        // The ObsReport on the report folds the legacy structs verbatim.
+        assert_eq!(report.obs.gauge("wall.sift_s"), Some(report.wall.sift));
+        assert_eq!(report.obs.gauge("wall.update_s"), Some(report.wall.update));
+        assert_eq!(report.obs.gauge("wall.total_s"), Some(report.wall.total));
+        assert_eq!(report.obs.counter("pool.rounds"), Some(report.pool.rounds));
+        assert_eq!(report.obs.counter("net.sync_bytes"), Some(report.net.sync_bytes));
     }
 
     #[test]

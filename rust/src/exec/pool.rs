@@ -259,6 +259,10 @@ impl<T: Send> WorkerPool<T> {
         // Taking the receiver first serializes whole rounds.
         let rx = self.results_rx.lock().expect("pool results poisoned");
         self.rounds.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            crate::obs::counter("pool.rounds").add(1);
+            crate::obs::counter("pool.jobs").add(k as u64);
+        }
         for (idx, job) in jobs.into_iter().enumerate() {
             // SAFETY: the collection barrier below receives exactly one
             // result per dispatched job before this function returns or

@@ -42,6 +42,7 @@ pub mod learner;
 pub mod metrics;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod rng;
 pub mod serve;
 pub mod simd;
@@ -78,6 +79,7 @@ pub mod prelude {
         config_fingerprint, run_distributed, serve_sift_node, InProcTransport, MlpDenseCodec,
         ModelCodec, NetStats, SvmDeltaCodec, TaskKind, Transport, UdsTransport,
     };
+    pub use crate::obs::{Histogram, ObsReport, ShardedHistogram, SpanRecord};
     pub use crate::serve::{
         DaemonConfig, LearnSession, SessionCheckpoint, SessionConfig,
     };

@@ -39,15 +39,18 @@ COMMANDS:
   svm       [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
             [--role R] [--listen A] [--connect A] [--remote-nodes P]
-            [--transport T]             parallel-active kernel SVM
+            [--transport T] [--trace-out FILE] [--obs-summary]
+                                        parallel-active kernel SVM
   nn        [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
             [--role R] [--listen A] [--connect A] [--remote-nodes P]
-            [--transport T]             parallel-active neural net
+            [--transport T] [--trace-out FILE] [--obs-summary]
+                                        parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   learn     --session FILE [--task svm|nn] [--nodes K] [--chunk N]
             [--warmstart N] [--segments N] [--eta F] [--seed N]
             [--test-size N] [--workers W] [--fresh] [--status]
+            [--trace-out FILE] [--obs-summary]
                             resumable para-active session (kill-safe)
   serve     --session FILE [--listen A] [--transport T] [--clients N]
             [--queue-cap Q] [+ learn flags]  host a session daemon
@@ -98,6 +101,15 @@ reconfigure requests through a bounded admission queue of capacity
 --queue-cap — overload is refused immediately with a typed busy reply,
 never buffered unboundedly — and checkpoints every trained segment plus
 on shutdown.
+
+OBSERVABILITY: `--trace-out FILE` records phase spans (round, sift,
+merge, update, sync, net.send/net.recv, checkpoint) across every thread
+and writes a Chrome/Perfetto trace_event JSON on exit — open it at
+https://ui.perfetto.dev; a --pipeline run shows round t's update
+overlapping round t+1's sift. `--obs-summary` prints a per-span
+aggregate table plus every named counter/gauge. Both flags only observe
+wall-clock: results are bit-identical with or without them. When neither
+flag is given, instrumentation is off (one atomic load per site).
 
 Figure-regeneration drivers live in examples/:
   cargo run --release --example fig3_svm    (etc.)
@@ -411,6 +423,78 @@ fn exec_args(
     Ok((backend, replay, pipeline))
 }
 
+/// Observability switches shared by svm/nn/learn: an optional Perfetto
+/// trace destination and a human summary table. Either flag turns span
+/// recording on for the whole run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+struct ObsFlags {
+    trace_out: Option<String>,
+    summary: bool,
+}
+
+impl ObsFlags {
+    fn enabled(&self) -> bool {
+        self.trace_out.is_some() || self.summary
+    }
+}
+
+/// Validate the observability flags. Pure, like [`resolve_net_flags`].
+fn resolve_obs_flags(trace_out: Option<String>, summary: bool) -> Result<ObsFlags, String> {
+    if let Some(path) = &trace_out {
+        if path.is_empty() {
+            return Err("--trace-out needs a non-empty file path".into());
+        }
+    }
+    Ok(ObsFlags { trace_out, summary })
+}
+
+/// Gather and validate the observability flags, enabling recording when
+/// either is present. Must run before the experiment starts so the
+/// instrumentation sites see the switch.
+fn obs_args(args: &Args) -> anyhow::Result<ObsFlags> {
+    let obs = resolve_obs_flags(args.opt("--trace-out")?, args.flag("--obs-summary"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if obs.enabled() {
+        para_active::obs::set_enabled(true);
+    }
+    Ok(obs)
+}
+
+/// Drain the recorded spans and emit the requested artifacts, once, after
+/// the run completes. `report` carries the run's folded
+/// [`para_active::obs::ObsReport`] when one exists (local/coordinator
+/// roles); node processes and `learn` sessions pass `None` and get the
+/// registry snapshot alone.
+fn finish_obs(
+    obs: &ObsFlags,
+    report: Option<&para_active::obs::ObsReport>,
+) -> anyhow::Result<()> {
+    if !obs.enabled() {
+        return Ok(());
+    }
+    para_active::obs::set_enabled(false);
+    let spans = para_active::obs::drain_spans();
+    if let Some(path) = &obs.trace_out {
+        para_active::obs::write_trace(path, &spans)?;
+        eprintln!(
+            "wrote {} span(s) to {path} — open at https://ui.perfetto.dev",
+            spans.len()
+        );
+    }
+    if obs.summary {
+        let fallback;
+        let report = match report {
+            Some(r) => r,
+            None => {
+                fallback = para_active::obs::ObsReport::new().with_registry();
+                &fallback
+            }
+        };
+        print!("{}", para_active::obs::render_summary(&spans, report));
+    }
+    Ok(())
+}
+
 /// Validate the `learn`/`serve` session flags onto the task's default
 /// [`SessionConfig`]. Pure, like [`resolve_net_flags`], so the error
 /// surface is unit-testable without a filesystem.
@@ -626,6 +710,7 @@ fn main() -> anyhow::Result<()> {
             let nodes: usize = args.get("--nodes", 8)?;
             let budget: usize = args.get("--budget", 30_000)?;
             let net = net_args(&args)?;
+            let obs = obs_args(&args)?;
             let mut cfg = SvmExperimentConfig::paper_defaults();
             (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args, net.remote_procs())?;
             if cfg.replay.fused {
@@ -642,6 +727,7 @@ fn main() -> anyhow::Result<()> {
                     let mut chan = connect_chan(kind, &connect)?;
                     let rep = serve_node_svm(&cfg, &stream, nodes, budget, chan.as_mut())?;
                     print_node_report(&rep);
+                    finish_obs(&obs, None)?;
                     return Ok(());
                 }
                 NetRole::Coordinator { listen, procs, kind } => {
@@ -681,11 +767,13 @@ fn main() -> anyhow::Result<()> {
                 svm_fingerprint(&cfg, nodes, budget),
                 r.final_test_errors()
             );
+            finish_obs(&obs, Some(&r.obs))?;
         }
         "nn" => {
             let nodes: usize = args.get("--nodes", 2)?;
             let budget: usize = args.get("--budget", 20_000)?;
             let net = net_args(&args)?;
+            let obs = obs_args(&args)?;
             let mut cfg = NnExperimentConfig::paper_defaults();
             (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args, net.remote_procs())?;
             let stream = StreamConfig::nn_task();
@@ -694,6 +782,7 @@ fn main() -> anyhow::Result<()> {
                     let mut chan = connect_chan(kind, &connect)?;
                     let rep = serve_node_nn(&cfg, &stream, nodes, budget, chan.as_mut())?;
                     print_node_report(&rep);
+                    finish_obs(&obs, None)?;
                     return Ok(());
                 }
                 NetRole::Coordinator { listen, procs, kind } => {
@@ -724,6 +813,7 @@ fn main() -> anyhow::Result<()> {
                 nn_fingerprint(&cfg, nodes, budget),
                 r.final_test_errors()
             );
+            finish_obs(&obs, Some(&r.obs))?;
         }
         "passive" => {
             let learner: String = args.get("--learner", "svm".to_string())?;
@@ -759,10 +849,12 @@ fn main() -> anyhow::Result<()> {
                 return Ok(());
             }
             let fresh = args.flag("--fresh");
+            let obs = obs_args(&args)?;
             match cfg.task {
                 TaskKind::Svm => run_learn(path, cfg, &svm_session_learner(), fresh)?,
                 TaskKind::Nn => run_learn(path, cfg, &nn_session_learner(), fresh)?,
             }
+            finish_obs(&obs, None)?;
         }
         "serve" => {
             let (session_path, cfg) = learn_args(&args)?;
@@ -1170,6 +1262,20 @@ mod tests {
             None,
         )
         .is_ok());
+    }
+
+    #[test]
+    fn obs_flags_resolve_and_gate() {
+        let off = resolve_obs_flags(None, false).expect("valid");
+        assert_eq!(off, ObsFlags::default());
+        assert!(!off.enabled(), "no flags, no recording");
+        let trace = resolve_obs_flags(Some("t.json".into()), false).expect("valid");
+        assert!(trace.enabled());
+        assert_eq!(trace.trace_out.as_deref(), Some("t.json"));
+        let summary = resolve_obs_flags(None, true).expect("valid");
+        assert!(summary.enabled());
+        let err = resolve_obs_flags(Some(String::new()), false).unwrap_err();
+        assert!(err.contains("--trace-out"), "{err}");
     }
 
     #[test]

@@ -74,18 +74,21 @@ struct Wire<'a> {
 
 impl Wire<'_> {
     fn send(&mut self, node: usize, msg: &Msg) -> Result<()> {
+        let _sp = crate::obs_span!("net.send", node = node as i64);
         let bytes = msg.encode()?;
         self.stats.bytes_sent += bytes.len() as u64 + FRAME_OVERHEAD;
         self.t.send_to(node, &bytes)
     }
 
     fn broadcast(&mut self, msg: &Msg) -> Result<()> {
+        let _sp = crate::obs_span!("net.send");
         let bytes = msg.encode()?;
         self.stats.bytes_sent += (bytes.len() as u64 + FRAME_OVERHEAD) * self.t.nodes() as u64;
         self.t.broadcast(&bytes)
     }
 
     fn recv(&mut self, node: usize) -> Result<Msg> {
+        let _sp = crate::obs_span!("net.recv", node = node as i64);
         let bytes = self.t.recv_from(node)?;
         self.stats.bytes_received += bytes.len() as u64 + FRAME_OVERHEAD;
         Msg::decode(&bytes)
@@ -204,11 +207,13 @@ pub fn run_distributed<L: Learner>(
     while (n_seen as usize) < cfg.budget {
         round += 1;
         let n_phase = n_seen;
+        let _sp_round = crate::obs_span!("round", round = round as i64);
 
         // Encode the sync before the overlapped flush (stale=1): the wire
         // snapshot is the pipelined loop's `learner.clone()` — nodes sift
         // round t with the model of round t-2. Under stale=0 the previous
         // round was already applied, so this is the fully-updated model.
+        let sp_sync = crate::obs_span!("sync", round = round as i64);
         let sync = codec.encode(round, learner)?;
         wire.stats.sync_messages += p as u64;
         wire.stats.sync_bytes += sync.payload.len() as u64 * p as u64;
@@ -221,11 +226,13 @@ pub fn run_distributed<L: Learner>(
 
         let mut sw = Stopwatch::start();
         wire.broadcast(&Msg::Round(RoundMsg { round, n_phase, sync }))?;
+        drop(sp_sync);
 
         // Replay of round t-1 overlaps the remote sift in real time.
         let mut update_secs = 0.0;
         let mut applied = ReplayOutcome::default();
         if overlapped {
+            let _sp = crate::obs_span!("update", round = round as i64 - 1);
             let mut usw = Stopwatch::start();
             applied.absorb(replay.flush(learner));
             update_secs += usw.lap();
@@ -257,6 +264,7 @@ pub fn run_distributed<L: Learner>(
 
         // Passive updating, pooled node-major — identical to the
         // in-process loops' handling of `results`.
+        let sp_merge = crate::obs_span!("merge", round = round as i64);
         let mut ssw = Stopwatch::start();
         let mut selected = 0usize;
         for node in &results {
@@ -272,6 +280,7 @@ pub fn run_distributed<L: Learner>(
         if overlapped {
             replay.end_round();
         }
+        drop(sp_merge);
         update_secs += ssw.lap();
         costs.update_ops += applied.update_ops;
         wall.update += update_secs;
@@ -295,6 +304,7 @@ pub fn run_distributed<L: Learner>(
     // Drain the round still in flight (stale=1) so the final model has
     // absorbed every broadcast selection.
     if replay.pending_examples() > 0 {
+        let _sp = crate::obs_span!("update");
         let mut sw = Stopwatch::start();
         let tail = replay.flush(learner);
         let tail_secs = sw.lap();
@@ -328,6 +338,7 @@ pub fn run_distributed<L: Learner>(
         update_time: clock.update_time,
         warmstart_time: clock.warmstart_time,
         comm_time: clock.comm_time,
+        obs: crate::obs::ObsReport::fold_sync(&wall, &pool, &wire.stats),
         wall,
         backend: wire.t.name(),
         pipelined: overlapped,

@@ -28,10 +28,12 @@ use crate::learner::{Learner, SiftScorer};
 use anyhow::{Context, Result};
 
 pub(crate) fn send_msg(chan: &mut dyn Channel, msg: &Msg) -> Result<()> {
+    let _sp = crate::obs_span!("net.send");
     chan.send(&msg.encode()?)
 }
 
 pub(crate) fn recv_msg(chan: &mut dyn Channel) -> Result<Msg> {
+    let _sp = crate::obs_span!("net.recv");
     Msg::decode(&chan.recv()?)
 }
 
@@ -122,7 +124,14 @@ pub fn serve_sift_node<L: Learner>(
         outcome = Some((|| loop {
             match recv_msg(chan)? {
                 Msg::Round(rm) => {
-                    codec.apply(replica, &rm.sync).context("applying model sync")?;
+                    let node_id = init.node_index as i64;
+                    let _sp_round =
+                        crate::obs_span!("round", round = rm.round as i64, node = node_id);
+                    {
+                        let _sp =
+                            crate::obs_span!("sync", round = rm.round as i64, node = node_id);
+                        codec.apply(replica, &rm.sync).context("applying model sync")?;
+                    }
                     // Draw shards locally — generation is off every clock,
                     // identical to the in-process loops.
                     for lane in lanes.iter_mut() {
@@ -135,6 +144,12 @@ pub fn serve_sift_node<L: Learner>(
                         .iter_mut()
                         .map(|lane| {
                             let job: NodeJob<'_> = Box::new(move |worker| {
+                                let _sp = crate::obs_span!(
+                                    "sift",
+                                    node = node_id,
+                                    round = round as i64,
+                                    worker = worker as i64
+                                );
                                 lane.sift_round(
                                     frozen,
                                     scorer,

@@ -1,0 +1,164 @@
+//! Trace and summary exporters.
+//!
+//! [`trace_json`] renders drained spans as Chrome/Perfetto
+//! `trace_event` JSON — complete (`"ph": "X"`) events with microsecond
+//! `ts`/`dur`, one `tid` per recording thread, and node/round/worker ids
+//! in `args`. Load the file at <https://ui.perfetto.dev> (or
+//! `chrome://tracing`) and the pipelined overlap is directly visible:
+//! round t's `update` span on the coordinator track runs under round
+//! t+1's `sift` spans on the worker tracks.
+//!
+//! [`render_summary`] is the `--obs-summary` table: per-span-name
+//! aggregates plus every [`ObsReport`](super::ObsReport) metric.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::registry::ObsReport;
+use super::span::SpanRecord;
+
+/// Render spans as a Chrome `trace_event` JSON document. Span names are
+/// compile-time literals (no quotes/backslashes), so no escaping pass is
+/// needed.
+pub fn trace_json(spans: &[SpanRecord]) -> String {
+    let mut s = String::with_capacity(64 + spans.len() * 128);
+    s.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, r) in spans.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        write!(
+            s,
+            "{{\"name\":\"{}\",\"cat\":\"obs\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"node\":{},\"round\":{},\"worker\":{}}}}}",
+            r.name, r.start_us, r.dur_us, r.tid, r.node, r.round, r.worker
+        )
+        .expect("write! to a String cannot fail");
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Write [`trace_json`] to `path` (the `--trace-out` target).
+pub fn write_trace(path: impl AsRef<Path>, spans: &[SpanRecord]) -> std::io::Result<()> {
+    std::fs::write(path, trace_json(spans))
+}
+
+/// The human-readable `--obs-summary` table: spans aggregated by name
+/// (count, total, mean, max) followed by the report's counters and
+/// gauges.
+pub fn render_summary(spans: &[SpanRecord], report: &ObsReport) -> String {
+    // name -> (count, total_us, max_us)
+    let mut by_name: BTreeMap<&'static str, (u64, u64, u64)> = BTreeMap::new();
+    for r in spans {
+        let e = by_name.entry(r.name).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += r.dur_us;
+        e.2 = e.2.max(r.dur_us);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "obs summary (report v{})", report.version);
+    let _ = writeln!(
+        s,
+        "  {:<12} {:>8} {:>12} {:>10} {:>10}",
+        "span", "count", "total_ms", "mean_ms", "max_ms"
+    );
+    for (name, (count, total_us, max_us)) in &by_name {
+        let _ = writeln!(
+            s,
+            "  {:<12} {:>8} {:>12.3} {:>10.3} {:>10.3}",
+            name,
+            count,
+            *total_us as f64 / 1e3,
+            *total_us as f64 / 1e3 / *count as f64,
+            *max_us as f64 / 1e3
+        );
+    }
+    if by_name.is_empty() {
+        let _ = writeln!(s, "  (no spans recorded)");
+    }
+    for (name, v) in &report.counters {
+        let _ = writeln!(s, "  counter {name} = {v}");
+    }
+    for (name, v) in &report.gauges {
+        let _ = writeln!(s, "  gauge   {name} = {v:.6}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, start: u64, dur: u64, tid: u64) -> SpanRecord {
+        SpanRecord { name, start_us: start, dur_us: dur, tid, node: 0, round: 2, worker: 1 }
+    }
+
+    #[test]
+    fn trace_json_has_the_required_event_fields() {
+        let spans = [rec("round", 10, 500, 1), rec("sift", 20, 100, 2)];
+        let doc = trace_json(&spans);
+        assert!(doc.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(doc.ends_with("]}"));
+        for needle in [
+            "\"name\":\"round\"",
+            "\"name\":\"sift\"",
+            "\"ph\":\"X\"",
+            "\"ts\":10",
+            "\"dur\":500",
+            "\"pid\":1",
+            "\"tid\":2",
+            "\"args\":{\"node\":0,\"round\":2,\"worker\":1}",
+            "\"cat\":\"obs\"",
+        ] {
+            assert!(doc.contains(needle), "missing {needle} in {doc}");
+        }
+        // Balanced braces/brackets — the cheap well-formedness check; CI
+        // additionally json-parses an emitted file (validate_trace.py).
+        let open = doc.matches('{').count();
+        let close = doc.matches('}').count();
+        assert_eq!(open, close);
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid_shape() {
+        let doc = trace_json(&[]);
+        assert_eq!(doc, "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[]}");
+    }
+
+    #[test]
+    fn write_trace_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join("para_active_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace_export_test.json");
+        let spans = [rec("sync", 0, 42, 1)];
+        write_trace(&path, &spans).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, trace_json(&spans));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn summary_aggregates_by_name() {
+        let spans =
+            [rec("sift", 0, 1000, 1), rec("sift", 10, 3000, 2), rec("update", 20, 500, 1)];
+        let mut report = ObsReport::new();
+        report.push_counter("net.sync_bytes", 123);
+        report.push_gauge("wall.sift_s", 0.004);
+        let table = render_summary(&spans, &report);
+        assert!(table.contains("sift"), "{table}");
+        assert!(table.contains("update"));
+        // sift: 2 spans, 4 ms total, 2 ms mean, 3 ms max.
+        assert!(table.contains("2        4.000      2.000      3.000"), "{table}");
+        assert!(table.contains("counter net.sync_bytes = 123"));
+        assert!(table.contains("gauge   wall.sift_s = 0.004000"));
+    }
+
+    #[test]
+    fn summary_of_nothing_says_so() {
+        let table = render_summary(&[], &ObsReport::new());
+        assert!(table.contains("(no spans recorded)"));
+    }
+}

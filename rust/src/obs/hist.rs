@@ -1,0 +1,401 @@
+//! Fixed-bucket log-scale histograms — bounded memory, quantiles within
+//! one bucket width.
+//!
+//! [`Histogram`] replaces the unbounded `chunk_latencies: Vec<f64>` of the
+//! serve session (one push per node×segment, forever, in a long-running
+//! daemon) and the duplicated p50/p99/min/max math it and `benchlib`
+//! carried. 128 buckets at 4 per octave cover `1e-7 s … ~430 s` — seven
+//! decades around any realistic phase latency — and the exact count, sum,
+//! min and max ride alongside, so `mean`/`min`/`max` stay exact and only
+//! quantiles are bucket-quantized (geometric bucket midpoint, error ≤ one
+//! bucket width = a factor of 2^(1/4) ≈ 1.19).
+//!
+//! [`ShardedHistogram`] is the lock-free concurrent face: one atomic
+//! shard per worker, merged into a plain [`Histogram`] on snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets — fixed, so checkpoint layout and shard size are
+/// compile-time constants.
+pub const BUCKETS: usize = 128;
+/// Lower edge of bucket 0; anything at or below lands there.
+const MIN_VALUE: f64 = 1e-7;
+/// Log₂ resolution: buckets per octave (doubling).
+const PER_OCTAVE: f64 = 4.0;
+
+fn bucket_index(v: f64) -> usize {
+    if !(v > MIN_VALUE) {
+        return 0; // ≤ MIN_VALUE, zero, negative, NaN
+    }
+    (((v / MIN_VALUE).log2() * PER_OCTAVE) as usize).min(BUCKETS - 1)
+}
+
+/// Geometric midpoint of bucket `i` — the representative a quantile query
+/// answers with (then clamped to the observed min/max).
+fn bucket_mid(i: usize) -> f64 {
+    MIN_VALUE * 2f64.powf((i as f64 + 0.5) / PER_OCTAVE)
+}
+
+/// A mergeable single-threaded log-scale histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>, // BUCKETS entries
+    count: u64,
+    sum: f64,
+    min: f64, // +inf when empty
+    max: f64, // -inf when empty
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (sum and count are tracked exactly); 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact observed minimum; 0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact observed maximum; 0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile, answered with the holding bucket's geometric
+    /// midpoint clamped to the observed `[min, max]` — within one bucket
+    /// width of the exact order statistic, monotone in `q`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Raw state for checkpoint encoding: (bucket counts, count, sum,
+    /// min-raw, max-raw). The raw min/max keep their empty-state infinities
+    /// so a decoded empty histogram is exactly `Histogram::new()`.
+    pub fn raw_parts(&self) -> (&[u64], u64, f64, f64, f64) {
+        (&self.counts, self.count, self.sum, self.min, self.max)
+    }
+
+    /// Rebuild from [`Histogram::raw_parts`] output (checkpoint decode).
+    /// `counts` must have exactly [`BUCKETS`] entries.
+    pub fn from_raw_parts(counts: Vec<u64>, count: u64, sum: f64, min: f64, max: f64) -> Self {
+        assert_eq!(counts.len(), BUCKETS, "histogram bucket-count mismatch");
+        Histogram { counts, count, sum, min, max }
+    }
+}
+
+/// One worker's lock-free shard: atomic buckets plus CAS-maintained
+/// f64 sum/min/max (bit-stored). Uncontended in practice — each worker
+/// owns its shard — so the CAS loops never spin.
+struct HistShard {
+    counts: Vec<AtomicU64>, // BUCKETS entries
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        HistShard {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    fn record(&self, v: f64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        update_f64(&self.sum_bits, |s| s + v);
+        update_f64(&self.min_bits, |m| m.min(v));
+        update_f64(&self.max_bits, |m| m.max(v));
+    }
+}
+
+fn update_f64(bits: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Lock-free per-worker histogram shards, merged on [`snapshot`].
+///
+/// [`snapshot`]: ShardedHistogram::snapshot
+pub struct ShardedHistogram {
+    shards: Vec<HistShard>,
+}
+
+impl ShardedHistogram {
+    pub fn new(shards: usize) -> Self {
+        ShardedHistogram { shards: (0..shards.max(1)).map(|_| HistShard::new()).collect() }
+    }
+
+    /// Record from worker `worker` (routed `worker % shards`, so any
+    /// worker id is valid).
+    pub fn record(&self, worker: usize, v: f64) {
+        self.shards[worker % self.shards.len()].record(v);
+    }
+
+    /// Merge every shard into one plain [`Histogram`].
+    pub fn snapshot(&self) -> Histogram {
+        let mut out = Histogram::new();
+        for shard in &self.shards {
+            let partial = Histogram {
+                counts: shard.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+                count: shard.count.load(Ordering::Relaxed),
+                sum: f64::from_bits(shard.sum_bits.load(Ordering::Relaxed)),
+                min: f64::from_bits(shard.min_bits.load(Ordering::Relaxed)),
+                max: f64::from_bits(shard.max_bits.load(Ordering::Relaxed)),
+            };
+            out.merge(&partial);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One bucket width: quantile answers may be off by at most this
+    /// multiplicative factor from the exact order statistic.
+    const BUCKET_WIDTH: f64 = 1.1892071150027210667; // 2^(1/4)
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+        sorted[idx]
+    }
+
+    #[test]
+    fn empty_histogram_answers_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn mean_min_max_are_exact() {
+        let mut h = Histogram::new();
+        for v in [0.003, 0.0011, 0.25, 0.0027] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - (0.003 + 0.0011 + 0.25 + 0.0027) / 4.0).abs() < 1e-15);
+        assert_eq!(h.min(), 0.0011);
+        assert_eq!(h.max(), 0.25);
+    }
+
+    #[test]
+    fn quantiles_within_one_bucket_width_of_exact() {
+        // A spread of latencies over several decades, deterministic LCG.
+        let mut vals = Vec::new();
+        let mut state = 0x2545F4914F6CDD1Du64;
+        for _ in 0..5000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+            vals.push(1e-5 * 1000f64.powf(u)); // 10µs … 10ms, log-uniform
+        }
+        let mut h = Histogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let exact = exact_quantile(&sorted, q);
+            let got = h.quantile(q);
+            let ratio = got / exact;
+            assert!(
+                (1.0 / BUCKET_WIDTH) - 1e-12 <= ratio && ratio <= BUCKET_WIDTH + 1e-12,
+                "q={q}: hist {got} vs exact {exact} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_is_monotone_and_clamped_to_observed_range() {
+        let mut h = Histogram::new();
+        for i in 0..100 {
+            h.record(1e-4 + i as f64 * 1e-5);
+        }
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile not monotone at q={q}");
+            assert!(v >= h.min() && v <= h.max());
+            last = v;
+        }
+    }
+
+    #[test]
+    fn single_value_distribution_is_answered_exactly() {
+        let mut h = Histogram::new();
+        for _ in 0..50 {
+            h.record(0.002);
+        }
+        // min == max == 0.002, so the clamp makes every quantile exact.
+        assert_eq!(h.quantile(0.5), 0.002);
+        assert_eq!(h.quantile(0.99), 0.002);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_to_the_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(1e-12);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        let (counts, ..) = h.raw_parts();
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_into_one() {
+        let vals_a = [0.001, 0.02, 0.5];
+        let vals_b = [0.003, 0.000004];
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for &v in &vals_a {
+            a.record(v);
+            whole.record(v);
+        }
+        for &v in &vals_b {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_including_empty() {
+        let mut h = Histogram::new();
+        for v in [0.002, 0.0035, 0.0019] {
+            h.record(v);
+        }
+        let (counts, count, sum, min, max) = h.raw_parts();
+        let back = Histogram::from_raw_parts(counts.to_vec(), count, sum, min, max);
+        assert_eq!(back, h);
+
+        let empty = Histogram::new();
+        let (c, n, s, mn, mx) = empty.raw_parts();
+        assert_eq!(Histogram::from_raw_parts(c.to_vec(), n, s, mn, mx), Histogram::new());
+    }
+
+    #[test]
+    fn sharded_snapshot_matches_a_plain_histogram() {
+        let sharded = ShardedHistogram::new(4);
+        let mut plain = Histogram::new();
+        for i in 0..1000 {
+            let v = 1e-4 * (1.0 + (i % 37) as f64);
+            sharded.record(i % 7, v); // worker ids beyond the shard count
+            plain.record(v);
+        }
+        assert_eq!(sharded.snapshot(), plain);
+    }
+
+    #[test]
+    fn sharded_records_concurrently() {
+        let sharded = std::sync::Arc::new(ShardedHistogram::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                let s = sharded.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        s.record(w, 1e-3 * (1 + i % 11) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = sharded.snapshot();
+        assert_eq!(snap.count(), 2000);
+        assert!(snap.quantile(0.5) > 0.0);
+    }
+}

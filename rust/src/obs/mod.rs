@@ -1,0 +1,122 @@
+//! Observability — tracing spans, bounded histograms, and metric
+//! snapshots for every execution layer, **zero-cost when disabled**.
+//!
+//! The paper's central claim (Theorem 1: sifting tolerates a slightly
+//! outdated model) is a claim about *where time goes* — sift vs. update
+//! vs. sync overlap. Before this module the stack reported timing through
+//! four disjoint structs ([`WallTimes`], [`PoolStats`], [`NetStats`], and
+//! the serve-session latency vec), none of which could answer "what was
+//! worker 3 doing while the coordinator replayed round t?". The pieces:
+//!
+//! * [`span`] — scoped phase spans (`round`, `sift`, `merge`, `update`,
+//!   `sync`, `checkpoint`, `net.send`/`net.recv`, …) carrying
+//!   node/round/worker ids, recorded into per-thread lock-free SPSC ring
+//!   buffers and drained by the coordinator ([`drain_spans`]);
+//! * [`hist`] — a fixed-bucket log-scale [`Histogram`] (bounded memory,
+//!   quantiles within one bucket width) plus lock-free per-worker
+//!   [`ShardedHistogram`] shards merged on snapshot. Replaces the
+//!   unbounded latency vec in `serve/session.rs` and the duplicated
+//!   summary-stat math in `benchlib.rs`;
+//! * [`registry`] — named [`Counter`]s/[`Gauge`]s registered once
+//!   (interned `&'static` handles), snapshotted into a versioned
+//!   [`ObsReport`] that folds in the legacy [`WallTimes`]/[`PoolStats`]/
+//!   [`NetStats`] so `SyncReport` and `BENCH_sift.json` consume one
+//!   source of truth;
+//! * [`export`] — Chrome/Perfetto `trace_event` JSON (`--trace-out`) and
+//!   a human summary table (`--obs-summary`).
+//!
+//! **The bit-identity contract.** Instrumentation observes only real
+//! wall-clock (`std::time::Instant`); it never touches the simulated
+//! [`RoundClock`](crate::sim::RoundClock), any RNG, or learning state, so
+//! an instrumented run is bit-identical to an uninstrumented one
+//! (`tests/backend_equivalence.rs` / `tests/pipeline_equivalence.rs`
+//! carry obs-on vs. obs-off rows). When disabled — the default — the
+//! [`obs_span!`](crate::obs_span) macro compiles down to one branch on a
+//! static `AtomicBool` and records nothing.
+//!
+//! [`WallTimes`]: crate::coordinator::sync::WallTimes
+//! [`PoolStats`]: crate::exec::PoolStats
+//! [`NetStats`]: crate::net::NetStats
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use export::{render_summary, trace_json, write_trace};
+pub use hist::{Histogram, ShardedHistogram};
+pub use registry::{counter, gauge, histogram, Counter, Gauge, ObsReport, OBS_REPORT_VERSION};
+pub use span::{drain_spans, span, spans_dropped, spans_recorded, Span, SpanRecord};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The master switch every instrumentation site branches on. Off by
+/// default; `--trace-out`/`--obs-summary` (and tests) flip it.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Serializes the lib tests that toggle [`ENABLED`] — the flag is
+/// process-global and `cargo test` runs tests on parallel threads.
+#[cfg(test)]
+pub(crate) static TEST_ENABLE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Is span/metric recording on? One relaxed atomic load — this is the
+/// whole cost of a disabled instrumentation site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off, process-wide. Enabling mid-run is safe: the
+/// trace just starts at that point.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Microseconds since the process's first observation — the common
+/// timebase of every span (`ts` in the exported trace).
+pub(crate) fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Open a scoped span when obs is enabled; `None` (a no-op) otherwise.
+/// The span records itself into the current thread's ring buffer when the
+/// guard drops. Optional ids attach builder-style:
+///
+/// ```ignore
+/// let _sp = crate::obs_span!("sift", node = i as i64, round = r as i64);
+/// ```
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr $(, $field:ident = $val:expr)* $(,)?) => {
+        if $crate::obs::enabled() {
+            Some($crate::obs::span($name)$(.$field($val))*)
+        } else {
+            None
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = TEST_ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        {
+            let _sp = crate::obs_span!("round", round = 1i64);
+            assert!(_sp.is_none());
+        }
+    }
+
+    #[test]
+    fn timebase_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,347 @@
+//! Named metrics and the versioned [`ObsReport`] snapshot.
+//!
+//! [`counter`]/[`gauge`] intern a `&'static` handle per name on first use
+//! (one short lock per registration; updates afterwards are plain
+//! atomics), so an instrumentation site can hold a handle for the run and
+//! never look the name up again.
+//!
+//! [`ObsReport`] is the one snapshot everything downstream reads: it
+//! folds today's ad-hoc telemetry structs
+//! ([`WallTimes`]/[`PoolStats`]/[`NetStats`]) into canonical named
+//! counters/gauges, rides on `SyncReport`, backs the `obs` section of
+//! `BENCH_sift.json` (schema 6), and crosses the serve-daemon wire as the
+//! `Stats` response — versioned and hand-encoded like every other wire
+//! payload.
+//!
+//! [`WallTimes`]: crate::coordinator::sync::WallTimes
+//! [`PoolStats`]: crate::exec::PoolStats
+//! [`NetStats`]: crate::net::NetStats
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::sync::WallTimes;
+use crate::exec::PoolStats;
+use crate::net::wire::{put_f64, put_len, put_u32, put_u64, Reader};
+use crate::net::NetStats;
+
+/// A monotone named counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins named gauge (f64, bit-stored).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+fn counters() -> &'static Mutex<BTreeMap<&'static str, &'static Counter>> {
+    static MAP: OnceLock<Mutex<BTreeMap<&'static str, &'static Counter>>> = OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn gauges() -> &'static Mutex<BTreeMap<&'static str, &'static Gauge>> {
+    static MAP: OnceLock<Mutex<BTreeMap<&'static str, &'static Gauge>>> = OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// The counter registered under `name` — interned once, same handle on
+/// every call.
+pub fn counter(name: &'static str) -> &'static Counter {
+    counters()
+        .lock()
+        .expect("counter registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Counter(AtomicU64::new(0)))))
+}
+
+/// The gauge registered under `name` — interned once, same handle on
+/// every call.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    gauges()
+        .lock()
+        .expect("gauge registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Gauge(AtomicU64::new(0f64.to_bits())))))
+}
+
+fn hists() -> &'static Mutex<BTreeMap<&'static str, &'static super::ShardedHistogram>> {
+    static MAP: OnceLock<Mutex<BTreeMap<&'static str, &'static super::ShardedHistogram>>> =
+        OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Number of shards a registry histogram carries — enough that pool
+/// workers on one machine rarely share a shard.
+const HIST_SHARDS: usize = 16;
+
+/// The sharded histogram registered under `name` — interned once, same
+/// handle on every call. Record with the worker/thread lane as the shard
+/// hint.
+pub fn histogram(name: &'static str) -> &'static super::ShardedHistogram {
+    hists()
+        .lock()
+        .expect("histogram registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(super::ShardedHistogram::new(HIST_SHARDS))))
+}
+
+fn snapshot_counters() -> Vec<(String, u64)> {
+    counters()
+        .lock()
+        .expect("counter registry poisoned")
+        .iter()
+        .map(|(name, c)| (name.to_string(), c.get()))
+        .collect()
+}
+
+fn snapshot_gauges() -> Vec<(String, f64)> {
+    gauges()
+        .lock()
+        .expect("gauge registry poisoned")
+        .iter()
+        .map(|(name, g)| (name.to_string(), g.get()))
+        .collect()
+}
+
+/// Layout version of [`ObsReport`]; bump on any rename or field change.
+pub const OBS_REPORT_VERSION: u32 = 1;
+
+/// A named-metric snapshot: sorted `(name, value)` pairs, versioned, wire
+/// encodable. The canonical names written by [`ObsReport::fold_sync`]
+/// mirror the legacy structs field for field (`wall.sift_s` ↔
+/// `WallTimes::sift`, `net.sync_bytes` ↔ `NetStats::sync_bytes`, …) so
+/// consumers can cross-check the two sources exactly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    pub version: u32,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+}
+
+impl ObsReport {
+    pub fn new() -> Self {
+        ObsReport { version: OBS_REPORT_VERSION, counters: Vec::new(), gauges: Vec::new() }
+    }
+
+    pub fn push_counter(&mut self, name: impl Into<String>, v: u64) {
+        self.counters.push((name.into(), v));
+    }
+
+    pub fn push_gauge(&mut self, name: impl Into<String>, v: f64) {
+        self.gauges.push((name.into(), v));
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Fold the three legacy per-run telemetry structs into one canonical
+    /// snapshot — the single source of truth `SyncReport` and the bench
+    /// schema consume. Values are copied verbatim, so each named metric
+    /// equals its legacy field exactly.
+    pub fn fold_sync(wall: &WallTimes, pool: &PoolStats, net: &NetStats) -> Self {
+        let mut r = ObsReport::new();
+        r.push_gauge("wall.sift_s", wall.sift);
+        r.push_gauge("wall.update_s", wall.update);
+        r.push_gauge("wall.warmstart_s", wall.warmstart);
+        r.push_gauge("wall.total_s", wall.total);
+        r.push_counter("pool.workers", pool.workers as u64);
+        r.push_counter("pool.threads_spawned", pool.threads_spawned);
+        r.push_counter("pool.rounds", pool.rounds);
+        r.push_counter("net.bytes_sent", net.bytes_sent);
+        r.push_counter("net.bytes_received", net.bytes_received);
+        r.push_counter("net.sync_messages", net.sync_messages);
+        r.push_counter("net.delta_syncs", net.delta_syncs);
+        r.push_counter("net.full_syncs", net.full_syncs);
+        r.push_counter("net.sync_bytes", net.sync_bytes);
+        r.push_counter("net.full_equiv_bytes", net.full_equiv_bytes);
+        r.push_counter("obs.spans", super::span::spans_recorded());
+        r.push_counter("obs.spans_dropped", super::span::spans_dropped());
+        r
+    }
+
+    /// Append every registered named [`counter`]/[`gauge`]/[`histogram`]
+    /// — the live process-wide values a daemon reports on a `Stats`
+    /// request. Histograms flatten to `{name}.count` / `.p50_s` / `.p99_s`
+    /// / `.max_s` summary metrics.
+    pub fn with_registry(mut self) -> Self {
+        for (name, v) in snapshot_counters() {
+            self.counters.push((name, v));
+        }
+        for (name, v) in snapshot_gauges() {
+            self.gauges.push((name, v));
+        }
+        let snaps: Vec<(String, super::Histogram)> = hists()
+            .lock()
+            .expect("histogram registry poisoned")
+            .iter()
+            .map(|(name, h)| (name.to_string(), h.snapshot()))
+            .collect();
+        for (name, h) in snaps {
+            self.counters.push((format!("{name}.count"), h.count()));
+            self.gauges.push((format!("{name}.p50_s"), h.quantile(0.5)));
+            self.gauges.push((format!("{name}.p99_s"), h.quantile(0.99)));
+            self.gauges.push((format!("{name}.max_s"), h.max()));
+        }
+        self
+    }
+
+    pub fn encode(&self, buf: &mut Vec<u8>) -> Result<()> {
+        put_u32(buf, self.version);
+        put_len(buf, self.counters.len())?;
+        for (name, v) in &self.counters {
+            put_len(buf, name.len())?;
+            buf.extend_from_slice(name.as_bytes());
+            put_u64(buf, *v);
+        }
+        put_len(buf, self.gauges.len())?;
+        for (name, v) in &self.gauges {
+            put_len(buf, name.len())?;
+            buf.extend_from_slice(name.as_bytes());
+            put_f64(buf, *v);
+        }
+        Ok(())
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Self> {
+        let version = r.u32()?;
+        ensure!(
+            version == OBS_REPORT_VERSION,
+            "obs report version {version} != {OBS_REPORT_VERSION}"
+        );
+        let mut out = ObsReport::new();
+        let nc = r.u32()? as usize;
+        for _ in 0..nc {
+            let len = r.u32()? as usize;
+            let name = String::from_utf8(r.bytes(len)?)
+                .map_err(|_| anyhow::anyhow!("metric name is not utf-8"))?;
+            let v = r.u64()?;
+            out.counters.push((name, v));
+        }
+        let ng = r.u32()? as usize;
+        for _ in 0..ng {
+            let len = r.u32()? as usize;
+            let name = String::from_utf8(r.bytes(len)?)
+                .map_err(|_| anyhow::anyhow!("metric name is not utf-8"))?;
+            let v = r.f64()?;
+            out.gauges.push((name, v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interned_handles_are_stable_and_shared() {
+        let a = counter("test.registry.hits");
+        a.add(2);
+        let b = counter("test.registry.hits");
+        b.add(3);
+        assert_eq!(a.get(), b.get());
+        assert!(a.get() >= 5); // >= : other tests in the binary may also bump it
+        assert!(std::ptr::eq(a, b));
+
+        let g = gauge("test.registry.level");
+        g.set(2.5);
+        assert_eq!(gauge("test.registry.level").get(), 2.5);
+    }
+
+    #[test]
+    fn fold_sync_mirrors_the_legacy_structs_exactly() {
+        let wall = WallTimes { sift: 1.5, update: 0.25, warmstart: 0.125, total: 2.0 };
+        let pool = PoolStats { workers: 4, threads_spawned: 4, rounds: 17 };
+        let net = NetStats {
+            bytes_sent: 1000,
+            bytes_received: 900,
+            sync_messages: 12,
+            delta_syncs: 10,
+            full_syncs: 2,
+            sync_bytes: 600,
+            full_equiv_bytes: 2400,
+        };
+        let r = ObsReport::fold_sync(&wall, &pool, &net);
+        assert_eq!(r.version, OBS_REPORT_VERSION);
+        assert_eq!(r.gauge("wall.sift_s"), Some(wall.sift));
+        assert_eq!(r.gauge("wall.update_s"), Some(wall.update));
+        assert_eq!(r.gauge("wall.warmstart_s"), Some(wall.warmstart));
+        assert_eq!(r.gauge("wall.total_s"), Some(wall.total));
+        assert_eq!(r.counter("pool.workers"), Some(4));
+        assert_eq!(r.counter("pool.threads_spawned"), Some(4));
+        assert_eq!(r.counter("pool.rounds"), Some(17));
+        assert_eq!(r.counter("net.sync_bytes"), Some(net.sync_bytes));
+        assert_eq!(r.counter("net.full_equiv_bytes"), Some(net.full_equiv_bytes));
+        assert_eq!(r.counter("net.sync_messages"), Some(net.sync_messages));
+        assert!(r.counter("obs.spans").is_some());
+        assert_eq!(r.gauge("no.such.metric"), None);
+    }
+
+    #[test]
+    fn report_roundtrips_through_the_wire_codec() {
+        let mut r = ObsReport::new();
+        r.push_counter("serve.segments_done", 42);
+        r.push_counter("net.sync_bytes", u64::MAX - 1);
+        r.push_gauge("wall.sift_s", 0.001953125);
+        r.push_gauge("live.p99_ms", -0.0); // sign bit must survive
+        let mut buf = Vec::new();
+        r.encode(&mut buf).unwrap();
+        let mut reader = Reader::new(&buf);
+        let back = ObsReport::decode(&mut reader).unwrap();
+        assert_eq!(reader.remaining(), 0);
+        assert_eq!(back.version, r.version);
+        assert_eq!(back.counters, r.counters);
+        assert_eq!(back.gauges.len(), r.gauges.len());
+        for ((n1, v1), (n2, v2)) in back.gauges.iter().zip(&r.gauges) {
+            assert_eq!(n1, n2);
+            assert_eq!(v1.to_bits(), v2.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_version_and_truncation() {
+        let mut r = ObsReport::new();
+        r.push_counter("x", 1);
+        let mut buf = Vec::new();
+        r.encode(&mut buf).unwrap();
+        buf[0] = 99; // version byte
+        assert!(ObsReport::decode(&mut Reader::new(&buf)).is_err());
+
+        let mut buf2 = Vec::new();
+        r.encode(&mut buf2).unwrap();
+        buf2.truncate(buf2.len() - 3);
+        assert!(ObsReport::decode(&mut Reader::new(&buf2)).is_err());
+    }
+
+    #[test]
+    fn with_registry_appends_named_metrics() {
+        counter("test.registry.appended").add(1);
+        let r = ObsReport::new().with_registry();
+        assert!(r.counter("test.registry.appended").is_some());
+    }
+}

@@ -1,0 +1,313 @@
+//! Scoped phase spans recorded into per-thread lock-free ring buffers.
+//!
+//! Every thread that records a span owns one [`SpanShard`] — a bounded
+//! single-producer/single-consumer ring. The producer is the owning
+//! thread (plain store + `Release` head bump, never a lock, never an
+//! allocation); the consumer is whoever calls [`drain_spans`], which
+//! walks the global shard registry under a short lock. A full ring drops
+//! the newest span and counts it ([`spans_dropped`]) instead of growing —
+//! tracing a long daemon stays bounded.
+//!
+//! Spans carry optional node/round/worker ids (`-1` = not set) so the
+//! exported trace can show which node a `sift` belonged to and which
+//! round an `update` replayed — the ids the ad-hoc timing structs never
+//! had.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-thread ring capacity. 16Ki spans/thread bounds a traced run at a
+/// few MiB however long it lives; overflow drops (and counts) rather
+/// than growing.
+const SHARD_CAP: usize = 1 << 14;
+
+/// One completed span, as drained. `name` is always a compile-time
+/// literal (`"round"`, `"sift"`, `"net.send"`, …), which is what lets the
+/// JSON exporter skip escaping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// Start, µs since the process obs epoch ([`super::now_us`]).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Recording thread (obs-local id, stable for the thread's lifetime).
+    pub tid: u64,
+    /// Node/lane id, or -1.
+    pub node: i64,
+    /// Round index, or -1.
+    pub round: i64,
+    /// Executing pool worker, or -1.
+    pub worker: i64,
+}
+
+impl SpanRecord {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+
+    /// Does this span's interval lie within `other`'s (time containment)?
+    pub fn within(&self, other: &SpanRecord) -> bool {
+        self.start_us >= other.start_us && self.end_us() <= other.end_us()
+    }
+
+    /// Do the two spans' intervals overlap in time?
+    pub fn overlaps(&self, other: &SpanRecord) -> bool {
+        self.start_us < other.end_us() && other.start_us < self.end_us()
+    }
+}
+
+impl Default for SpanRecord {
+    fn default() -> Self {
+        SpanRecord { name: "", start_us: 0, dur_us: 0, tid: 0, node: -1, round: -1, worker: -1 }
+    }
+}
+
+/// A thread's SPSC span ring. Producer = owning thread, consumer =
+/// [`drain_spans`] (serialized by the registry lock).
+struct SpanShard {
+    tid: u64,
+    /// Next write slot (monotone; producer-owned, `Release` on publish).
+    head: AtomicUsize,
+    /// Next read slot (monotone; consumer-owned, `Release` on advance).
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+    buf: Box<[UnsafeCell<SpanRecord>]>,
+}
+
+// Slots in `tail..head` are only read by the consumer; slots outside are
+// only written by the producer, and the full-check keeps the two ranges
+// disjoint. Head/tail ordering publishes the hand-offs.
+unsafe impl Sync for SpanShard {}
+unsafe impl Send for SpanShard {}
+
+impl SpanShard {
+    fn new(tid: u64) -> Self {
+        SpanShard {
+            tid,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            buf: (0..SHARD_CAP).map(|_| UnsafeCell::new(SpanRecord::default())).collect(),
+        }
+    }
+
+    /// Producer side: record one span, or drop it if the ring is full.
+    fn push(&self, rec: SpanRecord) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.buf.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { *self.buf[head % self.buf.len()].get() = rec };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side: move every published span out of the ring.
+    fn drain_into(&self, out: &mut Vec<SpanRecord>) {
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        while tail != head {
+            out.push(unsafe { *self.buf[tail % self.buf.len()].get() });
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(head, Ordering::Release);
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<SpanShard>>> {
+    static SHARDS: OnceLock<Mutex<Vec<Arc<SpanShard>>>> = OnceLock::new();
+    SHARDS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// The calling thread's shard, registered globally on first use (the
+    /// only lock a recording thread ever takes, once per thread). The Arc
+    /// in the registry outlives the thread, so spans from finished pool
+    /// workers survive until drained.
+    static LOCAL: Arc<SpanShard> = {
+        let shard = Arc::new(SpanShard::new(NEXT_TID.fetch_add(1, Ordering::Relaxed)));
+        registry().lock().expect("span registry poisoned").push(shard.clone());
+        shard
+    };
+}
+
+/// An open span; records itself on drop. Construct via [`span`] or the
+/// [`obs_span!`](crate::obs_span) macro (which adds the disabled-branch).
+#[must_use = "a span measures the scope that holds it"]
+pub struct Span {
+    live: bool,
+    name: &'static str,
+    start_us: u64,
+    node: i64,
+    round: i64,
+    worker: i64,
+}
+
+impl Span {
+    pub fn node(mut self, node: i64) -> Self {
+        self.node = node;
+        self
+    }
+
+    pub fn round(mut self, round: i64) -> Self {
+        self.round = round;
+        self
+    }
+
+    pub fn worker(mut self, worker: i64) -> Self {
+        self.worker = worker;
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let rec = SpanRecord {
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: super::now_us().saturating_sub(self.start_us),
+            tid: 0,
+            node: self.node,
+            round: self.round,
+            worker: self.worker,
+        };
+        // try_with: a span dropped during thread teardown is silently lost
+        // rather than aborting the thread.
+        let _ = LOCAL.try_with(|shard| shard.push(SpanRecord { tid: shard.tid, ..rec }));
+    }
+}
+
+/// Open a span unconditionally (the macro's enabled-branch saves the
+/// timestamp read when obs is off).
+pub fn span(name: &'static str) -> Span {
+    Span {
+        live: super::enabled(),
+        name,
+        start_us: super::now_us(),
+        node: -1,
+        round: -1,
+        worker: -1,
+    }
+}
+
+/// Drain every thread's ring into one list, sorted by start time. The
+/// coordinator calls this after a run (or between rounds); draining while
+/// producers are still recording is safe and simply takes what has been
+/// published so far.
+pub fn drain_spans() -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    for shard in registry().lock().expect("span registry poisoned").iter() {
+        shard.drain_into(&mut out);
+    }
+    out.sort_by_key(|r| (r.start_us, r.tid));
+    out
+}
+
+/// Total spans ever published (drained or not), process-wide.
+pub fn spans_recorded() -> u64 {
+    registry()
+        .lock()
+        .expect("span registry poisoned")
+        .iter()
+        .map(|s| s.head.load(Ordering::Acquire) as u64)
+        .sum()
+}
+
+/// Total spans lost to full rings, process-wide.
+pub fn spans_dropped() -> u64 {
+    registry()
+        .lock()
+        .expect("span registry poisoned")
+        .iter()
+        .map(|s| s.dropped.load(Ordering::Relaxed))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Span-recording tests share the process-global enable flag and
+    // shards with every other test in the binary, so they only assert on
+    // spans they can identify as their own (unique names).
+
+    #[test]
+    fn spans_nest_and_drain_in_time_order() {
+        let _guard = crate::obs::TEST_ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        {
+            let _outer = span("test.outer.a7").round(3);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            let _inner = span("test.inner.a7").node(1).worker(2);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        crate::obs::set_enabled(false);
+        let all = drain_spans();
+        let outer = all.iter().find(|r| r.name == "test.outer.a7").expect("outer recorded");
+        let inner = all.iter().find(|r| r.name == "test.inner.a7").expect("inner recorded");
+        assert!(inner.within(outer), "inner {inner:?} not within outer {outer:?}");
+        assert!(outer.overlaps(inner));
+        assert_eq!(outer.round, 3);
+        assert_eq!((inner.node, inner.worker), (1, 2));
+        assert_eq!(inner.tid, outer.tid);
+        // Drained: a second drain cannot return them again.
+        let again = drain_spans();
+        assert!(!again.iter().any(|r| r.name.starts_with("test.") && r.name.ends_with(".a7")));
+    }
+
+    #[test]
+    fn cross_thread_spans_carry_distinct_tids() {
+        let _guard = crate::obs::TEST_ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let _sp = span("test.thread.b3").node(i);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        crate::obs::set_enabled(false);
+        let all = drain_spans();
+        let mine: Vec<_> = all.iter().filter(|r| r.name == "test.thread.b3").collect();
+        assert_eq!(mine.len(), 2);
+        assert_ne!(mine[0].tid, mine[1].tid, "each thread has its own shard");
+    }
+
+    #[test]
+    fn full_ring_drops_and_counts_instead_of_growing() {
+        let shard = SpanShard::new(999);
+        for _ in 0..(SHARD_CAP + 10) {
+            shard.push(SpanRecord { name: "x", ..SpanRecord::default() });
+        }
+        assert_eq!(shard.dropped.load(Ordering::Relaxed), 10);
+        let mut out = Vec::new();
+        shard.drain_into(&mut out);
+        assert_eq!(out.len(), SHARD_CAP);
+        // Drained: the ring accepts new spans again.
+        shard.push(SpanRecord { name: "y", ..SpanRecord::default() });
+        out.clear();
+        shard.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].name, "y");
+    }
+
+    #[test]
+    fn interval_predicates() {
+        let a = SpanRecord { start_us: 10, dur_us: 100, ..SpanRecord::default() };
+        let b = SpanRecord { start_us: 50, dur_us: 10, ..SpanRecord::default() };
+        let c = SpanRecord { start_us: 200, dur_us: 10, ..SpanRecord::default() };
+        assert!(b.within(&a) && !a.within(&b));
+        assert!(a.overlaps(&b) && b.overlaps(&a));
+        assert!(!a.overlaps(&c) && !c.within(&a));
+    }
+}

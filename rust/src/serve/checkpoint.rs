@@ -13,13 +13,16 @@
 use crate::data::stream::StreamCursor;
 use crate::net::wire::{put_f64, put_len, put_u32, put_u64, put_u8, Reader};
 use crate::net::TaskKind;
+use crate::obs::{hist::BUCKETS, Histogram};
 use anyhow::{Context, Result};
 use std::path::Path;
 
 /// File magic: "PALC" (para-active learn checkpoint).
 const MAGIC: u32 = 0x50_41_4C_43;
 /// Bump on any layout change; decode refuses other versions.
-const VERSION: u32 = 1;
+/// v2: unbounded per-chunk latency list replaced by the fixed-bucket
+/// sift-latency [`Histogram`] (constant checkpoint size).
+const VERSION: u32 = 2;
 
 /// Resume state for one logical sift node: the Eq-5 coin-flip RNG and
 /// the position in the node's deterministic example stream.
@@ -51,9 +54,10 @@ pub struct SessionCheckpoint {
     pub learner: Vec<u8>,
     /// One cursor per logical node, node order.
     pub nodes: Vec<NodeCursor>,
-    /// Per-node-chunk sift latencies (seconds), for p50/p99 telemetry
-    /// that survives a restart.
-    pub chunk_latencies: Vec<f64>,
+    /// Per-node-chunk sift latency distribution (seconds), for p50/p99
+    /// telemetry that survives a restart. Fixed-bucket, so the
+    /// checkpoint stays the same size however long the session runs.
+    pub sift_hist: Histogram,
     /// Total wall seconds spent in parallel sift phases.
     pub sift_wall: f64,
     /// Total rows pushed through the sifters.
@@ -89,10 +93,15 @@ impl SessionCheckpoint {
             }
             put_u64(&mut buf, node.stream.produced);
         }
-        put_len(&mut buf, self.chunk_latencies.len())?;
-        for &l in &self.chunk_latencies {
-            put_f64(&mut buf, l);
+        let (counts, count, sum, min, max) = self.sift_hist.raw_parts();
+        put_len(&mut buf, counts.len())?;
+        for &c in counts {
+            put_u64(&mut buf, c);
         }
+        put_u64(&mut buf, count);
+        put_f64(&mut buf, sum);
+        put_f64(&mut buf, min);
+        put_f64(&mut buf, max);
         put_f64(&mut buf, self.sift_wall);
         put_u64(&mut buf, self.rows_sifted);
         Ok(buf)
@@ -134,11 +143,20 @@ impl SessionCheckpoint {
                 stream: StreamCursor { rng: stream_rng, produced },
             });
         }
-        let n_lat = r.u32()? as usize;
-        let mut chunk_latencies = Vec::with_capacity(n_lat);
-        for _ in 0..n_lat {
-            chunk_latencies.push(r.f64()?);
+        let n_buckets = r.u32()? as usize;
+        anyhow::ensure!(
+            n_buckets == BUCKETS,
+            "checkpoint histogram has {n_buckets} buckets, this build expects {BUCKETS}"
+        );
+        let mut counts = Vec::with_capacity(n_buckets);
+        for _ in 0..n_buckets {
+            counts.push(r.u64()?);
         }
+        let hist_count = r.u64()?;
+        let hist_sum = r.f64()?;
+        let hist_min = r.f64()?;
+        let hist_max = r.f64()?;
+        let sift_hist = Histogram::from_raw_parts(counts, hist_count, hist_sum, hist_min, hist_max);
         let sift_wall = r.f64()?;
         let rows_sifted = r.u64()?;
         anyhow::ensure!(
@@ -154,7 +172,7 @@ impl SessionCheckpoint {
             n_queried,
             learner,
             nodes,
-            chunk_latencies,
+            sift_hist,
             sift_wall,
             rows_sifted,
         })
@@ -163,6 +181,7 @@ impl SessionCheckpoint {
     /// Write atomically: encode to `<path>.tmp`, fsync, rename over
     /// `path`. A crash mid-save never corrupts the resumable file.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let _sp = crate::obs_span!("checkpoint");
         let bytes = self.encode()?;
         let tmp = path.with_extension("tmp");
         {
@@ -209,10 +228,28 @@ mod tests {
                     stream: StreamCursor { rng: [13, 14, 15, 16], produced: 300 },
                 },
             ],
-            chunk_latencies: vec![0.002, 0.0035, 0.0019],
+            sift_hist: {
+                let mut h = Histogram::new();
+                for v in [0.002, 0.0035, 0.0019] {
+                    h.record(v);
+                }
+                h
+            },
             sift_wall: 0.0105,
             rows_sifted: 600,
         }
+    }
+
+    #[test]
+    fn checkpoint_size_is_independent_of_session_length() {
+        let short = sample().encode().unwrap();
+        let mut long_ck = sample();
+        for i in 0..10_000 {
+            long_ck.sift_hist.record(1e-4 * (1 + i % 97) as f64);
+        }
+        long_ck.segments_done = 10_003;
+        let long = long_ck.encode().unwrap();
+        assert_eq!(short.len(), long.len(), "telemetry must not grow the checkpoint");
     }
 
     #[test]

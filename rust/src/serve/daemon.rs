@@ -21,6 +21,7 @@
 use crate::coordinator::live::panic_message;
 use crate::net::wire::{put_f32s, put_len, put_u32, put_u64, put_u8, Reader};
 use crate::net::Channel;
+use crate::obs::ObsReport;
 use crate::serve::queue::{bounded, AdmissionError, BoundedQueue};
 use crate::serve::session::{Checkpointable, LearnSession};
 use anyhow::{Context, Result};
@@ -46,6 +47,9 @@ pub enum Request {
     /// Hold the dispatcher for `millis` — a maintenance/drain hook
     /// (also how the tests make "daemon busy" deterministic).
     Pause { millis: u32 },
+    /// Report the full observability snapshot ([`ObsReport`]): session
+    /// telemetry plus every registered process-wide metric.
+    Stats,
     /// Checkpoint (if configured) and stop serving.
     Shutdown,
 }
@@ -67,6 +71,8 @@ pub enum Response {
     /// Admission control refused the request: the work queue already
     /// holds `capacity` pending requests. Retry later.
     Busy { capacity: u32 },
+    /// The observability snapshot answering [`Request::Stats`].
+    Stats(ObsReport),
     Error(String),
     Bye,
 }
@@ -77,6 +83,7 @@ const REQ_TRAIN: u8 = 3;
 const REQ_RECONFIGURE: u8 = 4;
 const REQ_PAUSE: u8 = 5;
 const REQ_SHUTDOWN: u8 = 6;
+const REQ_STATS: u8 = 7;
 
 const RESP_SCORES: u8 = 1;
 const RESP_STATUS: u8 = 2;
@@ -84,6 +91,7 @@ const RESP_DONE: u8 = 3;
 const RESP_BUSY: u8 = 4;
 const RESP_ERROR: u8 = 5;
 const RESP_BYE: u8 = 6;
+const RESP_STATS: u8 = 7;
 
 impl Request {
     pub fn encode(&self) -> Result<Vec<u8>> {
@@ -106,6 +114,7 @@ impl Request {
                 put_u8(&mut buf, REQ_PAUSE);
                 put_u32(&mut buf, *millis);
             }
+            Request::Stats => put_u8(&mut buf, REQ_STATS),
             Request::Shutdown => put_u8(&mut buf, REQ_SHUTDOWN),
         }
         Ok(buf)
@@ -119,6 +128,7 @@ impl Request {
             REQ_TRAIN => Request::Train { segments: r.u32()? },
             REQ_RECONFIGURE => Request::Reconfigure { workers: r.u32()? },
             REQ_PAUSE => Request::Pause { millis: r.u32()? },
+            REQ_STATS => Request::Stats,
             REQ_SHUTDOWN => Request::Shutdown,
             other => anyhow::bail!("unknown request tag {other}"),
         };
@@ -152,6 +162,10 @@ impl Response {
                 put_u8(&mut buf, RESP_BUSY);
                 put_u32(&mut buf, *capacity);
             }
+            Response::Stats(report) => {
+                put_u8(&mut buf, RESP_STATS);
+                report.encode(&mut buf)?;
+            }
             Response::Error(msg) => {
                 put_u8(&mut buf, RESP_ERROR);
                 put_len(&mut buf, msg.len())?;
@@ -176,6 +190,7 @@ impl Response {
             },
             RESP_DONE => Response::Done { segments_done: r.u64()? },
             RESP_BUSY => Response::Busy { capacity: r.u32()? },
+            RESP_STATS => Response::Stats(ObsReport::decode(&mut r)?),
             RESP_ERROR => {
                 let n = r.u32()? as usize;
                 let msg = String::from_utf8(r.bytes(n)?)
@@ -367,6 +382,20 @@ fn handle_request<L: Checkpointable>(
             std::thread::sleep(Duration::from_millis(millis as u64));
             Response::Done { segments_done: session.segments_done() }
         }
+        Request::Stats => {
+            let t = session.telemetry();
+            let mut report = ObsReport::new();
+            report.push_counter("serve.segments_done", session.segments_done());
+            report.push_counter("serve.n_seen", session.n_seen());
+            report.push_counter("serve.n_queried", session.n_queried());
+            report.push_counter("serve.rows_sifted", t.rows_sifted());
+            report.push_counter("serve.sift_chunks", t.samples() as u64);
+            report.push_counter("serve.shed", shed.load(Ordering::Relaxed));
+            report.push_gauge("serve.sift_p50_ms", t.p50_ms());
+            report.push_gauge("serve.sift_p99_ms", t.p99_ms());
+            report.push_gauge("serve.rows_per_s", t.rows_per_sec());
+            Response::Stats(report.with_registry())
+        }
         Request::Shutdown => {
             if let Some(path) = &cfg.checkpoint {
                 if let Err(e) = session.checkpoint().and_then(|ck| ck.save(path)) {
@@ -445,6 +474,7 @@ mod tests {
             Request::Train { segments: 3 },
             Request::Reconfigure { workers: 8 },
             Request::Pause { millis: 10 },
+            Request::Stats,
             Request::Shutdown,
         ];
         for req in &reqs {
@@ -462,6 +492,12 @@ mod tests {
             },
             Response::Done { segments_done: 9 },
             Response::Busy { capacity: 64 },
+            Response::Stats({
+                let mut r = ObsReport::new();
+                r.push_counter("serve.segments_done", 2);
+                r.push_gauge("serve.sift_p50_ms", 1.25);
+                r
+            }),
             Response::Error("nope".into()),
             Response::Bye,
         ];
@@ -501,10 +537,22 @@ mod tests {
             Response::Error(msg) => assert!(msg.contains("multiple"), "{msg}"),
             other => panic!("bad-shape request must error, got {other:?}"),
         }
+        match roundtrip(&mut hub, 0, &Request::Stats) {
+            Response::Stats(r) => {
+                assert_eq!(r.counter("serve.segments_done"), Some(2));
+                assert_eq!(r.counter("serve.sift_chunks"), Some(4), "2 nodes x 2 segments");
+                let (p50, p99) = (
+                    r.gauge("serve.sift_p50_ms").unwrap(),
+                    r.gauge("serve.sift_p99_ms").unwrap(),
+                );
+                assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+            }
+            other => panic!("unexpected stats reply: {other:?}"),
+        }
         assert_eq!(roundtrip(&mut hub, 0, &Request::Shutdown), Response::Bye);
 
         let (report, session) = handle.join().unwrap();
-        assert_eq!(report.requests_served, 5);
+        assert_eq!(report.requests_served, 6);
         assert_eq!(report.shed, 0);
         assert_eq!(session.segments_done(), 2);
         assert!(session.telemetry().rows_per_sec() > 0.0);

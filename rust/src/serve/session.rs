@@ -26,6 +26,7 @@ use crate::exec::{Job, PoolConfig, WorkerPool};
 use crate::learner::Learner;
 use crate::net::{config_fingerprint, TaskKind};
 use crate::nn::{AdaGradMlp, MlpConfig};
+use crate::obs::Histogram;
 use crate::serve::checkpoint::{NodeCursor, SessionCheckpoint};
 use crate::svm::lasvm::LaSvm;
 use crate::svm::{LaSvmConfig, RbfKernel};
@@ -142,12 +143,16 @@ impl SessionConfig {
     }
 }
 
-/// Live sift telemetry: per-node-chunk latencies plus sustained
-/// throughput, preserved across restarts via the checkpoint.
+/// Live sift telemetry: per-node-chunk latency distribution plus
+/// sustained throughput, preserved across restarts via the checkpoint.
+///
+/// Latencies live in a fixed-bucket [`Histogram`] (`obs::hist`), so a
+/// daemon serving forever holds constant telemetry memory — the old
+/// per-chunk `Vec<f64>` grew one entry per node×segment without bound.
 #[derive(Debug, Clone, Default)]
 pub struct SiftTelemetry {
-    /// Wall seconds for each (node, segment) sift chunk, merge order.
-    chunk_latencies: Vec<f64>,
+    /// Distribution of wall seconds per (node, segment) sift chunk.
+    sift_hist: Histogram,
     /// Total wall seconds across parallel sift phases.
     sift_wall: f64,
     /// Rows pushed through the sifters (excludes warmstart).
@@ -156,27 +161,23 @@ pub struct SiftTelemetry {
 
 impl SiftTelemetry {
     pub fn samples(&self) -> usize {
-        self.chunk_latencies.len()
+        self.sift_hist.count() as usize
     }
 
-    fn percentile_ms(&self, q: f64) -> f64 {
-        if self.chunk_latencies.is_empty() {
-            return 0.0;
-        }
-        let mut sorted = self.chunk_latencies.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        let idx = (q * (sorted.len() - 1) as f64).round() as usize;
-        sorted[idx.min(sorted.len() - 1)] * 1e3
-    }
-
-    /// Median per-chunk sift latency, milliseconds.
+    /// Median per-chunk sift latency, milliseconds (within one histogram
+    /// bucket width — a factor of 2^(1/4) — of the exact order statistic).
     pub fn p50_ms(&self) -> f64 {
-        self.percentile_ms(0.50)
+        self.sift_hist.quantile(0.50) * 1e3
     }
 
-    /// Tail per-chunk sift latency, milliseconds.
+    /// Tail per-chunk sift latency, milliseconds (same bucket-width bound).
     pub fn p99_ms(&self) -> f64 {
-        self.percentile_ms(0.99)
+        self.sift_hist.quantile(0.99) * 1e3
+    }
+
+    /// The underlying latency distribution (seconds).
+    pub fn sift_hist(&self) -> &Histogram {
+        &self.sift_hist
     }
 
     /// Sustained sift throughput over the session's lifetime.
@@ -316,7 +317,7 @@ impl<L: Checkpointable> LearnSession<L> {
             n_seen: ck.n_seen,
             n_queried: ck.n_queried,
             telemetry: SiftTelemetry {
-                chunk_latencies: ck.chunk_latencies.clone(),
+                sift_hist: ck.sift_hist.clone(),
                 sift_wall: ck.sift_wall,
                 rows_sifted: ck.rows_sifted,
             },
@@ -345,7 +346,7 @@ impl<L: Checkpointable> LearnSession<L> {
             n_queried: self.n_queried,
             learner: self.learner.save_state()?,
             nodes,
-            chunk_latencies: self.telemetry.chunk_latencies.clone(),
+            sift_hist: self.telemetry.sift_hist.clone(),
             sift_wall: self.telemetry.sift_wall,
             rows_sifted: self.telemetry.rows_sifted,
         })
@@ -359,6 +360,8 @@ impl<L: Checkpointable> LearnSession<L> {
         // The synchronous counting discipline: every decision in this
         // segment uses the phase-start cluster count.
         let n_phase = self.n_seen;
+        let seg_no = self.segments_done as i64 + 1;
+        let _sp_seg = crate::obs_span!("round", round = seg_no);
         let frozen = self.learner.clone();
         let d = frozen.dim();
         let sifters = std::mem::take(&mut self.sifters);
@@ -369,9 +372,16 @@ impl<L: Checkpointable> LearnSession<L> {
             let jobs: Vec<Job<'_, NodeSift>> = sifters
                 .into_iter()
                 .zip(streams)
-                .map(|(mut sifter, mut stream)| {
+                .enumerate()
+                .map(|(node, (mut sifter, mut stream))| {
                     let frozen = &frozen;
-                    Box::new(move |_w: usize| {
+                    Box::new(move |w: usize| {
+                        let _sp = crate::obs_span!(
+                            "sift",
+                            node = node as i64,
+                            round = seg_no,
+                            worker = w as i64
+                        );
                         let start = Instant::now();
                         let mut xs = vec![0.0f32; chunk * d];
                         let mut ys = vec![0.0f32; chunk];
@@ -400,9 +410,10 @@ impl<L: Checkpointable> LearnSession<L> {
 
         // Node-major merge (run_round preserves submission order), then
         // importance-weighted replay into the authoritative learner.
+        let _sp_update = crate::obs_span!("update", round = seg_no);
         let mut selected = 0usize;
         for (sifter, stream, sel, latency) in outs {
-            self.telemetry.chunk_latencies.push(latency);
+            self.telemetry.sift_hist.record(latency);
             for (x, y, p) in sel {
                 self.learner.update(&x, y, (1.0 / p) as f32);
                 selected += 1;
@@ -526,6 +537,29 @@ mod tests {
         assert_eq!(s.telemetry().rows_sifted(), 360);
         assert!(s.telemetry().p99_ms() >= s.telemetry().p50_ms());
         assert!(s.telemetry().rows_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn telemetry_stays_bounded_over_thousands_of_segments() {
+        let mut cfg = SessionConfig::new(TaskKind::Nn);
+        cfg.nodes = 1;
+        cfg.chunk = 1;
+        cfg.warmstart = 0;
+        cfg.segments = 2500;
+        cfg.test_size = 10;
+        let mut s = LearnSession::create(cfg, &nn_session_learner());
+        for _ in 0..2500 {
+            s.run_segment();
+        }
+        assert_eq!(s.telemetry().samples(), 2500);
+        assert!(s.telemetry().p50_ms() > 0.0);
+        assert!(s.telemetry().p99_ms() >= s.telemetry().p50_ms());
+        // The old Vec-based telemetry grew the checkpoint by 8 bytes per
+        // chunk; the histogram keeps it at a fixed size forever.
+        let after_2500 = s.checkpoint().unwrap().encode().unwrap().len();
+        s.run_segment();
+        let after_2501 = s.checkpoint().unwrap().encode().unwrap().len();
+        assert_eq!(after_2500, after_2501, "checkpoint grew with session length");
     }
 
     #[test]

@@ -171,6 +171,23 @@ fn distributed_inproc_joins_the_backend_cross() {
 }
 
 #[test]
+fn instrumented_run_is_bit_identical_to_uninstrumented() {
+    // The obs contract (rust/src/obs/): span recording reads only real
+    // wall-clock, never the simulated clock, an RNG, or learning state —
+    // so flipping it on may not move a single statistic or model bit.
+    // Other tests in this binary may record spans while this one holds
+    // obs on; harmless, since spans never feed back into results.
+    let (off, off_bits) = svm_run_sync(4, 256, 1500, BackendChoice::threaded());
+    para_active::obs::set_enabled(true);
+    let (on, on_bits) = svm_run_sync(4, 256, 1500, BackendChoice::threaded());
+    para_active::obs::set_enabled(false);
+    let spans = para_active::obs::drain_spans();
+    assert_reports_identical(&off, &on, "obs on vs off");
+    assert_eq!(off_bits, on_bits, "obs on vs off: final model scores");
+    assert!(spans.iter().any(|s| s.name == "sift"), "obs-on run must record sift spans");
+}
+
+#[test]
 fn oversubscribed_nodes_complete_and_match() {
     // Far more nodes than cores: the pool must queue, finish, and still
     // deliver node-major broadcast order.

@@ -1,0 +1,160 @@
+//! Trace-shape contract of the obs subsystem (`rust/src/obs/`).
+//!
+//! Real runs — not synthetic spans — must produce traces with the
+//! structure an operator relies on in the Perfetto UI: every `sift`
+//! nested inside its `round` (and `merge`/`update` likewise), drain
+//! order sorted by start time, `net.send` inside the coordinator's
+//! `sync` span on distributed runs, and — the paper's Theorem 1 on
+//! screen — a pipelined run showing round t's `update` overlapping
+//! round t+1's `sift` spans. The exported JSON must mirror the drained
+//! spans one event per span.
+//!
+//! Span recording is process-global (one enable flag, per-thread rings
+//! shared by the whole binary), so every test takes `OBS_LOCK`,
+//! discards leftover spans, and only then records its own.
+
+mod common;
+
+use common::{svm_run, svm_run_distributed};
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::BackendChoice;
+use para_active::coordinator::pipeline::run_pipelined;
+use para_active::coordinator::sync::{SyncConfig, SyncReport};
+use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::exec::ReplayConfig;
+use para_active::learner::NativeScorer;
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::obs::{self, trace_json, SpanRecord};
+use std::sync::Mutex;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `run` with span recording on and return its result plus exactly
+/// the spans it produced.
+fn traced<R>(run: impl FnOnce() -> R) -> (R, Vec<SpanRecord>) {
+    let _guard = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = obs::drain_spans(); // discard spans a previous test left behind
+    obs::set_enabled(true);
+    let out = run();
+    obs::set_enabled(false);
+    let spans = obs::drain_spans();
+    (out, spans)
+}
+
+/// A pipelined NN run whose sifter queries nearly everything, so each
+/// round's deferred replay is heavy enough that its overlap with the
+/// next round's sift is deterministic, not a scheduling accident.
+fn greedy_pipelined_nn() -> SyncReport {
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 40);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let sifter = SifterSpec::margin(50.0, 11);
+    let cfg = SyncConfig::new(4, 192, 64, 1600)
+        .with_backend(BackendChoice::Threaded { threads: 2 })
+        .with_replay(ReplayConfig::synchronous(16))
+        .with_pipeline();
+    run_pipelined(&mut mlp, &sifter, &stream, &test, &cfg, &NativeScorer)
+}
+
+#[test]
+fn sequential_trace_nests_phases_inside_their_round() {
+    let ((report, _), spans) =
+        traced(|| svm_run(4, 256, 1500, BackendChoice::threaded(), ReplayConfig::default()));
+    assert!(!spans.is_empty(), "an instrumented run must record spans");
+    for w in spans.windows(2) {
+        assert!(
+            (w[0].start_us, w[0].tid) <= (w[1].start_us, w[1].tid),
+            "drain order broken: {:?} then {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    let rounds: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "round").collect();
+    let sifts: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "sift").collect();
+    assert_eq!(rounds.len() as u64, report.rounds, "one round span per round");
+    assert!(!sifts.is_empty(), "every round sifts");
+    for sift in &sifts {
+        assert!(sift.node >= 0 && sift.worker >= 0, "sift ids missing: {sift:?}");
+        let parent = rounds
+            .iter()
+            .find(|r| r.round == sift.round)
+            .unwrap_or_else(|| panic!("no round span for sift {sift:?}"));
+        assert!(sift.within(parent), "sift {sift:?} escapes its round {parent:?}");
+    }
+    // The merge and (non-drain) update phases nest in their round too.
+    for name in ["merge", "update"] {
+        for sp in spans.iter().filter(|s| s.name == name && s.round >= 0) {
+            let parent = rounds
+                .iter()
+                .find(|r| r.round == sp.round)
+                .unwrap_or_else(|| panic!("no round span for {name} {sp:?}"));
+            assert!(sp.within(parent), "{name} {sp:?} escapes round {parent:?}");
+        }
+    }
+}
+
+#[test]
+fn distributed_trace_nests_net_send_inside_sync() {
+    let (_run, spans) =
+        traced(|| svm_run_distributed(4, 2, 256, 1500, ReplayConfig::default()));
+    let syncs: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "sync").collect();
+    assert!(!syncs.is_empty(), "distributed rounds sync the model");
+    let sends: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "net.send").collect();
+    assert!(!sends.is_empty(), "syncing writes the wire");
+    // The coordinator's broadcast sends happen inside its sync span (same
+    // thread, same monotonic timebase, so containment is exact). Node-side
+    // sends (sift results) are legitimately outside any sync span.
+    let nested = sends
+        .iter()
+        .any(|send| syncs.iter().any(|sy| send.tid == sy.tid && send.within(sy)));
+    assert!(nested, "no net.send recorded inside a sync span: {spans:?}");
+    assert!(
+        spans.iter().any(|s| s.name == "net.recv"),
+        "both wire directions must be instrumented"
+    );
+}
+
+#[test]
+fn pipelined_trace_shows_update_overlapping_the_next_sift() {
+    let (report, spans) = traced(greedy_pipelined_nn);
+    assert!(report.pipelined, "the pipelined coordinator must not fall back");
+    assert!(report.rounds >= 2, "the overlap needs a deferred round to flush");
+    let mut found = false;
+    for update in spans.iter().filter(|s| s.name == "update" && s.round >= 0) {
+        // The overlap closure tags the flush with the previous round's
+        // index, so it runs while round `update.round + 1` sifts.
+        for sift in
+            spans.iter().filter(|s| s.name == "sift" && s.round == update.round + 1)
+        {
+            if update.overlaps(sift) {
+                assert_ne!(update.tid, sift.tid, "overlap requires separate threads");
+                found = true;
+            }
+        }
+    }
+    assert!(found, "no update span overlapped the next round's sift: {spans:?}");
+}
+
+#[test]
+fn exported_json_mirrors_the_drained_spans() {
+    let (_, spans) =
+        traced(|| svm_run(2, 128, 800, BackendChoice::Serial, ReplayConfig::default()));
+    let doc = trace_json(&spans);
+    assert!(doc.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), "{doc}");
+    assert!(doc.ends_with("]}"), "{doc}");
+    // One complete event per drained span, all in the obs category.
+    assert_eq!(doc.matches("\"ph\":\"X\"").count(), spans.len());
+    assert_eq!(doc.matches("\"cat\":\"obs\"").count(), spans.len());
+    assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+    for name in ["round", "sift", "update", "warmstart"] {
+        assert!(doc.contains(&format!("\"name\":\"{name}\"")), "missing {name}: {doc}");
+    }
+    // File order is drain order: timestamps never go backwards.
+    let mut last = 0u64;
+    for part in doc.split("\"ts\":").skip(1) {
+        let end = part.find(',').expect("ts is followed by dur");
+        let ts: u64 = part[..end].parse().expect("ts is an integer");
+        assert!(ts >= last, "ts went backwards in the exported trace");
+        last = ts;
+    }
+}

@@ -181,6 +181,23 @@ fn pipelined_equivalence_holds_on_every_backend() {
 }
 
 #[test]
+fn instrumented_pipeline_is_bit_identical_to_uninstrumented() {
+    // Span recording may not perturb the pipelined trajectory either —
+    // the overlap closure and the pool workers both carry obs_span!
+    // sites, and all of them must stay pure observers.
+    let fused = ReplayConfig::fused_batches(16);
+    let (off, off_bits) = mlp_run_pipelined(4, BackendChoice::threaded(), fused);
+    para_active::obs::set_enabled(true);
+    let (on, on_bits) = mlp_run_pipelined(4, BackendChoice::threaded(), fused);
+    para_active::obs::set_enabled(false);
+    let spans = para_active::obs::drain_spans();
+    assert!(on.pipelined && off.pipelined);
+    assert_reports_identical(&off, &on, "pipelined obs on vs off");
+    assert_eq!(off_bits, on_bits, "pipelined obs on vs off: final model bits");
+    assert!(spans.iter().any(|s| s.name == "round"), "obs-on run must record spans");
+}
+
+#[test]
 fn worker_matrix_from_env() {
     // CI smoke entry point: the workers-matrix job exports
     // PARA_ACTIVE_TEST_WORKERS in {1, 2, 8}; pipeline ≡ stale(·, 1) must
