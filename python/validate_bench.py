@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate BENCH_sift.json against its schema (version 6).
+"""Validate BENCH_sift.json against its schema (version 7).
 
 Gating in CI: the *shape* of the bench output is a contract — downstream
 tooling (and the eventual minimum-speedup gate) reads these fields, so a
@@ -13,7 +13,7 @@ Stdlib only. Usage: python3 python/validate_bench.py [path/to/BENCH_sift.json]
 import json
 import sys
 
-SCHEMA = 6
+SCHEMA = 7
 
 ERRORS = []
 
@@ -159,6 +159,20 @@ def main():
         if is_num(sift) and is_num(total) and total < sift:
             fail(f"obs: wall_total_s ({total}) must be >= wall_sift_s ({sift})")
 
+    # Fault-tolerance contract from one scripted chaos run (schema 7):
+    # the counters are informational, but bit_identical is a hard gate —
+    # a chaos run that diverges from its fault-free twin is a
+    # correctness regression, not a perf number.
+    check_row("faults", doc.get("faults", None), {
+        "plan": lambda v: isinstance(v, str) and v,
+        "rounds": lambda v: isinstance(v, int) and v >= 1,
+        "timeouts": count,
+        "retries": count,
+        "failovers": count,
+        "reconnects": count,
+        "bit_identical": lambda v: v is True,
+    })
+
     # Internal consistency of the wire telemetry (structure, not speed).
     for i, row in enumerate(doc.get("net") or []):
         if not isinstance(row, dict):
@@ -169,7 +183,7 @@ def main():
 
     for extra in set(doc) - {"bench", "schema", "cores", "shard", "paths",
                              "sweep", "update", "pipeline", "net", "live",
-                             "obs"}:
+                             "obs", "faults"}:
         fail(f"unknown top-level key {extra!r}")
 
     if ERRORS:

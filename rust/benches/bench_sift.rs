@@ -25,7 +25,7 @@
 //! and the end-to-end round time of a full threaded-backend NN run,
 //! strictly-sequenced loop vs the pipelined coordinator
 //! (`coordinator::pipeline`, sift overlapped with replay). Results are
-//! written to `BENCH_sift.json` (schema 6) so the perf trajectory is
+//! written to `BENCH_sift.json` (schema 7) so the perf trajectory is
 //! machine-readable across PRs.
 //!
 //! The **live** section runs a short serving-layer session
@@ -39,6 +39,12 @@
 //! the run's folded [`ObsReport`](para_active::obs::ObsReport) — the
 //! same numbers `--trace-out` / `--obs-summary` expose on the CLI —
 //! cross-checked against the legacy `WallTimes` fields.
+//!
+//! The **faults** section replays a scripted chaos plan (a delayed
+//! reply, a dropped reply, a disconnect window) through
+//! [`FaultInjectTransport`] and asserts the run stays bit-identical to
+//! its fault-free twin — the resilience contract — recording the
+//! timeout/retry/failover/reconnect counters alongside.
 
 use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::benchlib::{bench, bench_throughput, black_box};
@@ -51,13 +57,14 @@ use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use para_active::exec::{ReplayConfig, ReplayExecutor};
 use para_active::learner::{Learner, NativeScorer};
 use para_active::net::{
-    config_fingerprint, run_distributed, serve_sift_node, InProcTransport, MlpDenseCodec,
-    NetStats, SvmDeltaCodec, TaskKind,
+    config_fingerprint, run_distributed, serve_sift_node, FaultConfig, FaultInjectTransport,
+    FaultPlan, InProcTransport, MlpDenseCodec, NetStats, SvmDeltaCodec, TaskKind, Transport,
 };
 use para_active::nn::{AdaGradMlp, MlpConfig};
 use para_active::serve::{svm_session_learner, LearnSession, SessionConfig};
 use para_active::sim::Stopwatch;
 use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
+use std::time::Duration;
 
 fn trained_svm(n: usize) -> LaSvm<RbfKernel> {
     let cfg = StreamConfig::svm_task();
@@ -313,6 +320,8 @@ fn measure_net(learner: &'static str) -> NetRow {
                 &mut hub,
                 TaskKind::Svm,
                 fp,
+                &NativeScorer,
+                &FaultConfig::default(),
             )
             .expect("bench svm distributed run");
             for h in handles {
@@ -363,6 +372,8 @@ fn measure_net(learner: &'static str) -> NetRow {
                 &mut hub,
                 TaskKind::Nn,
                 fp,
+                &NativeScorer,
+                &FaultConfig::default(),
             )
             .expect("bench mlp distributed run");
             for h in handles {
@@ -372,6 +383,93 @@ fn measure_net(learner: &'static str) -> NetRow {
         }
     };
     NetRow { learner, rounds: report.rounds, stats: report.net }
+}
+
+/// Outcome of one scripted chaos run against its fault-free twin.
+struct FaultsRow {
+    plan: &'static str,
+    rounds: u64,
+    stats: NetStats,
+    bit_identical: bool,
+}
+
+/// One scripted chaos run through [`FaultInjectTransport`] — a delayed
+/// reply, a dropped reply, and a one-round disconnect against a 2-node
+/// in-proc SVM run — checked bit-for-bit against the fault-free twin.
+/// `bit_identical` is the resilience contract the validator gates on.
+fn measure_faults() -> FaultsRow {
+    const PLAN: &str = "delay@2:0x1,drop@3:1,disc@5:0+1";
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 40);
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(2, 256, 128, 2000);
+    let fp = config_fingerprint(&[0xFA17, 2, 256, 2000]);
+
+    let probe = |svm: &LaSvm<RbfKernel>| -> Vec<u32> {
+        let mut s = ExampleStream::for_node(&stream, 9_999_999);
+        (0..16).map(|_| svm.score(&s.next_example().x).to_bits()).collect()
+    };
+
+    let run = |plan: Option<FaultPlan>, faults: &FaultConfig| -> (Vec<u32>, u64, NetStats) {
+        let (hub, chans) = InProcTransport::pair(2);
+        let handles: Vec<_> = chans
+            .into_iter()
+            .map(|mut chan| {
+                let node_stream = stream.clone();
+                std::thread::spawn(move || {
+                    let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+                    let mut codec = SvmDeltaCodec::new(DIM);
+                    // Chaos may orphan a node mid-run; its exit status
+                    // is not part of the measurement.
+                    let _ = serve_sift_node(
+                        &mut chan,
+                        &mut replica,
+                        &mut codec,
+                        &NativeScorer,
+                        &SerialBackend,
+                        &node_stream,
+                        TaskKind::Svm,
+                        fp,
+                    );
+                })
+            })
+            .collect();
+        let mut wire: Box<dyn Transport> = match plan {
+            Some(p) => Box::new(FaultInjectTransport::new(Box::new(hub), p)),
+            None => Box::new(hub),
+        };
+        let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+        let r = run_distributed(
+            &mut svm,
+            &mut codec,
+            &sifter,
+            &stream,
+            &test,
+            &cfg,
+            wire.as_mut(),
+            TaskKind::Svm,
+            fp,
+            &NativeScorer,
+            faults,
+        )
+        .expect("bench chaos run");
+        drop(wire); // releases any node still blocked on a dead lane
+        for h in handles {
+            let _ = h.join();
+        }
+        (probe(&svm), r.rounds, r.net)
+    };
+
+    let (want, _, _) = run(None, &FaultConfig::default());
+    let plan = FaultPlan::parse(PLAN).expect("bench fault plan");
+    let faults = FaultConfig {
+        node_timeout: Some(Duration::from_millis(300)),
+        retries: 1,
+        ..FaultConfig::default()
+    };
+    let (got, rounds, stats) = run(Some(plan), &faults);
+    FaultsRow { plan: PLAN, rounds, stats, bit_identical: want == got }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -385,10 +483,11 @@ fn write_json(
     nets: &[NetRow],
     live: &LiveRow,
     obs: &ObsRow,
+    flt: &FaultsRow,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 6,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 7,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -470,7 +569,7 @@ fn write_json(
     body.push_str(&format!(
         "  \"obs\": {{\"report_version\": {}, \"spans\": {}, \"spans_dropped\": {}, \
          \"wall_sift_s\": {:.6}, \"wall_update_s\": {:.6}, \"wall_total_s\": {:.6}, \
-         \"pool_rounds\": {}, \"net_sync_bytes\": {}, \"net_sync_messages\": {}}}\n",
+         \"pool_rounds\": {}, \"net_sync_bytes\": {}, \"net_sync_messages\": {}}},\n",
         para_active::obs::OBS_REPORT_VERSION,
         obs.spans,
         obs.spans_dropped,
@@ -480,6 +579,17 @@ fn write_json(
         obs.pool_rounds,
         obs.net_sync_bytes,
         obs.net_sync_messages,
+    ));
+    body.push_str(&format!(
+        "  \"faults\": {{\"plan\": \"{}\", \"rounds\": {}, \"timeouts\": {}, \
+         \"retries\": {}, \"failovers\": {}, \"reconnects\": {}, \"bit_identical\": {}}}\n",
+        flt.plan,
+        flt.rounds,
+        flt.stats.timeouts,
+        flt.stats.retries,
+        flt.stats.failovers,
+        flt.stats.reconnects,
+        flt.bit_identical,
     ));
     body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
@@ -781,5 +891,21 @@ fn main() {
         obs.pool_rounds
     );
 
-    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live, &obs);
+    // --- Fault tolerance: scripted chaos run vs its fault-free twin. ---
+    println!("\n# fault tolerance (scripted chaos over the in-proc wire)");
+    let flt = measure_faults();
+    println!(
+        "      plan {}: {} rounds, {} timeout(s), {} retry(s), {} failover(s), \
+         {} reconnect(s) — bit-identical: {}",
+        flt.plan,
+        flt.rounds,
+        flt.stats.timeouts,
+        flt.stats.retries,
+        flt.stats.failovers,
+        flt.stats.reconnects,
+        flt.bit_identical
+    );
+    assert!(flt.bit_identical, "chaos run diverged from the fault-free twin");
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live, &obs, &flt);
 }

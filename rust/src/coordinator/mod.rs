@@ -270,6 +270,7 @@ pub fn run_distributed_svm(
     nodes: usize,
     budget: usize,
     transport: &mut dyn crate::net::Transport,
+    faults: &crate::net::FaultConfig,
 ) -> anyhow::Result<SyncReport> {
     let mut learner = cfg.make_learner();
     let eta = if nodes == 1 { cfg.eta_sequential } else { cfg.eta_parallel };
@@ -292,6 +293,8 @@ pub fn run_distributed_svm(
         transport,
         crate::net::TaskKind::Svm,
         svm_fingerprint(cfg, nodes, budget),
+        &NativeScorer,
+        faults,
     )
 }
 
@@ -303,6 +306,7 @@ pub fn run_distributed_nn(
     nodes: usize,
     budget: usize,
     transport: &mut dyn crate::net::Transport,
+    faults: &crate::net::FaultConfig,
 ) -> anyhow::Result<SyncReport> {
     let mut learner = cfg.make_learner();
     let sifter = SifterSpec::margin(cfg.eta, cfg.seed ^ nodes as u64);
@@ -324,6 +328,8 @@ pub fn run_distributed_nn(
         transport,
         crate::net::TaskKind::Nn,
         nn_fingerprint(cfg, nodes, budget),
+        &NativeScorer,
+        faults,
     )
 }
 
@@ -463,7 +469,8 @@ mod tests {
                 })
             })
             .collect();
-        let got = run_distributed_svm(&cfg, &stream, 2, 1600, &mut hub).unwrap();
+        let got =
+            run_distributed_svm(&cfg, &stream, 2, 1600, &mut hub, &Default::default()).unwrap();
         for h in handles {
             h.join().unwrap().unwrap();
         }

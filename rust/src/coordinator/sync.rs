@@ -315,6 +315,21 @@ impl NodeLane {
         out.seconds = sw.lap();
         out
     }
+
+    /// Advance this lane past `examples` examples without sifting them —
+    /// the fast path for catching a lane up to a round it missed (node
+    /// re-adoption after a gap, coordinator-side failover). Exact, not
+    /// approximate: the stream advances one example at a time, and every
+    /// sifter draws exactly one RNG coin per `decide` call *regardless of
+    /// the score* (see `active::margin`), so feeding a dummy score leaves
+    /// the RNG in the identical state a real sift would have.
+    pub(crate) fn fast_forward(&mut self, examples: usize) {
+        let mut x = vec![0.0f32; DIM];
+        for _ in 0..examples {
+            self.stream.next_into(&mut x);
+            self.sifter.decide(0.0, 0);
+        }
+    }
 }
 
 /// Run Algorithm 1 with the backend named by `cfg.backend`. Examples are

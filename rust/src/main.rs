@@ -17,7 +17,10 @@ use para_active::coordinator::{
 use para_active::data::StreamConfig;
 use para_active::exec::ReplayConfig;
 use para_active::metrics::curves_to_markdown;
-use para_active::net::{Channel, SiftNodeReport, TaskKind, TcpTransport, Transport, UdsTransport};
+use para_active::net::{
+    Channel, FaultConfig, FaultInjectTransport, FaultPlan, SiftNodeReport, TaskKind, TcpTransport,
+    Transport, UdsTransport,
+};
 use para_active::runtime::{artifacts_available, XlaRuntime};
 use para_active::serve::{
     accept_clients_tcp, accept_clients_uds, nn_session_learner, serve as serve_daemon,
@@ -39,12 +42,14 @@ COMMANDS:
   svm       [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
             [--role R] [--listen A] [--connect A] [--remote-nodes P]
-            [--transport T] [--trace-out FILE] [--obs-summary]
+            [--transport T] [--node-timeout SECS] [--retries N]
+            [--chaos PLAN] [--trace-out FILE] [--obs-summary]
                                         parallel-active kernel SVM
   nn        [--nodes K] [--budget N] [--backend B] [--workers W]
             [--batch M] [--stale S] [--pipeline] [--update-batch]
             [--role R] [--listen A] [--connect A] [--remote-nodes P]
-            [--transport T] [--trace-out FILE] [--obs-summary]
+            [--transport T] [--node-timeout SECS] [--retries N]
+            [--chaos PLAN] [--trace-out FILE] [--obs-summary]
                                         parallel-active neural net
   passive   [--learner svm|nn] [--budget N]   sequential passive baseline
   learn     --session FILE [--task svm|nn] [--nodes K] [--chunk N]
@@ -86,6 +91,21 @@ host:port>` and serves its lane slice on this machine's sift backend.
 Launch every process with identical experiment flags — a
 config-fingerprint handshake refuses mismatches. Distributed runs are
 bit-identical to --role local under --stale 0 or 1/--pipeline.
+
+FAULT TOLERANCE (coordinator role): `--node-timeout SECS` arms a
+deadline on every node reply; a silent node gets `--retries N`
+(default 2) extra deadline-lengths (heartbeat ping each) before the
+coordinator declares it dead and re-runs its lane range locally —
+bit-identically, since lanes regenerate from seeds and example data
+never crosses the wire. A node that answers a later heartbeat is
+re-adopted with a full-state resync. `--chaos PLAN` interposes a
+deterministic fault injector for drills: comma-separated events
+`drop@R:N` (node N's round-R reply vanishes), `delay@R:NxT` (held for
+T deadlines), `disc@R:N+W` (node N unreachable for W rounds from
+round R), `garbage@R:N` (reply replaced with junk bytes); implies
+--node-timeout 1 when unset. Recovery telemetry prints as a `faults:`
+line and lands in --obs-summary counters (net.timeouts, net.retries,
+net.failovers, net.reconnects).
 
 SERVING: `learn` drives a resumable session against --session FILE,
 checkpointing learner state, Eq-5 coin-flip RNGs, and stream cursors
@@ -259,6 +279,66 @@ fn net_args(args: &Args) -> anyhow::Result<NetRole> {
         .map_err(|e| anyhow::anyhow!(e))
 }
 
+/// Validate the fault-tolerance flags. Pure, like [`resolve_net_flags`].
+/// `--chaos` implies a 1s `--node-timeout` when none is given (an
+/// injected fault without a deadline would just hang the run).
+fn resolve_fault_flags(
+    node_timeout: Option<f64>,
+    retries: Option<u32>,
+    chaos: Option<&str>,
+    coordinator: bool,
+) -> Result<(FaultConfig, Option<FaultPlan>), String> {
+    if !coordinator && (node_timeout.is_some() || retries.is_some() || chaos.is_some()) {
+        return Err(
+            "--node-timeout/--retries/--chaos drive the coordinator's receive deadlines — \
+             they are only meaningful with --role coordinator"
+                .into(),
+        );
+    }
+    if let Some(secs) = node_timeout {
+        if !secs.is_finite() || secs <= 0.0 {
+            return Err(format!("--node-timeout must be a positive number of seconds, got {secs}"));
+        }
+    }
+    let plan = match chaos {
+        Some(spec) => Some(FaultPlan::parse(spec).map_err(|e| format!("bad --chaos spec: {e}"))?),
+        None => None,
+    };
+    let timeout_secs = match (node_timeout, &plan) {
+        (Some(s), _) => Some(s),
+        (None, Some(_)) => Some(1.0),
+        (None, None) => None,
+    };
+    let defaults = FaultConfig::default();
+    let faults = FaultConfig {
+        node_timeout: timeout_secs.map(Duration::from_secs_f64),
+        retries: retries.unwrap_or(defaults.retries),
+        seed: defaults.seed,
+    };
+    Ok((faults, plan))
+}
+
+/// Gather and validate the fault-tolerance flags.
+fn fault_args(args: &Args, net: &NetRole) -> anyhow::Result<(FaultConfig, Option<FaultPlan>)> {
+    let node_timeout: Option<f64> = args.opt("--node-timeout")?;
+    let retries: Option<u32> = args.opt("--retries")?;
+    let chaos: Option<String> = args.opt("--chaos")?;
+    let coordinator = matches!(net, NetRole::Coordinator { .. });
+    resolve_fault_flags(node_timeout, retries, chaos.as_deref(), coordinator)
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Interpose the scripted fault injector when `--chaos` asked for one.
+fn wrap_chaos(hub: Box<dyn Transport>, plan: Option<FaultPlan>) -> Box<dyn Transport> {
+    match plan {
+        Some(p) => {
+            eprintln!("chaos: injecting {} scripted fault(s)", p.events.len());
+            Box::new(FaultInjectTransport::new(hub, p))
+        }
+        None => hub,
+    }
+}
+
 /// How long a node process keeps retrying the coordinator's endpoint.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
@@ -300,6 +380,12 @@ fn print_net_stats(r: &SyncReport) {
             r.net.sync_bytes,
             r.net.full_equiv_bytes,
             r.net.delta_ratio()
+        );
+    }
+    if r.net.timeouts + r.net.retries + r.net.failovers + r.net.reconnects > 0 {
+        println!(
+            "faults: timeouts={} retries={} failovers={} reconnects={}",
+            r.net.timeouts, r.net.retries, r.net.failovers, r.net.reconnects
         );
     }
 }
@@ -721,6 +807,7 @@ fn main() -> anyhow::Result<()> {
                      (LASVM has no fused minibatch step)"
                 );
             }
+            let (faults, chaos) = fault_args(&args, &net)?;
             let stream = StreamConfig::svm_task();
             let r = match net {
                 NetRole::Node { connect, kind } => {
@@ -731,8 +818,8 @@ fn main() -> anyhow::Result<()> {
                     return Ok(());
                 }
                 NetRole::Coordinator { listen, procs, kind } => {
-                    let mut hub = build_hub(kind, &listen, procs)?;
-                    run_distributed_svm(&cfg, &stream, nodes, budget, hub.as_mut())?
+                    let mut hub = wrap_chaos(build_hub(kind, &listen, procs)?, chaos);
+                    run_distributed_svm(&cfg, &stream, nodes, budget, hub.as_mut(), &faults)?
                 }
                 NetRole::Local => run_sync_svm(&cfg, &stream, nodes, budget),
             };
@@ -776,6 +863,7 @@ fn main() -> anyhow::Result<()> {
             let obs = obs_args(&args)?;
             let mut cfg = NnExperimentConfig::paper_defaults();
             (cfg.backend, cfg.replay, cfg.pipeline) = exec_args(&args, net.remote_procs())?;
+            let (faults, chaos) = fault_args(&args, &net)?;
             let stream = StreamConfig::nn_task();
             let r = match net {
                 NetRole::Node { connect, kind } => {
@@ -786,8 +874,8 @@ fn main() -> anyhow::Result<()> {
                     return Ok(());
                 }
                 NetRole::Coordinator { listen, procs, kind } => {
-                    let mut hub = build_hub(kind, &listen, procs)?;
-                    run_distributed_nn(&cfg, &stream, nodes, budget, hub.as_mut())?
+                    let mut hub = wrap_chaos(build_hub(kind, &listen, procs)?, chaos);
+                    run_distributed_nn(&cfg, &stream, nodes, budget, hub.as_mut(), &faults)?
                 }
                 NetRole::Local => run_sync_nn(&cfg, &stream, nodes, budget),
             };
@@ -921,6 +1009,46 @@ fn main() -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_flags_resolve_defaults_and_chaos_implies_a_deadline() {
+        // No flags: failover machinery fully off, regardless of role.
+        let (faults, plan) = resolve_fault_flags(None, None, None, false).expect("valid");
+        assert!(!faults.enabled());
+        assert!(plan.is_none());
+        // Explicit timeout + retries on a coordinator.
+        let (faults, plan) =
+            resolve_fault_flags(Some(0.25), Some(5), None, true).expect("valid");
+        assert_eq!(faults.node_timeout, Some(Duration::from_millis(250)));
+        assert_eq!(faults.retries, 5);
+        assert!(plan.is_none());
+        // --chaos without --node-timeout arms the 1s default.
+        let (faults, plan) =
+            resolve_fault_flags(None, None, Some("drop@2:1"), true).expect("valid");
+        assert_eq!(faults.node_timeout, Some(Duration::from_secs(1)));
+        let plan = plan.expect("plan parsed");
+        assert_eq!(plan.events.len(), 1);
+    }
+
+    #[test]
+    fn fault_flags_reject_bad_values_and_wrong_roles() {
+        let err = resolve_fault_flags(Some(0.0), None, None, true);
+        assert!(err.unwrap_err().contains("--node-timeout"));
+        let err = resolve_fault_flags(Some(f64::NAN), None, None, true);
+        assert!(err.unwrap_err().contains("--node-timeout"));
+        let err = resolve_fault_flags(None, None, Some("explode@1:0"), true);
+        assert!(err.unwrap_err().contains("--chaos"));
+        // Fault flags outside the coordinator role are a user error, not
+        // a silent no-op.
+        for (t, r, c) in [
+            (Some(1.0), None, None),
+            (None, Some(3), None),
+            (None, None, Some("drop@1:0")),
+        ] {
+            let err = resolve_fault_flags(t, r, c, false);
+            assert!(err.unwrap_err().contains("--role coordinator"));
+        }
+    }
 
     #[test]
     fn exec_flags_reject_zero_workers() {

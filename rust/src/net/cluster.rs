@@ -27,20 +27,22 @@
 //! [`sync::run_rounds`]: crate::coordinator::sync
 
 use super::delta::ModelCodec;
+use super::fault::{FaultConfig, NetError};
 use super::proto::{InitMsg, Msg, RoundMsg, TaskKind, PROTO_VERSION};
 use super::transport::{Transport, FRAME_OVERHEAD};
 use super::NetStats;
 use crate::active::SifterSpec;
 use crate::coordinator::backend::NodeSift;
 use crate::coordinator::sync::{
-    make_lane, record, warmstart_phase, CostCounters, SyncConfig, SyncReport, WallTimes,
+    make_lane, record, warmstart_phase, CostCounters, NodeLane, SyncConfig, SyncReport, WallTimes,
 };
 use crate::data::{StreamConfig, TestSet, DIM};
 use crate::exec::{PoolStats, ReplayExecutor, ReplayOutcome};
-use crate::learner::Learner;
+use crate::learner::{Learner, SiftScorer};
 use crate::metrics::ErrorCurve;
 use crate::sim::{NodeProfile, RoundClock, Stopwatch};
 use anyhow::Result;
+use std::time::{Duration, Instant};
 
 /// FNV-1a digest over the little-endian bytes of `parts` — the run-config
 /// fingerprint carried in [`InitMsg`]. Both processes fold the same
@@ -66,10 +68,16 @@ pub(crate) fn lane_range(k: usize, p: usize, j: usize) -> (usize, usize) {
 }
 
 /// A transport wrapper charging every frame (payload + length prefix) to
-/// the [`NetStats`] byte counters.
+/// the [`NetStats`] byte counters. Doubles as the orphan guard: until
+/// the run reaches its normal shutdown, dropping the `Wire` (any `?` /
+/// `bail!` path out of [`run_distributed`]) broadcasts a best-effort
+/// `Shutdown` so node processes blocked on `recv` exit instead of
+/// leaking forever.
 struct Wire<'a> {
     t: &'a mut dyn Transport,
     stats: NetStats,
+    /// Set once the shutdown round has been sent deliberately.
+    finished: bool,
 }
 
 impl Wire<'_> {
@@ -87,11 +95,49 @@ impl Wire<'_> {
         self.t.broadcast(&bytes)
     }
 
+    /// Best-effort point-to-point send: delivery failures are the
+    /// receiver's problem (the next receive classifies the node as
+    /// dead); bytes are only charged when the carrier took the frame.
+    fn send_best_effort(&mut self, node: usize, msg: &Msg) {
+        let _sp = crate::obs_span!("net.send", node = node as i64);
+        if let Ok(bytes) = msg.encode() {
+            if self.t.send_to(node, &bytes).is_ok() {
+                self.stats.bytes_sent += bytes.len() as u64 + FRAME_OVERHEAD;
+            }
+        }
+    }
+
     fn recv(&mut self, node: usize) -> Result<Msg> {
         let _sp = crate::obs_span!("net.recv", node = node as i64);
         let bytes = self.t.recv_from(node)?;
         self.stats.bytes_received += bytes.len() as u64 + FRAME_OVERHEAD;
         Msg::decode(&bytes)
+            .map_err(|e| anyhow::Error::new(NetError::Garbage(e.to_string())))
+    }
+
+    /// Deadline-aware receive; a frame that arrives but does not decode
+    /// classifies as [`NetError::Garbage`].
+    fn recv_deadline(&mut self, node: usize, timeout: Duration) -> Result<Msg> {
+        let _sp = crate::obs_span!("net.recv", node = node as i64);
+        let bytes = self.t.recv_from_deadline(node, timeout)?;
+        self.stats.bytes_received += bytes.len() as u64 + FRAME_OVERHEAD;
+        Msg::decode(&bytes)
+            .map_err(|e| anyhow::Error::new(NetError::Garbage(e.to_string())))
+    }
+}
+
+impl Drop for Wire<'_> {
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        if let Ok(bytes) = Msg::Shutdown.encode() {
+            // Per-node, ignoring errors: the default broadcast stops at
+            // the first failure, which would skip the remaining nodes.
+            for node in 0..self.t.nodes() {
+                let _ = self.t.send_to(node, &bytes);
+            }
+        }
     }
 }
 
@@ -103,8 +149,19 @@ impl Wire<'_> {
 ///
 /// `cfg.backend` is ignored — each node picks its own execution backend —
 /// and `cfg.replay.max_stale_rounds` must be 0 or 1 (see module docs).
+///
+/// `faults` selects the failure policy. With `node_timeout == None`
+/// (the default) receives block forever and any node error aborts the
+/// run — the legacy behavior, byte for byte. With a timeout set, a node
+/// that misses its deadline is retried (`faults.retries` heartbeat
+/// pings), then declared dead and **failed over**: its lane range is
+/// regenerated locally (same seeds, same coins — data never crossed the
+/// wire) and sifted on the coordinator, so the trajectory stays
+/// bit-identical to the fault-free run. A dead node that answers a
+/// later heartbeat is re-adopted with a full-snapshot resync
+/// (`scorer` drives the local failover sifts).
 #[allow(clippy::too_many_arguments)]
-pub fn run_distributed<L: Learner>(
+pub fn run_distributed<L: Learner + Clone>(
     learner: &mut L,
     codec: &mut dyn ModelCodec<L>,
     sifter: &SifterSpec,
@@ -114,6 +171,8 @@ pub fn run_distributed<L: Learner>(
     transport: &mut dyn Transport,
     task: TaskKind,
     fingerprint: u64,
+    scorer: &dyn SiftScorer<L>,
+    faults: &FaultConfig,
 ) -> Result<SyncReport> {
     anyhow::ensure!(cfg.nodes >= 1, "need at least one lane");
     anyhow::ensure!(
@@ -137,6 +196,9 @@ pub fn run_distributed<L: Learner>(
     );
     let shard = cfg.global_batch / k;
     let overlapped = stale == 1;
+    let ft_on = faults.enabled();
+    let timeout = faults.node_timeout.unwrap_or_default();
+    let needs_scores = sifter.needs_scores();
 
     let profile = cfg.profile.clone().unwrap_or_else(|| NodeProfile::uniform(k));
     assert_eq!(profile.k(), k);
@@ -145,7 +207,15 @@ pub fn run_distributed<L: Learner>(
     let mut wall = WallTimes::default();
     let mut replay = ReplayExecutor::new(cfg.replay, DIM);
     let mut total_sw = Stopwatch::start();
-    let mut wire = Wire { t: transport, stats: NetStats::default() };
+    let mut wire = Wire { t: transport, stats: NetStats::default(), finished: false };
+
+    // Failover state (only touched when `ft_on`): which processes are
+    // believed alive, the locally regenerated lanes of dead ones, and
+    // whether the next sync must be a full snapshot (re-adoption).
+    let mut alive = vec![true; p];
+    let mut dead_lanes: Vec<Option<Vec<NodeLane>>> = (0..p).map(|_| None).collect();
+    let mut force_full = false;
+    let mut ping_seq: u64 = 0;
 
     // --- Handshake: hand every process its lane slice. ---
     for j in 0..p {
@@ -209,23 +279,79 @@ pub fn run_distributed<L: Learner>(
         let n_phase = n_seen;
         let _sp_round = crate::obs_span!("round", round = round as i64);
 
+        // Probe dead nodes before encoding: a node that answers the
+        // heartbeat is re-adopted *this* round, which forces the sync
+        // below to be a full snapshot (accepted by its epoch guard at
+        // any forward epoch — and broadcast to everyone, so the delta
+        // codecs' slot tables stay in lockstep).
+        if ft_on {
+            for j in 0..p {
+                if alive[j] {
+                    continue;
+                }
+                ping_seq += 1;
+                wire.send_best_effort(j, &Msg::Ping(ping_seq));
+                let deadline = Instant::now() + timeout;
+                loop {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match wire.recv_deadline(j, remaining) {
+                        Ok(Msg::Pong(_)) => {
+                            alive[j] = true;
+                            dead_lanes[j] = None;
+                            force_full = true;
+                            wire.stats.reconnects += 1;
+                            crate::obs::counter("net.reconnects").add(1);
+                            break;
+                        }
+                        // Stale replies queued from before the failure.
+                        Ok(_) => continue,
+                        Err(_) => break, // still dead
+                    }
+                }
+            }
+        }
+
         // Encode the sync before the overlapped flush (stale=1): the wire
         // snapshot is the pipelined loop's `learner.clone()` — nodes sift
         // round t with the model of round t-2. Under stale=0 the previous
         // round was already applied, so this is the fully-updated model.
         let sp_sync = crate::obs_span!("sync", round = round as i64);
-        let sync = codec.encode(round, learner)?;
-        wire.stats.sync_messages += p as u64;
-        wire.stats.sync_bytes += sync.payload.len() as u64 * p as u64;
-        wire.stats.full_equiv_bytes += codec.last_full_bytes() * p as u64;
-        if sync.full {
-            wire.stats.full_syncs += p as u64;
+        let sync = if force_full {
+            force_full = false;
+            codec.encode_full(round, learner)?
         } else {
-            wire.stats.delta_syncs += p as u64;
+            codec.encode(round, learner)?
+        };
+        let live = if ft_on { alive.iter().filter(|a| **a).count() as u64 } else { p as u64 };
+        wire.stats.sync_messages += live;
+        wire.stats.sync_bytes += sync.payload.len() as u64 * live;
+        wire.stats.full_equiv_bytes += codec.last_full_bytes() * live;
+        if sync.full {
+            wire.stats.full_syncs += live;
+        } else {
+            wire.stats.delta_syncs += live;
         }
+        // Failover sifts must score against exactly the model the sync
+        // describes. Under stale=1 the overlapped flush below mutates
+        // the learner after the encode, so snapshot now; under stale=0
+        // the learner is untouched until merge and `learner` itself
+        // serves as the frozen model.
+        let frozen_snapshot: Option<L> = (ft_on && overlapped).then(|| learner.clone());
 
         let mut sw = Stopwatch::start();
-        wire.broadcast(&Msg::Round(RoundMsg { round, n_phase, sync }))?;
+        let round_msg = Msg::Round(RoundMsg { round, n_phase, sync });
+        if ft_on {
+            for j in 0..p {
+                if alive[j] {
+                    wire.send_best_effort(j, &round_msg);
+                }
+            }
+        } else {
+            wire.broadcast(&round_msg)?;
+        }
         drop(sp_sync);
 
         // Replay of round t-1 overlaps the remote sift in real time.
@@ -240,23 +366,110 @@ pub fn run_distributed<L: Learner>(
 
         // Collect replies in process order; lanes arrive in lane order
         // within each, so the pool is node-major — the ordered-broadcast
-        // guarantee, same as the in-process sessions.
+        // guarantee, same as the in-process sessions. Under fault
+        // tolerance a node that stays silent past its deadline (plus
+        // retries) or hands back garbage is declared dead and its lane
+        // range is sifted locally, in place, at the same node-major
+        // position — same seeds, same coins, same bits.
         let mut results: Vec<NodeSift> = Vec::with_capacity(k);
         for j in 0..p {
-            match wire.recv(j)? {
-                Msg::Sift(s) => {
-                    let (lo, hi) = lane_range(k, p, j);
-                    anyhow::ensure!(
-                        s.round == round && s.lanes.len() == hi - lo,
-                        "node {j} answered round {} with {} lanes (expected round \
-                         {round} with {})",
-                        s.round,
-                        s.lanes.len(),
-                        hi - lo
-                    );
-                    results.extend(s.lanes);
+            let (lo, hi) = lane_range(k, p, j);
+            if !ft_on {
+                match wire.recv(j)? {
+                    Msg::Sift(s) => {
+                        anyhow::ensure!(
+                            s.round == round && s.lanes.len() == hi - lo,
+                            "node {j} answered round {} with {} lanes (expected round \
+                             {round} with {})",
+                            s.round,
+                            s.lanes.len(),
+                            hi - lo
+                        );
+                        results.extend(s.lanes);
+                    }
+                    other => anyhow::bail!("expected sift results from node {j}, got {other:?}"),
                 }
-                other => anyhow::bail!("expected sift results from node {j}, got {other:?}"),
+                continue;
+            }
+
+            let mut local = !alive[j];
+            if !local {
+                let mut attempts = 0u32;
+                loop {
+                    match wire.recv_deadline(j, timeout) {
+                        Ok(Msg::Sift(s)) if s.round == round => {
+                            anyhow::ensure!(
+                                s.lanes.len() == hi - lo,
+                                "node {j} answered round {round} with {} lanes (expected {})",
+                                s.lanes.len(),
+                                hi - lo
+                            );
+                            results.extend(s.lanes);
+                            break;
+                        }
+                        // Stale sift replies (a round we already failed
+                        // over) and heartbeat echoes are drained, not
+                        // counted against the deadline budget.
+                        Ok(Msg::Sift(_)) | Ok(Msg::Pong(_)) => continue,
+                        Ok(_confused) => {
+                            alive[j] = false;
+                            local = true;
+                            break;
+                        }
+                        Err(e) => match NetError::classify(&e) {
+                            Some(NetError::Timeout) => {
+                                wire.stats.timeouts += 1;
+                                crate::obs::counter("net.timeouts").add(1);
+                                if attempts >= faults.retries {
+                                    alive[j] = false;
+                                    local = true;
+                                    break;
+                                }
+                                attempts += 1;
+                                wire.stats.retries += 1;
+                                crate::obs::counter("net.retries").add(1);
+                                ping_seq += 1;
+                                wire.send_best_effort(j, &Msg::Ping(ping_seq));
+                            }
+                            // Disconnected, garbage, or unclassified:
+                            // no amount of waiting helps.
+                            _ => {
+                                alive[j] = false;
+                                local = true;
+                                break;
+                            }
+                        },
+                    }
+                }
+            }
+            if local {
+                let _sp = crate::obs_span!("failover", round = round as i64, node = j as i64);
+                wire.stats.failovers += 1;
+                crate::obs::counter("net.failovers").add(1);
+                let lanes = dead_lanes[j].get_or_insert_with(|| {
+                    // Regenerate the dead node's lanes from scratch and
+                    // replay every draw it already consumed: the
+                    // warmstart head (stream only — warmstart never
+                    // touched the sifter) and (round-1) shards' worth of
+                    // examples and sifter coins per lane.
+                    let mut lanes: Vec<NodeLane> =
+                        (lo..hi).map(|n| make_lane(stream_cfg, sifter, n, shard)).collect();
+                    if lo == 0 && cfg.warmstart > 0 {
+                        let mut x = vec![0.0f32; DIM];
+                        for _ in 0..cfg.warmstart {
+                            lanes[0].stream.next_into(&mut x);
+                        }
+                    }
+                    for lane in lanes.iter_mut() {
+                        lane.fast_forward((round - 1) as usize * shard);
+                    }
+                    lanes
+                });
+                let frozen: &L = frozen_snapshot.as_ref().map_or(&*learner, |s| s);
+                for lane in lanes.iter_mut() {
+                    lane.stream.next_batch_into(&mut lane.xs, &mut lane.ys);
+                    results.push(lane.sift_round(frozen, scorer, shard, n_phase, needs_scores, 0));
+                }
             }
         }
         wall.sift += sw.lap();
@@ -315,18 +528,52 @@ pub fn run_distributed<L: Learner>(
     record(&mut curve, &clock, learner, test, n_seen, n_queried);
 
     // --- Shutdown: collect each process's pool counters. ---
-    wire.broadcast(&Msg::Shutdown)?;
     let mut pool = PoolStats::default();
-    for j in 0..p {
-        match wire.recv(j)? {
-            Msg::Bye(b) => {
-                pool.workers += b.pool.workers;
-                pool.threads_spawned += b.pool.threads_spawned;
-                pool.rounds = pool.rounds.max(b.pool.rounds);
+    if ft_on {
+        // Best-effort to every process, dead ones included — a
+        // disconnected-but-running node exits on it or on transport
+        // teardown, never blocks forever. Byes are only awaited from
+        // live nodes, draining any stale replies, and a node that dies
+        // during shutdown forfeits its counters instead of the run.
+        for j in 0..p {
+            wire.send_best_effort(j, &Msg::Shutdown);
+        }
+        for j in 0..p {
+            if !alive[j] {
+                continue;
             }
-            other => anyhow::bail!("expected bye from node {j}, got {other:?}"),
+            let deadline = Instant::now() + timeout;
+            loop {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match wire.recv_deadline(j, remaining) {
+                    Ok(Msg::Bye(b)) => {
+                        pool.workers += b.pool.workers;
+                        pool.threads_spawned += b.pool.threads_spawned;
+                        pool.rounds = pool.rounds.max(b.pool.rounds);
+                        break;
+                    }
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+    } else {
+        wire.broadcast(&Msg::Shutdown)?;
+        for j in 0..p {
+            match wire.recv(j)? {
+                Msg::Bye(b) => {
+                    pool.workers += b.pool.workers;
+                    pool.threads_spawned += b.pool.threads_spawned;
+                    pool.rounds = pool.rounds.max(b.pool.rounds);
+                }
+                other => anyhow::bail!("expected bye from node {j}, got {other:?}"),
+            }
         }
     }
+    wire.finished = true;
     wall.total = total_sw.lap();
 
     Ok(SyncReport {
@@ -432,6 +679,8 @@ mod tests {
             &mut hub,
             TaskKind::Svm,
             fp,
+            &NativeScorer,
+            &FaultConfig::default(),
         )
         .unwrap();
         for h in handles {
@@ -479,6 +728,8 @@ mod tests {
             &mut hub,
             TaskKind::Svm,
             0,
+            &NativeScorer,
+            &FaultConfig::default(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("max_stale_rounds"), "{err}");
@@ -495,8 +746,57 @@ mod tests {
             &mut hub,
             TaskKind::Svm,
             0,
+            &NativeScorer,
+            &FaultConfig::default(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("lanes"), "{err}");
+    }
+
+    #[test]
+    fn bail_paths_shut_down_connected_nodes() {
+        // One healthy node plus one that misbehaves in the handshake:
+        // the coordinator bails, and the Wire drop guard must still
+        // deliver a Shutdown so the healthy node exits instead of
+        // blocking on recv forever (the join below would hang).
+        let stream_cfg = StreamConfig::svm_task();
+        let test = TestSet::generate(&stream_cfg, 10);
+        let sifter = SifterSpec::margin(0.1, 7);
+        let cfg = SyncConfig::new(2, 100, 50, 400);
+        let fp = config_fingerprint(&[0x77]);
+
+        let (mut hub, mut chans) = InProcTransport::pair(2);
+        let bad_chan = chans.pop().unwrap();
+        let good = spawn_svm_node(chans.pop().unwrap(), fp);
+        let bad = std::thread::spawn(move || {
+            let mut chan = bad_chan;
+            use crate::net::transport::Channel;
+            let _init = chan.recv().unwrap();
+            // Answer the handshake with nonsense instead of Ready.
+            chan.send(&Msg::Shutdown.encode().unwrap()).unwrap();
+        });
+
+        let mut learner = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+        let err = run_distributed(
+            &mut learner,
+            &mut codec,
+            &sifter,
+            &stream_cfg,
+            &test,
+            &cfg,
+            &mut hub,
+            TaskKind::Svm,
+            fp,
+            &NativeScorer,
+            &FaultConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("expected ready"), "{err}");
+        bad.join().unwrap();
+        // The guard's best-effort Shutdown lets the healthy node finish
+        // with a clean report.
+        let report = good.join().unwrap().unwrap();
+        assert_eq!(report.rounds, 0);
     }
 }

@@ -62,6 +62,13 @@ pub trait ModelCodec<L: ?Sized>: Send {
     /// Errors if a length prefix in the payload would overflow u32.
     fn encode(&mut self, epoch: u64, model: &L) -> Result<SyncMessage>;
 
+    /// Coordinator side: force a full-state snapshot at `epoch`,
+    /// resetting the delta baseline to match. Used to re-adopt a node
+    /// that missed rounds (its decoder accepts full state at any forward
+    /// epoch); the reset keeps *every* decoder's table in lockstep, so
+    /// it must be broadcast to all live nodes, not sent point-to-point.
+    fn encode_full(&mut self, epoch: u64, model: &L) -> Result<SyncMessage>;
+
     /// Bytes the last [`ModelCodec::encode`] would have cost as full
     /// state — the denominator of the delta-vs-full telemetry.
     fn last_full_bytes(&self) -> u64;
@@ -243,6 +250,16 @@ impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
         }
     }
 
+    fn encode_full(&mut self, epoch: u64, model: &LaSvm<K>) -> Result<SyncMessage> {
+        assert_eq!(model.dim(), self.dim, "codec dim mismatch");
+        let (pts, alpha) = model.export_support();
+        let bias = model.bias();
+        let n = alpha.len();
+        self.last_full = (8 + n * (self.dim + 1) * 4) as u64;
+        self.reset_to_view(&pts);
+        Ok(SyncMessage { epoch, full: true, payload: Self::full_payload(n, bias, &pts, &alpha)? })
+    }
+
     fn last_full_bytes(&self) -> u64 {
         self.last_full
     }
@@ -261,6 +278,14 @@ impl<K: Kernel> ModelCodec<LaSvm<K>> for SvmDeltaCodec {
             self.reset_to_view(&pts);
             (pts, alpha)
         } else {
+            // Every delta entry costs >= 9 payload bytes (tag + slot
+            // ref + alpha), so an entry count the remaining bytes cannot
+            // cover is garbage — reject it before sizing buffers for it.
+            anyhow::ensure!(
+                n <= r.remaining() / 9,
+                "delta claims {n} entries but only {} bytes remain",
+                r.remaining()
+            );
             let mut pts = Vec::with_capacity(n * self.dim);
             let mut alpha = Vec::with_capacity(n);
             for _ in 0..n {
@@ -329,8 +354,24 @@ impl MlpDenseCodec {
     }
 
     fn install(&self, replica: &mut AdaGradMlp) -> Result<()> {
-        let (l1, l2, l3) = self.dims.expect("install without dims");
+        // Reachable on a protocol-order violation (a delta arriving at a
+        // fresh decoder) — must be a typed error, not a panic: the peer
+        // chooses what arrives first.
+        let (l1, l2, l3) = self
+            .dims
+            .ok_or_else(|| anyhow::anyhow!("mlp sync: delta before any full state (no dims)"))?;
         anyhow::ensure!(self.state.len() == l1 + l2 + l3 + 1, "mlp sync state length mismatch");
+        // The dims triple is peer-controlled: a corrupt split that keeps
+        // the same total would pass the length check above but trip the
+        // model's shape asserts — refuse it here as a typed error.
+        let (rw1, rb1, rw2, _) = replica.sync_weights();
+        anyhow::ensure!(
+            rw1.len() == l1 && rb1.len() == l2 && rw2.len() == l3,
+            "mlp sync dims {l1}/{l2}/{l3} do not match the replica ({}/{}/{})",
+            rw1.len(),
+            rb1.len(),
+            rw2.len()
+        );
         let (w1, rest) = self.state.split_at(l1);
         let (b1, rest) = rest.split_at(l2);
         let (w2, b2) = rest.split_at(l3);
@@ -389,6 +430,20 @@ impl ModelCodec<AdaGradMlp> for MlpDenseCodec {
         }
         self.state = flat;
         Ok(SyncMessage { epoch, full: false, payload })
+    }
+
+    fn encode_full(&mut self, epoch: u64, model: &AdaGradMlp) -> Result<SyncMessage> {
+        let (flat, dims) = Self::flat_state(model);
+        let full_bytes = 12 + flat.len() * 4;
+        self.last_full = full_bytes as u64;
+        let mut payload = Vec::with_capacity(full_bytes);
+        Self::put_dims(&mut payload, dims)?;
+        for &v in &flat {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        self.state = flat;
+        self.dims = Some(dims);
+        Ok(SyncMessage { epoch, full: true, payload })
     }
 
     fn last_full_bytes(&self) -> u64 {
@@ -512,6 +567,68 @@ mod tests {
         let mut fresh = SvmDeltaCodec::new(DIM);
         let delta = SyncMessage { epoch: 5, full: false, payload: vec![0, 0, 0, 0, 0, 0, 0, 0] };
         assert!(fresh.apply(&mut replica, &delta).is_err());
+    }
+
+    #[test]
+    fn encode_full_readopts_a_lagging_decoder_without_desyncing_others() {
+        let mut enc = SvmDeltaCodec::new(DIM);
+        let mut fresh_dec = SvmDeltaCodec::new(DIM);
+        let mut lagging_dec = SvmDeltaCodec::new(DIM);
+        let mut fresh = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut lagging = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+
+        // Both decoders see epoch 1; only `fresh_dec` sees epochs 2-3.
+        let mut svm = trained_svm(80);
+        let m1 = enc.encode(1, &svm).unwrap();
+        fresh_dec.apply(&mut fresh, &m1).unwrap();
+        lagging_dec.apply(&mut lagging, &m1).unwrap();
+        let mut stream = ExampleStream::for_node(&StreamConfig::svm_task(), 3);
+        let mut x = vec![0.0f32; DIM];
+        for epoch in 2..=3u64 {
+            for _ in 0..20 {
+                let y = stream.next_into(&mut x);
+                svm.update(&x, y, 1.0);
+            }
+            let m = enc.encode(epoch, &svm).unwrap();
+            fresh_dec.apply(&mut fresh, &m).unwrap();
+        }
+
+        // Re-adoption: one full snapshot broadcast to BOTH decoders.
+        let m4 = enc.encode_full(4, &svm).unwrap();
+        assert!(m4.full);
+        fresh_dec.apply(&mut fresh, &m4).unwrap();
+        lagging_dec.apply(&mut lagging, &m4).unwrap();
+        assert_eq!(probe_scores(&lagging), probe_scores(&svm), "lagging decoder caught up");
+        assert_eq!(probe_scores(&fresh), probe_scores(&svm));
+
+        // Deltas after the reset still apply cleanly everywhere — the
+        // slot tables were rebuilt in lockstep.
+        for _ in 0..20 {
+            let y = stream.next_into(&mut x);
+            svm.update(&x, y, 1.0);
+        }
+        let m5 = enc.encode(5, &svm).unwrap();
+        fresh_dec.apply(&mut fresh, &m5).unwrap();
+        lagging_dec.apply(&mut lagging, &m5).unwrap();
+        assert_eq!(probe_scores(&lagging), probe_scores(&svm));
+        assert_eq!(probe_scores(&fresh), probe_scores(&svm));
+    }
+
+    #[test]
+    fn mlp_delta_at_fresh_decoder_is_a_typed_error_not_a_panic() {
+        let mut dec = MlpDenseCodec::new();
+        let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+        // A structurally valid delta arriving before any full state: the
+        // peer chooses the order, so this must be an Err, never a panic.
+        let mut payload = Vec::new();
+        put_len(&mut payload, 1).unwrap();
+        put_len(&mut payload, 1).unwrap();
+        put_len(&mut payload, 1).unwrap();
+        put_len(&mut payload, 0).unwrap();
+        let msg = SyncMessage { epoch: 2, full: false, payload };
+        assert!(dec.apply(&mut replica, &msg).is_err());
+        // And the raw install-without-dims path (the old panic site).
+        assert!(MlpDenseCodec::new().install(&mut replica).is_err());
     }
 
     #[test]

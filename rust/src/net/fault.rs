@@ -1,0 +1,430 @@
+//! Fault model for the distributed sift path.
+//!
+//! Theorem 1 licenses more than stale models: a sift node that goes
+//! silent is just a lane whose work arrives late — or never, in which
+//! case the coordinator can recompute it locally from the same seeds and
+//! get the *same bits* (shards and sifter coins are regenerated
+//! deterministically; example data never crosses the wire). This module
+//! supplies the vocabulary that makes that recovery testable:
+//!
+//! * [`NetError`] — the typed failure taxonomy every deadline-aware
+//!   receive reports: a deadline expired ([`NetError::Timeout`]), the
+//!   peer went away ([`NetError::Disconnected`]), or the peer sent bytes
+//!   that do not decode ([`NetError::Garbage`]). Carried inside
+//!   `anyhow::Error` chains; classify with [`NetError::classify`].
+//! * [`FaultConfig`] — the coordinator's patience: per-receive deadline,
+//!   retry budget, backoff seed. `node_timeout == None` (the default)
+//!   keeps the legacy blocking behavior with zero overhead.
+//! * [`RetryPolicy`] — deterministic exponential backoff with seeded
+//!   jitter (no wall-clock entropy: same seed, same delays) used by the
+//!   transport connect loops.
+//! * [`FaultPlan`] / [`FaultInjectTransport`] — a scripted, seeded fault
+//!   harness: drop/delay/disconnect/garbage events at chosen
+//!   (round, node) points, injected by wrapping any real
+//!   [`Transport`]. The plan syntax doubles as the `--chaos` CLI flag.
+//!   `tests/fault_equivalence.rs` drives every recovery path through it
+//!   and requires the final model to be bit-identical to the fault-free
+//!   run.
+
+use super::proto::peek_round;
+use super::transport::Transport;
+use crate::rng::Rng;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Typed network failure, carried inside `anyhow::Error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// The receive deadline expired with no complete frame.
+    Timeout,
+    /// The peer hung up (EOF, closed socket, dropped channel).
+    Disconnected,
+    /// A complete frame arrived but its bytes do not decode.
+    Garbage(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Timeout => write!(f, "receive deadline expired"),
+            NetError::Disconnected => write!(f, "peer disconnected"),
+            NetError::Garbage(why) => write!(f, "undecodable frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl NetError {
+    /// The [`NetError`] inside `err`'s chain, if any — the coordinator's
+    /// dead-or-slow triage reads this instead of string matching.
+    pub fn classify(err: &anyhow::Error) -> Option<&NetError> {
+        err.downcast_ref::<NetError>()
+    }
+}
+
+/// The coordinator's fault-tolerance knobs (CLI: `--node-timeout`,
+/// `--retries`). The default disables deadlines entirely: receives block
+/// forever and any node error aborts the run, exactly the pre-fault
+/// behavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-receive deadline on node replies. `None` = block forever
+    /// (legacy behavior; failover machinery fully disabled).
+    pub node_timeout: Option<Duration>,
+    /// Extra deadline-lengths to wait (with a heartbeat ping each) before
+    /// declaring a silent node dead.
+    pub retries: u32,
+    /// Seed for deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { node_timeout: None, retries: 2, seed: 0xFA17 }
+    }
+}
+
+impl FaultConfig {
+    /// Enable deadlines/failover with the given per-receive timeout.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        FaultConfig { node_timeout: Some(timeout), ..Default::default() }
+    }
+
+    /// Whether the failover machinery is active at all.
+    pub fn enabled(&self) -> bool {
+        self.node_timeout.is_some()
+    }
+}
+
+/// Deterministic exponential backoff with seeded jitter: attempt `i`
+/// sleeps `min(base << i, cap)` scaled by a uniform factor in [0.5, 1.0).
+/// No wall-clock entropy — the same seed always produces the same delay
+/// sequence, so connect races in tests replay exactly.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    base: Duration,
+    cap: Duration,
+    rng: Rng,
+}
+
+impl RetryPolicy {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        RetryPolicy { base, cap, rng: Rng::new(seed) }
+    }
+
+    /// Connect-loop defaults: 10 ms doubling to a 400 ms ceiling.
+    pub fn for_connect(seed: u64) -> Self {
+        RetryPolicy::new(Duration::from_millis(10), Duration::from_millis(400), seed)
+    }
+
+    /// Delay before retry number `attempt` (0-based).
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX));
+        let capped = exp.min(self.cap);
+        capped.mul_f64(0.5 + 0.5 * self.rng.next_f64())
+    }
+}
+
+/// What a scripted fault does to one (round, node) interaction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Swallow the node's reply once: the coordinator sees a timeout, the
+    /// node believes it answered.
+    DropReply,
+    /// Hold the node's reply hostage through `times` receive attempts,
+    /// then deliver it intact — a slow node, not a dead one.
+    DelayReply { times: u32 },
+    /// Sever the link for `rounds` round-broadcasts starting at the
+    /// event's round: sends are swallowed, receives time out.
+    Disconnect { rounds: u64 },
+    /// Replace the node's reply with undecodable bytes.
+    GarbageReply,
+}
+
+/// One scripted fault at a (round, node) coordinate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub round: u64,
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic chaos schedule. Parsed from the `--chaos` CLI spec: a
+/// comma-separated list of `drop@R:N`, `delay@R:NxT`, `disc@R:N+W`, and
+/// `garbage@R:N` events (round `R`, node `N`, `T` held receives, `W`
+/// disconnected rounds).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// Seeds the garbage-byte generator (scripted plans stay fully
+    /// deterministic).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(events: Vec<FaultEvent>, seed: u64) -> Self {
+        FaultPlan { events, seed }
+    }
+
+    /// Parse a `--chaos` spec, e.g. `drop@3:0,delay@4:1x2,disc@5:0+3`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, coord) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("bad chaos event {part:?}: missing '@'"))?;
+            let (round_s, rest) = coord
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad chaos event {part:?}: missing ':'"))?;
+            let round: u64 = round_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad chaos round {round_s:?} in {part:?}"))?;
+            let parse_node = |s: &str| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad chaos node {s:?} in {part:?}"))
+            };
+            let event = match kind {
+                "drop" => FaultEvent { round, node: parse_node(rest)?, kind: FaultKind::DropReply },
+                "garbage" => {
+                    FaultEvent { round, node: parse_node(rest)?, kind: FaultKind::GarbageReply }
+                }
+                "delay" => {
+                    let (node_s, times_s) = rest.split_once('x').ok_or_else(|| {
+                        anyhow::anyhow!("bad chaos event {part:?}: delay needs NxT")
+                    })?;
+                    let times: u32 = times_s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad delay count {times_s:?} in {part:?}"))?;
+                    FaultEvent {
+                        round,
+                        node: parse_node(node_s)?,
+                        kind: FaultKind::DelayReply { times },
+                    }
+                }
+                "disc" => {
+                    let (node_s, rounds_s) = rest.split_once('+').ok_or_else(|| {
+                        anyhow::anyhow!("bad chaos event {part:?}: disc needs N+W")
+                    })?;
+                    let rounds: u64 = rounds_s.parse().map_err(|_| {
+                        anyhow::anyhow!("bad disconnect width {rounds_s:?} in {part:?}")
+                    })?;
+                    anyhow::ensure!(rounds >= 1, "disconnect width must be >= 1 in {part:?}");
+                    FaultEvent { round, node: parse_node(node_s)?, kind: FaultKind::Disconnect { rounds } }
+                }
+                other => anyhow::bail!("unknown chaos kind {other:?} (drop|delay|disc|garbage)"),
+            };
+            events.push(event);
+        }
+        anyhow::ensure!(!events.is_empty(), "empty chaos spec");
+        Ok(FaultPlan { events, seed: 0xC4A0_5000 })
+    }
+}
+
+/// Per-node injection state.
+#[derive(Debug, Default)]
+struct NodeFaults {
+    /// Reply bytes held back by an active delay event.
+    held: Option<Vec<u8>>,
+    /// Receive attempts left before a held reply is released.
+    delays_left: u32,
+    /// Link severed while `current round < until`.
+    disconnected_until: u64,
+}
+
+/// A [`Transport`] wrapper that injects the scripted faults of a
+/// [`FaultPlan`] at exact (round, node) points. Rounds are tracked by
+/// peeking outgoing `Round` frames, so the wrapper needs no cooperation
+/// from the coordinator. Every behavior is deterministic: same plan, same
+/// run, same injected failures.
+pub struct FaultInjectTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// Events not yet triggered (an event fires on the first matching
+    /// receive/send at or after its round).
+    pending: Vec<bool>,
+    round: u64,
+    nodes: Vec<NodeFaults>,
+    rng: Rng,
+}
+
+impl FaultInjectTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        let n = inner.nodes();
+        let pending = vec![true; plan.events.len()];
+        let rng = Rng::new(plan.seed);
+        FaultInjectTransport {
+            inner,
+            plan,
+            pending,
+            round: 0,
+            nodes: (0..n).map(|_| NodeFaults::default()).collect(),
+            rng,
+        }
+    }
+
+    /// Next pending event for `node` whose round has come.
+    fn due_event(&self, node: usize) -> Option<usize> {
+        self.plan
+            .events
+            .iter()
+            .enumerate()
+            .find(|(i, e)| self.pending[*i] && e.node == node && e.round <= self.round)
+            .map(|(i, _)| i)
+    }
+
+    fn disconnected(&self, node: usize) -> bool {
+        self.round < self.nodes[node].disconnected_until
+    }
+
+    /// Arm any disconnect events that start at the current round (checked
+    /// on every send so the window opens before the Round frame passes).
+    fn arm_disconnects(&mut self, node: usize) {
+        while let Some(i) = self.due_event(node) {
+            if let FaultKind::Disconnect { rounds } = self.plan.events[i].kind {
+                self.pending[i] = false;
+                self.nodes[node].disconnected_until = self.plan.events[i].round + rounds;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn inject_recv(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>> {
+        self.arm_disconnects(node);
+        if self.disconnected(node) {
+            // Nothing can arrive through a severed link; report it as
+            // silence immediately (real sockets would burn the deadline).
+            return Err(anyhow::Error::new(NetError::Timeout));
+        }
+        // A held (delayed) reply is released once its count runs out.
+        if self.nodes[node].held.is_some() {
+            if self.nodes[node].delays_left > 0 {
+                self.nodes[node].delays_left -= 1;
+                return Err(anyhow::Error::new(NetError::Timeout));
+            }
+            return Ok(self.nodes[node].held.take().expect("held reply vanished"));
+        }
+        match self.due_event(node).map(|i| (i, self.plan.events[i].kind)) {
+            Some((i, FaultKind::DropReply)) => {
+                // Consume the real reply so the node believes it answered,
+                // then report silence.
+                let _ = self.inner.recv_from_deadline(node, timeout)?;
+                self.pending[i] = false;
+                Err(anyhow::Error::new(NetError::Timeout))
+            }
+            Some((i, FaultKind::GarbageReply)) => {
+                let _ = self.inner.recv_from_deadline(node, timeout)?;
+                self.pending[i] = false;
+                let mut junk = vec![0xFFu8; 8];
+                for b in junk.iter_mut() {
+                    *b = (self.rng.next_u64() & 0xFF) as u8;
+                }
+                junk[0] = 0xFF; // never a valid message tag
+                Ok(junk)
+            }
+            Some((i, FaultKind::DelayReply { times })) => {
+                let bytes = self.inner.recv_from_deadline(node, timeout)?;
+                self.pending[i] = false;
+                self.nodes[node].held = Some(bytes);
+                self.nodes[node].delays_left = times.saturating_sub(1);
+                Err(anyhow::Error::new(NetError::Timeout))
+            }
+            _ => self.inner.recv_from_deadline(node, timeout),
+        }
+    }
+}
+
+/// Fetch deadline for faults that must consume the real reply when the
+/// caller used a blocking receive.
+const BLOCKING_FETCH: Duration = Duration::from_secs(10);
+
+impl Transport for FaultInjectTransport {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn nodes(&self) -> usize {
+        self.inner.nodes()
+    }
+
+    fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()> {
+        if let Some(round) = peek_round(msg) {
+            self.round = round;
+        }
+        self.arm_disconnects(node);
+        if self.disconnected(node) {
+            return Ok(()); // swallowed: the wire ate it
+        }
+        self.inner.send_to(node, msg)
+    }
+
+    fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
+        self.inject_recv(node, BLOCKING_FETCH)
+    }
+
+    fn recv_from_deadline(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>> {
+        self.inject_recv(node, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_finds_the_typed_error_through_context() {
+        let err = anyhow::Error::new(NetError::Timeout).context("receiving from node 3");
+        assert_eq!(NetError::classify(&err), Some(&NetError::Timeout));
+        let plain = anyhow::anyhow!("some other failure");
+        assert_eq!(NetError::classify(&plain), None);
+        let garbage = anyhow::Error::new(NetError::Garbage("bad tag".into()));
+        assert!(matches!(NetError::classify(&garbage), Some(NetError::Garbage(_))));
+    }
+
+    #[test]
+    fn default_config_disables_failover() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert!(FaultConfig::with_timeout(Duration::from_millis(50)).enabled());
+    }
+
+    #[test]
+    fn retry_policy_is_deterministic_bounded_and_growing() {
+        let mut a = RetryPolicy::for_connect(7);
+        let mut b = RetryPolicy::for_connect(7);
+        let da: Vec<_> = (0..8).map(|i| a.delay(i)).collect();
+        let db: Vec<_> = (0..8).map(|i| b.delay(i)).collect();
+        assert_eq!(da, db, "same seed must give the same delays");
+        for (i, d) in da.iter().enumerate() {
+            assert!(*d <= Duration::from_millis(400), "attempt {i} over cap: {d:?}");
+            assert!(*d >= Duration::from_millis(5), "attempt {i} under base/2: {d:?}");
+        }
+        // Exponential phase: later attempts are (stochastically) longer;
+        // attempt 6 is capped at >= 200ms while attempt 0 is <= 10ms.
+        assert!(da[6] > da[0]);
+        // A huge attempt index must not overflow.
+        let _ = a.delay(u32::MAX);
+    }
+
+    #[test]
+    fn plan_parser_roundtrips_every_kind_and_rejects_junk() {
+        let plan = FaultPlan::parse("drop@3:0, delay@4:1x2, disc@5:0+3, garbage@6:1").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent { round: 3, node: 0, kind: FaultKind::DropReply },
+                FaultEvent { round: 4, node: 1, kind: FaultKind::DelayReply { times: 2 } },
+                FaultEvent { round: 5, node: 0, kind: FaultKind::Disconnect { rounds: 3 } },
+                FaultEvent { round: 6, node: 1, kind: FaultKind::GarbageReply },
+            ]
+        );
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("drop@x:0").is_err());
+        assert!(FaultPlan::parse("drop@1").is_err());
+        assert!(FaultPlan::parse("delay@1:0").is_err(), "delay needs a count");
+        assert!(FaultPlan::parse("disc@1:0").is_err(), "disc needs a width");
+        assert!(FaultPlan::parse("disc@1:0+0").is_err(), "zero-width disconnect");
+        assert!(FaultPlan::parse("explode@1:0").is_err());
+    }
+}

@@ -49,8 +49,19 @@
 //! encode). Higher staleness budgets would compound wire lag on top of
 //! replay lag, so the distributed runner rejects them loudly.
 
+//!
+//! * [`fault`] — the resilience layer: typed
+//!   [`NetError`](fault::NetError)s behind deadline-aware receives,
+//!   deterministic retry/backoff, coordinator-side **lane failover**
+//!   (a dead node's lanes are regenerated and sifted locally,
+//!   bit-identically — Theorem 1's staleness tolerance extended to lost
+//!   nodes), and a scripted [`FaultInjectTransport`](fault::
+//!   FaultInjectTransport) that makes every recovery path deterministic
+//!   to test (`tests/fault_equivalence.rs`).
+
 pub mod cluster;
 pub mod delta;
+pub mod fault;
 pub mod node;
 pub mod proto;
 pub mod transport;
@@ -58,6 +69,7 @@ pub(crate) mod wire;
 
 pub use cluster::{config_fingerprint, run_distributed};
 pub use delta::{MlpDenseCodec, ModelCodec, SvmDeltaCodec, SyncMessage};
+pub use fault::{FaultConfig, FaultEvent, FaultInjectTransport, FaultKind, FaultPlan, NetError};
 pub use node::{serve_sift_node, SiftNodeReport};
 pub use proto::TaskKind;
 pub use transport::{Channel, InProcTransport, TcpTransport, Transport, UdsTransport};
@@ -83,6 +95,15 @@ pub struct NetStats {
     /// What the same syncs would have cost shipped as full state every
     /// round — the denominator of [`NetStats::delta_ratio`].
     pub full_equiv_bytes: u64,
+    /// Receive deadlines that expired waiting on a node.
+    pub timeouts: u64,
+    /// Extra receive attempts granted after a timeout (heartbeat sent,
+    /// deadline re-armed).
+    pub retries: u64,
+    /// Rounds where a dead node's lane range was re-run locally.
+    pub failovers: u64,
+    /// Nodes re-adopted after failover via a full-snapshot resync.
+    pub reconnects: u64,
 }
 
 impl NetStats {

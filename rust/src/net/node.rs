@@ -119,14 +119,33 @@ pub fn serve_sift_node<L: Learner>(
     )?;
 
     let mut rounds = 0u64;
+    let mut last_round = 0u64;
     let mut outcome: Option<Result<PoolStats>> = None;
     backend.with_session(&mut |session| {
         outcome = Some((|| loop {
             match recv_msg(chan)? {
+                Msg::Ping(seq) => {
+                    // Coordinator liveness probe (it may be deciding
+                    // whether to fail our lanes over) — echo and keep
+                    // waiting for the round.
+                    send_msg(chan, &Msg::Pong(seq))?;
+                }
                 Msg::Round(rm) => {
                     let node_id = init.node_index as i64;
                     let _sp_round =
                         crate::obs_span!("round", round = rm.round as i64, node = node_id);
+                    // Rounds we never saw (a disconnect window the
+                    // coordinator failed over) consumed our lanes'
+                    // streams and sifter coins on the coordinator —
+                    // replay the draws locally so both sides' lane state
+                    // agrees bit for bit before this round's shard.
+                    if rm.round > last_round + 1 {
+                        let gap = (rm.round - last_round - 1) as usize;
+                        for lane in lanes.iter_mut() {
+                            lane.fast_forward(gap * shard);
+                        }
+                    }
+                    last_round = rm.round;
                     {
                         let _sp =
                             crate::obs_span!("sync", round = rm.round as i64, node = node_id);
@@ -246,6 +265,39 @@ mod tests {
         assert_eq!(report.node_index, 0);
         assert_eq!(report.lanes, 1);
         assert_eq!(report.rounds, 0);
+    }
+
+    #[test]
+    fn node_answers_heartbeats_between_rounds() {
+        let (mut hub, mut chans) = InProcTransport::pair(1);
+        let handle = std::thread::spawn(move || {
+            let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+            let mut codec = MlpDenseCodec::new();
+            let mut chan = chans.remove(0);
+            serve_sift_node(
+                &mut chan,
+                &mut replica,
+                &mut codec,
+                &NativeScorer,
+                &SerialBackend,
+                &StreamConfig::nn_task(),
+                TaskKind::Nn,
+                0xABCD,
+            )
+        });
+        hub.send_to(0, &Msg::Init(test_init()).encode().unwrap()).unwrap();
+        assert!(matches!(Msg::decode(&hub.recv_from(0).unwrap()).unwrap(), Msg::Ready(_)));
+        for seq in [7u64, 8] {
+            hub.send_to(0, &Msg::Ping(seq).encode().unwrap()).unwrap();
+            match Msg::decode(&hub.recv_from(0).unwrap()).unwrap() {
+                Msg::Pong(got) => assert_eq!(got, seq),
+                other => panic!("expected pong, got {other:?}"),
+            }
+        }
+        hub.send_to(0, &Msg::Shutdown.encode().unwrap()).unwrap();
+        let _ = hub.recv_from(0); // Bye
+        drop(hub);
+        handle.join().unwrap().unwrap();
     }
 
     #[test]

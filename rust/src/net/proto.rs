@@ -21,8 +21,10 @@ use crate::exec::PoolStats;
 use anyhow::Result;
 
 /// Bump on any wire-format change; [`Msg::Init`] carries it and
-/// [`super::node::serve_sift_node`] refuses mismatches.
-pub const PROTO_VERSION: u32 = 1;
+/// [`super::node::serve_sift_node`] refuses mismatches. v2 added the
+/// Ping/Pong heartbeat pair — a v1 node cleanly rejects a v2
+/// coordinator at the handshake instead of choking mid-run.
+pub const PROTO_VERSION: u32 = 2;
 
 const TAG_INIT: u8 = 1;
 const TAG_READY: u8 = 2;
@@ -30,6 +32,19 @@ const TAG_ROUND: u8 = 3;
 const TAG_SIFT: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
 const TAG_BYE: u8 = 6;
+const TAG_PING: u8 = 7;
+const TAG_PONG: u8 = 8;
+
+/// If `frame` is an encoded [`Msg::Round`], its round number. Lets a
+/// transport wrapper (the fault injector) track round progress by
+/// watching outgoing frames, without decoding full messages.
+pub(crate) fn peek_round(frame: &[u8]) -> Option<u64> {
+    if frame.len() >= 9 && frame[0] == TAG_ROUND {
+        Some(u64::from_le_bytes(frame[1..9].try_into().expect("8-byte slice")))
+    } else {
+        None
+    }
+}
 
 /// Which experiment family a run belongs to. Carried in [`Msg::Init`] so
 /// a node launched with the wrong subcommand fails fast instead of
@@ -131,6 +146,11 @@ pub enum Msg {
     Sift(SiftMsg),
     Shutdown,
     Bye(ByeMsg),
+    /// Coordinator liveness probe (sequence number echoed by the Pong).
+    /// Sent while waiting out a slow node and when probing a dead one.
+    Ping(u64),
+    /// Node's echo of a [`Msg::Ping`]: "still here, still sifting".
+    Pong(u64),
 }
 
 fn put_sifter(buf: &mut Vec<u8>, s: &SifterSpec) {
@@ -211,6 +231,14 @@ impl Msg {
                 put_u64(&mut buf, m.pool.threads_spawned);
                 put_u64(&mut buf, m.pool.rounds);
             }
+            Msg::Ping(seq) => {
+                put_u8(&mut buf, TAG_PING);
+                put_u64(&mut buf, *seq);
+            }
+            Msg::Pong(seq) => {
+                put_u8(&mut buf, TAG_PONG);
+                put_u64(&mut buf, *seq);
+            }
         }
         Ok(buf)
     }
@@ -244,6 +272,15 @@ impl Msg {
             TAG_SIFT => {
                 let round = r.u64()?;
                 let n = r.u32()? as usize;
+                // Every lane costs >= 28 wire bytes (three length
+                // prefixes + seconds + sift_ops), so a count the
+                // remaining bytes cannot cover is garbage — reject it
+                // before reserving lane structs for it.
+                anyhow::ensure!(
+                    n <= r.remaining() / 28,
+                    "sift message claims {n} lanes but only {} bytes remain",
+                    r.remaining()
+                );
                 let mut lanes = Vec::with_capacity(n);
                 for _ in 0..n {
                     let sel_x = r.f32s()?;
@@ -263,6 +300,8 @@ impl Msg {
                     rounds: r.u64()?,
                 },
             }),
+            TAG_PING => Msg::Ping(r.u64()?),
+            TAG_PONG => Msg::Pong(r.u64()?),
             other => anyhow::bail!("unknown message tag {other}"),
         };
         anyhow::ensure!(r.remaining() == 0, "{} trailing bytes after message", r.remaining());
@@ -336,6 +375,26 @@ mod tests {
         bytes.push(0);
         assert!(Msg::decode(&bytes).is_err(), "trailing garbage must not parse");
         assert!(Msg::decode(&[250]).is_err(), "unknown tag must not parse");
+    }
+
+    #[test]
+    fn ping_pong_roundtrip_and_round_peek() {
+        match Msg::decode(&Msg::Ping(41).encode().unwrap()).unwrap() {
+            Msg::Ping(seq) => assert_eq!(seq, 41),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match Msg::decode(&Msg::Pong(42).encode().unwrap()).unwrap() {
+            Msg::Pong(seq) => assert_eq!(seq, 42),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let round = Msg::Round(RoundMsg {
+            round: 77,
+            n_phase: 0,
+            sync: SyncMessage { epoch: 77, full: true, payload: vec![] },
+        });
+        assert_eq!(peek_round(&round.encode().unwrap()), Some(77));
+        assert_eq!(peek_round(&Msg::Ping(77).encode().unwrap()), None);
+        assert_eq!(peek_round(b"xy"), None);
     }
 
     #[test]

@@ -21,13 +21,22 @@
 //! [`NetStats`](super::NetStats) byte totals for every carrier —
 //! including in-proc, where no bytes actually move — so wire telemetry
 //! is comparable across carriers.
+//!
+//! Every receive has a deadline-aware variant ([`Channel::recv_deadline`]
+//! / [`Transport::recv_from_deadline`]) reporting failures as the typed
+//! [`NetError`](super::fault::NetError) taxonomy: deadline expiry is
+//! `Timeout`, peer loss is `Disconnected`, and an impossible length
+//! prefix is `Garbage`. A timed-out stream receive keeps the partial
+//! frame buffered and resumes exactly where it left off on the next
+//! call — a deadline never corrupts the framing.
 
+use super::fault::{NetError, RetryPolicy};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 /// Refuse frames above 1 GiB — anything bigger is a corrupted length
@@ -43,6 +52,10 @@ pub trait Channel: Send {
     fn send(&mut self, msg: &[u8]) -> Result<()>;
     /// Block until the next whole message arrives.
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Wait at most `timeout` for the next whole message. On expiry the
+    /// error classifies as [`NetError::Timeout`] and any partial frame
+    /// stays buffered — the next receive resumes it byte-exactly.
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Vec<u8>>;
 }
 
 /// The coordinator's hub: one [`Channel`] per connected node process,
@@ -56,6 +69,9 @@ pub trait Transport: Send {
     fn send_to(&mut self, node: usize, msg: &[u8]) -> Result<()>;
     /// Block until node `node`'s next message arrives.
     fn recv_from(&mut self, node: usize) -> Result<Vec<u8>>;
+    /// Deadline-aware receive from node `node`; see
+    /// [`Channel::recv_deadline`].
+    fn recv_from_deadline(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>>;
     /// Send the same message to every node, in node order.
     fn broadcast(&mut self, msg: &[u8]) -> Result<()> {
         for node in 0..self.nodes() {
@@ -79,11 +95,22 @@ impl Channel for InProcChannel {
     fn send(&mut self, msg: &[u8]) -> Result<()> {
         self.tx
             .send(msg.to_vec())
-            .map_err(|_| anyhow::anyhow!("in-proc peer disconnected"))
+            .map_err(|_| anyhow::Error::new(NetError::Disconnected).context("in-proc peer gone"))
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("in-proc peer disconnected"))
+        self.rx.recv().map_err(|_| {
+            anyhow::Error::new(NetError::Disconnected).context("in-proc peer disconnected")
+        })
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(msg),
+            Err(RecvTimeoutError::Timeout) => Err(anyhow::Error::new(NetError::Timeout)),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::Error::new(NetError::Disconnected)
+                .context("in-proc peer disconnected")),
+        }
     }
 }
 
@@ -126,24 +153,115 @@ impl Transport for InProcTransport {
     fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
         self.chans[node].recv()
     }
+
+    fn recv_from_deadline(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>> {
+        self.chans[node].recv_deadline(timeout)
+    }
 }
 
 // ---------------------------------------------------------------------
 // Stream carriers (UDS, TCP): length-prefix framing over Read + Write.
 // ---------------------------------------------------------------------
 
-/// Length-prefix framing over any byte stream.
-pub struct StreamChannel<S: Read + Write + Send> {
-    stream: S,
+/// A byte stream whose reads can be given an OS-level deadline. Both
+/// socket types expose this as `set_read_timeout`; the trait lets
+/// [`StreamChannel`] stay generic over them.
+pub trait DeadlineRead {
+    /// Set (or clear, with `None`) the read timeout on the underlying
+    /// descriptor. `Some(Duration::ZERO)` is an OS error — callers must
+    /// clamp first.
+    fn set_read_deadline(&self, timeout: Option<Duration>) -> std::io::Result<()>;
 }
 
-impl<S: Read + Write + Send> StreamChannel<S> {
-    pub fn new(stream: S) -> Self {
-        StreamChannel { stream }
+impl DeadlineRead for UnixStream {
+    fn set_read_deadline(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(timeout)
     }
 }
 
-impl<S: Read + Write + Send> Channel for StreamChannel<S> {
+impl DeadlineRead for TcpStream {
+    fn set_read_deadline(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+}
+
+/// Length-prefix framing over any byte stream. Receives are resumable:
+/// bytes of an in-flight frame accumulate in `partial` across
+/// deadline-expired calls, so a slow peer is indistinguishable from a
+/// fast one once its frame finally lands.
+pub struct StreamChannel<S: Read + Write + Send + DeadlineRead> {
+    stream: S,
+    /// Header + payload bytes of the frame currently being read.
+    partial: Vec<u8>,
+}
+
+impl<S: Read + Write + Send + DeadlineRead> StreamChannel<S> {
+    pub fn new(stream: S) -> Self {
+        StreamChannel { stream, partial: Vec::new() }
+    }
+
+    /// Read until the in-flight frame completes or `deadline` passes
+    /// (`None` = block forever). Partial progress survives timeouts.
+    fn recv_until(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        loop {
+            // Total bytes the in-flight frame needs (header first, then
+            // header + payload once the length prefix is complete).
+            let target = if self.partial.len() < 4 {
+                4
+            } else {
+                let len = u32::from_le_bytes(self.partial[..4].try_into().expect("4-byte slice"));
+                if len > MAX_FRAME {
+                    return Err(anyhow::Error::new(NetError::Garbage(format!(
+                        "oversized frame: {len} bytes"
+                    ))));
+                }
+                4 + len as usize
+            };
+            if self.partial.len() >= 4 && self.partial.len() == target {
+                let payload = self.partial.split_off(4);
+                self.partial.clear();
+                return Ok(payload);
+            }
+            match deadline {
+                Some(d) => {
+                    let remaining = d.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        return Err(anyhow::Error::new(NetError::Timeout));
+                    }
+                    self.stream
+                        .set_read_deadline(Some(remaining))
+                        .context("setting read deadline")?;
+                }
+                None => {
+                    self.stream.set_read_deadline(None).context("clearing read deadline")?;
+                }
+            }
+            let mut buf = vec![0u8; target - self.partial.len()];
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    return Err(anyhow::Error::new(NetError::Disconnected)
+                        .context("peer closed the stream"));
+                }
+                Ok(n) => self.partial.extend_from_slice(&buf[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(anyhow::Error::new(NetError::Timeout));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(anyhow::Error::new(NetError::Disconnected)
+                        .context(format!("stream read failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+impl<S: Read + Write + Send + DeadlineRead> Channel for StreamChannel<S> {
     fn send(&mut self, msg: &[u8]) -> Result<()> {
         let len = u32::try_from(msg.len())
             .ok()
@@ -156,13 +274,11 @@ impl<S: Read + Write + Send> Channel for StreamChannel<S> {
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        let mut len = [0u8; 4];
-        self.stream.read_exact(&mut len).context("reading frame length")?;
-        let len = u32::from_le_bytes(len);
-        anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len} bytes");
-        let mut buf = vec![0u8; len as usize];
-        self.stream.read_exact(&mut buf).context("reading frame payload")?;
-        Ok(buf)
+        self.recv_until(None)
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        self.recv_until(Some(Instant::now() + timeout))
     }
 }
 
@@ -190,11 +306,13 @@ impl UdsTransport {
         Ok(UdsTransport { chans, path: path.to_path_buf() })
     }
 
-    /// Node side: connect to the coordinator's socket, retrying while
-    /// the coordinator is still coming up (it may bind after the node
-    /// process launches).
+    /// Node side: connect to the coordinator's socket, retrying with
+    /// seeded exponential backoff while the coordinator is still coming
+    /// up (it may bind after the node process launches).
     pub fn connect(path: &Path, timeout: Duration) -> Result<StreamChannel<UnixStream>> {
         let deadline = Instant::now() + timeout;
+        let mut policy = RetryPolicy::for_connect(addr_seed(&path.display().to_string()));
+        let mut attempt = 0u32;
         loop {
             match UnixStream::connect(path) {
                 Ok(stream) => return Ok(StreamChannel::new(stream)),
@@ -207,11 +325,18 @@ impl UdsTransport {
                         return Err(anyhow::Error::new(e)
                             .context(format!("connecting to {}", path.display())));
                     }
-                    std::thread::sleep(Duration::from_millis(25));
+                    std::thread::sleep(policy.delay(attempt));
+                    attempt += 1;
                 }
             }
         }
     }
+}
+
+/// Deterministic backoff seed from the connect target, so two nodes
+/// dialing different sockets don't share a jitter sequence.
+fn addr_seed(addr: &str) -> u64 {
+    addr.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3))
 }
 
 impl Drop for UdsTransport {
@@ -236,6 +361,10 @@ impl Transport for UdsTransport {
     fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
         self.chans[node].recv()
     }
+
+    fn recv_from_deadline(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>> {
+        self.chans[node].recv_deadline(timeout)
+    }
 }
 
 /// TCP hub (loopback or LAN): same framing as [`UdsTransport`] over
@@ -259,9 +388,11 @@ impl TcpTransport {
         Ok(TcpTransport { chans })
     }
 
-    /// Node side: connect with the same startup-race retry as UDS.
+    /// Node side: connect with the same startup-race backoff as UDS.
     pub fn connect(addr: &str, timeout: Duration) -> Result<StreamChannel<TcpStream>> {
         let deadline = Instant::now() + timeout;
+        let mut policy = RetryPolicy::for_connect(addr_seed(addr));
+        let mut attempt = 0u32;
         loop {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
@@ -272,7 +403,8 @@ impl TcpTransport {
                     if Instant::now() >= deadline {
                         return Err(anyhow::Error::new(e).context(format!("connecting to {addr}")));
                     }
-                    std::thread::sleep(Duration::from_millis(25));
+                    std::thread::sleep(policy.delay(attempt));
+                    attempt += 1;
                 }
             }
         }
@@ -294,6 +426,10 @@ impl Transport for TcpTransport {
 
     fn recv_from(&mut self, node: usize) -> Result<Vec<u8>> {
         self.chans[node].recv()
+    }
+
+    fn recv_from_deadline(&mut self, node: usize, timeout: Duration) -> Result<Vec<u8>> {
+        self.chans[node].recv_deadline(timeout)
     }
 }
 
@@ -353,6 +489,52 @@ mod tests {
         hub.send_to(0, b"").unwrap();
         assert_eq!(hub.recv_from(0).unwrap(), b"done");
         node.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_deadline_times_out_then_delivers_then_disconnects() {
+        let (mut hub, mut ends) = InProcTransport::pair(1);
+        let err = hub.recv_from_deadline(0, Duration::from_millis(10)).unwrap_err();
+        assert_eq!(NetError::classify(&err), Some(&NetError::Timeout));
+        ends[0].send(b"late").unwrap();
+        assert_eq!(hub.recv_from_deadline(0, Duration::from_secs(5)).unwrap(), b"late");
+        drop(ends);
+        let err = hub.recv_from_deadline(0, Duration::from_secs(1)).unwrap_err();
+        assert_eq!(NetError::classify(&err), Some(&NetError::Disconnected));
+    }
+
+    #[test]
+    fn stream_deadline_preserves_a_partial_frame() {
+        let (a, mut peer) = UnixStream::pair().unwrap();
+        let mut chan = StreamChannel::new(a);
+        // Only the header plus half the payload arrives before the
+        // deadline: the receive must time out WITHOUT corrupting the
+        // framing, then resume to the complete message.
+        peer.write_all(&8u32.to_le_bytes()).unwrap();
+        peer.write_all(b"half").unwrap();
+        let err = chan.recv_deadline(Duration::from_millis(30)).unwrap_err();
+        assert_eq!(NetError::classify(&err), Some(&NetError::Timeout));
+        peer.write_all(b"more").unwrap();
+        assert_eq!(chan.recv_deadline(Duration::from_secs(5)).unwrap(), b"halfmore");
+        // The stream is clean for the next frame.
+        peer.write_all(&2u32.to_le_bytes()).unwrap();
+        peer.write_all(b"ok").unwrap();
+        assert_eq!(chan.recv().unwrap(), b"ok");
+    }
+
+    #[test]
+    fn stream_errors_classify_as_disconnect_and_garbage() {
+        let (a, peer) = UnixStream::pair().unwrap();
+        let mut chan = StreamChannel::new(a);
+        drop(peer);
+        let err = chan.recv_deadline(Duration::from_secs(1)).unwrap_err();
+        assert_eq!(NetError::classify(&err), Some(&NetError::Disconnected));
+
+        let (a, mut peer) = UnixStream::pair().unwrap();
+        let mut chan = StreamChannel::new(a);
+        peer.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = chan.recv_deadline(Duration::from_secs(1)).unwrap_err();
+        assert!(matches!(NetError::classify(&err), Some(NetError::Garbage(_))));
     }
 
     #[test]

@@ -179,6 +179,10 @@ impl ObsReport {
         r.push_counter("net.full_syncs", net.full_syncs);
         r.push_counter("net.sync_bytes", net.sync_bytes);
         r.push_counter("net.full_equiv_bytes", net.full_equiv_bytes);
+        r.push_counter("net.timeouts", net.timeouts);
+        r.push_counter("net.retries", net.retries);
+        r.push_counter("net.failovers", net.failovers);
+        r.push_counter("net.reconnects", net.reconnects);
         r.push_counter("obs.spans", super::span::spans_recorded());
         r.push_counter("obs.spans_dropped", super::span::spans_dropped());
         r
@@ -285,6 +289,10 @@ mod tests {
             full_syncs: 2,
             sync_bytes: 600,
             full_equiv_bytes: 2400,
+            timeouts: 3,
+            retries: 2,
+            failovers: 1,
+            reconnects: 1,
         };
         let r = ObsReport::fold_sync(&wall, &pool, &net);
         assert_eq!(r.version, OBS_REPORT_VERSION);
@@ -298,6 +306,10 @@ mod tests {
         assert_eq!(r.counter("net.sync_bytes"), Some(net.sync_bytes));
         assert_eq!(r.counter("net.full_equiv_bytes"), Some(net.full_equiv_bytes));
         assert_eq!(r.counter("net.sync_messages"), Some(net.sync_messages));
+        assert_eq!(r.counter("net.timeouts"), Some(net.timeouts));
+        assert_eq!(r.counter("net.retries"), Some(net.retries));
+        assert_eq!(r.counter("net.failovers"), Some(net.failovers));
+        assert_eq!(r.counter("net.reconnects"), Some(net.reconnects));
         assert!(r.counter("obs.spans").is_some());
         assert_eq!(r.gauge("no.such.metric"), None);
     }

@@ -598,6 +598,46 @@ mod tests {
     }
 
     #[test]
+    fn client_vanishing_mid_request_leaves_others_served_and_nothing_leaked() {
+        // One client dies while its request is being dispatched. Its
+        // reply must be dropped silently (no waiting channel leaks, no
+        // wedged dispatcher), other clients keep getting served, and the
+        // vanish must not count as shedding — Busy is strictly a
+        // full-queue signal.
+        let session = LearnSession::create(small_cfg(), &svm_session_learner());
+        let (mut hub_a, ends_a) = InProcTransport::pair(1);
+        let (mut hub_b, ends_b) = InProcTransport::pair(1);
+        let clients: Vec<Box<dyn Channel>> =
+            boxed(ends_a).into_iter().chain(boxed(ends_b)).collect();
+        let handle = std::thread::spawn(move || {
+            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+        });
+
+        // B's request is admitted and occupies the dispatcher...
+        hub_b.send_to(0, &Request::Pause { millis: 400 }.encode().unwrap()).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        // ...then B vanishes before its reply can be delivered.
+        drop(hub_b);
+
+        // A is queued behind the doomed request and must still be served.
+        match roundtrip(&mut hub_a, 0, &Request::Status) {
+            Response::Status { shed: 0, .. } => {}
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+        match roundtrip(&mut hub_a, 0, &Request::Score { xs: vec![0.0; DIM] }) {
+            Response::Scores(s) => assert_eq!(s.len(), 1),
+            other => panic!("unexpected score reply: {other:?}"),
+        }
+        assert_eq!(roundtrip(&mut hub_a, 0, &Request::Shutdown), Response::Bye);
+
+        // `serve`'s scope joins B's reader thread before returning, so a
+        // leaked reply wait would hang this join instead of finishing.
+        let (report, _session) = handle.join().unwrap();
+        assert_eq!(report.requests_served, 4, "pause, status, score, shutdown");
+        assert_eq!(report.shed, 0, "a vanished client is not admission shedding");
+    }
+
+    #[test]
     fn elastic_reconfigure_between_trains_keeps_results_identical() {
         // Direct session, fixed single worker throughout.
         let mut direct = LearnSession::create(small_cfg(), &svm_session_learner());

@@ -14,7 +14,7 @@ use para_active::data::{ExampleStream, StreamConfig, TestSet, DIM};
 use para_active::exec::ReplayConfig;
 use para_active::learner::{Learner, NativeScorer};
 use para_active::net::{
-    config_fingerprint, run_distributed, serve_sift_node, Channel, InProcTransport,
+    config_fingerprint, run_distributed, serve_sift_node, Channel, FaultConfig, InProcTransport,
     MlpDenseCodec, SvmDeltaCodec, TaskKind,
 };
 use para_active::nn::{AdaGradMlp, MlpConfig};
@@ -207,6 +207,8 @@ pub fn svm_run_distributed(
         &mut hub,
         TaskKind::Svm,
         fp,
+        &NativeScorer,
+        &FaultConfig::default(),
     )
     .expect("distributed svm run");
     for h in handles {
@@ -237,6 +239,8 @@ pub fn mlp_run_distributed(k: usize, procs: usize, replay: ReplayConfig) -> (Syn
         &mut hub,
         TaskKind::Nn,
         fp,
+        &NativeScorer,
+        &FaultConfig::default(),
     )
     .expect("distributed mlp run");
     for h in handles {

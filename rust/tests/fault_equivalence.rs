@@ -1,0 +1,296 @@
+//! Fault-tolerance equivalence suite: under any scripted fault plan —
+//! dropped replies, delayed replies, disconnect windows, garbage frames,
+//! a node that never comes back — the distributed run must finish and
+//! its final model must be **bit-identical** to the fault-free run.
+//!
+//! That is the paper's Theorem 1 pushed to its limit: a sift node's only
+//! job is to regenerate its lanes (seeded streams + sifter coins) and
+//! score them against a synced model, so a dead node's lane range can be
+//! re-run locally from the same seeds and produce the same bits. These
+//! tests drive every recovery path in `net::cluster` through the
+//! deterministic `FaultInjectTransport` and compare exact probe bits
+//! against the in-process `run_sync` reference.
+
+mod common;
+
+use common::{assert_reports_identical, mlp_run, probe_bits, svm_run};
+use para_active::active::SifterSpec;
+use para_active::coordinator::backend::{BackendChoice, SerialBackend};
+use para_active::coordinator::sync::{SyncConfig, SyncReport};
+use para_active::data::{StreamConfig, TestSet, DIM};
+use para_active::exec::ReplayConfig;
+use para_active::learner::NativeScorer;
+use para_active::net::{
+    config_fingerprint, run_distributed, serve_sift_node, Channel, FaultConfig,
+    FaultInjectTransport, FaultPlan, InProcTransport, MlpDenseCodec, SiftNodeReport,
+    SvmDeltaCodec, TaskKind,
+};
+use para_active::nn::{AdaGradMlp, MlpConfig};
+use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
+use std::time::{Duration, Instant};
+
+// Tuned to match `common::svm_run` exactly: k=2 lanes over 2 node
+// processes, warmstart 128, shard 128, 6 rounds.
+const K: usize = 2;
+const PROCS: usize = 2;
+const BATCH: usize = 256;
+const BUDGET: usize = 1500;
+
+fn ft(timeout_ms: u64, retries: u32) -> FaultConfig {
+    FaultConfig {
+        node_timeout: Some(Duration::from_millis(timeout_ms)),
+        retries,
+        ..Default::default()
+    }
+}
+
+/// A node thread that tolerates an unclean ending: a node orphaned by a
+/// permanent fault exits with an error once the transport tears down,
+/// which is expected, not a panic.
+fn spawn_lenient_svm_node<C: Channel + 'static>(
+    mut chan: C,
+    fingerprint: u64,
+) -> std::thread::JoinHandle<anyhow::Result<SiftNodeReport>> {
+    std::thread::spawn(move || {
+        let mut replica = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+        let mut codec = SvmDeltaCodec::new(DIM);
+        serve_sift_node(
+            &mut chan,
+            &mut replica,
+            &mut codec,
+            &NativeScorer,
+            &SerialBackend,
+            &StreamConfig::svm_task(),
+            TaskKind::Svm,
+            fingerprint,
+        )
+    })
+}
+
+/// Run the distributed SVM with `plan` injected between the coordinator
+/// and its node processes. Returns the report, the final model's probe
+/// bits, and whether every node thread finished cleanly.
+fn svm_chaos(
+    plan: FaultPlan,
+    replay: ReplayConfig,
+    faults: FaultConfig,
+) -> (SyncReport, Vec<u32>, usize) {
+    let stream = StreamConfig::svm_task();
+    let test = TestSet::generate(&stream, 80);
+    let mut svm = LaSvm::new(RbfKernel::paper(), DIM, LaSvmConfig::default());
+    let mut codec = SvmDeltaCodec::new(DIM);
+    let sifter = SifterSpec::margin(0.1, 7);
+    let cfg = SyncConfig::new(K, BATCH, 128, BUDGET).with_replay(replay);
+    let fp = config_fingerprint(&[0xFA17, K as u64, BATCH as u64, BUDGET as u64]);
+    let (hub, chans) = InProcTransport::pair(PROCS);
+    let handles: Vec<_> =
+        chans.into_iter().map(|c| spawn_lenient_svm_node(c, fp)).collect();
+    let mut hub = FaultInjectTransport::new(Box::new(hub), plan);
+    let report = run_distributed(
+        &mut svm,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Svm,
+        fp,
+        &NativeScorer,
+        &faults,
+    )
+    .expect("chaos run must still finish");
+    // Tear the transport down so a node orphaned by a permanent fault
+    // unblocks (its recv turns into a Disconnected error).
+    drop(hub);
+    let clean = handles
+        .into_iter()
+        .filter(|h| matches!(h.join(), Ok(Ok(_))))
+        .count();
+    let bits = probe_bits(&svm, &stream);
+    (report, bits, clean)
+}
+
+#[test]
+fn armed_deadlines_without_faults_change_nothing() {
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let (got, bits, clean) =
+        svm_chaos(FaultPlan::new(vec![], 7), ReplayConfig::default(), ft(2000, 2));
+    assert_eq!(clean, PROCS, "all nodes exit cleanly");
+    assert_reports_identical(&want, &got, "armed deadlines, no faults");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.timeouts, 0);
+    assert_eq!(got.net.retries, 0);
+    assert_eq!(got.net.failovers, 0);
+    assert_eq!(got.net.reconnects, 0);
+    assert_eq!(got.net.sync_messages, got.rounds * PROCS as u64);
+}
+
+#[test]
+fn delayed_reply_within_the_retry_budget_is_absorbed() {
+    // Node 0's round-3 reply is held through two receive attempts, then
+    // delivered. Two heartbeat retries cover it: no failover, no drift.
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let plan = FaultPlan::parse("delay@3:0x2").unwrap();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::default(), ft(2000, 2));
+    assert_eq!(clean, PROCS);
+    assert_reports_identical(&want, &got, "delayed reply");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.timeouts, 2, "one timeout per held receive");
+    assert_eq!(got.net.retries, 2, "a heartbeat retry per timeout");
+    assert_eq!(got.net.failovers, 0, "the slow node was never written off");
+    assert_eq!(got.net.reconnects, 0);
+}
+
+#[test]
+fn dropped_reply_fails_over_and_the_node_is_readopted() {
+    // Node 1's round-2 reply vanishes on the wire. The coordinator times
+    // out, retries, declares the node dead, re-runs lane 1 locally with
+    // the same seeds, then re-adopts the node at round 3 via a full
+    // resync — and none of it moves a single bit.
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let plan = FaultPlan::parse("drop@2:1").unwrap();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::default(), ft(600, 1));
+    assert_eq!(clean, PROCS);
+    assert_reports_identical(&want, &got, "dropped reply");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.failovers, 1, "exactly round 2 ran locally");
+    assert_eq!(got.net.reconnects, 1, "the node came back at round 3");
+    assert!(got.net.timeouts >= 2, "drop + the post-ping deadline: {:?}", got.net);
+    assert!(got.net.retries >= 1, "{:?}", got.net);
+}
+
+#[test]
+fn disconnect_window_fails_over_then_fast_forwards_the_gap() {
+    // Node 0 — the warmstart-skip lane — is unreachable for rounds 2-3
+    // (the window runs one round long deterministically: the probe fires
+    // before the round counter advances). Its lane re-runs locally each
+    // missed round; on reconnect the node fast-forwards the gap's
+    // examples and sifter coins and rejoins in lockstep.
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let plan = FaultPlan::parse("disc@2:0+2").unwrap();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::default(), ft(2000, 0));
+    assert_eq!(clean, PROCS);
+    assert_reports_identical(&want, &got, "disconnect window");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.timeouts, 1, "severed link reports silence instantly, once");
+    assert_eq!(got.net.retries, 0);
+    assert_eq!(got.net.failovers, 3, "rounds 2, 3, 4 ran locally");
+    assert_eq!(got.net.reconnects, 1, "re-adopted at round 5");
+}
+
+#[test]
+fn garbage_frame_is_a_typed_error_and_fails_over_immediately() {
+    // Node 1's round-4 reply is replaced with undecodable junk: no
+    // deadline is burned — the decode failure classifies as Garbage and
+    // the lane fails over on the spot.
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let plan = FaultPlan::parse("garbage@4:1").unwrap();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::default(), ft(2000, 1));
+    assert_eq!(clean, PROCS);
+    assert_reports_identical(&want, &got, "garbage frame");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.timeouts, 0, "garbage must not masquerade as a timeout");
+    assert_eq!(got.net.retries, 0);
+    assert_eq!(got.net.failovers, 1);
+    assert_eq!(got.net.reconnects, 1);
+}
+
+#[test]
+fn hung_node_cannot_block_the_run_past_its_deadline() {
+    // Node 0 disconnects at round 2 and never comes back. Every
+    // remaining round fails over locally, the run completes promptly
+    // (a severed link costs no wall-clock), and the result is still
+    // bit-identical. The orphaned node exits once the transport drops.
+    let (want, want_bits) = svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::default());
+    let plan = FaultPlan::parse("disc@2:0+1000").unwrap();
+    let started = Instant::now();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::default(), ft(300, 0));
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "a permanently dead node stalled the run: {:?}",
+        started.elapsed()
+    );
+    assert_eq!(clean, PROCS - 1, "the dead node exits with an error, the other cleanly");
+    assert_reports_identical(&want, &got, "permanent death");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.failovers, got.rounds - 1, "every round from 2 on ran locally");
+    assert_eq!(got.net.reconnects, 0);
+}
+
+#[test]
+fn overlapped_replay_failover_scores_the_frozen_snapshot() {
+    // stale=1: the sync is encoded before the overlapped flush, so a
+    // failover sift must score the pre-flush snapshot — not the live
+    // learner the flush just mutated. Exact bits prove it does.
+    let (want, want_bits) =
+        svm_run(K, BATCH, BUDGET, BackendChoice::Serial, ReplayConfig::stale(7, 1));
+    let plan = FaultPlan::parse("drop@3:0").unwrap();
+    let (got, bits, clean) = svm_chaos(plan, ReplayConfig::stale(7, 1), ft(600, 1));
+    assert_eq!(clean, PROCS);
+    assert!(got.pipelined, "stale=1 runs the overlapped schedule");
+    assert_reports_identical(&want, &got, "overlapped failover");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert_eq!(got.net.failovers, 1);
+    assert_eq!(got.net.reconnects, 1);
+}
+
+#[test]
+fn mlp_survives_a_compound_fault_plan_bit_identically() {
+    // The dense-codec twin under a two-fault plan: a dropped reply on
+    // the warmstart lane's node, then a disconnect window on the other.
+    // Re-adoption goes through MlpDenseCodec::encode_full.
+    let (want, want_bits) = mlp_run(2, BackendChoice::Serial, ReplayConfig::default());
+    let stream = StreamConfig::nn_task();
+    let test = TestSet::generate(&stream, 60);
+    let mut mlp = AdaGradMlp::new(MlpConfig::paper(DIM));
+    let mut codec = MlpDenseCodec::new();
+    let sifter = SifterSpec::margin(0.0005, 11);
+    let cfg = SyncConfig::new(2, 128, 96, 900);
+    let fp = config_fingerprint(&[0x41f, 2, 128, 900]);
+    let (hub, chans) = InProcTransport::pair(2);
+    let handles: Vec<_> = chans
+        .into_iter()
+        .map(|mut chan| {
+            std::thread::spawn(move || -> anyhow::Result<SiftNodeReport> {
+                let mut replica = AdaGradMlp::new(MlpConfig::paper(DIM));
+                let mut codec = MlpDenseCodec::new();
+                serve_sift_node(
+                    &mut chan,
+                    &mut replica,
+                    &mut codec,
+                    &NativeScorer,
+                    &SerialBackend,
+                    &StreamConfig::nn_task(),
+                    TaskKind::Nn,
+                    fp,
+                )
+            })
+        })
+        .collect();
+    let plan = FaultPlan::parse("drop@2:0,disc@4:1+1").unwrap();
+    let mut hub = FaultInjectTransport::new(Box::new(hub), plan);
+    let got = run_distributed(
+        &mut mlp,
+        &mut codec,
+        &sifter,
+        &stream,
+        &test,
+        &cfg,
+        &mut hub,
+        TaskKind::Nn,
+        fp,
+        &NativeScorer,
+        &ft(600, 1),
+    )
+    .expect("mlp chaos run");
+    drop(hub);
+    for h in handles {
+        let _ = h.join().expect("mlp node thread must not panic");
+    }
+    let bits = probe_bits(&mlp, &stream);
+    assert_reports_identical(&want, &got, "mlp compound plan");
+    assert_eq!(want_bits, bits, "final model bits");
+    assert!(got.net.failovers >= 3, "{:?}", got.net);
+    assert_eq!(got.net.reconnects, 2, "both nodes were re-adopted");
+}

@@ -4,9 +4,12 @@
 
 use para_active::active::iwal::{DelayedIwal, Hypotheses, C1, C2};
 use para_active::active::{margin::MarginSifter, PassiveSifter, Sifter, SifterSpec};
+use para_active::coordinator::backend::NodeSift;
 use para_active::data::{ExampleStream, StreamConfig, DIM};
+use para_active::exec::PoolStats;
 use para_active::learner::Learner;
-use para_active::net::{MlpDenseCodec, ModelCodec, SvmDeltaCodec, SyncMessage};
+use para_active::net::proto::{ByeMsg, InitMsg, Msg, ReadyMsg, RoundMsg, SiftMsg, PROTO_VERSION};
+use para_active::net::{MlpDenseCodec, ModelCodec, SvmDeltaCodec, SyncMessage, TaskKind};
 use para_active::rng::Rng;
 use para_active::svm::{kernel::Kernel, lasvm::LaSvm, LaSvmConfig, RbfKernel};
 use para_active::theory::ThresholdClass;
@@ -397,6 +400,196 @@ fn prop_mlp_codec_roundtrip_and_fallback() {
         assert!(fulls_seen >= 1, "seed {seed}: no full sync");
         assert!(deltas_seen >= 1, "seed {seed}: no delta sync");
     }
+}
+
+/// One encoded frame per [`Msg`] variant, with non-trivial payloads so
+/// truncation and mutation have length prefixes and counts to corrupt.
+fn sample_frames() -> Vec<(&'static str, Vec<u8>)> {
+    let init = Msg::Init(InitMsg {
+        version: PROTO_VERSION,
+        task: TaskKind::Svm,
+        fingerprint: 0xFEED_F00D,
+        node_index: 1,
+        lane_lo: 0,
+        lane_hi: 2,
+        k: 4,
+        shard: 250,
+        skip: 1000,
+        stream_seed: 42,
+        sifter: SifterSpec::Margin { eta: 0.1, seed: 7 },
+    });
+    let ready = Msg::Ready(ReadyMsg { node_index: 1, lanes: 2 });
+    let round = Msg::Round(RoundMsg {
+        round: 3,
+        n_phase: 4000,
+        sync: SyncMessage { epoch: 3, full: false, payload: vec![9, 8, 7, 6, 5] },
+    });
+    let sift = Msg::Sift(SiftMsg {
+        round: 3,
+        lanes: vec![
+            NodeSift {
+                sel_x: vec![1.0, -2.5, 0.25, 4.0],
+                sel_y: vec![1.0, -1.0],
+                sel_w: vec![1.5, 3.0],
+                seconds: 0.125,
+                sift_ops: 500,
+            },
+            NodeSift::default(),
+        ],
+    });
+    let bye = Msg::Bye(ByeMsg { pool: PoolStats { workers: 2, threads_spawned: 2, rounds: 9 } });
+    [
+        ("init", init),
+        ("ready", ready),
+        ("round", round),
+        ("sift", sift),
+        ("shutdown", Msg::Shutdown),
+        ("bye", bye),
+        ("ping", Msg::Ping(77)),
+        ("pong", Msg::Pong(78)),
+    ]
+    .into_iter()
+    .map(|(name, m)| (name, m.encode().expect("sample frame encodes")))
+    .collect()
+}
+
+#[test]
+fn prop_msg_decode_never_panics_on_truncated_or_mutated_frames() {
+    // A transport delivers whatever the peer sent: for every message
+    // variant, every truncation and byte-level corruption of a valid
+    // frame must come back as Ok or Err — never a panic, never an
+    // absurd allocation from a forged count.
+    for (name, bytes) in sample_frames() {
+        assert!(Msg::decode(&bytes).is_ok(), "{name}: pristine frame must decode");
+        // Every count on the wire is explicit and trailing bytes are
+        // rejected, so a proper prefix is always missing required
+        // bytes: truncation is a typed error at every cut point.
+        for cut in 0..bytes.len() {
+            assert!(Msg::decode(&bytes[..cut]).is_err(), "{name}: prefix of {cut} bytes decoded");
+        }
+        // Exhaustive single-byte mutations, including the values that
+        // forge extreme counts.
+        for i in 0..bytes.len() {
+            for v in [0x00, 0x01, 0x7F, 0xFF, bytes[i] ^ 0x80] {
+                let mut m = bytes.clone();
+                m[i] = v;
+                let _ = Msg::decode(&m);
+            }
+        }
+        // Randomized multi-byte corruption.
+        for &seed in &SEEDS {
+            let mut rng = Rng::new(seed ^ 0xBAD_F4A3);
+            for _ in 0..200 {
+                let mut m = bytes.clone();
+                for _ in 0..=rng.below(3) {
+                    let i = rng.below(m.len());
+                    m[i] = rng.below(256) as u8;
+                }
+                let _ = Msg::decode(&m);
+            }
+        }
+    }
+}
+
+/// Drive `apply` with every truncation, a flipped full/delta flag,
+/// exhaustive single-byte mutations, and randomized multi-byte
+/// corruption of `msg`'s payload. `apply` receives each corrupted
+/// message on a freshly primed decoder and must absorb it without
+/// panicking.
+fn corrupt_sweep<F: Fn(&SyncMessage)>(msg: &SyncMessage, apply: F) {
+    for cut in 0..msg.payload.len() {
+        apply(&SyncMessage {
+            epoch: msg.epoch,
+            full: msg.full,
+            payload: msg.payload[..cut].to_vec(),
+        });
+    }
+    apply(&SyncMessage { epoch: msg.epoch, full: !msg.full, payload: msg.payload.clone() });
+    for i in 0..msg.payload.len() {
+        for v in [0x00, 0xFF, msg.payload[i] ^ 0x80] {
+            let mut p = msg.payload.clone();
+            p[i] = v;
+            apply(&SyncMessage { epoch: msg.epoch, full: msg.full, payload: p });
+        }
+    }
+    let mut rng = Rng::new(0x5EED ^ msg.payload.len() as u64);
+    for _ in 0..300 {
+        let mut p = msg.payload.clone();
+        for _ in 0..=rng.below(4) {
+            let i = rng.below(p.len());
+            p[i] = rng.below(256) as u8;
+        }
+        apply(&SyncMessage { epoch: msg.epoch, full: msg.full, payload: p });
+    }
+}
+
+#[test]
+fn prop_codec_apply_never_panics_on_corrupt_sync_payloads() {
+    // The sync payload inside a round message is peer-controlled bytes.
+    // Both codecs must turn any corruption of it into Ok (idempotent
+    // skip) or a typed error in both the full and delta apply paths —
+    // never a panic: forged counts, forged slot refs, forged dims
+    // splits, flag flips, truncation.
+    use para_active::nn::{AdaGradMlp, MlpConfig};
+
+    // SVM: a real epoch-1 full snapshot (the decoder priming state),
+    // then an epoch-2 delta and an epoch-2 full against the grown model.
+    let dim = 6;
+    let mut rng = Rng::new(0xC0DEC);
+    let example = |rng: &mut Rng| {
+        let y = if rng.coin(0.5) { 1.0f32 } else { -1.0 };
+        let x: Vec<f32> = (0..dim)
+            .map(|i| (y as f64 * ((i == 0) as i32 as f64) + 0.5 * rng.normal()) as f32)
+            .collect();
+        (x, y)
+    };
+    let mut model = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
+    let mut enc = SvmDeltaCodec::new(dim);
+    for _ in 0..40 {
+        let (x, y) = example(&mut rng);
+        model.update(&x, y, 1.0);
+    }
+    let svm_prime = enc.encode_full(1, &model).unwrap();
+    for _ in 0..6 {
+        let (x, y) = example(&mut rng);
+        model.update(&x, y, 1.0);
+    }
+    let svm_delta = enc.encode(2, &model).unwrap();
+    assert!(!svm_delta.full, "incremental growth should delta-encode");
+    let svm_full = SvmDeltaCodec::new(dim).encode_full(2, &model).unwrap();
+
+    let svm_apply = |msg: &SyncMessage| {
+        // Fresh primed decoder per attempt: corrupt parses may poison
+        // the slot table, and a shared epoch guard would skip repeated
+        // epochs without exercising the parse at all.
+        let mut dec = SvmDeltaCodec::new(dim);
+        let mut replica = LaSvm::new(RbfKernel::new(0.25), dim, LaSvmConfig::default());
+        dec.apply(&mut replica, &svm_prime).expect("priming full state");
+        let _ = dec.apply(&mut replica, msg);
+    };
+    corrupt_sweep(&svm_delta, svm_apply);
+    corrupt_sweep(&svm_full, svm_apply);
+
+    // MLP: same scheme on a small dense model; the unchanged-model
+    // delta is the empty diff whose counts mutations then forge.
+    let mut cfg = MlpConfig::paper(8);
+    cfg.hidden = 4;
+    cfg.seed = 11;
+    let mlp = AdaGradMlp::new(cfg.clone());
+    let mut enc = MlpDenseCodec::new();
+    let mlp_prime = enc.encode_full(1, &mlp).unwrap();
+    let mlp_delta = enc.encode(2, &mlp).unwrap();
+    assert!(!mlp_delta.full, "an unchanged model should produce the empty delta");
+    let mlp_full = MlpDenseCodec::new().encode_full(2, &mlp).unwrap();
+
+    let mlp_apply = |msg: &SyncMessage| {
+        let mut dec = MlpDenseCodec::new();
+        let mut replica = AdaGradMlp::new(cfg.clone());
+        dec.apply(&mut replica, &mlp_prime).expect("priming full state");
+        let _ = dec.apply(&mut replica, msg);
+    };
+    corrupt_sweep(&mlp_delta, mlp_apply);
+    corrupt_sweep(&mlp_full, mlp_apply);
 }
 
 #[test]

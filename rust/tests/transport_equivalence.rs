@@ -34,7 +34,8 @@ use para_active::data::{StreamConfig, TestSet, DIM};
 use para_active::exec::ReplayConfig;
 use para_active::learner::NativeScorer;
 use para_active::net::{
-    config_fingerprint, run_distributed, serve_sift_node, InProcTransport, SvmDeltaCodec,
+    config_fingerprint, run_distributed, serve_sift_node, FaultConfig, InProcTransport,
+    SvmDeltaCodec,
     TaskKind, UdsTransport,
 };
 use para_active::svm::{lasvm::LaSvm, LaSvmConfig, RbfKernel};
@@ -203,6 +204,8 @@ fn uds_transport_reproduces_the_inproc_run() {
         &mut hub,
         TaskKind::Svm,
         fp,
+        &NativeScorer,
+        &FaultConfig::default(),
     )
     .expect("uds distributed run");
     for h in handles {
@@ -263,6 +266,8 @@ fn handshake_rejects_a_mismatched_node_config() {
         &mut hub,
         TaskKind::Svm,
         0xbeef,
+        &NativeScorer,
+        &FaultConfig::default(),
     )
     .expect_err("coordinator must notice the dead node");
     let _ = err; // exact wording depends on which side closes first
