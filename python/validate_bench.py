@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate BENCH_sift.json against its schema (version 7).
+"""Validate BENCH_sift.json against its schema (version 8).
 
 Gating in CI: the *shape* of the bench output is a contract — downstream
 tooling (and the eventual minimum-speedup gate) reads these fields, so a
@@ -13,7 +13,7 @@ Stdlib only. Usage: python3 python/validate_bench.py [path/to/BENCH_sift.json]
 import json
 import sys
 
-SCHEMA = 7
+SCHEMA = 8
 
 ERRORS = []
 
@@ -173,6 +173,25 @@ def main():
         "bit_identical": lambda v: v is True,
     })
 
+    # Crash-safety contract from the disk-corruption drill (schema 8):
+    # the bench flips a bit in the newest checkpoint generation, so
+    # recovery must skip it, fall back one generation, and finish
+    # bit-identical to the uninterrupted twin. last_good_recovered is a
+    # hard gate like faults.bit_identical.
+    check_row("storage", doc.get("storage", None), {
+        "keep": lambda v: isinstance(v, int) and v >= 2,
+        "generations": lambda v: isinstance(v, int) and v >= 1,
+        "corrupt_generations_skipped": lambda v: isinstance(v, int) and v >= 1,
+        "recovered_generation": lambda v: isinstance(v, int) and v >= 1,
+        "resumed_segment": count,
+        "last_good_recovered": lambda v: v is True,
+    })
+    storage = doc.get("storage")
+    if isinstance(storage, dict):
+        keep, gens = storage.get("keep"), storage.get("generations")
+        if isinstance(keep, int) and isinstance(gens, int) and gens > keep:
+            fail(f"storage: generations ({gens}) must be <= keep ({keep})")
+
     # Internal consistency of the wire telemetry (structure, not speed).
     for i, row in enumerate(doc.get("net") or []):
         if not isinstance(row, dict):
@@ -183,7 +202,7 @@ def main():
 
     for extra in set(doc) - {"bench", "schema", "cores", "shard", "paths",
                              "sweep", "update", "pipeline", "net", "live",
-                             "obs", "faults"}:
+                             "obs", "faults", "storage"}:
         fail(f"unknown top-level key {extra!r}")
 
     if ERRORS:

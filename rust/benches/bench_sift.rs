@@ -25,7 +25,7 @@
 //! and the end-to-end round time of a full threaded-backend NN run,
 //! strictly-sequenced loop vs the pipelined coordinator
 //! (`coordinator::pipeline`, sift overlapped with replay). Results are
-//! written to `BENCH_sift.json` (schema 7) so the perf trajectory is
+//! written to `BENCH_sift.json` (schema 8) so the perf trajectory is
 //! machine-readable across PRs.
 //!
 //! The **live** section runs a short serving-layer session
@@ -45,6 +45,13 @@
 //! [`FaultInjectTransport`] and asserts the run stays bit-identical to
 //! its fault-free twin — the resilience contract — recording the
 //! timeout/retry/failover/reconnect counters alongside.
+//!
+//! The **storage** section is the disk twin of the faults section: a
+//! session checkpoints every segment through the generation-rotated
+//! [`CheckpointStore`] riding a [`FaultStore`] that silently flips one
+//! bit in the final write, then a clean reopen must skip the corrupt
+//! newest generation, fall back exactly one, resume, and finish
+//! bit-identical to an uninterrupted twin (`last_good_recovered`).
 
 use para_active::active::{margin::MarginSifter, Sifter, SifterSpec};
 use para_active::benchlib::{bench, bench_throughput, black_box};
@@ -61,8 +68,9 @@ use para_active::net::{
     FaultPlan, InProcTransport, MlpDenseCodec, NetStats, SvmDeltaCodec, TaskKind, Transport,
 };
 use para_active::nn::{AdaGradMlp, MlpConfig};
-use para_active::serve::{svm_session_learner, LearnSession, SessionConfig};
+use para_active::serve::{svm_session_learner, LearnSession, SessionCheckpoint, SessionConfig};
 use para_active::sim::Stopwatch;
+use para_active::store::{CheckpointStore, FaultStore, FsStore, IoFaultPlan};
 use para_active::svm::{lasvm::LaSvm, Kernel, LaSvmConfig, RbfKernel};
 use std::time::Duration;
 
@@ -472,6 +480,83 @@ fn measure_faults() -> FaultsRow {
     FaultsRow { plan: PLAN, rounds, stats, bit_identical: want == got }
 }
 
+/// Outcome of the disk-corruption drill against its uninterrupted twin.
+struct StorageRow {
+    keep: usize,
+    generations: usize,
+    corrupt_skipped: u64,
+    recovered_generation: u64,
+    resumed_segment: u64,
+    last_good_recovered: bool,
+}
+
+/// The disk twin of [`measure_faults`]: checkpoint every segment through
+/// the generation store riding a [`FaultStore`] whose plan flips one bit
+/// in the *final* write — the save "succeeds", so only the CRC on a
+/// clean reopen catches it. Recovery must fall back exactly one
+/// generation, resume, and finish bit-identical to the clean twin.
+fn measure_storage() -> StorageRow {
+    let mut cfg = SessionConfig::new(TaskKind::Svm);
+    cfg.nodes = 2;
+    cfg.chunk = 128;
+    cfg.warmstart = 120;
+    cfg.segments = 4;
+    cfg.test_size = 40;
+    let proto = svm_session_learner();
+
+    let mut clean = LearnSession::create(cfg.clone(), &proto);
+    while !clean.is_complete() {
+        clean.run_segment();
+    }
+    let test = clean.test_set();
+    let want = clean.final_error(&test).to_bits();
+
+    let dir =
+        std::env::temp_dir().join(format!("para-active-bench-storage-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench storage dir");
+    let keep = 3usize;
+
+    // Chaos arm: the init save is write 0 and each segment saves once,
+    // so write 4 is the final (post-segment-4) generation.
+    {
+        let fs = FsStore::open(&dir).expect("bench fs store");
+        let plan = IoFaultPlan::parse("flip@4:9").expect("bench io plan");
+        let fault = FaultStore::new(Box::new(fs), plan);
+        let mut store =
+            CheckpointStore::with_store(Box::new(fault), "bench.ckpt", keep).expect("chaos store");
+        let mut session = LearnSession::create(cfg.clone(), &proto);
+        session.checkpoint().expect("ckpt").save_generation(&mut store).expect("save");
+        while !session.is_complete() {
+            session.run_segment();
+            session.checkpoint().expect("ckpt").save_generation(&mut store).expect("save");
+        }
+        // "kill -9" here: the newest on-disk generation is corrupt.
+    }
+
+    let mut store = CheckpointStore::open(&dir.join("bench.ckpt"), keep).expect("bench reopen");
+    let generations = store.generations().expect("bench generations").len();
+    let (recovered_generation, ck) = SessionCheckpoint::load_latest(&mut store)
+        .expect("bench recovery scan")
+        .expect("bench last-good generation");
+    let corrupt_skipped = store.skipped();
+    let resumed_segment = ck.segments_done;
+    let mut resumed = LearnSession::resume(cfg, &proto, &ck).expect("bench resume");
+    while !resumed.is_complete() {
+        resumed.run_segment();
+    }
+    let got = resumed.final_error(&test).to_bits();
+    let _ = std::fs::remove_dir_all(&dir);
+    StorageRow {
+        keep,
+        generations,
+        corrupt_skipped,
+        recovered_generation,
+        resumed_segment,
+        last_good_recovered: corrupt_skipped == 1 && got == want,
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn write_json(
     cores: usize,
@@ -484,10 +569,11 @@ fn write_json(
     live: &LiveRow,
     obs: &ObsRow,
     flt: &FaultsRow,
+    storage: &StorageRow,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
-    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 7,\n");
+    body.push_str("  \"bench\": \"sift\",\n  \"schema\": 8,\n");
     body.push_str(&format!("  \"cores\": {cores},\n  \"shard\": {shard},\n"));
     body.push_str("  \"paths\": [\n");
     for (i, p) in paths.iter().enumerate() {
@@ -582,7 +668,7 @@ fn write_json(
     ));
     body.push_str(&format!(
         "  \"faults\": {{\"plan\": \"{}\", \"rounds\": {}, \"timeouts\": {}, \
-         \"retries\": {}, \"failovers\": {}, \"reconnects\": {}, \"bit_identical\": {}}}\n",
+         \"retries\": {}, \"failovers\": {}, \"reconnects\": {}, \"bit_identical\": {}}},\n",
         flt.plan,
         flt.rounds,
         flt.stats.timeouts,
@@ -590,6 +676,17 @@ fn write_json(
         flt.stats.failovers,
         flt.stats.reconnects,
         flt.bit_identical,
+    ));
+    body.push_str(&format!(
+        "  \"storage\": {{\"keep\": {}, \"generations\": {}, \
+         \"corrupt_generations_skipped\": {}, \"recovered_generation\": {}, \
+         \"resumed_segment\": {}, \"last_good_recovered\": {}}}\n",
+        storage.keep,
+        storage.generations,
+        storage.corrupt_skipped,
+        storage.recovered_generation,
+        storage.resumed_segment,
+        storage.last_good_recovered,
     ));
     body.push_str("}\n");
     match std::fs::write("BENCH_sift.json", &body) {
@@ -907,5 +1004,20 @@ fn main() {
     );
     assert!(flt.bit_identical, "chaos run diverged from the fault-free twin");
 
-    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live, &obs, &flt);
+    // --- Crash safety: silent disk corruption vs the generation store. ---
+    println!("\n# crash safety (bit-flipped newest generation, clean-reopen recovery)");
+    let storage = measure_storage();
+    println!(
+        "      keep={} -> {} generation(s) on disk; skipped {} corrupt, recovered \
+         generation {} (segment {}) — last-good recovered: {}",
+        storage.keep,
+        storage.generations,
+        storage.corrupt_skipped,
+        storage.recovered_generation,
+        storage.resumed_segment,
+        storage.last_good_recovered
+    );
+    assert!(storage.last_good_recovered, "disk-chaos resume diverged from the clean twin");
+
+    write_json(cores, shard, &paths, &rows, &updates, &pipe, &nets, &live, &obs, &flt, &storage);
 }

@@ -252,6 +252,47 @@ impl<T: Send> WorkerPool<T> {
         jobs: Vec<Job<'env, T>>,
         overlap: impl FnOnce() -> R,
     ) -> (Vec<T>, R) {
+        let (results, overlapped) = self.run_round_results_with(jobs, overlap);
+        let mut panic = None;
+        let out: Vec<T> = results
+            .into_iter()
+            .filter_map(|r| match r {
+                Ok(value) => Some(value),
+                Err(payload) => {
+                    if panic.is_none() {
+                        panic = Some(payload);
+                    }
+                    None
+                }
+            })
+            .collect();
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+        (out, overlapped)
+    }
+
+    /// The contain-and-respawn primitive: like [`WorkerPool::run_round`]
+    /// but a panicking job is **not** re-raised — its caught payload
+    /// comes back as that lane's `Err`, in submission order, so the
+    /// caller can mark the lane failed and deterministically re-run it
+    /// instead of aborting the whole round. The completion barrier is
+    /// identical: every dispatched job reports back before this returns.
+    pub fn run_round_results<'env>(
+        &self,
+        jobs: Vec<Job<'env, T>>,
+    ) -> Vec<std::thread::Result<T>> {
+        self.run_round_results_with(jobs, || ()).0
+    }
+
+    /// [`WorkerPool::run_round_results`] with the overlap closure of
+    /// [`WorkerPool::run_round_with`]. An overlap panic still re-raises
+    /// (after the barrier) — only *job* panics are contained.
+    pub fn run_round_results_with<'env, R>(
+        &self,
+        jobs: Vec<Job<'env, T>>,
+        overlap: impl FnOnce() -> R,
+    ) -> (Vec<std::thread::Result<T>>, R) {
         let k = jobs.len();
         if k == 0 {
             return (Vec::new(), overlap());
@@ -275,33 +316,22 @@ impl<T: Send> WorkerPool<T> {
         // The overlap region: the caller's work proceeds here while the
         // workers chew on the dispatched jobs.
         let overlapped = catch_unwind(AssertUnwindSafe(overlap));
-        let mut out: Vec<Option<T>> = (0..k).map(|_| None).collect();
-        let mut panic = None;
+        let mut out: Vec<Option<std::thread::Result<T>>> = (0..k).map(|_| None).collect();
         for _ in 0..k {
             let Ok((idx, result)) = rx.recv() else {
                 // Workers gone mid-round: erased jobs may be un-run and the
                 // barrier can never complete. No sound continuation exists.
                 std::process::abort();
             };
-            match result {
-                Ok(value) => out[idx] = Some(value),
-                Err(payload) => {
-                    if panic.is_none() {
-                        panic = Some(payload);
-                    }
-                }
-            }
+            out[idx] = Some(result);
         }
         drop(rx);
         // Barrier complete: caller-side borrows are safe again, so the
-        // overlap's panic (if any) takes precedence, then a job's.
+        // overlap's panic (if any) takes precedence over job outcomes.
         let overlapped = match overlapped {
             Ok(r) => r,
             Err(payload) => resume_unwind(payload),
         };
-        if let Some(payload) = panic {
-            resume_unwind(payload);
-        }
         let results =
             out.into_iter().map(|v| v.expect("worker delivered every job")).collect();
         (results, overlapped)
@@ -518,6 +548,35 @@ mod tests {
             let err = catch_unwind(AssertUnwindSafe(|| pool.run_round(jobs)));
             assert!(err.is_err(), "panic must propagate to the caller");
             // The barrier completed, so the pool keeps working.
+            let out = pool.run_round(tagged_jobs(3, false));
+            assert_eq!(out, vec![0, 1, 2]);
+        });
+    }
+
+    #[test]
+    fn run_round_results_contains_a_job_panic() {
+        WorkerPool::scope(PoolConfig::shared(2), |pool| {
+            let jobs: Vec<Job<'static, usize>> = (0..4)
+                .map(|i| {
+                    let job: Job<'static, usize> = Box::new(move |_w| {
+                        if i == 1 {
+                            panic!("lane 1 exploded");
+                        }
+                        i
+                    });
+                    job
+                })
+                .collect();
+            let results = pool.run_round_results(jobs);
+            assert_eq!(results.len(), 4);
+            for (i, r) in results.iter().enumerate() {
+                if i == 1 {
+                    assert!(r.is_err(), "lane 1 must come back Err, not unwind");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i);
+                }
+            }
+            // Containment kept the pool healthy.
             let out = pool.run_round(tagged_jobs(3, false));
             assert_eq!(out, vec![0, 1, 2]);
         });

@@ -48,6 +48,7 @@ pub mod serve;
 pub mod simd;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod svm;
 pub mod theory;
 
@@ -83,6 +84,7 @@ pub mod prelude {
     pub use crate::serve::{
         DaemonConfig, LearnSession, SessionCheckpoint, SessionConfig,
     };
+    pub use crate::store::{CheckpointStore, FaultStore, FsStore, IoFaultPlan, Store};
     pub use crate::simd::ScoreScratch;
     pub use crate::metrics::{ErrorCurve, SpeedupTable};
     pub use crate::nn::{AdaGradMlp, MlpConfig};

@@ -7,6 +7,7 @@
 //! Dependency note: the build environment is offline with a fixed vendor
 //! set, so argument parsing is hand-rolled (no clap).
 
+use anyhow::Context as _;
 use para_active::coordinator::backend::BackendChoice;
 use para_active::coordinator::sync::SyncReport;
 use para_active::coordinator::{
@@ -25,8 +26,9 @@ use para_active::runtime::{artifacts_available, XlaRuntime};
 use para_active::serve::{
     accept_clients_tcp, accept_clients_uds, nn_session_learner, serve as serve_daemon,
     svm_session_learner, Checkpointable, DaemonConfig, LearnSession, SessionCheckpoint,
-    SessionConfig,
+    SessionConfig, SessionDrill,
 };
+use para_active::store::{CheckpointStore, FaultStore, FsStore, IoFaultPlan};
 use para_active::theory::{run_delayed_iwal, TheoryConfig};
 use std::path::Path;
 use std::time::Duration;
@@ -55,7 +57,8 @@ COMMANDS:
   learn     --session FILE [--task svm|nn] [--nodes K] [--chunk N]
             [--warmstart N] [--segments N] [--eta F] [--seed N]
             [--test-size N] [--workers W] [--fresh] [--status]
-            [--trace-out FILE] [--obs-summary]
+            [--keep-checkpoints K] [--io-chaos PLAN] [--watchdog]
+            [--drill SPEC] [--trace-out FILE] [--obs-summary]
                             resumable para-active session (kill-safe)
   serve     --session FILE [--listen A] [--transport T] [--clients N]
             [--queue-cap Q] [+ learn flags]  host a session daemon
@@ -109,18 +112,36 @@ net.failovers, net.reconnects).
 
 SERVING: `learn` drives a resumable session against --session FILE,
 checkpointing learner state, Eq-5 coin-flip RNGs, and stream cursors
-after every segment (atomic temp-file + rename), so a run killed at any
-point and relaunched with the same flags resumes bit-identically from
-the last segment boundary. --status inspects a checkpoint without
-running; --fresh discards one and starts over. --workers is elastic: it
-never changes results (segments sift a frozen model view), only
-wall-clock, so a resume may use a different count. `serve` hosts the
-same session as a persistent daemon: it accepts --clients connections
-on --listen (--transport uds | tcp), serves score/status/train/
-reconfigure requests through a bounded admission queue of capacity
---queue-cap — overload is refused immediately with a typed busy reply,
-never buffered unboundedly — and checkpoints every trained segment plus
-on shutdown.
+after every segment, so a run killed at any point and relaunched with
+the same flags resumes bit-identically from the last segment boundary.
+--status inspects a checkpoint without running; --fresh discards one
+and starts over. --workers is elastic: it never changes results
+(segments sift a frozen model view), only wall-clock, so a resume may
+use a different count. `serve` hosts the same session as a persistent
+daemon: it accepts --clients connections on --listen (--transport uds |
+tcp), serves score/status/train/reconfigure requests through a bounded
+admission queue of capacity --queue-cap — overload is refused
+immediately with a typed busy reply, never buffered unboundedly — and
+checkpoints every trained segment plus on shutdown.
+
+CRASH SAFETY: checkpoints are checksummed (CRC32 over the payload) and
+generation-rotated — each save lands as FILE.NNNNN via temp-file +
+rename + directory fsync, keeping the newest --keep-checkpoints K
+(default 3, min 2). Resume scans newest to oldest and restores the
+first generation that passes magic + checksum + decode, so a torn or
+bit-flipped head costs at most one generation, never the session.
+--watchdog checks learner health (finite parameters, bounded margins)
+after every segment and rolls a diverged segment back to its pre-segment
+state, retrying once, with recovery counters
+(recovery.corrupt_generations_skipped, recovery.respawns,
+recovery.rollbacks) in --obs-summary. Drills: `--io-chaos PLAN` scripts
+IO faults at the Nth checkpoint write — comma-separated `torn@W` (half
+the bytes then crash), `flip@W:B` (bit flip at byte offset B), `enospc@W`
+(out of disk mid-write), `crashsync@W` (die before rename) — and
+`--drill SPEC` scripts session faults: `panic@S:N` (node N's sift job
+panics in segment S; the lane respawns deterministically) and `nan@S`
+(NaN-poison the learner after segment S; requires --watchdog). Every
+drill recovers bit-identically to the fault-free run.
 
 OBSERVABILITY: `--trace-out FILE` records phase spans (round, sift,
 merge, update, sync, net.send/net.recv, checkpoint) across every thread
@@ -675,31 +696,128 @@ fn learn_args(args: &Args) -> anyhow::Result<(String, SessionConfig)> {
     .map_err(|e| anyhow::anyhow!(e))
 }
 
+/// Crash-safety knobs shared by `learn` and `serve`: generation
+/// retention, the scripted IO fault injector, the divergence watchdog,
+/// and the session-level recovery drill. All elastic — none is part of
+/// the session fingerprint, and none changes results.
+#[derive(Debug, Clone, Default)]
+struct StoreFlags {
+    keep: usize,
+    io_chaos: Option<IoFaultPlan>,
+    watchdog: bool,
+    drill: Option<SessionDrill>,
+}
+
+/// Validate the crash-safety flags. Pure, like [`resolve_net_flags`].
+fn resolve_store_flags(
+    keep: Option<usize>,
+    io_chaos: Option<&str>,
+    watchdog: bool,
+    drill: Option<&str>,
+) -> Result<StoreFlags, String> {
+    let keep = keep.unwrap_or(3);
+    if keep < 2 {
+        return Err(format!(
+            "--keep-checkpoints must be >= 2 (a corrupt newest generation needs a \
+             previous one to fall back to), got {keep}"
+        ));
+    }
+    let io_chaos = match io_chaos {
+        Some(spec) => {
+            Some(IoFaultPlan::parse(spec).map_err(|e| format!("bad --io-chaos spec: {e}"))?)
+        }
+        None => None,
+    };
+    let drill = match drill {
+        Some(spec) => {
+            Some(SessionDrill::parse(spec).map_err(|e| format!("bad --drill spec: {e}"))?)
+        }
+        None => None,
+    };
+    if drill.as_ref().is_some_and(|d| d.nan_at.is_some()) && !watchdog {
+        return Err(
+            "--drill nan@S poisons the learner; add --watchdog so the session can \
+             detect and roll back the poisoning"
+                .into(),
+        );
+    }
+    Ok(StoreFlags { keep, io_chaos, watchdog, drill })
+}
+
+/// Gather and validate the crash-safety flags.
+fn store_args(args: &Args) -> anyhow::Result<StoreFlags> {
+    let keep: Option<usize> = args.opt("--keep-checkpoints")?;
+    let io_chaos: Option<String> = args.opt("--io-chaos")?;
+    let drill: Option<String> = args.opt("--drill")?;
+    resolve_store_flags(keep, io_chaos.as_deref(), args.flag("--watchdog"), drill.as_deref())
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Open the generation store behind `--session FILE`, interposing the
+/// scripted IO fault injector when `--io-chaos` asked for one.
+fn open_store(path: &Path, flags: &StoreFlags) -> anyhow::Result<CheckpointStore> {
+    match &flags.io_chaos {
+        Some(plan) => {
+            eprintln!("io-chaos: injecting {} scripted IO fault(s)", plan.events.len());
+            let parent = match path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p,
+                _ => Path::new("."),
+            };
+            let base = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| anyhow::anyhow!("bad --session path {}", path.display()))?;
+            let fs = FsStore::open(parent)?;
+            CheckpointStore::with_store(
+                Box::new(FaultStore::new(Box::new(fs), plan.clone())),
+                base,
+                flags.keep,
+            )
+        }
+        None => CheckpointStore::open(path, flags.keep),
+    }
+}
+
 /// Open-or-create the checkpointed session behind `learn` and `serve`.
+/// Resume scans generations newest → oldest and restores the newest one
+/// that passes magic + checksum + decode, so a torn or corrupted head
+/// costs at most one generation, never the session.
 fn open_session<L: Checkpointable>(
-    path: &Path,
+    store: &mut CheckpointStore,
     cfg: SessionConfig,
     proto: &L,
     fresh: bool,
 ) -> anyhow::Result<LearnSession<L>> {
-    if !fresh && path.exists() {
-        let ck = SessionCheckpoint::load(path)?;
-        eprintln!(
-            "resuming session {} at segment {} of {}",
-            path.display(),
-            ck.segments_done,
-            cfg.segments
-        );
-        Ok(LearnSession::resume(cfg, proto, &ck)?)
-    } else {
-        eprintln!(
-            "initializing session {} ({} warmstart examples) ...",
-            path.display(),
-            cfg.warmstart
-        );
-        let session = LearnSession::create(cfg, proto);
-        session.checkpoint()?.save(path)?;
-        Ok(session)
+    if fresh {
+        store.reset()?;
+    }
+    match SessionCheckpoint::load_latest(store)? {
+        Some((generation, ck)) => {
+            if store.skipped() > 0 {
+                eprintln!(
+                    "recovered generation {generation} after skipping {} corrupt \
+                     generation(s)",
+                    store.skipped()
+                );
+            }
+            eprintln!(
+                "resuming session {} at segment {} of {} (generation {generation})",
+                store.base(),
+                ck.segments_done,
+                cfg.segments
+            );
+            Ok(LearnSession::resume(cfg, proto, &ck)?)
+        }
+        None => {
+            eprintln!(
+                "initializing session {} ({} warmstart examples) ...",
+                store.base(),
+                cfg.warmstart
+            );
+            let session = LearnSession::create(cfg, proto);
+            session.checkpoint()?.save_generation(store)?;
+            Ok(session)
+        }
     }
 }
 
@@ -727,15 +845,31 @@ fn run_learn<L: Checkpointable>(
     cfg: SessionConfig,
     proto: &L,
     fresh: bool,
+    flags: &StoreFlags,
 ) -> anyhow::Result<()> {
     let target = cfg.segments;
-    let mut session = open_session(path, cfg, proto, fresh)?;
+    let mut store = open_store(path, flags)?;
+    let mut session = open_session(&mut store, cfg, proto, fresh)?;
+    session.set_watchdog(flags.watchdog);
+    if let Some(drill) = flags.drill {
+        session.set_drill(drill);
+    }
     while !session.is_complete() {
-        let r = session.run_segment();
+        let r = match session.run_segment_guarded() {
+            Ok(r) => r,
+            Err(e) => {
+                // The watchdog already rolled the session back to its
+                // pre-segment state, so one retry is exactly a re-run: a
+                // transient fault clears, a deterministic divergence
+                // fails again and aborts the run.
+                eprintln!("warning: {e:#}; retrying the segment once");
+                session.run_segment_guarded().context("watchdog retry also failed")?
+            }
+        };
         // Checkpoint at every boundary: kill -9 here loses at most the
         // next (uncommitted) segment, and the committed prefix resumes
         // bit-identically.
-        session.checkpoint()?.save(path)?;
+        session.checkpoint()?.save_generation(&mut store)?;
         eprintln!(
             "segment {}/{}: selected {} in {:.3}s (n_seen={} n_queried={})",
             r.segment,
@@ -756,9 +890,22 @@ fn run_serve<L: Checkpointable>(
     cfg: SessionConfig,
     proto: &L,
     chans: Vec<Box<dyn Channel>>,
+    flags: &StoreFlags,
 ) -> anyhow::Result<()> {
-    let dcfg = DaemonConfig { queue_cap: cfg.queue_cap, checkpoint: Some(path.to_path_buf()) };
-    let session = open_session(path, cfg, proto, false)?;
+    let dcfg = DaemonConfig {
+        queue_cap: cfg.queue_cap,
+        keep_checkpoints: flags.keep,
+        watchdog: flags.watchdog,
+        checkpoint: Some(path.to_path_buf()),
+    };
+    // The daemon reopens the generation store itself; this handle only
+    // serves the initial load (and rescans leave numbering consistent).
+    let mut store = open_store(path, flags)?;
+    let mut session = open_session(&mut store, cfg, proto, false)?;
+    drop(store);
+    if let Some(drill) = flags.drill {
+        session.set_drill(drill);
+    }
     let (report, session) = serve_daemon(session, chans, dcfg)?;
     println!(
         "daemon: served {} request(s), shed {}, segments_done={}",
@@ -921,14 +1068,20 @@ fn main() -> anyhow::Result<()> {
         }
         "learn" => {
             let (session_path, cfg) = learn_args(&args)?;
+            let store_flags = store_args(&args)?;
             let path = Path::new(&session_path);
             if args.flag("--status") {
-                let ck = SessionCheckpoint::load(path)?;
+                let mut store = open_store(path, &store_flags)?;
+                let (generation, ck) = SessionCheckpoint::load_latest(&mut store)?
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no checkpoint generations at {}", path.display())
+                    })?;
                 println!(
-                    "session {}: task={} segments_done={} n_seen={} n_queried={} \
-                     fingerprint={:#018x}",
+                    "session {}: task={} generation={} segments_done={} n_seen={} \
+                     n_queried={} fingerprint={:#018x}",
                     path.display(),
                     ck.task.name(),
+                    generation,
                     ck.segments_done,
                     ck.n_seen,
                     ck.n_queried,
@@ -939,13 +1092,16 @@ fn main() -> anyhow::Result<()> {
             let fresh = args.flag("--fresh");
             let obs = obs_args(&args)?;
             match cfg.task {
-                TaskKind::Svm => run_learn(path, cfg, &svm_session_learner(), fresh)?,
-                TaskKind::Nn => run_learn(path, cfg, &nn_session_learner(), fresh)?,
+                TaskKind::Svm => {
+                    run_learn(path, cfg, &svm_session_learner(), fresh, &store_flags)?
+                }
+                TaskKind::Nn => run_learn(path, cfg, &nn_session_learner(), fresh, &store_flags)?,
             }
             finish_obs(&obs, None)?;
         }
         "serve" => {
             let (session_path, cfg) = learn_args(&args)?;
+            let store_flags = store_args(&args)?;
             let listen: String =
                 args.get("--listen", "/tmp/para-active-serve.sock".to_string())?;
             let transport: String = args.get("--transport", "uds".to_string())?;
@@ -959,8 +1115,10 @@ fn main() -> anyhow::Result<()> {
             };
             let path = Path::new(&session_path);
             match cfg.task {
-                TaskKind::Svm => run_serve(path, cfg, &svm_session_learner(), chans)?,
-                TaskKind::Nn => run_serve(path, cfg, &nn_session_learner(), chans)?,
+                TaskKind::Svm => {
+                    run_serve(path, cfg, &svm_session_learner(), chans, &store_flags)?
+                }
+                TaskKind::Nn => run_serve(path, cfg, &nn_session_learner(), chans, &store_flags)?,
             }
         }
         "theory" => {
@@ -1390,6 +1548,39 @@ mod tests {
             None,
         )
         .is_ok());
+    }
+
+    #[test]
+    fn store_flags_resolve_defaults_and_parse_plans() {
+        let flags = resolve_store_flags(None, None, false, None).expect("valid");
+        assert_eq!(flags.keep, 3);
+        assert!(flags.io_chaos.is_none());
+        assert!(!flags.watchdog);
+        assert!(flags.drill.is_none());
+
+        let flags =
+            resolve_store_flags(Some(5), Some("torn@1,flip@2:7"), true, Some("panic@2:1"))
+                .expect("valid");
+        assert_eq!(flags.keep, 5);
+        assert_eq!(flags.io_chaos.expect("plan parsed").events.len(), 2);
+        assert!(flags.watchdog);
+        assert_eq!(flags.drill.expect("drill parsed").panic_at, Some((2, 1)));
+    }
+
+    #[test]
+    fn store_flags_reject_degenerate_combinations() {
+        let err = resolve_store_flags(Some(1), None, false, None).unwrap_err();
+        assert!(err.contains("--keep-checkpoints"), "{err}");
+        let err = resolve_store_flags(None, Some("melt@1"), false, None).unwrap_err();
+        assert!(err.contains("--io-chaos"), "{err}");
+        let err = resolve_store_flags(None, None, false, Some("sneeze@1")).unwrap_err();
+        assert!(err.contains("--drill"), "{err}");
+        // A NaN drill without the watchdog would poison the checkpoint
+        // chain with nothing watching — refuse it up front.
+        let err = resolve_store_flags(None, None, false, Some("nan@2")).unwrap_err();
+        assert!(err.contains("--watchdog"), "{err}");
+        assert!(resolve_store_flags(None, None, true, Some("nan@2")).is_ok());
+        assert!(resolve_store_flags(None, None, false, Some("panic@1:0")).is_ok());
     }
 
     #[test]

@@ -145,6 +145,30 @@ impl AdaGradMlp {
         (&self.w1, &self.b1, &self.w2, self.b2)
     }
 
+    /// Health probe for the divergence watchdog: true iff every
+    /// parameter and AdaGrad accumulator is finite. A single NaN/Inf
+    /// here poisons every subsequent forward pass, so the watchdog
+    /// rolls back rather than keep updating.
+    pub fn params_finite(&self) -> bool {
+        self.b2.is_finite()
+            && self.a_b2.is_finite()
+            && self
+                .w1
+                .iter()
+                .chain(&self.b1)
+                .chain(&self.w2)
+                .chain(&self.a_w1)
+                .chain(&self.a_b1)
+                .chain(&self.a_w2)
+                .all(|v| v.is_finite())
+    }
+
+    /// Drill hook: poison one parameter with NaN so watchdog rollback
+    /// can be exercised end-to-end without a real divergence.
+    pub fn poison_non_finite(&mut self) {
+        self.b2 = f32::NAN;
+    }
+
     /// Install scoring parameters received over the wire. Scoring touches
     /// only these four tensors, so a replica synced this way scores
     /// bit-identically to the source; the AdaGrad accumulators are left

@@ -5,15 +5,19 @@
 //! cluster counters — serialized through the same explicit
 //! little-endian codecs the network protocol uses
 //! ([`crate::net::wire`]): no serde, every length prefix
-//! overflow-checked on encode and bounds-checked on decode. Saving is
-//! atomic (temp file + rename), so a daemon killed mid-write leaves the
-//! previous checkpoint intact and `learn` resumes from the last
-//! completed segment boundary.
+//! overflow-checked on encode and bounds-checked on decode. Persistence
+//! rides the crash-safe storage layer ([`crate::store`]): single-file
+//! saves go through the full tmp+fsync+rename+dir-fsync protocol, and
+//! production sessions publish CRC32-sealed *generations*
+//! (`base.NNNNN`, keep-K) through a [`CheckpointStore`], so a torn or
+//! bit-flipped write costs at most one generation on resume — never the
+//! session.
 
 use crate::data::stream::StreamCursor;
 use crate::net::wire::{put_f64, put_len, put_u32, put_u64, put_u8, Reader};
 use crate::net::TaskKind;
 use crate::obs::{hist::BUCKETS, Histogram};
+use crate::store::{CheckpointStore, FsStore, Store};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -125,6 +129,14 @@ impl SessionCheckpoint {
         let learner_len = r.u32()? as usize;
         let learner = r.bytes(learner_len)?;
         let k = r.u32()? as usize;
+        // Plausibility before allocation: each cursor costs at least 80
+        // encoded bytes (eta + two RNG states + produced), so a corrupt
+        // count can never request an OOM-sized Vec.
+        anyhow::ensure!(
+            r.remaining() as u64 >= k as u64 * 80,
+            "checkpoint claims {k} node cursor(s) but only {} byte(s) remain",
+            r.remaining()
+        );
         let mut nodes = Vec::with_capacity(k);
         for _ in 0..k {
             let eta = r.f64()?;
@@ -178,22 +190,25 @@ impl SessionCheckpoint {
         })
     }
 
-    /// Write atomically: encode to `<path>.tmp`, fsync, rename over
-    /// `path`. A crash mid-save never corrupts the resumable file.
+    /// Write one bare (unsealed) file atomically and durably: encode to
+    /// `<path>.tmp`, fsync, rename over `path`, fsync the parent
+    /// directory (rename alone is not durable on ext4/xfs). A crash
+    /// mid-save never corrupts the resumable file. Production sessions
+    /// prefer [`SessionCheckpoint::save_generation`].
     pub fn save(&self, path: &Path) -> Result<()> {
         let _sp = crate::obs_span!("checkpoint");
         let bytes = self.encode()?;
-        let tmp = path.with_extension("tmp");
-        {
-            use std::io::Write;
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
-            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
-        }
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
-        Ok(())
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .with_context(|| format!("bad checkpoint path {}", path.display()))?;
+        FsStore::open(parent)?
+            .put(name, &bytes)
+            .with_context(|| format!("saving checkpoint {}", path.display()))
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -201,6 +216,18 @@ impl SessionCheckpoint {
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         Self::decode(&bytes)
             .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Publish this checkpoint as the next sealed generation.
+    pub fn save_generation(&self, store: &mut CheckpointStore) -> Result<u64> {
+        let _sp = crate::obs_span!("checkpoint");
+        store.save(&self.encode()?)
+    }
+
+    /// Recover the newest generation that passes magic + checksum +
+    /// decode, scanning newest→oldest; `None` when the store is empty.
+    pub fn load_latest(store: &mut CheckpointStore) -> Result<Option<(u64, SessionCheckpoint)>> {
+        store.load_latest_with(SessionCheckpoint::decode)
     }
 }
 
@@ -286,5 +313,30 @@ mod tests {
         ck2.save(&path).unwrap();
         assert_eq!(SessionCheckpoint::load(&path).unwrap().segments_done, 4);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generations_roundtrip_and_survive_a_corrupt_head() {
+        let dir = std::env::temp_dir()
+            .join(format!("para-active-ckpt-gens-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let base = dir.join("sess.ckpt");
+        let mut store = CheckpointStore::open(&base, 3).unwrap();
+        let mut ck = sample();
+        assert_eq!(ck.save_generation(&mut store).unwrap(), 1);
+        ck.segments_done = 4;
+        assert_eq!(ck.save_generation(&mut store).unwrap(), 2);
+        // Flip one payload byte of the newest generation on disk: the
+        // CRC catches it and recovery falls back exactly one generation.
+        let newest = dir.join("sess.ckpt.00002");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (generation, back) = SessionCheckpoint::load_latest(&mut store).unwrap().unwrap();
+        assert_eq!(generation, 1, "corrupt head skipped");
+        assert_eq!(back.segments_done, 3);
+        assert_eq!(store.skipped(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -14,9 +14,13 @@
 //! [`Response::Error`] instead of killing the daemon.
 //!
 //! Training requests checkpoint after every segment when the daemon is
-//! configured with a checkpoint path, so `kill -9` at any point loses
-//! at most the segment in flight; rerunning `learn`/`serve` with the
-//! same flags resumes bit-identically from the last boundary.
+//! configured with a checkpoint path — through the checksummed,
+//! generation-rotated [`CheckpointStore`], so `kill -9` at any point
+//! loses at most the segment in flight *and* a torn or corrupted newest
+//! generation still resumes from the previous one. With the watchdog
+//! on, a segment that diverges (NaN parameters, exploding margins)
+//! rolls back to its pre-segment state and is retried once before the
+//! failure surfaces to the client; the daemon itself never dies.
 
 use crate::coordinator::live::panic_message;
 use crate::net::wire::{put_f32s, put_len, put_u32, put_u64, put_u8, Reader};
@@ -24,6 +28,7 @@ use crate::net::Channel;
 use crate::obs::ObsReport;
 use crate::serve::queue::{bounded, AdmissionError, BoundedQueue};
 use crate::serve::session::{Checkpointable, LearnSession};
+use crate::store::CheckpointStore;
 use anyhow::{Context, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
@@ -205,14 +210,26 @@ impl Response {
     }
 }
 
-/// Daemon runtime knobs (both elastic; neither affects learning).
+/// Daemon runtime knobs (all elastic; none affects learning).
 #[derive(Debug, Clone)]
 pub struct DaemonConfig {
     /// Admission-queue capacity shared by every client.
     pub queue_cap: usize,
+    /// Checkpoint generations to keep on disk (see [`CheckpointStore`]).
+    pub keep_checkpoints: usize,
+    /// Run training segments under the divergence watchdog, retrying a
+    /// rolled-back segment once before surfacing the failure.
+    pub watchdog: bool,
     /// Checkpoint path; when set, training checkpoints every segment
-    /// and shutdown saves a final snapshot.
+    /// and shutdown saves a final snapshot. Generations rotate next to
+    /// this path as `<name>.NNNNN`.
     pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig { queue_cap: 64, keep_checkpoints: 3, watchdog: false, checkpoint: None }
+    }
 }
 
 /// What the daemon did over its lifetime.
@@ -241,6 +258,11 @@ pub fn serve<L: Checkpointable>(
     cfg: DaemonConfig,
 ) -> Result<(DaemonReport, LearnSession<L>)> {
     anyhow::ensure!(!clients.is_empty(), "daemon needs at least one client channel");
+    session.set_watchdog(cfg.watchdog);
+    let mut store = match &cfg.checkpoint {
+        Some(path) => Some(CheckpointStore::open(path, cfg.keep_checkpoints)?),
+        None => None,
+    };
     let (queue, rx) = bounded::<ClientJob>(cfg.queue_cap);
     let shed_counter = queue.shed_counter();
 
@@ -258,7 +280,7 @@ pub fn serve<L: Checkpointable>(
         while let Some(job) = rx.recv() {
             served += 1;
             let resp = match catch_unwind(AssertUnwindSafe(|| {
-                handle_request(&mut session, job.req, &cfg, &shed_counter)
+                handle_request(&mut session, job.req, &mut store, &shed_counter)
             })) {
                 Ok(resp) => resp,
                 Err(payload) => Response::Error(format!(
@@ -341,10 +363,25 @@ fn send_response(chan: &mut dyn Channel, resp: &Response) -> Result<()> {
     chan.send(&resp.encode()?)
 }
 
+/// One guarded segment with the watchdog's single retry. A health
+/// violation already rolled the session back to its pre-segment state,
+/// so the retry is exactly a re-run of the segment: a transient fault
+/// (a poison chunk, the NaN drill) clears, while a deterministic
+/// divergence fails again and surfaces to the client — daemon intact.
+fn train_one_segment<L: Checkpointable>(session: &mut LearnSession<L>) -> Result<()> {
+    match session.run_segment_guarded() {
+        Ok(_) => Ok(()),
+        Err(first) => session
+            .run_segment_guarded()
+            .map(|_| ())
+            .with_context(|| format!("watchdog retry also failed (first failure: {first:#})")),
+    }
+}
+
 fn handle_request<L: Checkpointable>(
     session: &mut LearnSession<L>,
     req: Request,
-    cfg: &DaemonConfig,
+    store: &mut Option<CheckpointStore>,
     shed: &AtomicU64,
 ) -> Response {
     match req {
@@ -365,9 +402,12 @@ fn handle_request<L: Checkpointable>(
                 if session.is_complete() {
                     break;
                 }
-                session.run_segment();
-                if let Some(path) = &cfg.checkpoint {
-                    if let Err(e) = session.checkpoint().and_then(|ck| ck.save(path)) {
+                if let Err(e) = train_one_segment(session) {
+                    return Response::Error(format!("training failed: {e:#}"));
+                }
+                if let Some(store) = store.as_mut() {
+                    if let Err(e) = session.checkpoint().and_then(|ck| ck.save_generation(store))
+                    {
                         return Response::Error(format!("checkpoint failed: {e}"));
                     }
                 }
@@ -397,8 +437,8 @@ fn handle_request<L: Checkpointable>(
             Response::Stats(report.with_registry())
         }
         Request::Shutdown => {
-            if let Some(path) = &cfg.checkpoint {
-                if let Err(e) = session.checkpoint().and_then(|ck| ck.save(path)) {
+            if let Some(store) = store.as_mut() {
+                if let Err(e) = session.checkpoint().and_then(|ck| ck.save_generation(store)) {
                     return Response::Error(format!("checkpoint on shutdown failed: {e}"));
                 }
             }
@@ -515,7 +555,7 @@ mod tests {
         let (mut hub, ends) = InProcTransport::pair(1);
         let clients = boxed(ends);
         let handle = std::thread::spawn(move || {
-            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+            serve(session, clients, DaemonConfig { queue_cap: 4, ..Default::default() }).unwrap()
         });
 
         match roundtrip(&mut hub, 0, &Request::Status) {
@@ -564,7 +604,7 @@ mod tests {
         let (mut hub, ends) = InProcTransport::pair(3);
         let clients = boxed(ends);
         let handle = std::thread::spawn(move || {
-            serve(session, clients, DaemonConfig { queue_cap: 1, checkpoint: None }).unwrap()
+            serve(session, clients, DaemonConfig { queue_cap: 1, ..Default::default() }).unwrap()
         });
 
         // Occupy the dispatcher deterministically, then fill the
@@ -610,7 +650,7 @@ mod tests {
         let clients: Vec<Box<dyn Channel>> =
             boxed(ends_a).into_iter().chain(boxed(ends_b)).collect();
         let handle = std::thread::spawn(move || {
-            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+            serve(session, clients, DaemonConfig { queue_cap: 4, ..Default::default() }).unwrap()
         });
 
         // B's request is admitted and occupies the dispatcher...
@@ -652,7 +692,7 @@ mod tests {
         let (mut hub, ends) = InProcTransport::pair(1);
         let clients = boxed(ends);
         let handle = std::thread::spawn(move || {
-            serve(session, clients, DaemonConfig { queue_cap: 4, checkpoint: None }).unwrap()
+            serve(session, clients, DaemonConfig { queue_cap: 4, ..Default::default() }).unwrap()
         });
         roundtrip(&mut hub, 0, &Request::Reconfigure { workers: 1 });
         roundtrip(&mut hub, 0, &Request::Train { segments: 1 });
@@ -668,5 +708,58 @@ mod tests {
             "daemon reconfiguration changed the learned model"
         );
         assert_eq!(direct.n_queried(), served.n_queried());
+    }
+
+    #[test]
+    fn daemon_checkpoints_generations_and_recovers_from_nan_drill() {
+        use crate::serve::health::SessionDrill;
+        use crate::store::CheckpointStore;
+        let dir = std::env::temp_dir()
+            .join(format!("para-active-daemon-gen-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sess.ckpt");
+
+        let mut direct = LearnSession::create(small_cfg(), &svm_session_learner());
+        while !direct.is_complete() {
+            direct.run_segment();
+        }
+
+        // Daemon twin with a scripted NaN poisoning in segment 2: the
+        // watchdog rolls the segment back and the retry lands clean.
+        let mut session = LearnSession::create(small_cfg(), &svm_session_learner());
+        session.set_drill(SessionDrill::parse("nan@2").unwrap());
+        let (mut hub, ends) = InProcTransport::pair(1);
+        let clients = boxed(ends);
+        let cfg = DaemonConfig {
+            queue_cap: 4,
+            keep_checkpoints: 2,
+            watchdog: true,
+            checkpoint: Some(path.clone()),
+        };
+        let handle = std::thread::spawn(move || serve(session, clients, cfg).unwrap());
+        assert_eq!(
+            roundtrip(&mut hub, 0, &Request::Train { segments: 5 }),
+            Response::Done { segments_done: 2 },
+            "NaN drill must be contained by the watchdog retry"
+        );
+        assert_eq!(roundtrip(&mut hub, 0, &Request::Shutdown), Response::Bye);
+        let (_report, served) = handle.join().unwrap();
+
+        let test = direct.test_set();
+        assert_eq!(
+            direct.final_error(&test).to_bits(),
+            served.final_error(&test).to_bits(),
+            "watchdog recovery changed the learned model"
+        );
+
+        // Two per-segment saves plus the shutdown save, pruned to keep-2.
+        let mut store = CheckpointStore::open(&path, 2).unwrap();
+        assert_eq!(store.generations().unwrap().len(), 2);
+        let (g, ck) = crate::serve::checkpoint::SessionCheckpoint::load_latest(&mut store)
+            .unwrap()
+            .expect("shutdown must have saved a generation");
+        assert!(g >= 3, "per-segment saves plus shutdown, got generation {g}");
+        assert_eq!(ck.segments_done, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

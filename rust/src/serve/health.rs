@@ -1,0 +1,141 @@
+//! Learner health watchdog: typed divergence detection for sessions.
+//!
+//! NN-based active learners are notoriously unstable mid-run (Bossér et
+//! al.), and a single NaN in a parameter vector silently poisons every
+//! subsequent score. Instead of trusting every update, a session run
+//! with the watchdog on checks two invariants after each segment:
+//!
+//! * **finite parameters** — `params_finite()` on the learner (weights,
+//!   biases, accumulators / alphas, gradients, bias);
+//! * **bounded margins** — the largest `|f(x)|` the sift phase saw must
+//!   stay under [`MARGIN_LIMIT`] (a NaN/Inf score counts as infinite).
+//!
+//! A violation surfaces as a typed [`HealthError`] and the session
+//! rolls back to its last-good state — semantically safe because the
+//! paper's Theorem 1 already tolerates sifting with a slightly outdated
+//! model. [`SessionDrill`] scripts a deterministic worker panic and/or
+//! NaN poisoning so the whole recovery path is exercisable end-to-end
+//! (CLI `--drill`), mirroring the `--chaos`/`--io-chaos` plan grammar.
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// Largest sane `|f(x)|` for this workload family. Paper margins live
+/// in single digits; anything beyond this is a diverged model, not a
+/// confident one.
+pub const MARGIN_LIMIT: f64 = 1e6;
+
+/// Typed watchdog verdicts, recoverable from an `anyhow` chain via
+/// [`HealthError::classify`] — the state-layer sibling of `NetError`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HealthError {
+    /// A learner parameter went NaN/Inf during this segment's update.
+    NonFinite { segment: u64 },
+    /// Sift-phase scores blew past [`MARGIN_LIMIT`].
+    ExplodingMargin { segment: u64, max_abs: f64 },
+}
+
+impl std::fmt::Display for HealthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HealthError::NonFinite { segment } => {
+                write!(f, "watchdog: non-finite learner parameters after segment {segment}")
+            }
+            HealthError::ExplodingMargin { segment, max_abs } => write!(
+                f,
+                "watchdog: exploding margin after segment {segment} \
+                 (max |f| = {max_abs:e}, limit {MARGIN_LIMIT:e})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for HealthError {}
+
+impl HealthError {
+    pub fn classify(err: &anyhow::Error) -> Option<&HealthError> {
+        err.downcast_ref::<HealthError>()
+    }
+}
+
+/// A scripted recovery drill for one session, armed one-shot: each
+/// event fires in its segment and then disarms, so the rolled-back
+/// re-run of that segment proceeds clean and lands bit-identically.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionDrill {
+    /// Panic node `N`'s sift job in (1-based) segment `S`.
+    pub panic_at: Option<(u64, usize)>,
+    /// Poison the learner with NaN after segment `S`'s update phase.
+    pub nan_at: Option<u64>,
+}
+
+impl SessionDrill {
+    /// Parse a comma-separated drill spec: `panic@S:N` (worker panic at
+    /// segment `S`, node `N`) and/or `nan@S` (NaN poisoning after
+    /// segment `S`). Example: `panic@2:1,nan@4`.
+    pub fn parse(spec: &str) -> Result<SessionDrill> {
+        let mut drill = SessionDrill::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow!("drill event {part:?}: expected kind@segment"))?;
+            match kind {
+                "panic" => {
+                    let (s, n) = rest.split_once(':').ok_or_else(|| {
+                        anyhow!("drill event {part:?}: panic needs panic@S:N (node index)")
+                    })?;
+                    let segment = s
+                        .parse::<u64>()
+                        .with_context(|| format!("drill event {part:?}: bad segment {s:?}"))?;
+                    let node = n
+                        .parse::<usize>()
+                        .with_context(|| format!("drill event {part:?}: bad node {n:?}"))?;
+                    drill.panic_at = Some((segment, node));
+                }
+                "nan" => {
+                    let segment = rest.parse::<u64>().with_context(|| {
+                        format!("drill event {part:?}: bad segment {rest:?}")
+                    })?;
+                    drill.nan_at = Some(segment);
+                }
+                other => anyhow::bail!(
+                    "drill event {part:?}: unknown kind {other:?} (expected panic or nan)"
+                ),
+            }
+        }
+        ensure!(!drill.is_empty(), "drill spec {spec:?} contains no events");
+        Ok(drill)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.panic_at.is_none() && self.nan_at.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drill_parser_roundtrips_both_kinds_and_rejects_junk() {
+        let d = SessionDrill::parse("panic@2:1, nan@4").unwrap();
+        assert_eq!(d.panic_at, Some((2, 1)));
+        assert_eq!(d.nan_at, Some(4));
+        assert_eq!(SessionDrill::parse("nan@1").unwrap().panic_at, None);
+        for bad in ["", "panic@2", "panic@x:1", "panic@2:y", "nan@z", "melt@1", "@2"] {
+            assert!(SessionDrill::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn classify_finds_the_typed_error_through_context() {
+        let err = anyhow::Error::new(HealthError::NonFinite { segment: 3 })
+            .context("guarded segment");
+        assert_eq!(HealthError::classify(&err), Some(&HealthError::NonFinite { segment: 3 }));
+        let plain = anyhow::anyhow!("some other failure");
+        assert_eq!(HealthError::classify(&plain), None);
+    }
+}

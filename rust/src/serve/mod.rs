@@ -9,7 +9,11 @@
 //!   coin-flip RNGs, stream cursors, counters, latency telemetry)
 //!   round-trips through a checkpoint with bit identity;
 //! * [`checkpoint`] — the atomic on-disk snapshot format, built on the
-//!   overflow-checked [`crate::net::wire`] codecs;
+//!   overflow-checked [`crate::net::wire`] codecs and persisted through
+//!   the checksummed, generation-rotated [`crate::store`] layer;
+//! * [`health`] — the divergence watchdog's typed verdicts
+//!   ([`health::HealthError`]) and the scripted recovery drill
+//!   ([`health::SessionDrill`]);
 //! * [`queue`] — the bounded admission queue with typed shed errors
 //!   ([`queue::AdmissionError`]);
 //! * [`daemon`] — the client-facing daemon: multiple concurrent
@@ -25,6 +29,7 @@
 
 pub mod checkpoint;
 pub mod daemon;
+pub mod health;
 pub mod queue;
 pub mod session;
 
@@ -32,6 +37,7 @@ pub use checkpoint::{NodeCursor, SessionCheckpoint};
 pub use daemon::{
     accept_clients_tcp, accept_clients_uds, serve, DaemonConfig, DaemonReport, Request, Response,
 };
+pub use health::{HealthError, SessionDrill, MARGIN_LIMIT};
 pub use queue::{bounded, AdmissionError, BoundedQueue, QueueReceiver};
 pub use session::{
     nn_session_learner, svm_session_learner, Checkpointable, LearnSession, SegmentReport,

@@ -28,12 +28,13 @@ use crate::net::{config_fingerprint, TaskKind};
 use crate::nn::{AdaGradMlp, MlpConfig};
 use crate::obs::Histogram;
 use crate::serve::checkpoint::{NodeCursor, SessionCheckpoint};
+use crate::serve::health::{HealthError, SessionDrill, MARGIN_LIMIT};
 use crate::svm::lasvm::LaSvm;
 use crate::svm::{LaSvmConfig, RbfKernel};
 use anyhow::Result;
 use std::time::Instant;
 
-/// Learners a session can freeze, clone, and checkpoint.
+/// Learners a session can freeze, clone, checkpoint, and health-check.
 pub trait Checkpointable: Learner + Clone + Send {
     /// Serialize the full resumable state (see the learner's inherent
     /// `save_state`).
@@ -41,6 +42,11 @@ pub trait Checkpointable: Learner + Clone + Send {
     /// Restore state saved by [`Checkpointable::save_state`] into a
     /// model built from the same configuration.
     fn load_state(&mut self, bytes: &[u8]) -> Result<()>;
+    /// Divergence-watchdog probe: are all live parameters finite?
+    fn params_finite(&self) -> bool;
+    /// Drill hook: poison one parameter with NaN so watchdog recovery
+    /// can be exercised without waiting for a real divergence.
+    fn poison_non_finite(&mut self);
 }
 
 impl Checkpointable for LaSvm<RbfKernel> {
@@ -50,6 +56,12 @@ impl Checkpointable for LaSvm<RbfKernel> {
     fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
         LaSvm::load_state(self, bytes)
     }
+    fn params_finite(&self) -> bool {
+        LaSvm::params_finite(self)
+    }
+    fn poison_non_finite(&mut self) {
+        LaSvm::poison_non_finite(self)
+    }
 }
 
 impl Checkpointable for AdaGradMlp {
@@ -58,6 +70,12 @@ impl Checkpointable for AdaGradMlp {
     }
     fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
         AdaGradMlp::load_state(self, bytes)
+    }
+    fn params_finite(&self) -> bool {
+        AdaGradMlp::params_finite(self)
+    }
+    fn poison_non_finite(&mut self) {
+        AdaGradMlp::poison_non_finite(self)
     }
 }
 
@@ -207,8 +225,10 @@ pub struct SegmentReport {
 /// One selected example: features, label, query probability.
 type Selected = (Vec<f32>, f32, f64);
 /// A node's segment output: its sifter and stream (moved back after the
-/// round), selections in lane order, and the chunk's sift latency.
-type NodeSift = (MarginSifter, ExampleStream, Vec<Selected>, f64);
+/// round), selections in lane order, the chunk's sift latency, and the
+/// largest `|score|` the chunk saw (infinite if any score was NaN/Inf)
+/// — the watchdog's exploding-margin signal.
+type NodeSift = (MarginSifter, ExampleStream, Vec<Selected>, f64, f64);
 
 /// A resumable para-active session over `nodes` logical sift nodes.
 pub struct LearnSession<L: Checkpointable> {
@@ -223,12 +243,57 @@ pub struct LearnSession<L: Checkpointable> {
     n_seen: u64,
     n_queried: u64,
     telemetry: SiftTelemetry,
+    /// Divergence watchdog (elastic runtime knob, never fingerprinted):
+    /// guarded segments roll back to pre-segment state on a violation.
+    watchdog: bool,
+    /// One-shot scripted recovery drill (worker panic / NaN poisoning).
+    drill: SessionDrill,
+    /// Largest `|score|` the most recent segment's sift phase saw.
+    last_max_abs_score: f64,
 }
 
 /// Per-node sifter seed: decorrelate node coin-flips from the shared
 /// experiment seed (same construction as `SifterSpec`-style salting).
 fn sifter_seed(seed: u64, node: usize) -> u64 {
     seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(node as u64 + 1)
+}
+
+/// One node's sift chunk: stream a chunk, score it against the frozen
+/// view, apply Eq 5. Shared by the pool jobs and the coordinator-side
+/// re-run of a panicked lane (contain-and-respawn): the same cursor
+/// inputs produce the same bits wherever the lane executes.
+#[allow(clippy::too_many_arguments)]
+fn sift_lane<L: Learner>(
+    frozen: &L,
+    mut sifter: MarginSifter,
+    mut stream: ExampleStream,
+    chunk: usize,
+    n_phase: u64,
+    node: usize,
+    seg_no: i64,
+    worker: usize,
+) -> NodeSift {
+    let _sp =
+        crate::obs_span!("sift", node = node as i64, round = seg_no, worker = worker as i64);
+    let start = Instant::now();
+    let d = frozen.dim();
+    let mut xs = vec![0.0f32; chunk * d];
+    let mut ys = vec![0.0f32; chunk];
+    let mut scores = vec![0.0f32; chunk];
+    stream.next_batch_into(&mut xs, &mut ys);
+    frozen.score_batch(&xs, &mut scores);
+    let mut sel: Vec<Selected> = Vec::new();
+    let mut max_abs = 0.0f64;
+    for (j, &score) in scores.iter().enumerate() {
+        let s = (score as f64).abs();
+        max_abs = if s.is_nan() { f64::INFINITY } else { max_abs.max(s) };
+        let decision = sifter.decide(score, n_phase);
+        if decision.queried {
+            sel.push((xs[j * d..(j + 1) * d].to_vec(), ys[j], decision.p));
+        }
+    }
+    let latency = start.elapsed().as_secs_f64();
+    (sifter, stream, sel, latency, max_abs)
 }
 
 impl<L: Checkpointable> LearnSession<L> {
@@ -263,6 +328,9 @@ impl<L: Checkpointable> LearnSession<L> {
             n_seen,
             n_queried: 0,
             telemetry: SiftTelemetry::default(),
+            watchdog: false,
+            drill: SessionDrill::default(),
+            last_max_abs_score: 0.0,
         }
     }
 
@@ -323,6 +391,9 @@ impl<L: Checkpointable> LearnSession<L> {
             },
             cfg,
             stream_cfg,
+            watchdog: false,
+            drill: SessionDrill::default(),
+            last_max_abs_score: 0.0,
         })
     }
 
@@ -353,6 +424,13 @@ impl<L: Checkpointable> LearnSession<L> {
     }
 
     /// One sift → merge → update phase over every node.
+    ///
+    /// A panicking sift job is *contained*, not fatal: the lane's
+    /// result is marked failed, and the lane is re-run deterministically
+    /// on the coordinator thread from the cursor snapshot taken before
+    /// dispatch (`recovery.respawns`). Because a lane is a pure function
+    /// of its pre-dispatch cursors and the frozen view, the respawned
+    /// run lands bit-identically to what the worker would have produced.
     pub fn run_segment(&mut self) -> SegmentReport {
         let k = self.cfg.nodes;
         let chunk = self.cfg.chunk;
@@ -362,58 +440,87 @@ impl<L: Checkpointable> LearnSession<L> {
         let n_phase = self.n_seen;
         let seg_no = self.segments_done as i64 + 1;
         let _sp_seg = crate::obs_span!("round", round = seg_no);
+        // Everything a deterministic lane re-run needs if its job dies.
+        let cursors: Vec<NodeCursor> = self
+            .sifters
+            .iter()
+            .zip(&self.streams)
+            .map(|(sifter, stream)| NodeCursor {
+                eta: sifter.eta,
+                sifter_rng: sifter.rng_state(),
+                stream: stream.cursor(),
+            })
+            .collect();
+        // One-shot drill: fire only in its scripted segment, then disarm
+        // so the respawned lane (and any rolled-back re-run) is clean.
+        let drill_panic = match self.drill.panic_at {
+            Some((s, node)) if s == seg_no as u64 => {
+                self.drill.panic_at = None;
+                Some(node)
+            }
+            _ => None,
+        };
         let frozen = self.learner.clone();
-        let d = frozen.dim();
         let sifters = std::mem::take(&mut self.sifters);
         let streams = std::mem::take(&mut self.streams);
 
         let t0 = Instant::now();
-        let outs: Vec<NodeSift> = WorkerPool::scope(PoolConfig::pinned(workers), |pool| {
+        let results = WorkerPool::scope(PoolConfig::pinned(workers), |pool| {
             let jobs: Vec<Job<'_, NodeSift>> = sifters
                 .into_iter()
                 .zip(streams)
                 .enumerate()
-                .map(|(node, (mut sifter, mut stream))| {
+                .map(|(node, (sifter, stream))| {
                     let frozen = &frozen;
                     Box::new(move |w: usize| {
-                        let _sp = crate::obs_span!(
-                            "sift",
-                            node = node as i64,
-                            round = seg_no,
-                            worker = w as i64
-                        );
-                        let start = Instant::now();
-                        let mut xs = vec![0.0f32; chunk * d];
-                        let mut ys = vec![0.0f32; chunk];
-                        let mut scores = vec![0.0f32; chunk];
-                        stream.next_batch_into(&mut xs, &mut ys);
-                        frozen.score_batch(&xs, &mut scores);
-                        let mut sel: Vec<Selected> = Vec::new();
-                        for (j, &score) in scores.iter().enumerate() {
-                            let decision = sifter.decide(score, n_phase);
-                            if decision.queried {
-                                sel.push((
-                                    xs[j * d..(j + 1) * d].to_vec(),
-                                    ys[j],
-                                    decision.p,
-                                ));
-                            }
+                        if drill_panic == Some(node) {
+                            panic!(
+                                "drill: injected sift-worker panic \
+                                 (segment {seg_no}, node {node})"
+                            );
                         }
-                        let latency = start.elapsed().as_secs_f64();
-                        (sifter, stream, sel, latency)
+                        sift_lane(frozen, sifter, stream, chunk, n_phase, node, seg_no, w)
                     }) as Job<'_, NodeSift>
                 })
                 .collect();
-            pool.run_round(jobs)
+            pool.run_round_results(jobs)
         });
+        // Contain-and-respawn: rebuild each failed lane from its
+        // snapshot and re-run it here. The panic payload is dropped —
+        // the lane's wreckage never left its worker thread.
+        let mut outs: Vec<NodeSift> = Vec::with_capacity(k);
+        for (node, result) in results.into_iter().enumerate() {
+            match result {
+                Ok(out) => outs.push(out),
+                Err(_payload) => {
+                    crate::obs::counter("recovery.respawns").add(1);
+                    let cur = &cursors[node];
+                    let sifter = MarginSifter::from_state(cur.eta, cur.sifter_rng);
+                    let mut stream = ExampleStream::for_node(&self.stream_cfg, node as u32);
+                    stream.restore(cur.stream);
+                    outs.push(sift_lane(
+                        &frozen,
+                        sifter,
+                        stream,
+                        chunk,
+                        n_phase,
+                        node,
+                        seg_no,
+                        node % workers,
+                    ));
+                }
+            }
+        }
         let sift_seconds = t0.elapsed().as_secs_f64();
 
-        // Node-major merge (run_round preserves submission order), then
+        // Node-major merge (lanes are in submission order), then
         // importance-weighted replay into the authoritative learner.
         let _sp_update = crate::obs_span!("update", round = seg_no);
         let mut selected = 0usize;
-        for (sifter, stream, sel, latency) in outs {
+        let mut max_abs = 0.0f64;
+        for (sifter, stream, sel, latency, lane_max) in outs {
             self.telemetry.sift_hist.record(latency);
+            max_abs = max_abs.max(lane_max);
             for (x, y, p) in sel {
                 self.learner.update(&x, y, (1.0 / p) as f32);
                 selected += 1;
@@ -421,6 +528,11 @@ impl<L: Checkpointable> LearnSession<L> {
             self.sifters.push(sifter);
             self.streams.push(stream);
         }
+        if self.drill.nan_at == Some(seg_no as u64) {
+            self.drill.nan_at = None;
+            self.learner.poison_non_finite();
+        }
+        self.last_max_abs_score = max_abs;
         self.telemetry.sift_wall += sift_seconds;
         self.telemetry.rows_sifted += (k * chunk) as u64;
         self.n_seen += (k * chunk) as u64;
@@ -439,6 +551,87 @@ impl<L: Checkpointable> LearnSession<L> {
                 self.checkpoint()?.save(path)?;
             }
         }
+        Ok(())
+    }
+
+    /// [`LearnSession::run_segment`] under the divergence watchdog:
+    /// snapshot pre-segment state, run the segment, then verify learner
+    /// health. On a violation the session rolls straight back to the
+    /// snapshot (`recovery.rollbacks`) and the typed [`HealthError`] is
+    /// returned — the rolled-back session *is* the pre-segment session
+    /// (equal to the last-good on-disk generation when the caller saves
+    /// every segment), so retrying the segment is always safe.
+    ///
+    /// With the watchdog off this is exactly [`LearnSession::run_segment`].
+    pub fn run_segment_guarded(&mut self) -> Result<SegmentReport> {
+        if !self.watchdog {
+            return Ok(self.run_segment());
+        }
+        let last_good = self.checkpoint()?;
+        let report = self.run_segment();
+        if let Err(health) = self.health_check() {
+            self.restore_from(&last_good)?;
+            crate::obs::counter("recovery.rollbacks").add(1);
+            return Err(anyhow::Error::new(health).context(format!(
+                "segment {} failed the health check; rolled back to segment {}",
+                report.segment, last_good.segments_done
+            )));
+        }
+        Ok(report)
+    }
+
+    /// The watchdog's two invariants (see [`crate::serve::health`]).
+    fn health_check(&self) -> std::result::Result<(), HealthError> {
+        if !self.learner.params_finite() {
+            return Err(HealthError::NonFinite { segment: self.segments_done });
+        }
+        if self.last_max_abs_score > MARGIN_LIMIT {
+            return Err(HealthError::ExplodingMargin {
+                segment: self.segments_done,
+                max_abs: self.last_max_abs_score,
+            });
+        }
+        Ok(())
+    }
+
+    /// Roll the whole session back to a checkpoint's state, in place —
+    /// the watchdog's recovery primitive. Same fingerprint discipline
+    /// as [`LearnSession::resume`].
+    pub fn restore_from(&mut self, ck: &SessionCheckpoint) -> Result<()> {
+        anyhow::ensure!(
+            ck.fingerprint == self.fingerprint,
+            "rollback checkpoint fingerprint {:#018x} does not match session {:#018x}",
+            ck.fingerprint,
+            self.fingerprint
+        );
+        anyhow::ensure!(
+            ck.nodes.len() == self.cfg.nodes,
+            "rollback checkpoint has {} node cursors, session has {}",
+            ck.nodes.len(),
+            self.cfg.nodes
+        );
+        self.learner.load_state(&ck.learner)?;
+        self.sifters =
+            ck.nodes.iter().map(|n| MarginSifter::from_state(n.eta, n.sifter_rng)).collect();
+        self.streams = ck
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let mut s = ExampleStream::for_node(&self.stream_cfg, i as u32);
+                s.restore(n.stream);
+                s
+            })
+            .collect();
+        self.segments_done = ck.segments_done;
+        self.n_seen = ck.n_seen;
+        self.n_queried = ck.n_queried;
+        self.telemetry = SiftTelemetry {
+            sift_hist: ck.sift_hist.clone(),
+            sift_wall: ck.sift_wall,
+            rows_sifted: ck.rows_sifted,
+        };
+        self.last_max_abs_score = 0.0;
         Ok(())
     }
 
@@ -462,6 +655,23 @@ impl<L: Checkpointable> LearnSession<L> {
     /// wall-clock — so it is safe between any two segments.
     pub fn set_workers(&mut self, workers: usize) {
         self.cfg.workers = workers;
+    }
+
+    /// Enable or disable the divergence watchdog for subsequent
+    /// guarded segments. Elastic like `workers`: never fingerprinted,
+    /// and a healthy run is bit-identical with it on or off.
+    pub fn set_watchdog(&mut self, on: bool) {
+        self.watchdog = on;
+    }
+
+    pub fn watchdog(&self) -> bool {
+        self.watchdog
+    }
+
+    /// Arm a one-shot recovery drill (CLI `--drill`). Elastic: every
+    /// drill recovers bit-identically, so results never change.
+    pub fn set_drill(&mut self, drill: SessionDrill) {
+        self.drill = drill;
     }
 
     pub fn is_complete(&self) -> bool {
@@ -612,5 +822,71 @@ mod tests {
         assert!(s.score_rows(&[]).is_err());
         assert!(s.score_rows(&vec![0.0; DIM + 1]).is_err());
         assert_eq!(s.score_rows(&vec![0.0; 2 * DIM]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn worker_panic_is_contained_and_respawned_bit_identically() {
+        let cfg = small_cfg(TaskKind::Svm);
+        let mut clean = LearnSession::create(cfg.clone(), &svm_session_learner());
+        let mut drilled = LearnSession::create(cfg, &svm_session_learner());
+        drilled.set_drill(SessionDrill::parse("panic@2:1").unwrap());
+        while !clean.is_complete() {
+            clean.run_segment();
+            drilled.run_segment();
+        }
+        assert!(drilled.is_complete(), "drilled session must finish every segment");
+        assert_eq!(clean.n_seen(), drilled.n_seen());
+        assert_eq!(clean.n_queried(), drilled.n_queried());
+        let test = clean.test_set();
+        assert_eq!(
+            clean.final_error(&test).to_bits(),
+            drilled.final_error(&test).to_bits(),
+            "respawned lane diverged from the clean run"
+        );
+        assert_eq!(drilled.drill, SessionDrill::default(), "drill must disarm after firing");
+    }
+
+    #[test]
+    fn nan_poison_trips_watchdog_and_rolls_back() {
+        let cfg = small_cfg(TaskKind::Svm);
+        let mut clean = LearnSession::create(cfg.clone(), &svm_session_learner());
+        while !clean.is_complete() {
+            clean.run_segment();
+        }
+        let mut guarded = LearnSession::create(cfg, &svm_session_learner());
+        guarded.set_watchdog(true);
+        guarded.set_drill(SessionDrill::parse("nan@2").unwrap());
+        guarded.run_segment_guarded().unwrap();
+        let err = guarded.run_segment_guarded().unwrap_err();
+        assert_eq!(
+            HealthError::classify(&err),
+            Some(&HealthError::NonFinite { segment: 2 }),
+            "{err:#}"
+        );
+        assert_eq!(guarded.segments_done(), 1, "violating segment must be rolled back");
+        assert!(guarded.learner().dim() > 0); // still usable
+        while !guarded.is_complete() {
+            guarded.run_segment_guarded().unwrap();
+        }
+        let test = clean.test_set();
+        assert_eq!(
+            clean.final_error(&test).to_bits(),
+            guarded.final_error(&test).to_bits(),
+            "rolled-back retry diverged from the clean run"
+        );
+    }
+
+    #[test]
+    fn exploding_margin_has_a_typed_verdict() {
+        // Unit-level: the health check itself flags an exploding margin
+        // without needing a genuinely diverging model.
+        let mut s = LearnSession::create(small_cfg(TaskKind::Svm), &svm_session_learner());
+        s.run_segment();
+        s.last_max_abs_score = MARGIN_LIMIT * 2.0;
+        let err = s.health_check().unwrap_err();
+        assert!(
+            matches!(err, HealthError::ExplodingMargin { segment: 1, .. }),
+            "unexpected verdict {err:?}"
+        );
     }
 }

@@ -1,0 +1,284 @@
+//! Scripted IO fault injection — the disk twin of `net/fault.rs`.
+//!
+//! A [`FaultStore`] wraps any [`Store`] and fires the events of an
+//! [`IoFaultPlan`] at scripted *write indices* (the Nth `put` call,
+//! counted from 0). Each event arms exactly once, so a resumed process
+//! replays the same store traffic without re-tripping the fault — the
+//! same one-shot discipline as `FaultInjectTransport`. Four fault
+//! shapes cover the classic crash-consistency failure modes:
+//!
+//! * `torn@W` — a prefix of the blob lands at the final name and the
+//!   write "crashes" (power loss mid-write with no tmp protection).
+//! * `flip@W:B` — the write *succeeds* but byte `B mod len` of the blob
+//!   is flipped on the way down (silent media corruption; only a
+//!   content checksum can catch it).
+//! * `enospc@W` — the write fails with no space left; a partial stray
+//!   `*.tmp` file is left behind, as a real ENOSPC would.
+//! * `crashsync@W` — the blob is fully written to its tmp name but the
+//!   process "crashes" before the rename: stray tmp, final untouched.
+
+use super::Store;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// Typed IO failure surfaced by injected faults, recoverable from an
+/// `anyhow` chain via [`IoError::classify`] — mirroring `NetError`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IoError {
+    /// No space left on device (injected).
+    Enospc,
+    /// The process crashed mid-protocol; the payload names which step.
+    Crash(&'static str),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Enospc => write!(f, "no space left on device (injected)"),
+            IoError::Crash(step) => write!(f, "crash during checkpoint write (injected): {step}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+impl IoError {
+    pub fn classify(err: &anyhow::Error) -> Option<&IoError> {
+        err.downcast_ref::<IoError>()
+    }
+}
+
+/// One scripted fault shape (see module docs for the on-disk outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoFaultKind {
+    Torn,
+    Flip { offset: u64 },
+    Enospc,
+    CrashSync,
+}
+
+/// A fault armed at one write index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoFaultEvent {
+    pub write: u64,
+    pub kind: IoFaultKind,
+}
+
+/// A deterministic scripted disk-chaos plan (CLI: `--io-chaos`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoFaultPlan {
+    pub events: Vec<IoFaultEvent>,
+}
+
+impl IoFaultPlan {
+    /// Parse a comma-separated spec: `torn@W`, `flip@W:B`, `enospc@W`,
+    /// `crashsync@W` — `W` is the 0-based write index (the Nth `put`
+    /// call on the store), `B` a byte offset into the blob (taken
+    /// modulo its length). Example: `torn@0,flip@3:17,enospc@5`.
+    pub fn parse(spec: &str) -> Result<IoFaultPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind_str, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow!("io-chaos event {part:?}: expected kind@write"))?;
+            let parse_write = |s: &str| -> Result<u64> {
+                s.parse::<u64>()
+                    .with_context(|| format!("io-chaos event {part:?}: bad write index {s:?}"))
+            };
+            let event = match kind_str {
+                "torn" => IoFaultEvent { write: parse_write(rest)?, kind: IoFaultKind::Torn },
+                "flip" => {
+                    let (w, b) = rest.split_once(':').ok_or_else(|| {
+                        anyhow!("io-chaos event {part:?}: flip needs flip@W:B (byte offset)")
+                    })?;
+                    let offset = b.parse::<u64>().with_context(|| {
+                        format!("io-chaos event {part:?}: bad byte offset {b:?}")
+                    })?;
+                    IoFaultEvent { write: parse_write(w)?, kind: IoFaultKind::Flip { offset } }
+                }
+                "enospc" => IoFaultEvent { write: parse_write(rest)?, kind: IoFaultKind::Enospc },
+                "crashsync" => {
+                    IoFaultEvent { write: parse_write(rest)?, kind: IoFaultKind::CrashSync }
+                }
+                other => bail!(
+                    "io-chaos event {part:?}: unknown kind {other:?} \
+                     (expected torn, flip, enospc, or crashsync)"
+                ),
+            };
+            events.push(event);
+        }
+        ensure!(!events.is_empty(), "io-chaos plan {spec:?} contains no events");
+        Ok(IoFaultPlan { events })
+    }
+}
+
+/// A [`Store`] wrapper that fires an [`IoFaultPlan`]'s events on the
+/// write path. Reads, listings, and removals pass straight through —
+/// corruption is injected where real disks inject it: on writes.
+pub struct FaultStore {
+    inner: Box<dyn Store>,
+    events: Vec<IoFaultEvent>,
+    pending: Vec<bool>,
+    writes: u64,
+}
+
+impl FaultStore {
+    pub fn new(inner: Box<dyn Store>, plan: IoFaultPlan) -> FaultStore {
+        let pending = vec![true; plan.events.len()];
+        FaultStore { inner, events: plan.events, pending, writes: 0 }
+    }
+
+    /// Total `put` calls seen so far (the next write's index).
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn due(&mut self, write: u64) -> Option<IoFaultKind> {
+        for (event, pending) in self.events.iter().zip(self.pending.iter_mut()) {
+            if *pending && event.write == write {
+                *pending = false; // one-shot: a resumed run replays clean
+                return Some(event.kind);
+            }
+        }
+        None
+    }
+}
+
+impl Store for FaultStore {
+    fn put(&mut self, name: &str, bytes: &[u8]) -> Result<()> {
+        let write = self.writes;
+        self.writes += 1;
+        match self.due(write) {
+            None => self.inner.put(name, bytes),
+            Some(IoFaultKind::Torn) => {
+                // A prefix reaches the final name, then the "machine dies".
+                self.inner
+                    .put(name, &bytes[..bytes.len() / 2])
+                    .context("io-chaos: publishing torn prefix")?;
+                Err(anyhow::Error::new(IoError::Crash("torn write")))
+                    .with_context(|| format!("io-chaos: write {write} of {name:?}"))
+            }
+            Some(IoFaultKind::Flip { offset }) => {
+                // Silent corruption: the caller sees success.
+                let mut corrupt = bytes.to_vec();
+                if !corrupt.is_empty() {
+                    let i = (offset % corrupt.len() as u64) as usize;
+                    corrupt[i] ^= 0x01;
+                }
+                self.inner.put(name, &corrupt)
+            }
+            Some(IoFaultKind::Enospc) => {
+                // Real ENOSPC strands a partial tmp file.
+                self.inner
+                    .put(&format!("{name}.tmp"), &bytes[..bytes.len() / 3])
+                    .context("io-chaos: stranding partial tmp")?;
+                Err(anyhow::Error::new(IoError::Enospc))
+                    .with_context(|| format!("io-chaos: write {write} of {name:?}"))
+            }
+            Some(IoFaultKind::CrashSync) => {
+                // Fully written tmp, crash before the rename publishes it.
+                self.inner
+                    .put(&format!("{name}.tmp"), bytes)
+                    .context("io-chaos: writing tmp before crash")?;
+                Err(anyhow::Error::new(IoError::Crash("before rename")))
+                    .with_context(|| format!("io-chaos: write {write} of {name:?}"))
+            }
+        }
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn remove(&mut self, name: &str) -> Result<()> {
+        self.inner.remove(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::FsStore;
+    use super::*;
+    use std::path::PathBuf;
+
+    fn temp_store(tag: &str) -> (PathBuf, FsStore) {
+        let dir = std::env::temp_dir()
+            .join(format!("para-active-iofault-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = FsStore::open(&dir).unwrap();
+        (dir, s)
+    }
+
+    #[test]
+    fn plan_parser_roundtrips_every_kind_and_rejects_junk() {
+        let plan = IoFaultPlan::parse("torn@0, flip@3:17, enospc@5,crashsync@7").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                IoFaultEvent { write: 0, kind: IoFaultKind::Torn },
+                IoFaultEvent { write: 3, kind: IoFaultKind::Flip { offset: 17 } },
+                IoFaultEvent { write: 5, kind: IoFaultKind::Enospc },
+                IoFaultEvent { write: 7, kind: IoFaultKind::CrashSync },
+            ]
+        );
+        for bad in ["", "torn", "torn@x", "flip@2", "flip@2:z", "melt@1", "@3"] {
+            assert!(IoFaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn classify_finds_the_typed_error_through_context() {
+        let err = anyhow::Error::new(IoError::Enospc).context("saving generation 4");
+        assert_eq!(IoError::classify(&err), Some(&IoError::Enospc));
+        let plain = anyhow::anyhow!("some other failure");
+        assert_eq!(IoError::classify(&plain), None);
+    }
+
+    #[test]
+    fn each_fault_shape_leaves_its_scripted_wreckage() {
+        let (dir, fs) = temp_store("shapes");
+        let plan = IoFaultPlan::parse("torn@0,flip@1:0,enospc@2,crashsync@3").unwrap();
+        let mut s = FaultStore::new(Box::new(fs), plan);
+        let blob = b"0123456789abcdef".to_vec();
+
+        // torn@0: prefix published, typed crash error.
+        let err = s.put("g0", &blob).unwrap_err();
+        assert!(matches!(IoError::classify(&err), Some(IoError::Crash(_))));
+        assert_eq!(s.get("g0").unwrap(), blob[..blob.len() / 2]);
+
+        // flip@1:0: silent success, first byte corrupted.
+        s.put("g1", &blob).unwrap();
+        let got = s.get("g1").unwrap();
+        assert_eq!(got[0], blob[0] ^ 0x01);
+        assert_eq!(&got[1..], &blob[1..]);
+
+        // enospc@2: typed ENOSPC, partial stray tmp, final absent.
+        let err = s.put("g2", &blob).unwrap_err();
+        assert_eq!(IoError::classify(&err), Some(&IoError::Enospc));
+        assert!(s.get("g2").is_err());
+        assert_eq!(s.get("g2.tmp").unwrap(), blob[..blob.len() / 3]);
+
+        // crashsync@3: full stray tmp, final absent.
+        let err = s.put("g3", &blob).unwrap_err();
+        assert!(matches!(IoError::classify(&err), Some(IoError::Crash(_))));
+        assert!(s.get("g3").is_err());
+        assert_eq!(s.get("g3.tmp").unwrap(), blob);
+
+        // Events are one-shot: the same write indices replay clean.
+        let mut replay = FaultStore::new(
+            Box::new(FsStore::open(&dir).unwrap()),
+            IoFaultPlan::parse("torn@0").unwrap(),
+        );
+        let _ = replay.put("h0", &blob); // trips once
+        replay.put("h1", &blob).unwrap();
+        replay.put("h2", &blob).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

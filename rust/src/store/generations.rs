@@ -1,0 +1,282 @@
+//! Generation-rotated checkpoints over any [`Store`].
+//!
+//! Layout: `base.00001`, `base.00002`, … — every save publishes a *new*
+//! sealed generation (never overwriting the last good one), then prunes
+//! down to the newest `keep`. Recovery scans newest→oldest and returns
+//! the first generation whose sealed frame verifies (magic + CRC32 +
+//! length) *and* whose payload decodes; everything skipped on the way
+//! is counted in `recovery.corrupt_generations_skipped`. With saves at
+//! every segment boundary, falling back one generation costs exactly
+//! one re-run segment — the bounded staleness Theorem 1 already prices
+//! in.
+
+use super::{seal, unseal, FsStore, Store};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub struct CheckpointStore {
+    store: Box<dyn Store>,
+    base: String,
+    keep: usize,
+    next_gen: u64,
+    skipped: u64,
+}
+
+impl CheckpointStore {
+    /// Open (creating the directory if needed) a generation store for
+    /// the session rooted at `path`: generations live beside it as
+    /// `path.NNNNN`. Stray `*.tmp` files from interrupted writes are
+    /// cleaned up here, on session open.
+    pub fn open(path: &Path, keep: usize) -> Result<CheckpointStore> {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        let base = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .with_context(|| format!("checkpoint store: bad session path {}", path.display()))?
+            .to_string();
+        let fs = FsStore::open(&parent)?;
+        CheckpointStore::with_store(Box::new(fs), &base, keep)
+    }
+
+    /// Same, over an injected backend (tests and `--io-chaos` wrap the
+    /// real store in a `FaultStore` here).
+    pub fn with_store(store: Box<dyn Store>, base: &str, keep: usize) -> Result<CheckpointStore> {
+        let mut cs = CheckpointStore {
+            store,
+            base: base.to_string(),
+            keep: keep.max(1),
+            next_gen: 1,
+            skipped: 0,
+        };
+        cs.clean_stray_tmp()?;
+        let gens = cs.generations()?;
+        cs.next_gen = gens.last().map(|g| g + 1).unwrap_or(1);
+        Ok(cs)
+    }
+
+    pub fn base(&self) -> &str {
+        &self.base
+    }
+
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    /// Corrupt generations skipped by the most recent recovery scan.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    fn gen_name(&self, generation: u64) -> String {
+        format!("{}.{:05}", self.base, generation)
+    }
+
+    fn parse_gen(&self, name: &str) -> Option<u64> {
+        let digits = name.strip_prefix(&self.base)?.strip_prefix('.')?;
+        if digits.len() < 5 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        digits.parse().ok()
+    }
+
+    fn clean_stray_tmp(&mut self) -> Result<()> {
+        let stray: Vec<String> = self
+            .store
+            .list()?
+            .into_iter()
+            .filter(|n| n.starts_with(&self.base) && n.ends_with(".tmp"))
+            .collect();
+        for name in stray {
+            self.store.remove(&name)?;
+        }
+        Ok(())
+    }
+
+    /// All generation numbers currently on disk, oldest first.
+    pub fn generations(&self) -> Result<Vec<u64>> {
+        let mut gens: Vec<u64> =
+            self.store.list()?.iter().filter_map(|n| self.parse_gen(n)).collect();
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    pub fn latest_generation(&self) -> Result<Option<u64>> {
+        Ok(self.generations()?.last().copied())
+    }
+
+    /// Seal `payload` and publish it as the next generation, then prune
+    /// down to `keep`. The generation counter advances even when the
+    /// write fails, so a torn generation is never overwritten in place
+    /// by the next save.
+    pub fn save(&mut self, payload: &[u8]) -> Result<u64> {
+        let generation = self.next_gen;
+        self.next_gen += 1;
+        let sealed = seal(payload)?;
+        self.store
+            .put(&self.gen_name(generation), &sealed)
+            .with_context(|| format!("checkpoint store: saving generation {generation}"))?;
+        let gens = self.generations()?;
+        if gens.len() > self.keep {
+            for &old in &gens[..gens.len() - self.keep] {
+                self.store.remove(&self.gen_name(old))?;
+            }
+        }
+        Ok(generation)
+    }
+
+    /// Recover the newest generation whose frame verifies and whose
+    /// payload `decode`s, scanning newest→oldest. Returns `None` when
+    /// no generations exist at all; errors when generations exist but
+    /// every one is corrupt (silently starting fresh would lose data).
+    pub fn load_latest_with<T>(
+        &mut self,
+        mut decode: impl FnMut(&[u8]) -> Result<T>,
+    ) -> Result<Option<(u64, T)>> {
+        let gens = self.generations()?;
+        self.skipped = 0;
+        for &generation in gens.iter().rev() {
+            let verified = self
+                .store
+                .get(&self.gen_name(generation))
+                .and_then(|bytes| unseal(&bytes))
+                .and_then(|payload| decode(&payload));
+            match verified {
+                Ok(value) => return Ok(Some((generation, value))),
+                Err(_) => {
+                    self.skipped += 1;
+                    crate::obs::counter("recovery.corrupt_generations_skipped").add(1);
+                }
+            }
+        }
+        if gens.is_empty() {
+            Ok(None)
+        } else {
+            bail!(
+                "checkpoint store: all {} generation(s) of {:?} are corrupt",
+                gens.len(),
+                self.base
+            )
+        }
+    }
+
+    /// Recover the newest frame-valid generation's raw payload.
+    pub fn load_latest(&mut self) -> Result<Option<(u64, Vec<u8>)>> {
+        self.load_latest_with(|payload| Ok(payload.to_vec()))
+    }
+
+    /// Remove every generation and stray tmp file (CLI `--fresh`).
+    pub fn reset(&mut self) -> Result<()> {
+        for generation in self.generations()? {
+            self.store.remove(&self.gen_name(generation))?;
+        }
+        self.clean_stray_tmp()?;
+        self.next_gen = 1;
+        self.skipped = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FaultStore, FsStore, IoFaultPlan};
+    use super::*;
+    use std::path::PathBuf;
+
+    fn temp_base(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("para-active-gens-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.join("sess.ckpt")
+    }
+
+    #[test]
+    fn generations_rotate_and_prune_to_keep() {
+        let base = temp_base("rotate");
+        let mut cs = CheckpointStore::open(&base, 3).unwrap();
+        for i in 0..6u64 {
+            let generation = cs.save(format!("payload-{i}").as_bytes()).unwrap();
+            assert_eq!(generation, i + 1);
+        }
+        assert_eq!(cs.generations().unwrap(), vec![4, 5, 6], "keep-3 prunes the oldest");
+        let (generation, payload) = cs.load_latest().unwrap().unwrap();
+        assert_eq!(generation, 6);
+        assert_eq!(payload, b"payload-5");
+        std::fs::remove_dir_all(base.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn recovery_skips_corrupt_generations_newest_to_oldest() {
+        let base = temp_base("skip");
+        let mut cs = CheckpointStore::open(&base, 4).unwrap();
+        for i in 0..3u64 {
+            cs.save(format!("payload-{i}").as_bytes()).unwrap();
+        }
+        // Corrupt the newest generation on disk behind the store's back.
+        let newest = base.parent().unwrap().join("sess.ckpt.00003");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let (generation, payload) = cs.load_latest().unwrap().unwrap();
+        assert_eq!(generation, 2, "falls back exactly one generation");
+        assert_eq!(payload, b"payload-1");
+        assert_eq!(cs.skipped(), 1);
+
+        // A reopened store continues the numbering past the corrupt head.
+        let mut reopened = CheckpointStore::open(&base, 4).unwrap();
+        assert_eq!(reopened.save(b"payload-3").unwrap(), 4);
+        std::fs::remove_dir_all(base.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn all_generations_corrupt_is_an_error_not_a_fresh_start() {
+        let base = temp_base("allbad");
+        let mut cs = CheckpointStore::open(&base, 2).unwrap();
+        cs.save(b"only").unwrap();
+        let f = base.parent().unwrap().join("sess.ckpt.00001");
+        std::fs::write(&f, b"not a sealed frame").unwrap();
+        assert!(cs.load_latest().is_err());
+        std::fs::remove_dir_all(base.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn open_cleans_stray_tmp_files_and_decode_gates_recovery() {
+        let base = temp_base("tmpclean");
+        // A crash-at-sync leaves a full stray tmp behind.
+        let fs = FsStore::open(base.parent().unwrap()).unwrap();
+        let plan = IoFaultPlan::parse("crashsync@1").unwrap();
+        let mut cs = CheckpointStore::with_store(
+            Box::new(FaultStore::new(Box::new(fs), plan)),
+            "sess.ckpt",
+            3,
+        )
+        .unwrap();
+        cs.save(b"good-1").unwrap();
+        assert!(cs.save(b"lost-2").is_err(), "crash-at-sync write fails");
+        assert!(base.parent().unwrap().join("sess.ckpt.00002.tmp").exists());
+
+        // Reopen (plain backend): stray tmp cleaned, last good recovered.
+        let mut reopened = CheckpointStore::open(&base, 3).unwrap();
+        assert!(!base.parent().unwrap().join("sess.ckpt.00002.tmp").exists());
+        let (generation, payload) = reopened.load_latest().unwrap().unwrap();
+        assert_eq!((generation, payload.as_slice()), (1, b"good-1".as_slice()));
+
+        // A frame-valid generation whose *payload* fails decode is
+        // skipped too: recovery requires magic+checksum+decode.
+        reopened.save(b"bad-payload").unwrap();
+        let (generation, _) = reopened
+            .load_latest_with(|p| {
+                anyhow::ensure!(p != b"bad-payload", "decode rejects it");
+                Ok(p.to_vec())
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(reopened.skipped(), 1);
+        std::fs::remove_dir_all(base.parent().unwrap()).unwrap();
+    }
+}

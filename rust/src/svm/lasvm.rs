@@ -228,6 +228,23 @@ impl<K: Kernel> LaSvm<K> {
         self.kernel_evals
     }
 
+    /// Health probe for the divergence watchdog: true iff the live
+    /// expansion (alphas, gradients, bias) is finite. A NaN here feeds
+    /// every later kernel combination, so the watchdog rolls the model
+    /// back instead of letting it spread.
+    pub fn params_finite(&self) -> bool {
+        self.bias.is_finite()
+            && self.alpha.iter().all(|a| a.is_finite())
+            && self.grad.iter().all(|g| g.is_finite())
+    }
+
+    /// Drill hook: poison the bias with NaN so watchdog rollback can be
+    /// exercised end-to-end without a real divergence.
+    pub fn poison_non_finite(&mut self) {
+        self.bias = f32::NAN;
+        self.invalidate_snapshot();
+    }
+
     pub fn kernel(&self) -> &K {
         &self.kernel
     }

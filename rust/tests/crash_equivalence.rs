@@ -1,0 +1,194 @@
+//! Disk-crash equivalence gates: for every scripted IO fault the
+//! [`para_active::store::FaultStore`] can inject — torn write, bit
+//! flip, out-of-disk, crash before rename — a session that "crashes" at
+//! the fault and resumes from the generation store must finish
+//! **bit-identical** to an uninterrupted run, falling back at most one
+//! checkpoint generation. This is the disk twin of the network-chaos
+//! equivalence tests.
+
+use para_active::learner::Learner;
+use para_active::net::TaskKind;
+use para_active::serve::{
+    svm_session_learner, Checkpointable, LearnSession, SessionCheckpoint, SessionConfig,
+};
+use para_active::store::{CheckpointStore, FaultStore, FsStore, IoFaultPlan};
+use std::path::Path;
+
+fn small_cfg() -> SessionConfig {
+    let mut cfg = SessionConfig::new(TaskKind::Svm);
+    cfg.nodes = 3;
+    cfg.chunk = 50;
+    cfg.warmstart = 80;
+    cfg.segments = 4;
+    cfg.test_size = 60;
+    cfg
+}
+
+/// Bit-level agreement: counters, held-out error, and raw model scores.
+fn assert_sessions_bit_identical<L: Checkpointable>(a: &LearnSession<L>, b: &LearnSession<L>) {
+    assert_eq!(a.segments_done(), b.segments_done());
+    assert_eq!(a.n_seen(), b.n_seen(), "stream cursors drifted");
+    assert_eq!(a.n_queried(), b.n_queried(), "sifter coin-flips drifted");
+    let test = a.test_set();
+    assert_eq!(
+        a.final_error(&test).to_bits(),
+        b.final_error(&test).to_bits(),
+        "final_error differs: {} vs {}",
+        a.final_error(&test),
+        b.final_error(&test)
+    );
+    for (x, _) in test.iter().take(16) {
+        assert_eq!(
+            a.learner().score(x).to_bits(),
+            b.learner().score(x).to_bits(),
+            "model scores differ bit-for-bit"
+        );
+    }
+}
+
+fn faulted_store(dir: &Path, base: &str, plan_spec: &str) -> CheckpointStore {
+    let fs = FsStore::open(dir).unwrap();
+    let fault = FaultStore::new(Box::new(fs), IoFaultPlan::parse(plan_spec).unwrap());
+    CheckpointStore::with_store(Box::new(fault), base, 3).unwrap()
+}
+
+/// Run the whole crash drill for one fault plan. Writes are 0-based put
+/// calls: the init save is write 0, then one save per segment.
+/// `crash_after_write` simulates `kill -9` right after that write for
+/// *silent* faults (a bit flip returns Ok); error faults crash at the
+/// error itself, so pass `u64::MAX`. `expect_skip` asserts that
+/// recovery really had to scan past a corrupt newest generation.
+fn crash_resume_matches_clean(plan_spec: &str, crash_after_write: u64, expect_skip: bool) {
+    let cfg = small_cfg();
+    let proto = svm_session_learner();
+    let mut clean = LearnSession::create(cfg.clone(), &proto);
+    while !clean.is_complete() {
+        clean.run_segment();
+    }
+
+    let dir = std::env::temp_dir().join(format!(
+        "para-active-crash-{}-{}",
+        std::process::id(),
+        plan_spec.replace([':', '@', ','], "-")
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = "sess.ckpt";
+
+    // Process 1: run under the scripted fault until the store throws
+    // (or the silent-fault write lands) — then "die".
+    let mut store = faulted_store(&dir, base, plan_spec);
+    let mut session = LearnSession::create(cfg.clone(), &proto);
+    let mut writes = 0u64;
+    let mut crashed = false;
+    let mut segments_at_crash = 0u64;
+    loop {
+        let saved = session.checkpoint().unwrap().save_generation(&mut store);
+        writes += 1;
+        if saved.is_err() || writes > crash_after_write {
+            segments_at_crash = session.segments_done();
+            crashed = true;
+            break;
+        }
+        if session.is_complete() {
+            break;
+        }
+        session.run_segment();
+    }
+    assert!(crashed, "plan {plan_spec:?} never fired within the run");
+    drop(session);
+    drop(store);
+
+    // Process 2: clean reopen. Stray *.tmp wreckage is swept on open;
+    // recovery scans generations newest to oldest and restores the
+    // first one passing magic + checksum + decode.
+    let mut store = CheckpointStore::open(&dir.join(base), 3).unwrap();
+    let (generation, ck) = SessionCheckpoint::load_latest(&mut store)
+        .unwrap()
+        .expect("at least one good generation must survive the fault");
+    if expect_skip {
+        assert!(
+            store.skipped() >= 1,
+            "plan {plan_spec:?}: recovery should have skipped a corrupt generation"
+        );
+    }
+    // Bounded fallback: losing more than the faulted write itself would
+    // mean an older generation was damaged too.
+    assert!(
+        ck.segments_done + 1 >= segments_at_crash,
+        "plan {plan_spec:?}: resumed generation {generation} (segment {}) is more than \
+         one generation behind the crash point (segment {segments_at_crash})",
+        ck.segments_done
+    );
+    let mut resumed = LearnSession::resume(cfg, &proto, &ck).unwrap();
+    while !resumed.is_complete() {
+        resumed.run_segment();
+        resumed.checkpoint().unwrap().save_generation(&mut store).unwrap();
+    }
+    assert_sessions_bit_identical(&clean, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_write_resumes_bit_identically_one_generation_back() {
+    // Write 3 (the segment-3 save) lands half its bytes and errors: the
+    // truncated generation exists on disk but fails its checksum.
+    crash_resume_matches_clean("torn@3", u64::MAX, true);
+}
+
+#[test]
+fn bit_flip_resumes_bit_identically_one_generation_back() {
+    // Write 3 succeeds silently with one bit flipped — the nastiest
+    // case: no error at write time, caught only by the CRC on resume.
+    crash_resume_matches_clean("flip@3:10", 3, true);
+}
+
+#[test]
+fn enospc_resumes_bit_identically_without_a_torn_generation() {
+    // Write 2 runs out of disk mid-tmp-write: only *.tmp wreckage is
+    // left, the previous generation is untouched.
+    crash_resume_matches_clean("enospc@2", u64::MAX, false);
+}
+
+#[test]
+fn crash_before_rename_resumes_bit_identically() {
+    // Write 1 dies after the tmp file is complete but before the
+    // rename: the generation never became visible.
+    crash_resume_matches_clean("crashsync@1", u64::MAX, false);
+}
+
+#[test]
+fn fault_free_store_roundtrip_is_bit_identical() {
+    // Control arm: the generation store itself (no faults) must be as
+    // transparent as the old single-file path.
+    let cfg = small_cfg();
+    let proto = svm_session_learner();
+    let mut clean = LearnSession::create(cfg.clone(), &proto);
+    while !clean.is_complete() {
+        clean.run_segment();
+    }
+
+    let dir =
+        std::env::temp_dir().join(format!("para-active-crash-control-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sess.ckpt");
+    let mut store = CheckpointStore::open(&path, 2).unwrap();
+    let mut session = LearnSession::create(cfg.clone(), &proto);
+    session.checkpoint().unwrap().save_generation(&mut store).unwrap();
+    session.run_segment();
+    session.checkpoint().unwrap().save_generation(&mut store).unwrap();
+    session.run_segment();
+    session.checkpoint().unwrap().save_generation(&mut store).unwrap();
+    drop(session);
+    drop(store);
+
+    let mut store = CheckpointStore::open(&path, 2).unwrap();
+    assert_eq!(store.generations().unwrap().len(), 2, "keep-2 must prune the init save");
+    let (_, ck) = SessionCheckpoint::load_latest(&mut store).unwrap().unwrap();
+    assert_eq!(store.skipped(), 0);
+    let mut resumed = LearnSession::resume(cfg, &proto, &ck).unwrap();
+    while !resumed.is_complete() {
+        resumed.run_segment();
+    }
+    assert_sessions_bit_identical(&clean, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -592,6 +592,94 @@ fn prop_codec_apply_never_panics_on_corrupt_sync_payloads() {
     corrupt_sweep(&mlp_full, mlp_apply);
 }
 
+/// A real (small) session checkpoint's encoded payload: the input both
+/// decode- and frame-level corruption sweeps start from.
+fn tiny_checkpoint_bytes() -> Vec<u8> {
+    use para_active::serve::{svm_session_learner, LearnSession, SessionConfig};
+    let mut cfg = SessionConfig::new(TaskKind::Svm);
+    cfg.nodes = 2;
+    cfg.chunk = 30;
+    cfg.warmstart = 40;
+    cfg.segments = 2;
+    cfg.test_size = 20;
+    let mut session = LearnSession::create(cfg, &svm_session_learner());
+    session.run_segment();
+    session.checkpoint().expect("checkpoint").encode().expect("encode")
+}
+
+#[test]
+fn prop_session_checkpoint_decode_never_panics_on_truncated_or_mutated_bytes() {
+    // A checkpoint file is disk-controlled bytes: every truncation and
+    // byte-level corruption must come back as Ok or a typed Err — never
+    // a panic, and never an absurd allocation from a forged count (the
+    // 0xFF mutations forge node/support counts in the billions; the
+    // decoder's plausibility guards must reject them before allocating).
+    use para_active::serve::SessionCheckpoint;
+    let bytes = tiny_checkpoint_bytes();
+    assert!(SessionCheckpoint::decode(&bytes).is_ok(), "pristine checkpoint must decode");
+    for cut in 0..bytes.len() {
+        assert!(
+            SessionCheckpoint::decode(&bytes[..cut]).is_err(),
+            "prefix of {cut} bytes decoded"
+        );
+    }
+    for i in 0..bytes.len() {
+        for v in [0x00, 0x01, 0x7F, 0xFF, bytes[i] ^ 0x80] {
+            let mut m = bytes.clone();
+            m[i] = v;
+            let _ = SessionCheckpoint::decode(&m);
+        }
+    }
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed ^ 0xC4A5_4E57);
+        for _ in 0..200 {
+            let mut m = bytes.clone();
+            for _ in 0..=rng.below(3) {
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            let _ = SessionCheckpoint::decode(&m);
+        }
+    }
+}
+
+#[test]
+fn prop_store_unseal_rejects_every_corruption_of_a_sealed_checkpoint() {
+    // The sealed frame is the unit the generation store writes to disk.
+    // Unseal must reject every *actual* single-byte change (CRC32 catches
+    // any single-byte error; the magic/version/length checks cover the
+    // header), error on every truncation, and absorb randomized
+    // multi-byte corruption without panicking.
+    use para_active::store::{seal, unseal};
+    let payload = tiny_checkpoint_bytes();
+    let frame = seal(&payload).expect("seal");
+    assert_eq!(unseal(&frame).expect("pristine frame must unseal"), payload);
+    for cut in 0..frame.len() {
+        assert!(unseal(&frame[..cut]).is_err(), "prefix of {cut} bytes unsealed");
+    }
+    for i in 0..frame.len() {
+        for v in [0x00, 0x01, 0x7F, 0xFF, frame[i] ^ 0x80] {
+            if v == frame[i] {
+                continue;
+            }
+            let mut m = frame.clone();
+            m[i] = v;
+            assert!(unseal(&m).is_err(), "byte {i} set to {v:#04x} still unsealed");
+        }
+    }
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed ^ 0x5EA1_F8A3);
+        for _ in 0..200 {
+            let mut m = frame.clone();
+            for _ in 0..=rng.below(3) {
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            let _ = unseal(&m);
+        }
+    }
+}
+
 #[test]
 fn prop_mlp_updates_bounded() {
     // AdaGrad steps are bounded by lr per coordinate: no weight explodes
